@@ -1,0 +1,49 @@
+//! Overload autopsy: run one stressed heavy-dominated cell under each
+//! bucket policy and dissect *who got sacrificed* — per-bucket defer and
+//! reject counts, per-bucket completion, and the legibility argument of
+//! §4.7 in one screen.
+//!
+//!     cargo run --release --example overload_autopsy
+
+use blackbox_sched::core::TokenBucket;
+use blackbox_sched::experiments::runner::{run_seed, CellSpec, Congestion, Regime};
+use blackbox_sched::metrics::report::TextTable;
+use blackbox_sched::scheduler::overload::BucketPolicy;
+use blackbox_sched::scheduler::{SchedulerCfg, StrategyKind};
+use blackbox_sched::workload::Mix;
+
+fn main() {
+    let regime = Regime { mix: Mix::Heavy, congestion: Congestion::High };
+    println!("regime: {} (rate {} req/s)\n", regime.name(), regime.rate_rps());
+
+    for policy in BucketPolicy::ALL {
+        let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+        sched.overload.bucket_policy = policy;
+        let spec = CellSpec::new(regime, sched, 200);
+        let out = run_seed(&spec, 0);
+        let m = &out.metrics;
+        println!(
+            "── bucket_policy = {:<14} CR {:.2}  satisfaction {:.2}  goodput {:.1} req/s",
+            policy.name(),
+            m.completion_rate,
+            m.satisfaction,
+            m.goodput_rps
+        );
+        let mut t = TextTable::new(["bucket", "offered", "completed", "defers", "rejects"]);
+        for b in TokenBucket::ALL {
+            t.row([
+                b.name().to_string(),
+                m.offered_by_bucket[b.index()].to_string(),
+                m.completed_by_bucket[b.index()].to_string(),
+                m.defers_by_bucket[b.index()].to_string(),
+                m.rejects_by_bucket[b.index()].to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+        assert_eq!(m.rejects_by_bucket[0], 0, "shorts must never be rejected");
+    }
+    println!("the cost ladder concentrates rejections on xlong and leaves medium");
+    println!("untouched; uniform-mild hides overload in mass deferral; reverse");
+    println!("targets the wrong bucket — explicit, objective-aligned shedding is");
+    println!("what makes client-side overload *legible* (§4.7).");
+}

@@ -1,0 +1,28 @@
+//! End-to-end live-serving driver (the repo's E2E validation example):
+//! the identical scheduler policy code running on **wall-clock time** with a
+//! provider thread, channels, and — when `make artifacts` has been run —
+//! the AOT-compiled quantile-MLP predictor executed through PJRT on the
+//! live admission path (L3 → runtime → L1/L2 composed).
+//!
+//!     make artifacts && cargo run --release --example serve_live
+//!
+//! Reported at the end: completion rate, deadline satisfaction, useful
+//! goodput, short/global P95, and the number of PJRT predictor calls made
+//! on the request path. Recorded in EXPERIMENTS.md §End-to-end.
+
+use blackbox_sched::runtime::default_artifacts_dir;
+use blackbox_sched::scheduler::StrategyKind;
+
+fn main() -> anyhow::Result<()> {
+    let rate = 20.0; // model-time req/s
+    let n = 60;
+    let scale = 0.05; // 20× faster than model time
+    println!("live serve: {n} requests at {rate}/s (model time), time scale {scale}");
+    blackbox_sched::serve::serve_demo(
+        StrategyKind::FinalAdrrOlc,
+        rate,
+        n,
+        scale,
+        &default_artifacts_dir(),
+    )
+}

@@ -1,0 +1,135 @@
+"""AOT compile path: train the predictor, lower the Pallas/JAX graph to HLO
+*text*, and write the runtime artifacts consumed by the Rust coordinator.
+
+Run via ``make artifacts`` (python -m compile.aot --out-dir ../artifacts).
+Python never runs after this step: the Rust binary loads
+``artifacts/predictor_b{B}.hlo.txt`` through the PJRT C API.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published ``xla`` 0.1.6 crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs:
+  predictor_b{B}.hlo.txt   — compiled predictor at fixed batch B (params baked)
+  predictor_meta.json      — model dims, feature layout, generative-model
+                             constants, training metrics, and golden
+                             input/output vectors for the Rust runtime test
+  params.npz               — trained weights (cache; delete to retrain)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen
+from .model import predict, predict_ref
+from .train import train
+
+BATCH_SIZES = (128, 512)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust unwrap).
+
+    CRITICAL: the default printer elides large constants as ``{...}`` and the
+    xla_extension 0.5.1 text *parser silently zero-fills them* — the trained
+    weights would vanish. ``print_large_constants`` keeps them verbatim;
+    ``include_layout_in_shapes`` stays on so parameter layouts round-trip.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # New jaxlibs attach metadata attributes (source_end_line, …) the 0.5.1
+    # parser rejects; strip metadata and backend configs from the text.
+    opts.print_metadata = False
+    opts.print_backend_config = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "constant elision survived — loader would zero-fill weights"
+    return text
+
+
+def load_or_train(out_dir: str, retrain: bool, seed: int, steps: int):
+    cache = os.path.join(out_dir, "params.npz")
+    if os.path.exists(cache) and not retrain:
+        data = np.load(cache)
+        params = {k: jnp.asarray(data[k]) for k in data.files if k != "__metrics"}
+        metrics = json.loads(str(data["__metrics"])) if "__metrics" in data.files else {}
+        print(f"loaded cached params from {cache}")
+        return params, metrics
+    print(f"training predictor (seed={seed}, steps={steps}) ...")
+    params, metrics = train(seed=seed, steps=steps)
+    np.savez(cache, __metrics=json.dumps(metrics),
+             **{k: np.asarray(v) for k, v in params.items()})
+    return params, metrics
+
+
+def golden_vectors(params, n: int = 8, seed: int = 1234):
+    """Fixed feature vectors + reference outputs for the Rust runtime test."""
+    rng = np.random.default_rng(seed)
+    feats, ytok, aux = datagen.sample_requests(rng, n)
+    pred = np.asarray(predict_ref(params, jnp.asarray(feats)))
+    return {
+        "features": np.asarray(feats).tolist(),
+        "raw": {
+            "prompt_tok": aux["prompt_tok"].tolist(),
+            "task_idx": aux["task_idx"].tolist(),
+            "temperature": aux["temperature"].tolist(),
+            "max_tok": aux["max_tok"].tolist(),
+        },
+        "true_tokens": ytok.tolist(),
+        "expected_p50": pred[:, 0].tolist(),
+        "expected_p90": pred[:, 1].tolist(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--retrain", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=600)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params, metrics = load_or_train(args.out_dir, args.retrain, args.seed, args.steps)
+
+    artifact_names = []
+    for b in BATCH_SIZES:
+        spec = jax.ShapeDtypeStruct((b, datagen.D_IN), jnp.float32)
+        lowered = jax.jit(lambda x: (predict(params, x),)).lower(spec)
+        text = to_hlo_text(lowered)
+        name = f"predictor_b{b}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        artifact_names.append(name)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "model": {"d_in": datagen.D_IN, "h1": 128, "h2": 128,
+                  "batch_sizes": list(BATCH_SIZES),
+                  "token_scale": float(datagen.TOKEN_SCALE)},
+        "artifacts": artifact_names,
+        "training": metrics,
+        "datagen": datagen.meta_dict(),
+        "golden": golden_vectors(params),
+    }
+    meta_path = os.path.join(args.out_dir, "predictor_meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

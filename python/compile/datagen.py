@@ -1,0 +1,148 @@
+"""Synthetic request generative model shared between Python (predictor
+training) and Rust (workload generation).
+
+The paper's enabling premise is a production output-length predictor
+(SageSched, Gan et al. 2026). We have no production prompt corpus, so we
+define an explicit generative model linking *client-observable* request
+features (prompt length, task type, temperature, max_tokens cap) to the
+*hidden* output-token count, with irreducible noise — exactly the situation a
+real predictor faces. The quantile MLP is trained on samples from this model;
+the Rust workload generator (`rust/src/workload/synth.rs`) implements the
+same process so the AOT predictor is evaluated in-distribution.
+
+All constants here are exported into ``artifacts/predictor_meta.json`` by
+``aot.py``; the Rust side asserts at load time that the constants it was
+compiled with match the artifact (guards against drift).
+
+Generative process (per request, given a bucket mix):
+  1. bucket  ~ Categorical(mix)                    # short/medium/long/xlong
+  2. out_tok ~ LogUniform(bucket_lo, bucket_hi)
+  3. task    ~ Categorical(TASK_GIVEN_BUCKET[bucket])
+  4. ln(prompt_tok) = PROMPT_ALPHA[task] + PROMPT_BETA[task]·ln(out_tok)
+                      + N(0, PROMPT_SIGMA)          # clipped to [4, 4096]
+  5. temperature ~ U(0, 1) on a 0.05 grid
+  6. max_tok = smallest of {256, 512, 1024, 2048, 4096} ≥ bucket_hi
+
+Feature layout (width D_IN = 32, lanes 8.. zero):
+  f0 = prompt_tok / 2048
+  f1 = log1p(prompt_tok) / 8
+  f2..f5 = one-hot task type (chat, summarize, code, extract)
+  f6 = temperature
+  f7 = max_tok / 4096
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Token buckets (inclusive bounds), as defined in the paper §4.1/§4.2.
+BUCKETS = {
+    "short": (8, 64),
+    "medium": (65, 256),
+    "long": (257, 1024),
+    "xlong": (1025, 4096),
+}
+BUCKET_ORDER = ["short", "medium", "long", "xlong"]
+
+TASKS = ["chat", "summarize", "code", "extract"]
+
+# P(task | bucket): short work skews chat/extract, xlong skews code/summarize.
+TASK_GIVEN_BUCKET = {
+    "short": [0.45, 0.05, 0.10, 0.40],
+    "medium": [0.40, 0.20, 0.25, 0.15],
+    "long": [0.25, 0.35, 0.30, 0.10],
+    "xlong": [0.10, 0.40, 0.45, 0.05],
+}
+
+# ln(prompt) = alpha + beta * ln(out) + N(0, sigma): prompts are informative
+# about output length but noisy (sigma=0.45 ≈ ±55% one-sigma band).
+PROMPT_ALPHA = [2.2, 4.1, 1.8, 3.5]   # per task
+PROMPT_BETA = [0.55, 0.35, 0.70, 0.30]
+PROMPT_SIGMA = 0.45
+
+MAX_TOKENS_GRID = [256, 512, 1024, 2048, 4096]
+
+D_IN = 32
+TOKEN_SCALE = 256.0  # head outputs tokens / TOKEN_SCALE
+
+# Canonical workload mixes (paper §4.2 and §4.1 ShareGPT split; "<1%" → 1%).
+MIXES = {
+    "balanced": [0.50, 0.25, 0.15, 0.10],
+    "heavy": [0.20, 0.20, 0.30, 0.30],
+    "sharegpt": [0.12, 0.42, 0.45, 0.01],
+}
+
+
+def meta_dict() -> dict:
+    """Constants bundle exported to artifacts/predictor_meta.json."""
+    return {
+        "d_in": D_IN,
+        "token_scale": TOKEN_SCALE,
+        "buckets": {k: list(v) for k, v in BUCKETS.items()},
+        "bucket_order": BUCKET_ORDER,
+        "tasks": TASKS,
+        "task_given_bucket": TASK_GIVEN_BUCKET,
+        "prompt_alpha": PROMPT_ALPHA,
+        "prompt_beta": PROMPT_BETA,
+        "prompt_sigma": PROMPT_SIGMA,
+        "max_tokens_grid": MAX_TOKENS_GRID,
+        "mixes": MIXES,
+        "feature_layout": [
+            "prompt_tok/2048", "log1p(prompt_tok)/8",
+            "task=chat", "task=summarize", "task=code", "task=extract",
+            "temperature", "max_tok/4096",
+        ],
+    }
+
+
+def features_from_raw(prompt_tok, task_idx, temperature, max_tok) -> np.ndarray:
+    """Vectorized feature computation (mirrors rust predictor/features.rs)."""
+    prompt_tok = np.asarray(prompt_tok, dtype=np.float64)
+    n = prompt_tok.shape[0]
+    f = np.zeros((n, D_IN), dtype=np.float32)
+    f[:, 0] = prompt_tok / 2048.0
+    f[:, 1] = np.log1p(prompt_tok) / 8.0
+    f[np.arange(n), 2 + np.asarray(task_idx)] = 1.0
+    f[:, 6] = temperature
+    f[:, 7] = np.asarray(max_tok, dtype=np.float64) / 4096.0
+    return f
+
+
+def sample_requests(rng: np.random.Generator, n: int, mix_name: str = "balanced"):
+    """Sample ``n`` synthetic requests; returns (features, out_tokens, aux).
+
+    ``aux`` is a dict of the raw fields, used by tests and by the trace
+    exporter in ``aot.py --dump-train-sample``.
+    """
+    mix = np.asarray(MIXES[mix_name])
+    bucket_idx = rng.choice(len(BUCKET_ORDER), size=n, p=mix / mix.sum())
+    lo = np.array([BUCKETS[BUCKET_ORDER[i]][0] for i in bucket_idx], dtype=np.float64)
+    hi = np.array([BUCKETS[BUCKET_ORDER[i]][1] for i in bucket_idx], dtype=np.float64)
+    out_tok = np.exp(rng.uniform(np.log(lo), np.log(hi))).round().clip(lo, hi)
+
+    task_idx = np.empty(n, dtype=np.int64)
+    for bi, bname in enumerate(BUCKET_ORDER):
+        mask = bucket_idx == bi
+        if mask.any():
+            task_idx[mask] = rng.choice(
+                len(TASKS), size=int(mask.sum()), p=np.asarray(TASK_GIVEN_BUCKET[bname])
+            )
+
+    alpha = np.asarray(PROMPT_ALPHA)[task_idx]
+    beta = np.asarray(PROMPT_BETA)[task_idx]
+    ln_prompt = alpha + beta * np.log(out_tok) + rng.normal(0.0, PROMPT_SIGMA, size=n)
+    prompt_tok = np.exp(ln_prompt).round().clip(4, 4096)
+
+    temperature = np.round(rng.uniform(0.0, 1.0, size=n) * 20.0) / 20.0
+    grid = np.asarray(MAX_TOKENS_GRID, dtype=np.float64)
+    max_tok = np.array([grid[grid >= h][0] for h in hi])
+
+    feats = features_from_raw(prompt_tok, task_idx, temperature, max_tok)
+    aux = {
+        "bucket_idx": bucket_idx,
+        "task_idx": task_idx,
+        "prompt_tok": prompt_tok,
+        "temperature": temperature,
+        "max_tok": max_tok,
+    }
+    return feats, out_tok.astype(np.float32), aux

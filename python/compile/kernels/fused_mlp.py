@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: fused two-layer MLP block for the output-length predictor.
+
+Computes ``relu(relu(x @ W1 + b1) @ W2 + b2)`` in a single kernel so the
+intermediate activations never round-trip through HBM.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * The grid iterates over batch tiles; each step stages one ``(BM, D_IN)``
+    activation tile plus the full weight set into VMEM via ``BlockSpec``.
+  * Weights are small (D_IN×H1 + H1×H2 ≈ 20 K f32 ≈ 80 KiB) and are mapped
+    with a constant index_map, so Mosaic keeps them VMEM-resident across grid
+    steps instead of re-fetching from HBM.
+  * Matmul shapes are MXU-idiomatic: minor dims are 128, second-minor dims
+    are multiples of 8; accumulation is forced to f32 via
+    ``preferred_element_type``.
+
+On this CPU-only image the kernel is executed with ``interpret=True`` (real
+TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot run); the
+block structure is still the one a TPU build would use.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Canonical model dims (must match predictor_meta.json and rust/src/predictor).
+D_IN = 32   # feature vector width (8 live features, zero-padded — lane-friendly)
+H1 = 128    # first hidden width  (one MXU tile)
+H2 = 128    # second hidden width (one MXU tile)
+
+# Batch tile: 128 rows keeps the MXU systolic array fully fed while the
+# activation tile (128×128 f32 = 64 KiB) plus weights stay well under the
+# ~16 MiB VMEM budget. See EXPERIMENTS.md §Perf for the footprint table.
+BM = 128
+
+
+def _fused_mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One grid step: one batch tile through both layers, VMEM-resident."""
+    x = x_ref[...]  # (BM, D_IN)
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = jnp.maximum(h + b1_ref[...], 0.0)  # (BM, H1)
+    z = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.maximum(z + b2_ref[...], 0.0)  # (BM, H2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_mlp(x, w1, b1, w2, b2, *, interpret: bool = True):
+    """Fused ``relu(relu(x@W1+b1)@W2+b2)``.
+
+    Args:
+      x: ``(B, D_IN)`` float32, ``B`` a multiple of ``BM`` (callers pad).
+      w1: ``(D_IN, H1)``; b1: ``(H1,)``; w2: ``(H1, H2)``; b2: ``(H2,)``.
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      ``(B, H2)`` float32 activations.
+    """
+    b, d_in = x.shape
+    if d_in != D_IN:
+        raise ValueError(f"feature width {d_in} != {D_IN}")
+    if b % BM != 0:
+        raise ValueError(f"batch {b} not a multiple of tile {BM}; pad first")
+    grid = (b // BM,)
+    # Biases are staged as (1, H) rows: TPU VMEM wants ≥2D tiles and the
+    # broadcast against the (BM, H) activation tile is free on the VPU.
+    b1r = b1.reshape(1, H1)
+    b2r = b2.reshape(1, H2)
+    return pl.pallas_call(
+        _fused_mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, D_IN), lambda i: (i, 0)),   # stream batch tiles
+            pl.BlockSpec((D_IN, H1), lambda i: (0, 0)),   # weights: VMEM-resident
+            pl.BlockSpec((1, H1), lambda i: (0, 0)),
+            pl.BlockSpec((H1, H2), lambda i: (0, 0)),
+            pl.BlockSpec((1, H2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BM, H2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, H2), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1r, w2, b2r)

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: fused monotone quantile head.
+
+Maps hidden activations ``h (B, H2)`` to per-request token-count quantiles
+``(p50, p90)`` with the monotonicity constraint ``p90 >= p50`` enforced *in
+the kernel*:
+
+    z    = h @ Wq + bq                # (B, 2) raw head
+    p50  = softplus(z[:, 0])
+    p90  = p50 + softplus(z[:, 1])    # gap parameterization
+
+The gap parameterization means the scheduler can never observe a crossed
+quantile pair, which the Rust overload controller relies on (budgets are
+computed from p90 − p50 spreads).
+
+Output is padded to a (B, 128) tile with the two live columns in lanes 0/1 —
+TPU VMEM tiles want a 128 minor dimension, and the PJRT caller slices the
+lanes it needs. The head weights are stored pre-padded the same way.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_mlp import BM, H2
+
+OUT_PAD = 128  # padded head width (lane 0 = p50 raw, lane 1 = gap raw)
+
+
+def _quantile_head_kernel(h_ref, wq_ref, bq_ref, o_ref):
+    h = h_ref[...]  # (BM, H2)
+    z = jnp.dot(h, wq_ref[...], preferred_element_type=jnp.float32)
+    z = z + bq_ref[...]  # (BM, OUT_PAD)
+    sp = jnp.logaddexp(z, 0.0)  # softplus, numerically stable
+    p50 = sp[:, 0:1]
+    p90 = p50 + sp[:, 1:2]
+    # Lane 0 = p50, lane 1 = p90, rest zero (keeps the tile layout dense).
+    lane = jax.lax.broadcasted_iota(jnp.int32, (h.shape[0], OUT_PAD), 1)
+    o_ref[...] = jnp.where(lane == 0, p50, jnp.where(lane == 1, p90, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantile_head(h, wq, bq, *, interpret: bool = True):
+    """Fused monotone quantile head.
+
+    Args:
+      h: ``(B, H2)`` hidden activations, ``B`` a multiple of ``BM``.
+      wq: ``(H2, OUT_PAD)`` head weights (columns ≥2 ignored, keep zero).
+      bq: ``(OUT_PAD,)`` head bias.
+
+    Returns:
+      ``(B, OUT_PAD)`` with ``[:, 0] = p50``, ``[:, 1] = p90 ≥ p50``.
+    """
+    b, hdim = h.shape
+    if hdim != H2:
+        raise ValueError(f"hidden width {hdim} != {H2}")
+    if b % BM != 0:
+        raise ValueError(f"batch {b} not a multiple of tile {BM}; pad first")
+    grid = (b // BM,)
+    bqr = bq.reshape(1, OUT_PAD)
+    return pl.pallas_call(
+        _quantile_head_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, H2), lambda i: (i, 0)),
+            pl.BlockSpec((H2, OUT_PAD), lambda i: (0, 0)),
+            pl.BlockSpec((1, OUT_PAD), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BM, OUT_PAD), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, OUT_PAD), jnp.float32),
+        interpret=interpret,
+    )(h, wq, bqr)

@@ -1,0 +1,46 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every kernel in this package has an exact mathematical twin here; pytest
+(``python/tests/test_kernels.py``) asserts allclose agreement across a
+hypothesis sweep of shapes and value ranges. Training (``train.py``) runs
+against these reference functions — they are autodiff-friendly and
+numerically identical to the kernels, so the AOT artifact (which lowers the
+Pallas path) serves exactly the weights that were trained.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_mlp_ref(x, w1, b1, w2, b2):
+    """Reference for ``kernels.fused_mlp.fused_mlp``."""
+    h = jnp.maximum(jnp.dot(x, w1) + b1, 0.0)
+    return jnp.maximum(jnp.dot(h, w2) + b2, 0.0)
+
+
+def quantile_head_ref(h, wq, bq):
+    """Reference for ``kernels.quantile_head.quantile_head``.
+
+    Returns the same padded ``(B, OUT_PAD)`` layout: lane 0 = p50,
+    lane 1 = p90 = p50 + softplus(gap), other lanes zero.
+    """
+    z = jnp.dot(h, wq) + bq
+    sp = jnp.logaddexp(z, 0.0)
+    p50 = sp[:, 0:1]
+    p90 = p50 + sp[:, 1:2]
+    out = jnp.zeros_like(z)
+    out = out.at[:, 0:1].set(p50)
+    out = out.at[:, 1:2].set(p90)
+    return out
+
+
+def predictor_ref(params, x):
+    """Full reference predictor: features → (B, 2) [p50_tokens, p90_tokens].
+
+    Mirrors ``model.predict`` but through the reference ops. ``params`` is
+    the dict produced by ``train.init_params``/``train.train``.
+    """
+    h = fused_mlp_ref(x, params["w1"], params["b1"], params["w2"], params["b2"])
+    q = quantile_head_ref(h, params["wq"], params["bq"])
+    return q[:, :2] * params["token_scale"]

@@ -1,0 +1,78 @@
+"""L2: the output-length predictor compute graph (JAX), calling L1 kernels.
+
+``predict`` is the function that gets AOT-lowered to HLO text and executed
+from the Rust admission path: features ``(B, D_IN)`` → quantile token
+estimates ``(B, 2)`` = [p50, p90], with p90 ≥ p50 guaranteed by the kernel's
+gap parameterization.
+
+``predict_ref`` is the numerically identical pure-jnp twin (autodiff-friendly;
+used for training and as the pytest oracle).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_mlp import BM, D_IN, H1, H2, fused_mlp
+from .kernels.quantile_head import OUT_PAD, quantile_head
+from .kernels import ref
+
+
+def init_params(key, token_scale: float):
+    """He-initialized parameter pytree for the quantile MLP."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w1": jax.random.normal(k1, (D_IN, H1)) * jnp.sqrt(2.0 / D_IN),
+        "b1": jnp.zeros((H1,)),
+        "w2": jax.random.normal(k2, (H1, H2)) * jnp.sqrt(2.0 / H1),
+        "b2": jnp.zeros((H2,)),
+        # Head is stored pre-padded to OUT_PAD lanes; only lanes 0/1 live.
+        "wq": jnp.zeros((H2, OUT_PAD)).at[:, :2].set(
+            jax.random.normal(k3, (H2, 2)) * jnp.sqrt(1.0 / H2)
+        ),
+        "bq": jnp.zeros((OUT_PAD,)),
+        "token_scale": jnp.float32(token_scale),
+    }
+    return {k: v.astype(jnp.float32) for k, v in p.items()}
+
+
+def pad_batch(x, multiple: int = BM):
+    """Zero-pad the batch dim up to a tile multiple (PJRT shapes are static)."""
+    b = x.shape[0]
+    pad = (-b) % multiple
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x
+
+
+def predict(params, x, *, interpret: bool = True):
+    """Pallas-kernel predictor: features (B, D_IN) → (B, 2) token quantiles.
+
+    ``B`` must be a multiple of the kernel batch tile ``BM`` (the AOT
+    artifacts are compiled at fixed batch sizes; Rust pads and slices).
+    """
+    h = fused_mlp(x, params["w1"], params["b1"], params["w2"], params["b2"],
+                  interpret=interpret)
+    q = quantile_head(h, params["wq"], params["bq"], interpret=interpret)
+    return q[:, :2] * params["token_scale"]
+
+
+def predict_ref(params, x):
+    """Pure-jnp twin of ``predict`` (training + test oracle)."""
+    return ref.predictor_ref(params, x)
+
+
+def pinball_loss(params, x, y, q_lo: float = 0.5, q_hi: float = 0.9):
+    """Joint pinball (quantile) loss for the p50/p90 heads.
+
+    ``y`` is the realized output-token count. Loss is computed in
+    token_scale units so gradients are O(1).
+    """
+    pred = predict_ref(params, x) / params["token_scale"]
+    yy = y[:, None] / params["token_scale"]
+    err50 = yy[:, 0] - pred[:, 0]
+    err90 = yy[:, 0] - pred[:, 1]
+    l50 = jnp.maximum(q_lo * err50, (q_lo - 1.0) * err50)
+    l90 = jnp.maximum(q_hi * err90, (q_hi - 1.0) * err90)
+    return jnp.mean(l50 + l90)

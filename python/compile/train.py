@@ -1,0 +1,102 @@
+"""Build-time training loop for the output-length predictor (L2).
+
+Trains the quantile MLP on samples from the shared generative model
+(``datagen.py``) with a hand-rolled Adam (the image has no optax). Runs once
+inside ``make artifacts``; never on the request path.
+
+Training goes through ``model.predict_ref`` — the pure-jnp twin of the Pallas
+path — because interpret-mode ``pallas_call`` is not differentiable in
+general; pytest asserts the two paths agree to float tolerance, so the
+weights transfer exactly.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen
+from .model import init_params, pinball_loss, predict_ref
+
+
+def adam_init(params):
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros(), "v": zeros(), "t": jnp.int32(0)}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new_params = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def _frozen(params):
+    """token_scale is a constant, not a trainable."""
+    return {k: v for k, v in params.items() if k != "token_scale"}
+
+
+def train(seed: int = 0, steps: int = 600, batch: int = 1024,
+          mix: str = "balanced", lr: float = 2e-3, verbose: bool = True):
+    """Train the predictor; returns (params, metrics dict)."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, datagen.TOKEN_SCALE)
+
+    # Pre-sample a large pool and iterate minibatches: keeps datagen out of
+    # the step loop and the run deterministic.
+    feats, ytok, _ = datagen.sample_requests(rng, steps * batch // 4, mix)
+    feats = jnp.asarray(feats)
+    ytok = jnp.asarray(ytok)
+
+    loss_grad = jax.jit(jax.value_and_grad(
+        lambda tp, ts, x, y: pinball_loss({**tp, "token_scale": ts}, x, y)))
+
+    opt = adam_init(_frozen(params))
+    ts = params["token_scale"]
+    tp = _frozen(params)
+    n = feats.shape[0]
+    t0 = time.time()
+    last = None
+    for step in range(steps):
+        lo = (step * batch) % max(1, n - batch)
+        xb, yb = feats[lo:lo + batch], ytok[lo:lo + batch]
+        # Pinball loss wants y as (B,); predict_ref broadcasts internally.
+        loss, grads = loss_grad(tp, ts, xb, yb)
+        tp, opt = adam_step(tp, grads, opt, lr=lr)
+        last = float(loss)
+        if verbose and (step % 100 == 0 or step == steps - 1):
+            print(f"  train step {step:4d} pinball={last:.4f}")
+    params = {**tp, "token_scale": ts}
+
+    # Held-out evaluation: p50 coverage and p90 coverage on fresh samples.
+    feats_te, ytok_te, aux = datagen.sample_requests(rng, 8192, mix)
+    pred = np.asarray(predict_ref(params, jnp.asarray(feats_te)))
+    cov50 = float(np.mean(ytok_te <= pred[:, 0]))
+    cov90 = float(np.mean(ytok_te <= pred[:, 1]))
+    # Bucket classification accuracy using p50 against true bucket bounds.
+    bounds = np.array([datagen.BUCKETS[b][1] for b in datagen.BUCKET_ORDER[:-1]])
+    pred_bucket = np.searchsorted(bounds, pred[:, 0], side="left")
+    acc = float(np.mean(pred_bucket == aux["bucket_idx"]))
+    metrics = {
+        "final_pinball": last,
+        "coverage_p50": cov50,
+        "coverage_p90": cov90,
+        "bucket_accuracy": acc,
+        "train_seconds": time.time() - t0,
+        "steps": steps,
+        "batch": batch,
+        "mix": mix,
+        "seed": seed,
+    }
+    if verbose:
+        print(f"  coverage: p50={cov50:.3f} p90={cov90:.3f} bucket_acc={acc:.3f}")
+    return params, metrics

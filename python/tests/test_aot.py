@@ -1,0 +1,79 @@
+"""AOT path: HLO text emission is well-formed and executable via jax's own
+CPU client, and the artifact metadata carries everything the Rust side needs."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datagen
+from compile.aot import BATCH_SIZES, golden_vectors, to_hlo_text
+from compile.model import init_params, predict, predict_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(1), datagen.TOKEN_SCALE)
+
+
+def test_hlo_text_emission(params):
+    spec = jax.ShapeDtypeStruct((128, datagen.D_IN), jnp.float32)
+    lowered = jax.jit(lambda x: (predict(params, x),)).lower(spec)
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[128,32]" in text  # parameter shape survives
+    # Large constants must be printed verbatim: the xla_extension 0.5.1 text
+    # parser zero-fills the "{...}" elision, which silently discards the
+    # trained weights (the bug this test pins).
+    assert "{...}" not in text
+    # A ~20K-weight model serializes to hundreds of KB of text.
+    assert len(text) > 100_000
+
+
+def test_golden_vectors_match_ref(params):
+    g = golden_vectors(params, n=8)
+    feats = jnp.asarray(np.array(g["features"], dtype=np.float32))
+    pred = predict_ref(params, feats)
+    np.testing.assert_allclose(pred[:, 0], g["expected_p50"], rtol=1e-5)
+    np.testing.assert_allclose(pred[:, 1], g["expected_p90"], rtol=1e-5)
+    assert all(p90 >= p50 for p50, p90 in zip(g["expected_p50"], g["expected_p90"]))
+
+
+def test_meta_dict_complete():
+    meta = datagen.meta_dict()
+    for key in ("buckets", "bucket_order", "tasks", "task_given_bucket",
+                "prompt_alpha", "prompt_beta", "prompt_sigma", "mixes",
+                "feature_layout", "token_scale", "d_in"):
+        assert key in meta, f"meta missing {key}"
+    assert meta["bucket_order"] == ["short", "medium", "long", "xlong"]
+    assert len(meta["feature_layout"]) == 8
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                    "../../artifacts/predictor_meta.json")),
+    reason="artifacts not built (run `make artifacts`)")
+def test_built_artifacts_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "predictor_meta.json")) as f:
+        meta = json.load(f)
+    for name in meta["artifacts"]:
+        path = os.path.join(root, name)
+        assert os.path.exists(path), f"missing artifact {name}"
+        with open(path) as fh:
+            head = fh.read(4096)
+        assert "HloModule" in head
+    assert meta["model"]["batch_sizes"] == list(BATCH_SIZES)
+    g = meta["golden"]
+    assert len(g["features"]) == len(g["expected_p50"]) == len(g["expected_p90"])
+    # Trained predictor should order buckets correctly on the golden set in
+    # aggregate: p50 for xlong-ish rows above p50 for short-ish rows.
+    p50 = np.array(g["expected_p50"])
+    true = np.array(g["true_tokens"])
+    if len(p50) >= 4 and true.std() > 0:
+        assert np.corrcoef(p50, true)[0, 1] > 0.0

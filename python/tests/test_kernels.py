@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and value ranges; assert_allclose against ref.py is
+the core correctness signal for the compute layer (the AOT artifact lowers
+exactly these kernels).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_mlp import BM, D_IN, H1, H2, fused_mlp
+from compile.kernels.quantile_head import OUT_PAD, quantile_head
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+def _mlp_args(seed, batch_tiles, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = _mk(rng, batch_tiles * BM, D_IN, scale=scale)
+    w1 = _mk(rng, D_IN, H1, scale=scale)
+    b1 = _mk(rng, H1, scale=scale)
+    w2 = _mk(rng, H1, H2, scale=scale)
+    b2 = _mk(rng, H2, scale=scale)
+    return x, w1, b1, w2, b2
+
+
+class TestFusedMlp:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), tiles=st.integers(1, 4))
+    def test_matches_ref(self, seed, tiles):
+        args = _mlp_args(seed, tiles)
+        got = fused_mlp(*args)
+        want = ref.fused_mlp_ref(*args)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           scale=st.sampled_from([1e-3, 1e-1, 1.0, 10.0]))
+    def test_value_ranges(self, seed, scale):
+        args = _mlp_args(seed, 1, scale=scale)
+        got = fused_mlp(*args)
+        want = ref.fused_mlp_ref(*args)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale)
+
+    def test_output_shape_and_dtype(self):
+        args = _mlp_args(0, 2)
+        out = fused_mlp(*args)
+        assert out.shape == (2 * BM, H2)
+        assert out.dtype == jnp.float32
+
+    def test_relu_nonnegative(self):
+        args = _mlp_args(7, 1)
+        assert float(jnp.min(fused_mlp(*args))) >= 0.0
+
+    def test_zero_input_gives_bias_path(self):
+        x, w1, b1, w2, b2 = _mlp_args(3, 1)
+        x = jnp.zeros_like(x)
+        got = fused_mlp(x, w1, b1, w2, b2)
+        want = ref.fused_mlp_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_rejects_bad_batch(self):
+        x, w1, b1, w2, b2 = _mlp_args(0, 1)
+        with pytest.raises(ValueError, match="multiple"):
+            fused_mlp(x[: BM - 1], w1, b1, w2, b2)
+
+    def test_rejects_bad_width(self):
+        x, w1, b1, w2, b2 = _mlp_args(0, 1)
+        with pytest.raises(ValueError, match="feature width"):
+            fused_mlp(x[:, : D_IN - 1], w1, b1, w2, b2)
+
+
+def _head_args(seed, batch_tiles, scale=1.0):
+    rng = np.random.default_rng(seed)
+    h = jnp.abs(_mk(rng, batch_tiles * BM, H2, scale=scale))
+    wq = jnp.zeros((H2, OUT_PAD), jnp.float32).at[:, :2].set(
+        _mk(rng, H2, 2, scale=scale))
+    bq = jnp.zeros((OUT_PAD,), jnp.float32).at[:2].set(_mk(rng, 2, scale=scale))
+    return h, wq, bq
+
+
+class TestQuantileHead:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), tiles=st.integers(1, 3))
+    def test_matches_ref(self, seed, tiles):
+        args = _head_args(seed, tiles)
+        got = quantile_head(*args)
+        want = ref.quantile_head_ref(*args)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_monotone_p90_ge_p50(self, seed):
+        got = quantile_head(*_head_args(seed, 1))
+        assert bool(jnp.all(got[:, 1] >= got[:, 0]))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_quantiles_positive(self, seed):
+        got = quantile_head(*_head_args(seed, 1))
+        assert bool(jnp.all(got[:, 0] > 0.0))
+
+    def test_pad_lanes_zero(self):
+        got = quantile_head(*_head_args(11, 1))
+        np.testing.assert_array_equal(np.asarray(got[:, 2:]), 0.0)
+
+    def test_rejects_bad_batch(self):
+        h, wq, bq = _head_args(0, 1)
+        with pytest.raises(ValueError, match="multiple"):
+            quantile_head(h[:3], wq, bq)

@@ -1,0 +1,116 @@
+"""L2 correctness: predictor model shapes, Pallas-vs-ref parity, training
+behaviour, and datagen invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import datagen
+from compile.kernels.fused_mlp import BM, D_IN
+from compile.model import init_params, pad_batch, pinball_loss, predict, predict_ref
+from compile.train import adam_init, adam_step, train
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), datagen.TOKEN_SCALE)
+
+
+class TestPredict:
+    def test_shapes(self, params):
+        x = jnp.zeros((BM, D_IN), jnp.float32)
+        out = predict(params, x)
+        assert out.shape == (BM, 2)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_pallas_matches_ref(self, params, seed):
+        rng = np.random.default_rng(seed)
+        feats, _, _ = datagen.sample_requests(rng, BM)
+        x = jnp.asarray(feats)
+        np.testing.assert_allclose(
+            predict(params, x), predict_ref(params, x), rtol=1e-5, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_monotone_quantiles(self, params, seed):
+        rng = np.random.default_rng(seed)
+        feats, _, _ = datagen.sample_requests(rng, BM)
+        out = predict_ref(params, jnp.asarray(feats))
+        assert bool(jnp.all(out[:, 1] >= out[:, 0]))
+
+    def test_pad_batch(self):
+        x = jnp.ones((5, D_IN))
+        padded = pad_batch(x)
+        assert padded.shape == (BM, D_IN)
+        np.testing.assert_array_equal(np.asarray(padded[5:]), 0.0)
+        assert pad_batch(jnp.ones((BM, D_IN))).shape == (BM, D_IN)
+
+
+class TestTraining:
+    def test_pinball_loss_positive(self, params):
+        rng = np.random.default_rng(0)
+        feats, ytok, _ = datagen.sample_requests(rng, 256)
+        loss = pinball_loss(params, jnp.asarray(feats), jnp.asarray(ytok))
+        assert float(loss) > 0.0
+
+    def test_adam_step_moves_params(self, params):
+        tp = {k: v for k, v in params.items() if k != "token_scale"}
+        grads = jax.tree_util.tree_map(jnp.ones_like, tp)
+        newp, _ = adam_step(tp, grads, adam_init(tp))
+        assert not np.allclose(np.asarray(newp["w1"]), np.asarray(params["w1"]))
+
+    def test_short_training_reduces_loss_and_covers(self):
+        p, metrics = train(seed=3, steps=120, batch=256, verbose=False)
+        # Pinball loss should be well below the untrained O(1) level and the
+        # p90 head must over-cover the p50 head.
+        assert metrics["final_pinball"] < 0.5
+        assert metrics["coverage_p90"] > metrics["coverage_p50"]
+        assert 0.25 < metrics["coverage_p50"] < 0.8
+        assert metrics["coverage_p90"] > 0.6
+
+
+class TestDatagen:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           mix=st.sampled_from(list(datagen.MIXES)))
+    def test_samples_in_bucket_ranges(self, seed, mix):
+        rng = np.random.default_rng(seed)
+        feats, ytok, aux = datagen.sample_requests(rng, 512, mix)
+        for i, name in enumerate(datagen.BUCKET_ORDER):
+            lo, hi = datagen.BUCKETS[name]
+            sel = aux["bucket_idx"] == i
+            if sel.any():
+                assert ytok[sel].min() >= lo and ytok[sel].max() <= hi
+
+    def test_mix_proportions(self):
+        rng = np.random.default_rng(42)
+        _, _, aux = datagen.sample_requests(rng, 40000, "balanced")
+        frac = np.bincount(aux["bucket_idx"], minlength=4) / 40000
+        np.testing.assert_allclose(frac, datagen.MIXES["balanced"], atol=0.02)
+
+    def test_feature_layout(self):
+        f = datagen.features_from_raw([100], [2], [0.5], [1024])
+        assert f.shape == (1, datagen.D_IN)
+        assert f[0, 0] == pytest.approx(100 / 2048)
+        assert f[0, 1] == pytest.approx(np.log1p(100) / 8)
+        assert f[0, 2 + 2] == 1.0 and f[0, 2] == 0.0
+        assert f[0, 6] == 0.5
+        assert f[0, 7] == pytest.approx(1024 / 4096)
+        np.testing.assert_array_equal(f[0, 8:], 0.0)
+
+    def test_prompt_correlates_with_output(self):
+        rng = np.random.default_rng(7)
+        _, ytok, aux = datagen.sample_requests(rng, 20000)
+        r = np.corrcoef(np.log(aux["prompt_tok"]), np.log(ytok))[0, 1]
+        assert r > 0.3, f"prompt/output correlation too weak: {r}"
+
+    def test_deterministic_given_seed(self):
+        a = datagen.sample_requests(np.random.default_rng(5), 64)
+        b = datagen.sample_requests(np.random.default_rng(5), 64)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])

@@ -1,0 +1,18 @@
+//! `cargo bench --bench ablation` — regenerates the design-choice ablation
+//! table end-to-end (ordering / DRR weights / bypass).
+
+use blackbox_sched::bench::Suite;
+use blackbox_sched::experiments::{self, ExpOpts};
+
+fn main() {
+    let mut suite = Suite::new("ablation");
+    let opts = ExpOpts {
+        seeds: std::env::var("BENCH_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5),
+        out_dir: "target/bench-results/tables".to_string(),
+        ..ExpOpts::default()
+    };
+    suite.bench_n("ablation (full experiment)", 3, || {
+        experiments::run_experiment("ablation", &opts).expect("experiment failed");
+    });
+    suite.finish();
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench burst` — regenerates the burst-robustness extension
+//! table end-to-end.
+
+use blackbox_sched::bench::Suite;
+use blackbox_sched::experiments::{self, ExpOpts};
+
+fn main() {
+    let mut suite = Suite::new("burst");
+    let opts = ExpOpts {
+        seeds: std::env::var("BENCH_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5),
+        out_dir: "target/bench-results/tables".to_string(),
+        ..ExpOpts::default()
+    };
+    suite.bench_n("burst (full experiment)", 3, || {
+        experiments::run_experiment("burst", &opts).expect("experiment failed");
+    });
+    suite.finish();
+}

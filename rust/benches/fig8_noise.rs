@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig8_noise` — regenerates Figure 8 (predictor-noise sweep)
+//! end-to-end and reports the wall-clock cost of the experiment.
+
+use blackbox_sched::bench::Suite;
+use blackbox_sched::experiments::{self, ExpOpts};
+
+fn main() {
+    let mut suite = Suite::new("fig8_noise");
+    let opts = ExpOpts {
+        seeds: std::env::var("BENCH_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5),
+        out_dir: "target/bench-results/tables".to_string(),
+        ..ExpOpts::default()
+    };
+    suite.bench_n("fig8_noise (full experiment)", 3, || {
+        experiments::run_experiment("noise", &opts).expect("experiment failed");
+    });
+    suite.finish();
+}

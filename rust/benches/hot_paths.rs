@@ -1,0 +1,129 @@
+//! `cargo bench --bench hot_paths` — micro-benchmarks of every component on
+//! the request path, plus the PJRT predictor when artifacts are present.
+//! These are the numbers tracked in EXPERIMENTS.md §Perf.
+
+use blackbox_sched::bench::Suite;
+use blackbox_sched::core::{Class, Priors};
+use blackbox_sched::predictor::features::batch_features;
+use blackbox_sched::predictor::{InfoLevel, LadderSource, PriorSource};
+use blackbox_sched::provider::{MockProvider, ProviderCfg};
+use blackbox_sched::runtime::{artifacts_available, default_artifacts_dir, Predictor};
+use blackbox_sched::scheduler::{Action, ClientScheduler, SchedulerCfg, StrategyKind};
+use blackbox_sched::sim::driver;
+use blackbox_sched::sim::EventQueue;
+use blackbox_sched::util::rng::Rng;
+use blackbox_sched::util::stats::percentile;
+use blackbox_sched::workload::{Mix, WorkloadSpec};
+
+fn main() {
+    let mut suite = Suite::new("hot_paths");
+
+    // ---- RNG ----
+    let mut rng = Rng::new(1);
+    suite.bench("rng: next_u64", || {
+        std::hint::black_box(rng.next_u64());
+    });
+    let mut rng2 = Rng::new(2);
+    suite.bench("rng: lognormal", || {
+        std::hint::black_box(rng2.lognormal(0.0, 0.25));
+    });
+
+    // ---- DES event queue ----
+    suite.bench("event queue: push+pop (1k queue)", || {
+        // steady-state: queue pre-filled once per batch amortized by closure state
+        static mut Q: Option<EventQueue<u32>> = None;
+        #[allow(static_mut_refs)]
+        let q = unsafe {
+            if Q.is_none() {
+                let mut q = EventQueue::new();
+                for i in 0..1000 {
+                    q.push(i as f64, i);
+                }
+                Q = Some(q);
+            }
+            Q.as_mut().unwrap()
+        };
+        let (t, v) = q.pop().unwrap();
+        q.push(t + 1000.0, v);
+    });
+
+    // ---- provider ----
+    let mut provider = MockProvider::new(ProviderCfg::default(), Rng::new(3));
+    let mut i = 0usize;
+    suite.bench("provider: submit+finish", || {
+        if let Some(_s) = provider.submit(i, 500.0, i as f64) {
+            provider.on_finish(i as f64 + 1.0);
+        }
+        i += 1;
+    });
+
+    // ---- prior sources ----
+    let reqs = WorkloadSpec::new(Mix::Balanced, 4096, 50.0).generate(5);
+    let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(9));
+    let mut k = 0usize;
+    suite.bench("priors: coarse ladder per-request", || {
+        std::hint::black_box(src.priors(&reqs[k % reqs.len()]));
+        k += 1;
+    });
+
+    // ---- scheduler decision path ----
+    let mut j = 0usize;
+    let mut sched = ClientScheduler::new(SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc));
+    let mut ladder = LadderSource::new(InfoLevel::Coarse, Rng::new(11));
+    suite.bench("scheduler: arrival→actions (Final OLC)", || {
+        let r = &reqs[j % reqs.len()];
+        let (p, route) = ladder.priors(r);
+        let actions = sched.on_arrival(r, p, route, j as f64);
+        // Drain sends so in-flight doesn't saturate: fake completions.
+        for a in actions {
+            if let Action::Send { id } = a {
+                sched.on_completion(id, 200.0, 2500.0, j as f64 + 1.0);
+            }
+        }
+        j += 1;
+    });
+
+    // ---- end-to-end DES run ----
+    let requests = WorkloadSpec::new(Mix::Heavy, 200, 14.0).generate(1);
+    suite.bench_n("end-to-end: 200-request heavy/high run", 20, || {
+        let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(1).derive("priors"));
+        let out = driver::run(
+            &requests,
+            &mut src,
+            SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+            ProviderCfg::default(),
+            1,
+        );
+        std::hint::black_box(out.metrics.goodput_rps);
+    });
+
+    // ---- metrics ----
+    let mut lat: Vec<f64> = (0..10_000).map(|i| (i as f64 * 37.7) % 5000.0).collect();
+    suite.bench("metrics: p95 over 10k samples", || {
+        std::hint::black_box(percentile(&lat, 95.0));
+    });
+    lat.truncate(10_000);
+
+    // ---- PJRT predictor (artifact-gated) ----
+    let dir = default_artifacts_dir();
+    if artifacts_available(&dir) {
+        let predictor = Predictor::load(&dir).expect("artifacts present but unloadable");
+        let refs: Vec<&blackbox_sched::Request> = reqs.iter().take(512).collect();
+        let feats512 = batch_features(&refs, 512);
+        suite.bench_n("pjrt: predict batch=512", 50, || {
+            let out = predictor.predict(&feats512, 512).unwrap();
+            std::hint::black_box(out[0].p50);
+        });
+        let feats1 = batch_features(&refs[..1], 1);
+        suite.bench_n("pjrt: predict batch=1 (padded 128)", 200, || {
+            let out = predictor.predict(&feats1, 1).unwrap();
+            std::hint::black_box(out[0].p50);
+        });
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts` first)");
+    }
+
+    let _ = Class::Interactive; // keep import for doc symmetry
+    let _ = Priors::new(1.0, 2.0);
+    suite.finish();
+}

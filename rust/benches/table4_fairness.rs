@@ -1,0 +1,18 @@
+//! `cargo bench --bench table4_fairness` — regenerates Table 4 (Fair Queuing vs Short-Priority)
+//! end-to-end and reports the wall-clock cost of the experiment.
+
+use blackbox_sched::bench::Suite;
+use blackbox_sched::experiments::{self, ExpOpts};
+
+fn main() {
+    let mut suite = Suite::new("table4_fairness");
+    let opts = ExpOpts {
+        seeds: std::env::var("BENCH_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5),
+        out_dir: "target/bench-results/tables".to_string(),
+        ..ExpOpts::default()
+    };
+    suite.bench_n("table4_fairness (full experiment)", 3, || {
+        experiments::run_experiment("fairness", &opts).expect("experiment failed");
+    });
+    suite.finish();
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench table6_sharegpt` — regenerates the ShareGPT validation table
+//! end-to-end and reports the wall-clock cost of the experiment.
+
+use blackbox_sched::bench::Suite;
+use blackbox_sched::experiments::{self, ExpOpts};
+
+fn main() {
+    let mut suite = Suite::new("table6_sharegpt");
+    let opts = ExpOpts {
+        seeds: std::env::var("BENCH_SEEDS").ok().and_then(|s| s.parse().ok()).unwrap_or(5),
+        out_dir: "target/bench-results/tables".to_string(),
+        ..ExpOpts::default()
+    };
+    suite.bench_n("table6_sharegpt (full experiment)", 3, || {
+        experiments::run_experiment("sharegpt", &opts).expect("experiment failed");
+    });
+    suite.finish();
+}

@@ -1,0 +1,157 @@
+//! Micro/end-to-end benchmark harness (the image vendors no criterion).
+//!
+//! `cargo bench` runs the `benches/*.rs` targets declared with
+//! `harness = false`; each target builds a `Suite`, registers benchmarks,
+//! and calls `run()`, which warms up, samples wall-clock batches, and prints
+//! a criterion-style `name  time/iter  ±std  iters` table. End-to-end table
+//! benches reuse the same harness with one iteration per seed.
+
+use std::time::Instant;
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn human_time(&self) -> String {
+        fmt_ns(self.mean_ns)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark suite: register closures, run, print a table.
+pub struct Suite {
+    title: String,
+    results: Vec<BenchResult>,
+    /// Target wall time per benchmark (seconds).
+    pub budget_s: f64,
+    /// Minimum sample batches.
+    pub min_batches: usize,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        // Honour the --bench/--test harness args cargo passes; also allow
+        // BENCH_BUDGET_S to trim CI time.
+        let budget_s = std::env::var("BENCH_BUDGET_S")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1.0);
+        println!("\n== bench suite: {title} ==");
+        Suite { title: title.to_string(), results: Vec::new(), budget_s, min_batches: 10 }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        // Warmup + calibration: find iterations per batch so one batch ≈ 10ms.
+        f();
+        let t0 = Instant::now();
+        f();
+        let once_ns = t0.elapsed().as_nanos().max(1) as f64;
+        let per_batch = ((10_000_000.0 / once_ns).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut batches: Vec<f64> = Vec::new();
+        let deadline = Instant::now();
+        while batches.len() < self.min_batches
+            || (deadline.elapsed().as_secs_f64() < self.budget_s && batches.len() < 200)
+        {
+            let t = Instant::now();
+            for _ in 0..per_batch {
+                f();
+            }
+            batches.push(t.elapsed().as_nanos() as f64 / per_batch as f64);
+        }
+        let (mean, std) = crate::util::stats::mean_std(&batches);
+        let r = BenchResult {
+            name: name.to_string(),
+            mean_ns: mean,
+            std_ns: std,
+            iters: per_batch * batches.len() as u64,
+        };
+        println!("{:<44} {:>12}  ±{:<10} {:>9} iters", r.name, fmt_ns(r.mean_ns), fmt_ns(r.std_ns), r.iters);
+        self.results.push(r);
+    }
+
+    /// Measure a closure that runs a whole end-to-end experiment once;
+    /// samples exactly `n` runs (used for table benches where one run is
+    /// seconds of virtual time but only ms of wall time).
+    pub fn bench_n(&mut self, name: &str, n: usize, mut f: impl FnMut()) {
+        let mut samples: Vec<f64> = Vec::new();
+        for _ in 0..n.max(1) {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let (mean, std) = crate::util::stats::mean_std(&samples);
+        let r = BenchResult { name: name.to_string(), mean_ns: mean, std_ns: std, iters: n as u64 };
+        println!("{:<44} {:>12}  ±{:<10} {:>9} runs", r.name, fmt_ns(r.mean_ns), fmt_ns(r.std_ns), r.iters);
+        self.results.push(r);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Emit results as JSON next to bench output (for the perf log).
+    pub fn finish(self) {
+        use crate::util::jsonio::Json;
+        let arr: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("name", r.name.as_str())
+                    .set("mean_ns", r.mean_ns)
+                    .set("std_ns", r.std_ns)
+                    .set("iters", r.iters)
+            })
+            .collect();
+        let out = Json::obj().set("suite", self.title.as_str()).set("results", Json::Arr(arr));
+        let dir = "target/bench-results";
+        let _ = std::fs::create_dir_all(dir);
+        let path = format!("{dir}/{}.json", self.title.replace([' ', '/'], "_"));
+        let _ = out.write_file(&path);
+        println!("-- wrote {path}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(5.0), "5.0 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3_200_000_000.0), "3.200 s");
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("BENCH_BUDGET_S", "0.05");
+        let mut s = Suite::new("selftest");
+        let mut acc = 0u64;
+        s.bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert_eq!(s.results().len(), 1);
+        assert!(s.results()[0].mean_ns > 0.0);
+    }
+}

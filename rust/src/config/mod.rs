@@ -1,0 +1,268 @@
+//! Config system: every knob of the scheduler, provider, workload, and
+//! SLO policy is settable from a JSON file, so deployments and experiment
+//! variants are data, not code. `bbsched run --config cfg.json` and the
+//! library's `RunConfig::from_file` both land here.
+//!
+//! The file is a JSON object with (all-optional) sections; anything omitted
+//! keeps the built-in default. See `example_config()` for the full schema.
+
+use anyhow::{bail, Context, Result};
+
+use crate::core::SloPolicy;
+use crate::provider::ProviderCfg;
+use crate::scheduler::overload::BucketPolicy;
+use crate::scheduler::{OrderingKind, SchedulerCfg, StrategyKind};
+use crate::util::jsonio::Json;
+use crate::workload::{Mix, WorkloadSpec};
+
+/// Fully-resolved configuration for one run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub workload: WorkloadSpec,
+    pub scheduler: SchedulerCfg,
+    pub provider: ProviderCfg,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            workload: WorkloadSpec::new(Mix::Balanced, 200, 12.0),
+            scheduler: SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+            provider: ProviderCfg::default(),
+            seed: 0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let j = Json::read_file(path).with_context(|| format!("reading config {path}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        cfg.seed = j.f64_or("seed", cfg.seed as f64) as u64;
+
+        if let Some(w) = j.get("workload") {
+            let mix_name = w.str_or("mix", cfg.workload.mix.name());
+            let mix = Mix::parse(mix_name)
+                .with_context(|| format!("unknown workload.mix {mix_name:?}"))?;
+            let mut spec = WorkloadSpec::new(
+                mix,
+                w.f64_or("n_requests", cfg.workload.n_requests as f64) as usize,
+                w.f64_or("rate_rps", cfg.workload.rate_rps),
+            );
+            if let Some(slo) = w.get("slo") {
+                let mut policy = SloPolicy::default();
+                if let Some(d) = slo.get("deadline_ms") {
+                    let v = d.f64_array().context("slo.deadline_ms")?;
+                    if v.len() != 4 {
+                        bail!("slo.deadline_ms needs 4 entries (short..xlong)");
+                    }
+                    policy.deadline_ms = [v[0], v[1], v[2], v[3]];
+                }
+                policy.timeout_factor = slo.f64_or("timeout_factor", policy.timeout_factor);
+                spec.slo = policy;
+            }
+            cfg.workload = spec;
+        }
+
+        if let Some(s) = j.get("scheduler") {
+            let name = s.str_or("strategy", cfg.scheduler.strategy.name());
+            let strategy = StrategyKind::parse(name)
+                .with_context(|| format!("unknown scheduler.strategy {name:?}"))?;
+            let mut sched = SchedulerCfg::for_strategy(strategy);
+            sched.max_inflight = s.f64_or("max_inflight", sched.max_inflight as f64) as usize;
+            sched.interactive_bypass =
+                s.f64_or("interactive_bypass", sched.interactive_bypass as f64) as usize;
+            sched.quota_interactive =
+                s.f64_or("quota_interactive", sched.quota_interactive as f64) as usize;
+            sched.quota_heavy = s.f64_or("quota_heavy", sched.quota_heavy as f64) as usize;
+            if let Some(name) = s.get("heavy_ordering").and_then(Json::as_str) {
+                sched.heavy_ordering = OrderingKind::parse(name)
+                    .with_context(|| format!("unknown heavy_ordering {name:?}"))?;
+            }
+            if let Some(d) = s.get("drr") {
+                sched.drr.quantum_tokens = d.f64_or("quantum_tokens", sched.drr.quantum_tokens);
+                sched.drr.w_interactive = d.f64_or("w_interactive", sched.drr.w_interactive);
+                sched.drr.w_heavy = d.f64_or("w_heavy", sched.drr.w_heavy);
+                sched.drr.adaptive_gain = d.f64_or("adaptive_gain", sched.drr.adaptive_gain);
+            }
+            if let Some(o) = s.get("ordering") {
+                sched.ordering.w_wait = o.f64_or("w_wait", sched.ordering.w_wait);
+                sched.ordering.w_size = o.f64_or("w_size", sched.ordering.w_size);
+                sched.ordering.w_urgency = o.f64_or("w_urgency", sched.ordering.w_urgency);
+                sched.ordering.ref_tokens = o.f64_or("ref_tokens", sched.ordering.ref_tokens);
+                sched.ordering.est_base_ms = o.f64_or("est_base_ms", sched.ordering.est_base_ms);
+                sched.ordering.est_per_token_ms =
+                    o.f64_or("est_per_token_ms", sched.ordering.est_per_token_ms);
+                sched.ordering.est_slack_factor =
+                    o.f64_or("est_slack_factor", sched.ordering.est_slack_factor);
+            }
+            if let Some(o) = s.get("overload") {
+                sched.overload.enabled = o.get("enabled").and_then(Json::as_bool).unwrap_or(sched.overload.enabled);
+                sched.overload.t_defer = o.f64_or("t_defer", sched.overload.t_defer);
+                sched.overload.t_reject_xlong =
+                    o.f64_or("t_reject_xlong", sched.overload.t_reject_xlong);
+                sched.overload.t_reject_long =
+                    o.f64_or("t_reject_long", sched.overload.t_reject_long);
+                sched.overload.w_load = o.f64_or("w_load", sched.overload.w_load);
+                sched.overload.w_queue = o.f64_or("w_queue", sched.overload.w_queue);
+                sched.overload.w_tail = o.f64_or("w_tail", sched.overload.w_tail);
+                sched.overload.defer_base_ms = o.f64_or("defer_base_ms", sched.overload.defer_base_ms);
+                sched.overload.defer_cap_ms = o.f64_or("defer_cap_ms", sched.overload.defer_cap_ms);
+                sched.overload.queue_budget_tokens =
+                    o.f64_or("queue_budget_tokens", sched.overload.queue_budget_tokens);
+                if let Some(name) = o.get("bucket_policy").and_then(Json::as_str) {
+                    sched.overload.bucket_policy = BucketPolicy::parse(name)
+                        .with_context(|| format!("unknown bucket_policy {name:?}"))?;
+                }
+            }
+            cfg.scheduler = sched;
+        }
+
+        if let Some(p) = j.get("provider") {
+            cfg.provider.base_ms = p.f64_or("base_ms", cfg.provider.base_ms);
+            cfg.provider.per_token_ms = p.f64_or("per_token_ms", cfg.provider.per_token_ms);
+            cfg.provider.max_concurrency =
+                p.f64_or("max_concurrency", cfg.provider.max_concurrency as f64) as usize;
+            cfg.provider.slowdown_gamma = p.f64_or("slowdown_gamma", cfg.provider.slowdown_gamma);
+            cfg.provider.slowdown_exp = p.f64_or("slowdown_exp", cfg.provider.slowdown_exp);
+            cfg.provider.slowdown_ref = p.f64_or("slowdown_ref", cfg.provider.slowdown_ref);
+            cfg.provider.jitter_sigma = p.f64_or("jitter_sigma", cfg.provider.jitter_sigma);
+        }
+        Ok(cfg)
+    }
+}
+
+/// A complete example config (also used by tests; `bbsched run
+/// --dump-config` prints it).
+pub fn example_config() -> Json {
+    Json::obj()
+        .set("seed", 0u64)
+        .set(
+            "workload",
+            Json::obj()
+                .set("mix", "heavy")
+                .set("n_requests", 200usize)
+                .set("rate_rps", 14.0)
+                .set(
+                    "slo",
+                    Json::obj()
+                        .set("deadline_ms", vec![2500.0, 8000.0, 20000.0, 40000.0])
+                        .set("timeout_factor", 1.2),
+                ),
+        )
+        .set(
+            "scheduler",
+            Json::obj()
+                .set("strategy", "final_adrr_olc")
+                .set("max_inflight", 8usize)
+                .set("interactive_bypass", 4usize)
+                .set("heavy_ordering", "feasible_set")
+                .set(
+                    "drr",
+                    Json::obj()
+                        .set("quantum_tokens", 400.0)
+                        .set("w_interactive", 2.0)
+                        .set("w_heavy", 1.0)
+                        .set("adaptive_gain", 1.5),
+                )
+                .set(
+                    "overload",
+                    Json::obj()
+                        .set("enabled", true)
+                        .set("t_defer", 0.45)
+                        .set("t_reject_xlong", 0.65)
+                        .set("t_reject_long", 0.80)
+                        .set("bucket_policy", "cost_ladder"),
+                ),
+        )
+        .set(
+            "provider",
+            Json::obj()
+                .set("base_ms", 150.0)
+                .set("per_token_ms", 0.9)
+                .set("slowdown_gamma", 0.8)
+                .set("slowdown_exp", 1.5)
+                .set("slowdown_ref", 8.0)
+                .set("jitter_sigma", 0.06),
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_is_defaults() {
+        let cfg = RunConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.scheduler.strategy, StrategyKind::FinalAdrrOlc);
+        assert_eq!(cfg.workload.n_requests, 200);
+        assert_eq!(cfg.seed, 0);
+    }
+
+    #[test]
+    fn example_config_roundtrips() {
+        let j = example_config();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.workload.mix, Mix::Heavy);
+        assert_eq!(cfg.workload.rate_rps, 14.0);
+        assert_eq!(cfg.scheduler.overload.bucket_policy, BucketPolicy::CostLadder);
+        assert_eq!(cfg.provider.slowdown_ref, 8.0);
+        // Text round-trip too.
+        let cfg2 = RunConfig::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(cfg2.scheduler.max_inflight, cfg.scheduler.max_inflight);
+    }
+
+    #[test]
+    fn partial_overrides_keep_defaults() {
+        let j = Json::parse(
+            r#"{"scheduler": {"strategy": "quota_tiered", "quota_heavy": 3},
+                "provider": {"base_ms": 500}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.scheduler.strategy, StrategyKind::QuotaTiered);
+        assert_eq!(cfg.scheduler.quota_heavy, 3);
+        assert_eq!(cfg.scheduler.quota_interactive, 4, "default kept");
+        assert_eq!(cfg.provider.base_ms, 500.0);
+        assert_eq!(cfg.provider.per_token_ms, 0.9, "default kept");
+    }
+
+    #[test]
+    fn rejects_unknown_enums() {
+        for bad in [
+            r#"{"scheduler": {"strategy": "wizardry"}}"#,
+            r#"{"workload": {"mix": "nope"}}"#,
+            r#"{"scheduler": {"overload": {"bucket_policy": "chaos"}}}"#,
+            r#"{"scheduler": {"heavy_ordering": "vibes"}}"#,
+        ] {
+            assert!(RunConfig::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn slo_deadline_validation() {
+        let bad = r#"{"workload": {"slo": {"deadline_ms": [1, 2, 3]}}}"#;
+        assert!(RunConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+        let good = r#"{"workload": {"slo": {"deadline_ms": [1000, 2000, 3000, 4000], "timeout_factor": 2.0}}}"#;
+        let cfg = RunConfig::from_json(&Json::parse(good).unwrap()).unwrap();
+        assert_eq!(cfg.workload.slo.deadline_ms[3], 4000.0);
+        assert_eq!(cfg.workload.slo.timeout_factor, 2.0);
+    }
+
+    #[test]
+    fn config_drives_a_run() {
+        use crate::predictor::{InfoLevel, LadderSource};
+        use crate::sim::driver;
+        use crate::util::rng::Rng;
+        let cfg = RunConfig::from_json(&example_config()).unwrap();
+        let requests = cfg.workload.generate(cfg.seed);
+        let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(cfg.seed).derive("p"));
+        let out = driver::run(&requests, &mut src, cfg.scheduler, cfg.provider, cfg.seed);
+        assert_eq!(out.metrics.n_offered, 200);
+    }
+}

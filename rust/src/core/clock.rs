@@ -1,0 +1,120 @@
+//! Clock abstraction: the scheduler and provider are written against
+//! `Clock` so the identical policy code runs under the discrete-event
+//! simulator (virtual ms, experiments) and under wall-clock time (the
+//! `serve` real-time driver). Times are f64 milliseconds.
+
+use std::cell::Cell;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// A source of "now" in milliseconds.
+pub trait Clock {
+    fn now_ms(&self) -> f64;
+}
+
+/// Virtual clock for the DES: shared cell advanced by the engine.
+#[derive(Debug, Clone)]
+pub struct SimClock {
+    now: Rc<Cell<f64>>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { now: Rc::new(Cell::new(0.0)) }
+    }
+
+    /// Advance to an absolute time. The engine enforces monotonicity; a
+    /// backwards set is a bug.
+    pub fn advance_to(&self, t: f64) {
+        debug_assert!(t >= self.now.get(), "clock moved backwards: {} -> {t}", self.now.get());
+        self.now.set(t);
+    }
+}
+
+impl Default for SimClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for SimClock {
+    fn now_ms(&self) -> f64 {
+        self.now.get()
+    }
+}
+
+/// Wall-clock time since construction, optionally scaled (e.g. 0.1 =
+/// 10× faster than real time for demos).
+#[derive(Debug, Clone)]
+pub struct RealClock {
+    epoch: Instant,
+    scale: f64,
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        RealClock { epoch: Instant::now(), scale: 1.0 }
+    }
+
+    /// `scale` > 1 stretches virtual ms per wall ms (slower); < 1 compresses.
+    pub fn scaled(scale: f64) -> Self {
+        assert!(scale > 0.0);
+        RealClock { epoch: Instant::now(), scale }
+    }
+
+    /// Convert a duration in model-ms to wall-clock ms.
+    pub fn to_wall_ms(&self, model_ms: f64) -> f64 {
+        model_ms * self.scale
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1000.0 / self.scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances() {
+        let c = SimClock::new();
+        assert_eq!(c.now_ms(), 0.0);
+        c.advance_to(10.5);
+        assert_eq!(c.now_ms(), 10.5);
+        let c2 = c.clone();
+        c2.advance_to(20.0);
+        assert_eq!(c.now_ms(), 20.0, "clones share the cell");
+    }
+
+    #[test]
+    #[should_panic(expected = "clock moved backwards")]
+    #[cfg(debug_assertions)]
+    fn sim_clock_rejects_backwards() {
+        let c = SimClock::new();
+        c.advance_to(5.0);
+        c.advance_to(1.0);
+    }
+
+    #[test]
+    fn real_clock_progresses() {
+        let c = RealClock::new();
+        let a = c.now_ms();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(c.now_ms() > a);
+    }
+
+    #[test]
+    fn real_clock_scaling() {
+        let c = RealClock::scaled(0.5);
+        assert_eq!(c.to_wall_ms(100.0), 50.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Core domain types shared by every layer: requests, token buckets,
+//! priors, SLOs, and the clock abstraction.
+
+pub mod clock;
+pub mod request;
+
+pub use clock::{Clock, RealClock, SimClock};
+pub use request::{Class, Priors, ReqId, Request, RequestStatus, SloPolicy, Task, TokenBucket};

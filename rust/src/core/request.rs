@@ -1,0 +1,334 @@
+//! Request model: what the client knows (prompt features, priors, SLOs),
+//! what only the provider knows (true output tokens), and lifecycle state.
+
+/// Request identifier — index into the run's request table.
+pub type ReqId = usize;
+
+/// Output-token buckets, paper §4.1/§4.2. Bounds are inclusive and mirror
+/// `python/compile/datagen.py::BUCKETS` (asserted against
+/// `predictor_meta.json` at runtime-load).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TokenBucket {
+    Short,
+    Medium,
+    Long,
+    XLong,
+}
+
+impl TokenBucket {
+    pub const ALL: [TokenBucket; 4] =
+        [TokenBucket::Short, TokenBucket::Medium, TokenBucket::Long, TokenBucket::XLong];
+
+    /// Inclusive token bounds.
+    pub fn bounds(self) -> (u32, u32) {
+        match self {
+            TokenBucket::Short => (8, 64),
+            TokenBucket::Medium => (65, 256),
+            TokenBucket::Long => (257, 1024),
+            TokenBucket::XLong => (1025, 4096),
+        }
+    }
+
+    /// Classify a realized/predicted token count.
+    pub fn from_tokens(tokens: f64) -> TokenBucket {
+        if tokens <= 64.0 {
+            TokenBucket::Short
+        } else if tokens <= 256.0 {
+            TokenBucket::Medium
+        } else if tokens <= 1024.0 {
+            TokenBucket::Long
+        } else {
+            TokenBucket::XLong
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TokenBucket::Short => "short",
+            TokenBucket::Medium => "medium",
+            TokenBucket::Long => "long",
+            TokenBucket::XLong => "xlong",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TokenBucket> {
+        match s {
+            "short" => Some(TokenBucket::Short),
+            "medium" => Some(TokenBucket::Medium),
+            "long" => Some(TokenBucket::Long),
+            "xlong" => Some(TokenBucket::XLong),
+            _ => None,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            TokenBucket::Short => 0,
+            TokenBucket::Medium => 1,
+            TokenBucket::Long => 2,
+            TokenBucket::XLong => 3,
+        }
+    }
+
+    /// Geometric midpoint of the bucket — the "class-only" neutral estimate
+    /// when per-request magnitude is unavailable within a known bucket.
+    pub fn geo_mid(self) -> f64 {
+        let (lo, hi) = self.bounds();
+        ((lo as f64).ln() * 0.5 + (hi as f64).ln() * 0.5).exp()
+    }
+
+    /// The scheduler's two routing lanes (paper §3.1: "short versus
+    /// heavy"). Shorts ride the protected interactive lane; everything
+    /// else goes through the heavy lane, whose intra-class ordering
+    /// (feasible-set) favors older/smaller jobs — which is how mediums get
+    /// ahead of xlongs *within* the lane.
+    pub fn class(self) -> Class {
+        match self {
+            TokenBucket::Short => Class::Interactive,
+            _ => Class::Heavy,
+        }
+    }
+}
+
+/// Allocation-layer routing class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Class {
+    Interactive,
+    Heavy,
+}
+
+impl Class {
+    pub const ALL: [Class; 2] = [Class::Interactive, Class::Heavy];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Interactive => "interactive",
+            Class::Heavy => "heavy",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Class::Interactive => 0,
+            Class::Heavy => 1,
+        }
+    }
+}
+
+/// Task types from the shared generative model (feature one-hot lanes 2–5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Task {
+    Chat,
+    Summarize,
+    Code,
+    Extract,
+}
+
+impl Task {
+    pub const ALL: [Task; 4] = [Task::Chat, Task::Summarize, Task::Code, Task::Extract];
+
+    pub fn index(self) -> usize {
+        match self {
+            Task::Chat => 0,
+            Task::Summarize => 1,
+            Task::Code => 2,
+            Task::Extract => 3,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Task {
+        Task::ALL[i]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Chat => "chat",
+            Task::Summarize => "summarize",
+            Task::Code => "code",
+            Task::Extract => "extract",
+        }
+    }
+}
+
+/// Policy-facing output-length prior (the semi-clairvoyant signal).
+/// Invariant: `p90 >= p50 > 0` — enforced by `Priors::new` and by the
+/// quantile-head kernel's gap parameterization.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Priors {
+    pub p50: f64,
+    pub p90: f64,
+}
+
+impl Priors {
+    pub fn new(p50: f64, p90: f64) -> Priors {
+        let p50 = p50.max(1.0);
+        Priors { p50, p90: p90.max(p50) }
+    }
+
+    /// The bucket this prior routes to (used by tiered overload + routing
+    /// in the coarse/oracle ladder conditions).
+    pub fn bucket(&self) -> TokenBucket {
+        TokenBucket::from_tokens(self.p50)
+    }
+
+    /// Scale both quantiles (predictor-noise sweep §4.10).
+    pub fn scaled(&self, factor: f64) -> Priors {
+        Priors::new(self.p50 * factor, self.p90 * factor)
+    }
+}
+
+/// Request lifecycle as seen by the client.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestStatus {
+    /// Waiting in a client-side queue.
+    Queued,
+    /// Deferred by overload control; retry scheduled.
+    Deferred,
+    /// Submitted to the provider, awaiting completion.
+    InFlight,
+    /// Finished; latency recorded.
+    Completed,
+    /// Explicitly shed by overload control.
+    Rejected,
+    /// Gave up (client-side timeout) — implicit failure.
+    TimedOut,
+}
+
+/// One request. Fields above the line are client-observable at submission
+/// time; `true_output_tokens` is the provider-side ground truth that only
+/// the mock physics (and the oracle ladder condition) may read.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: ReqId,
+    pub arrival_ms: f64,
+    pub prompt_tokens: u32,
+    pub task: Task,
+    pub temperature: f64,
+    pub max_tokens: u32,
+    /// Deadline for SLO satisfaction, absolute ms.
+    pub deadline_ms: f64,
+    /// Hard client-side give-up time, absolute ms.
+    pub timeout_ms: f64,
+    // ---- hidden ground truth (mock provider + oracle only) ----
+    pub true_output_tokens: u32,
+    pub true_bucket: TokenBucket,
+}
+
+impl Request {
+    /// Deadline slack remaining at `now` (negative = already late).
+    pub fn slack(&self, now: f64) -> f64 {
+        self.deadline_ms - now
+    }
+
+    pub fn wait(&self, now: f64) -> f64 {
+        (now - self.arrival_ms).max(0.0)
+    }
+}
+
+/// Per-bucket SLO policy: relative deadline and hard timeout from arrival.
+#[derive(Debug, Clone)]
+pub struct SloPolicy {
+    /// Relative deadlines per bucket index (ms from arrival).
+    pub deadline_ms: [f64; 4],
+    /// Hard timeout as a multiple of the deadline.
+    pub timeout_factor: f64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        // Interactive work gets tight deadlines; heavy work generous ones.
+        // Chosen so the paper's joint-metric bands are reachable (see
+        // EXPERIMENTS.md §Calibration).
+        SloPolicy { deadline_ms: [2_500.0, 8_000.0, 20_000.0, 40_000.0], timeout_factor: 1.2 }
+    }
+}
+
+impl SloPolicy {
+    pub fn deadline_for(&self, bucket: TokenBucket) -> f64 {
+        self.deadline_ms[bucket.index()]
+    }
+
+    pub fn timeout_for(&self, bucket: TokenBucket) -> f64 {
+        self.deadline_for(bucket) * self.timeout_factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_from_tokens_edges() {
+        assert_eq!(TokenBucket::from_tokens(1.0), TokenBucket::Short);
+        assert_eq!(TokenBucket::from_tokens(64.0), TokenBucket::Short);
+        assert_eq!(TokenBucket::from_tokens(65.0), TokenBucket::Medium);
+        assert_eq!(TokenBucket::from_tokens(256.0), TokenBucket::Medium);
+        assert_eq!(TokenBucket::from_tokens(257.0), TokenBucket::Long);
+        assert_eq!(TokenBucket::from_tokens(1024.0), TokenBucket::Long);
+        assert_eq!(TokenBucket::from_tokens(1025.0), TokenBucket::XLong);
+        assert_eq!(TokenBucket::from_tokens(99999.0), TokenBucket::XLong);
+    }
+
+    #[test]
+    fn bucket_name_roundtrip() {
+        for b in TokenBucket::ALL {
+            assert_eq!(TokenBucket::parse(b.name()), Some(b));
+        }
+        assert_eq!(TokenBucket::parse("huge"), None);
+    }
+
+    #[test]
+    fn class_routing() {
+        assert_eq!(TokenBucket::Short.class(), Class::Interactive);
+        assert_eq!(TokenBucket::Medium.class(), Class::Heavy);
+        assert_eq!(TokenBucket::Long.class(), Class::Heavy);
+        assert_eq!(TokenBucket::XLong.class(), Class::Heavy);
+    }
+
+    #[test]
+    fn geo_mid_inside_bounds() {
+        for b in TokenBucket::ALL {
+            let (lo, hi) = b.bounds();
+            let mid = b.geo_mid();
+            assert!(mid > lo as f64 && mid < hi as f64, "{b:?} mid={mid}");
+        }
+    }
+
+    #[test]
+    fn priors_enforce_monotonicity() {
+        let p = Priors::new(100.0, 50.0);
+        assert_eq!(p.p90, p.p50);
+        let p = Priors::new(-5.0, -10.0);
+        assert!(p.p50 >= 1.0 && p.p90 >= p.p50);
+        let p = Priors::new(10.0, 20.0).scaled(3.0);
+        assert_eq!(p.p50, 30.0);
+        assert_eq!(p.p90, 60.0);
+    }
+
+    #[test]
+    fn slo_policy_ordering() {
+        let slo = SloPolicy::default();
+        assert!(slo.deadline_for(TokenBucket::Short) < slo.deadline_for(TokenBucket::Medium));
+        assert!(slo.deadline_for(TokenBucket::Long) < slo.deadline_for(TokenBucket::XLong));
+        assert!(slo.timeout_for(TokenBucket::Short) > slo.deadline_for(TokenBucket::Short));
+    }
+
+    #[test]
+    fn request_slack_and_wait() {
+        let req = Request {
+            id: 0,
+            arrival_ms: 100.0,
+            prompt_tokens: 50,
+            task: Task::Chat,
+            temperature: 0.5,
+            max_tokens: 256,
+            deadline_ms: 2_600.0,
+            timeout_ms: 5_100.0,
+            true_output_tokens: 40,
+            true_bucket: TokenBucket::Short,
+        };
+        assert_eq!(req.wait(150.0), 50.0);
+        assert_eq!(req.slack(600.0), 2_000.0);
+        assert_eq!(req.wait(50.0), 0.0);
+    }
+}

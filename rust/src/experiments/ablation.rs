@@ -1,0 +1,103 @@
+//! Design-choice ablations (beyond the paper's tables — DESIGN.md §Perf
+//! commitments): what each knob of the full stack buys.
+//!
+//! 1. Heavy-lane ordering: feasible-set vs FIFO vs SJF vs EDF.
+//! 2. DRR congestion adaptation: adaptive vs plain weights.
+//! 3. Interactive bypass headroom: 0 vs default.
+
+use anyhow::Result;
+
+use crate::experiments::runner::{run_cell, CellSpec, Congestion, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
+use crate::metrics::Aggregate;
+use crate::scheduler::{OrderingKind, SchedulerCfg, StrategyKind};
+use crate::util::csvio::CsvTable;
+use crate::workload::Mix;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let hh = Regime { mix: Mix::Heavy, congestion: Congestion::High };
+    let bh = Regime { mix: Mix::Balanced, congestion: Congestion::High };
+
+    let mut table = TextTable::new([
+        "Ablation", "Variant", "Short P95", "Global P95", "CR", "Satisf.", "Goodput",
+    ]);
+    let mut csv = CsvTable::new([
+        "ablation", "variant", "short_p95_mean", "global_p95_mean", "cr_mean",
+        "satisfaction_mean", "goodput_mean",
+    ]);
+    let mut emit = |ablation: &str, variant: &str, spec: CellSpec, seeds: u64| {
+        let runs = run_cell(&spec, seeds);
+        let agg = Aggregate::new(&runs);
+        let short = agg.mean_std(|m| m.short_p95_ms);
+        let global = agg.mean_std(|m| m.global_p95_ms);
+        let cr = agg.mean_std(|m| m.completion_rate);
+        let sat = agg.mean_std(|m| m.satisfaction);
+        let good = agg.mean_std(|m| m.goodput_rps);
+        table.row([
+            ablation.to_string(),
+            variant.to_string(),
+            fmt_pm(short),
+            fmt_pm(global),
+            fmt_rate(cr),
+            fmt_rate(sat),
+            format!("{:.1}±{:.1}", good.0, good.1),
+        ]);
+        csv.row([
+            ablation.to_string(),
+            variant.to_string(),
+            format!("{:.1}", short.0),
+            format!("{:.1}", global.0),
+            format!("{:.4}", cr.0),
+            format!("{:.4}", sat.0),
+            format!("{:.3}", good.0),
+        ]);
+    };
+
+    // 1. Heavy-lane ordering under heavy/high.
+    for (name, kind) in [
+        ("feasible_set", OrderingKind::FeasibleSet),
+        ("fifo", OrderingKind::Fifo),
+        ("sjf", OrderingKind::Sjf),
+        ("edf", OrderingKind::Edf),
+    ] {
+        let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+        sched.heavy_ordering = kind;
+        emit("heavy ordering", name, CellSpec::new(hh, sched, opts.n_requests), opts.seeds);
+    }
+
+    // 2. DRR adaptation under balanced/high. Measured with the bypass off:
+    //    the interactive lane must win its share through *allocation*, which
+    //    is exactly where congestion-scaled weights act.
+    for (name, strategy) in
+        [("adaptive", StrategyKind::AdaptiveDrr), ("plain", StrategyKind::PlainDrr)]
+    {
+        let mut sched = SchedulerCfg::for_strategy(strategy);
+        sched.interactive_bypass = 0;
+        emit("drr weights", name, CellSpec::new(bh, sched, opts.n_requests), opts.seeds);
+    }
+
+    // 3. Interactive bypass headroom under heavy/high.
+    for bypass in [0usize, 4] {
+        let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+        sched.interactive_bypass = bypass;
+        emit(
+            "interactive bypass",
+            if bypass == 0 { "off" } else { "+4 slots" },
+            CellSpec::new(hh, sched, opts.n_requests),
+            opts.seeds,
+        );
+    }
+
+    println!("\nAblations — what each design choice buys (extension beyond the paper)");
+    println!("{}", table.render());
+    println!("notes: adaptive vs plain DRR weights are indistinguishable at this");
+    println!("quantum/cost ratio (one 400-token grant always covers an interactive");
+    println!("head of ~30 tokens, so the boost never changes a decision) — the");
+    println!("bypass headroom is the operative short-tail protection in this mock;");
+    println!("feasible-set ordering buys its margin on the *global* tail.");
+    let path = format!("{}/ablation_summary.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

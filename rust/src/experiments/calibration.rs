@@ -1,0 +1,80 @@
+//! T3 — latency calibration (paper §4.1, Table 3,
+//! `latency_calibration.csv`): 18 low-load single requests across three
+//! buckets against the paper-scale mock; linear fit + R².
+
+use anyhow::Result;
+
+use crate::experiments::ExpOpts;
+use crate::metrics::report::TextTable;
+use crate::provider::calibration::run_calibration;
+use crate::provider::ProviderCfg;
+use crate::util::csvio::CsvTable;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let res = run_calibration(ProviderCfg::paper_scale(), 42);
+
+    let mut table = TextTable::new([
+        "Bucket", "Count", "Mean tokens", "Std tokens", "Mean latency (ms)", "Std latency (ms)",
+    ]);
+    let mut csv = CsvTable::new([
+        "bucket", "count", "mean_tokens", "std_tokens", "mean_latency_ms", "std_latency_ms",
+    ]);
+    for row in &res.rows {
+        table.row([
+            row.bucket.name().to_string(),
+            row.count.to_string(),
+            format!("{:.0}", row.mean_tokens),
+            format!("{:.0}", row.std_tokens),
+            format!("{:.0}", row.mean_latency_ms),
+            format!("{:.0}", row.std_latency_ms),
+        ]);
+        csv.row([
+            row.bucket.name().to_string(),
+            row.count.to_string(),
+            format!("{:.2}", row.mean_tokens),
+            format!("{:.2}", row.std_tokens),
+            format!("{:.2}", row.mean_latency_ms),
+            format!("{:.2}", row.std_latency_ms),
+        ]);
+    }
+    println!("\nTable 3 — latency calibration by bucket (mock, paper-scale physics)");
+    println!("{}", table.render());
+    println!(
+        "linear fit: latency_ms = {:.0} + {:.1} × output_tokens   (R² = {:.3})",
+        res.intercept, res.slope, res.r2
+    );
+    println!("paper:      latency_ms = 3294 + 18.7 × output_tokens (R² = 0.97)");
+
+    let path = format!("{}/latency_calibration.csv", opts.out_dir);
+    csv.write_file(&path)?;
+
+    // Raw samples too (the paper's CSV is per-request).
+    let mut raw = CsvTable::new(["bucket", "output_tokens", "latency_ms"]);
+    for s in &res.samples {
+        raw.row([
+            s.bucket.name().to_string(),
+            format!("{:.0}", s.output_tokens),
+            format!("{:.1}", s.latency_ms),
+        ]);
+    }
+    raw.write_file(&format!("{}/latency_calibration_raw.csv", opts.out_dir))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_csvs() {
+        let dir = std::env::temp_dir().join("bbsched_calib_test");
+        let opts =
+            ExpOpts { out_dir: dir.to_str().unwrap().to_string(), ..ExpOpts::default() };
+        run(&opts).unwrap();
+        assert!(dir.join("latency_calibration.csv").exists());
+        let text = std::fs::read_to_string(dir.join("latency_calibration.csv")).unwrap();
+        assert_eq!(text.lines().count(), 4, "header + 3 buckets");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

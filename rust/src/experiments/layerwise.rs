@@ -1,0 +1,71 @@
+//! F7 — layerwise progression (paper §4.8, Figure 7): naive → quota-tiered
+//! → adaptive DRR → Final (OLC) on the two high-congestion regimes, read as
+//! moves on the same joint axes.
+
+use anyhow::Result;
+
+use crate::experiments::runner::{run_cell, CellSpec, Congestion, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
+use crate::metrics::Aggregate;
+use crate::scheduler::{SchedulerCfg, StrategyKind};
+use crate::util::csvio::CsvTable;
+use crate::workload::Mix;
+
+pub const PROGRESSION: [StrategyKind; 4] = [
+    StrategyKind::DirectNaive,
+    StrategyKind::QuotaTiered,
+    StrategyKind::AdaptiveDrr,
+    StrategyKind::FinalAdrrOlc,
+];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let regimes = [
+        Regime { mix: Mix::Balanced, congestion: Congestion::High },
+        Regime { mix: Mix::Heavy, congestion: Congestion::High },
+    ];
+    let mut table =
+        TextTable::new(["Regime", "Layer stack", "Short P95", "Goodput", "CR", "Satisf."]);
+    let mut csv = CsvTable::new([
+        "regime", "strategy", "short_p95_mean", "short_p95_std", "goodput_mean", "goodput_std",
+        "cr_mean", "cr_std", "satisfaction_mean", "satisfaction_std",
+    ]);
+    for regime in regimes {
+        for strategy in PROGRESSION {
+            let spec =
+                CellSpec::new(regime, SchedulerCfg::for_strategy(strategy), opts.n_requests);
+            let runs = run_cell(&spec, opts.seeds);
+            let agg = Aggregate::new(&runs);
+            let short = agg.mean_std(|m| m.short_p95_ms);
+            let good = agg.mean_std(|m| m.goodput_rps);
+            let cr = agg.mean_std(|m| m.completion_rate);
+            let sat = agg.mean_std(|m| m.satisfaction);
+            table.row([
+                regime.name(),
+                strategy.name().to_string(),
+                fmt_pm(short),
+                format!("{:.1}±{:.1}", good.0, good.1),
+                fmt_rate(cr),
+                fmt_rate(sat),
+            ]);
+            csv.row([
+                regime.name(),
+                strategy.name().to_string(),
+                format!("{:.1}", short.0),
+                format!("{:.1}", short.1),
+                format!("{:.3}", good.0),
+                format!("{:.3}", good.1),
+                format!("{:.4}", cr.0),
+                format!("{:.4}", cr.1),
+                format!("{:.4}", sat.0),
+                format!("{:.4}", sat.1),
+            ]);
+        }
+    }
+    println!("\nFigure 7 — layerwise progression under high congestion");
+    println!("{}", table.render());
+    let path = format!("{}/layerwise_progression.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! T2 — main policy comparison (paper §4.5, Table 2 + Figures 3 & 4):
+//! quota-tiered vs adaptive DRR vs Final (OLC) across the four-regime grid,
+//! with direct-naive included for the scatter plots.
+
+use anyhow::Result;
+
+use crate::experiments::runner::{run_cell, CellSpec, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
+use crate::metrics::{Aggregate, RunMetrics};
+use crate::scheduler::{SchedulerCfg, StrategyKind};
+use crate::util::csvio::CsvTable;
+
+/// Strategies in the table (naive is scatter-only, appended to the CSV).
+pub const TABLE_STRATEGIES: [StrategyKind; 3] =
+    [StrategyKind::QuotaTiered, StrategyKind::AdaptiveDrr, StrategyKind::FinalAdrrOlc];
+
+pub struct CellResult {
+    pub regime: Regime,
+    pub strategy: StrategyKind,
+    pub runs: Vec<RunMetrics>,
+}
+
+/// Run the full grid (all four regimes × strategies × seeds).
+pub fn run_grid(opts: &ExpOpts, include_naive: bool) -> Vec<CellResult> {
+    let mut out = Vec::new();
+    let mut strategies: Vec<StrategyKind> = TABLE_STRATEGIES.to_vec();
+    if include_naive {
+        strategies.insert(0, StrategyKind::DirectNaive);
+    }
+    for regime in Regime::GRID {
+        for strategy in &strategies {
+            let spec =
+                CellSpec::new(regime, SchedulerCfg::for_strategy(*strategy), opts.n_requests);
+            let runs = run_cell(&spec, opts.seeds);
+            out.push(CellResult { regime, strategy: *strategy, runs });
+        }
+    }
+    out
+}
+
+pub fn render(results: &[CellResult], opts: &ExpOpts) -> Result<()> {
+    let mut table = TextTable::new([
+        "Regime", "Strategy", "Short P95", "Global P95", "Makespan", "CR", "Satisf.", "Goodput",
+    ]);
+    let mut csv = CsvTable::new([
+        "regime",
+        "strategy",
+        "short_p95_mean",
+        "short_p95_std",
+        "global_p95_mean",
+        "global_p95_std",
+        "makespan_mean",
+        "makespan_std",
+        "cr_mean",
+        "cr_std",
+        "satisfaction_mean",
+        "satisfaction_std",
+        "goodput_mean",
+        "goodput_std",
+        "rejects_mean",
+        "defers_mean",
+    ]);
+    for cell in results {
+        let agg = Aggregate::new(&cell.runs);
+        let short = agg.mean_std(|m| m.short_p95_ms);
+        let global = agg.mean_std(|m| m.global_p95_ms);
+        let makespan = agg.mean_std(|m| m.makespan_ms);
+        let cr = agg.mean_std(|m| m.completion_rate);
+        let sat = agg.mean_std(|m| m.satisfaction);
+        let good = agg.mean_std(|m| m.goodput_rps);
+        let rejects = agg.mean_std(|m| m.rejects_total as f64);
+        let defers = agg.mean_std(|m| m.defers_total as f64);
+        if cell.strategy != StrategyKind::DirectNaive {
+            table.row([
+                cell.regime.name(),
+                cell.strategy.name().to_string(),
+                fmt_pm(short),
+                fmt_pm(global),
+                fmt_pm(makespan),
+                fmt_rate(cr),
+                fmt_rate(sat),
+                format!("{:.1}±{:.1}", good.0, good.1),
+            ]);
+        }
+        csv.row([
+            cell.regime.name(),
+            cell.strategy.name().to_string(),
+            format!("{:.1}", short.0),
+            format!("{:.1}", short.1),
+            format!("{:.1}", global.0),
+            format!("{:.1}", global.1),
+            format!("{:.1}", makespan.0),
+            format!("{:.1}", makespan.1),
+            format!("{:.4}", cr.0),
+            format!("{:.4}", cr.1),
+            format!("{:.4}", sat.0),
+            format!("{:.4}", sat.1),
+            format!("{:.3}", good.0),
+            format!("{:.3}", good.1),
+            format!("{:.1}", rejects.0),
+            format!("{:.1}", defers.0),
+        ]);
+    }
+    println!("\nTable 2 — main policy comparison (mean±std over seeds)");
+    println!("{}", table.render());
+    let path = format!("{}/main_benchmark_summary.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+
+    // Figures 3 & 4 scatter data: per-seed points (short P95 vs CR;
+    // goodput vs global P95), naive included.
+    let mut fig = CsvTable::new([
+        "regime", "strategy", "seed", "short_p95_ms", "completion_rate", "goodput_rps",
+        "global_p95_ms",
+    ]);
+    for cell in results {
+        for (seed, m) in cell.runs.iter().enumerate() {
+            fig.row([
+                cell.regime.name(),
+                cell.strategy.name().to_string(),
+                seed.to_string(),
+                format!("{:.1}", m.short_p95_ms),
+                format!("{:.4}", m.completion_rate),
+                format!("{:.3}", m.goodput_rps),
+                format!("{:.1}", m.global_p95_ms),
+            ]);
+        }
+    }
+    let fig_path = format!("{}/fig3_fig4_scatter.csv", opts.out_dir);
+    fig.write_file(&fig_path)?;
+    println!("wrote {fig_path}");
+    Ok(())
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let results = run_grid(opts, true);
+    render(&results, opts)
+}

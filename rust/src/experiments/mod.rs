@@ -1,0 +1,84 @@
+//! Experiment harness: one module per paper table/figure (see DESIGN.md's
+//! per-experiment index), a shared multi-seed cell runner, and a registry
+//! dispatched by `bbsched exp <name>` and the `benches/` targets.
+
+pub mod ablation;
+pub mod burst;
+pub mod calibration;
+pub mod fairness;
+pub mod info_ladder;
+pub mod layerwise;
+pub mod main_benchmark;
+pub mod noise_sweep;
+pub mod overload_policy;
+pub mod runner;
+pub mod sensitivity;
+pub mod sharegpt;
+
+pub use runner::{run_cell, CellSpec, Congestion, Regime};
+
+use anyhow::{bail, Result};
+
+/// Common experiment options (CLI-settable).
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    /// Seeds per cell (paper: 5).
+    pub seeds: u64,
+    /// Offered requests per run.
+    pub n_requests: usize,
+    /// Output directory for the paper-parity CSVs.
+    pub out_dir: String,
+    /// Print per-seed detail.
+    pub verbose: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            seeds: 5,
+            n_requests: 200,
+            out_dir: "paper_results/tables".to_string(),
+            verbose: false,
+        }
+    }
+}
+
+/// All experiment names, in paper order.
+pub const ALL_EXPERIMENTS: [&str; 11] = [
+    "calibration",
+    "ladder",
+    "main",
+    "sharegpt",
+    "fairness",
+    "overload",
+    "layerwise",
+    "sensitivity",
+    "noise",
+    "ablation",
+    "burst",
+];
+
+/// Dispatch one experiment by name ("all" runs the full battery).
+pub fn run_experiment(name: &str, opts: &ExpOpts) -> Result<()> {
+    match name {
+        "calibration" => calibration::run(opts),
+        "ladder" => info_ladder::run(opts),
+        "main" => main_benchmark::run(opts),
+        "sharegpt" => sharegpt::run(opts),
+        "fairness" => fairness::run(opts),
+        "overload" => overload_policy::run(opts),
+        "layerwise" => layerwise::run(opts),
+        "sensitivity" => sensitivity::run(opts),
+        "noise" => noise_sweep::run(opts),
+        "ablation" => ablation::run(opts),
+        "burst" => burst::run(opts),
+        "all" => {
+            for n in ALL_EXPERIMENTS {
+                println!("\n########## experiment: {n} ##########");
+                run_experiment(n, opts)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; have {ALL_EXPERIMENTS:?} or 'all'"),
+    }
+}

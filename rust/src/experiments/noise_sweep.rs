@@ -1,0 +1,83 @@
+//! F8 — predictor-quality sweep (paper §4.10,
+//! `predictor_noise_summary.csv`): multiplicative noise U[1−L, 1+L] on the
+//! policy-facing p50/p90 priors, L ∈ {0, 0.1, 0.2, 0.4, 0.6}; Final (OLC)
+//! fixed; mock physics and routing buckets unchanged.
+
+use anyhow::Result;
+
+use crate::experiments::runner::{run_cell, CellSpec, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
+use crate::metrics::Aggregate;
+use crate::scheduler::{SchedulerCfg, StrategyKind};
+use crate::util::csvio::CsvTable;
+
+pub const LEVELS: [f64; 5] = [0.0, 0.1, 0.2, 0.4, 0.6];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let mut table =
+        TextTable::new(["Regime", "L", "Short P95", "CR", "Satisfaction", "Goodput"]);
+    let mut csv = CsvTable::new([
+        "regime", "noise_l", "short_p95_mean", "short_p95_std", "cr_mean", "cr_std",
+        "satisfaction_mean", "satisfaction_std", "goodput_mean", "goodput_std",
+    ]);
+    let mut collapse_check: Vec<(String, f64, f64)> = Vec::new();
+    for regime in Regime::GRID {
+        for l in LEVELS {
+            let spec = CellSpec::new(
+                regime,
+                SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+                opts.n_requests,
+            )
+            .with_noise(l);
+            let runs = run_cell(&spec, opts.seeds);
+            let agg = Aggregate::new(&runs);
+            let short = agg.mean_std(|m| m.short_p95_ms);
+            let cr = agg.mean_std(|m| m.completion_rate);
+            let sat = agg.mean_std(|m| m.satisfaction);
+            let good = agg.mean_std(|m| m.goodput_rps);
+            collapse_check.push((regime.name(), l, cr.0));
+            table.row([
+                regime.name(),
+                format!("{l:.1}"),
+                fmt_pm(short),
+                fmt_rate(cr),
+                fmt_rate(sat),
+                format!("{:.1}±{:.1}", good.0, good.1),
+            ]);
+            csv.row([
+                regime.name(),
+                format!("{l:.1}"),
+                format!("{:.1}", short.0),
+                format!("{:.1}", short.1),
+                format!("{:.4}", cr.0),
+                format!("{:.4}", cr.1),
+                format!("{:.4}", sat.0),
+                format!("{:.4}", sat.1),
+                format!("{:.3}", good.0),
+                format!("{:.3}", good.1),
+            ]);
+        }
+    }
+    println!("\nFigure 8 — predictor-noise sweep (Final OLC fixed)");
+    println!("{}", table.render());
+
+    // Graceful-degradation check: CR at L=0.6 within 0.1 of CR at L=0.
+    for regime in Regime::GRID {
+        let cr0 = collapse_check
+            .iter()
+            .find(|(n, l, _)| *n == regime.name() && *l == 0.0)
+            .map(|(_, _, c)| *c)
+            .unwrap_or(f64::NAN);
+        let cr6 = collapse_check
+            .iter()
+            .find(|(n, l, _)| *n == regime.name() && *l == 0.6)
+            .map(|(_, _, c)| *c)
+            .unwrap_or(f64::NAN);
+        println!("  {}: CR drift L=0→0.6: {:.3} → {:.3}", regime.name(), cr0, cr6);
+    }
+    let path = format!("{}/predictor_noise_summary.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! T5 — overload semantics and shedding-policy evidence (paper §4.7,
+//! Table 5 + Figures 5 & 6, `overload_policy_comparison_summary.csv`):
+//! Final (OLC) fixed, varying only `bucket_policy` under the two
+//! high-congestion regimes; plus the Figure-5 aggregation of overload
+//! actions over the main-benchmark Final (OLC) cells.
+
+use anyhow::Result;
+
+use crate::core::TokenBucket;
+use crate::experiments::runner::{run_cell, CellSpec, Congestion, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
+use crate::metrics::Aggregate;
+use crate::scheduler::overload::BucketPolicy;
+use crate::scheduler::{SchedulerCfg, StrategyKind};
+use crate::util::csvio::CsvTable;
+use crate::workload::Mix;
+
+/// Figure 5: overload action counts by bucket, summed over Final (OLC) runs
+/// across all four regimes.
+pub fn action_histogram(opts: &ExpOpts) -> ([u64; 5], [u64; 5]) {
+    let mut defers = [0u64; 5];
+    let mut rejects = [0u64; 5];
+    for regime in Regime::GRID {
+        let spec = CellSpec::new(
+            regime,
+            SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+            opts.n_requests,
+        );
+        for m in run_cell(&spec, opts.seeds) {
+            for i in 0..5 {
+                defers[i] += m.defers_by_bucket[i];
+                rejects[i] += m.rejects_by_bucket[i];
+            }
+        }
+    }
+    (defers, rejects)
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    // ---- Figure 5 ----
+    let (defers, rejects) = action_histogram(opts);
+    println!("\nFigure 5 — overload actions over Final (OLC) main-benchmark runs");
+    let mut fig5 = TextTable::new(["Bucket", "Defers", "Rejects"]);
+    let mut fig5_csv = CsvTable::new(["bucket", "defers", "rejects"]);
+    let labels = ["short", "medium", "long", "xlong", "(unlabeled)"];
+    for (i, label) in labels.iter().enumerate() {
+        fig5.row([label.to_string(), defers[i].to_string(), rejects[i].to_string()]);
+        fig5_csv.row([label.to_string(), defers[i].to_string(), rejects[i].to_string()]);
+    }
+    println!("{}", fig5.render());
+    fig5_csv.write_file(&format!("{}/overload_actions_by_bucket.csv", opts.out_dir))?;
+    assert_eq!(rejects[TokenBucket::Short.index()], 0, "shorts are never rejected");
+
+    // ---- Table 5 / Figure 6 ----
+    let regimes = [
+        Regime { mix: Mix::Balanced, congestion: Congestion::High },
+        Regime { mix: Mix::Heavy, congestion: Congestion::High },
+    ];
+    let mut table = TextTable::new([
+        "Regime", "Policy", "Short P95", "Global P95", "CR", "Satisf.", "Goodput", "Rejects",
+        "Defers",
+    ]);
+    let mut csv = CsvTable::new([
+        "regime", "policy", "short_p95_mean", "short_p95_std", "global_p95_mean",
+        "global_p95_std", "cr_mean", "cr_std", "satisfaction_mean", "satisfaction_std",
+        "goodput_mean", "goodput_std", "rejects_mean", "rejects_std", "defers_mean", "defers_std",
+    ]);
+    for regime in regimes {
+        for policy in BucketPolicy::ALL {
+            let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+            sched.overload.bucket_policy = policy;
+            let spec = CellSpec::new(regime, sched, opts.n_requests);
+            let runs = run_cell(&spec, opts.seeds);
+            let agg = Aggregate::new(&runs);
+            let short = agg.mean_std(|m| m.short_p95_ms);
+            let global = agg.mean_std(|m| m.global_p95_ms);
+            let cr = agg.mean_std(|m| m.completion_rate);
+            let sat = agg.mean_std(|m| m.satisfaction);
+            let good = agg.mean_std(|m| m.goodput_rps);
+            let rej = agg.mean_std(|m| m.rejects_total as f64);
+            let def = agg.mean_std(|m| m.defers_total as f64);
+            table.row([
+                regime.name(),
+                policy.name().to_string(),
+                fmt_pm(short),
+                fmt_pm(global),
+                fmt_rate(cr),
+                fmt_rate(sat),
+                format!("{:.1}±{:.1}", good.0, good.1),
+                format!("{:.1}±{:.1}", rej.0, rej.1),
+                format!("{:.1}±{:.1}", def.0, def.1),
+            ]);
+            csv.row([
+                regime.name(),
+                policy.name().to_string(),
+                format!("{:.1}", short.0),
+                format!("{:.1}", short.1),
+                format!("{:.1}", global.0),
+                format!("{:.1}", global.1),
+                format!("{:.4}", cr.0),
+                format!("{:.4}", cr.1),
+                format!("{:.4}", sat.0),
+                format!("{:.4}", sat.1),
+                format!("{:.3}", good.0),
+                format!("{:.3}", good.1),
+                format!("{:.1}", rej.0),
+                format!("{:.1}", rej.1),
+                format!("{:.1}", def.0),
+                format!("{:.1}", def.1),
+            ]);
+        }
+    }
+    println!("\nTable 5 — overload bucket_policy comparison (Final OLC fixed)");
+    println!("{}", table.render());
+    let path = format!("{}/overload_policy_comparison_summary.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

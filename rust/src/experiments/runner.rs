@@ -1,0 +1,184 @@
+//! Shared multi-seed cell runner: a *cell* is (workload regime × policy ×
+//! information condition); every table aggregates cells over five seeds.
+//! All policies within a seed see the **identical** request table (the
+//! controlled-evaluation requirement).
+
+use crate::core::SloPolicy;
+use crate::metrics::RunMetrics;
+use crate::predictor::{InfoLevel, LadderSource, NoisySource, PriorSource};
+use crate::provider::ProviderCfg;
+use crate::scheduler::SchedulerCfg;
+use crate::sim::driver::{run, RunOutput};
+use crate::util::rng::Rng;
+use crate::workload::{Mix, WorkloadSpec};
+
+/// Congestion level (paper §4.2). Offered arrival rates are expressed
+/// relative to the mock's estimated capacity for the mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Congestion {
+    Medium,
+    High,
+}
+
+impl Congestion {
+    pub fn name(self) -> &'static str {
+        match self {
+            Congestion::Medium => "medium",
+            Congestion::High => "high",
+        }
+    }
+}
+
+/// A workload regime: mix × congestion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Regime {
+    pub mix: Mix,
+    pub congestion: Congestion,
+}
+
+impl Regime {
+    /// The paper's four-regime grid (§4.2).
+    pub const GRID: [Regime; 4] = [
+        Regime { mix: Mix::Balanced, congestion: Congestion::Medium },
+        Regime { mix: Mix::Balanced, congestion: Congestion::High },
+        Regime { mix: Mix::Heavy, congestion: Congestion::Medium },
+        Regime { mix: Mix::Heavy, congestion: Congestion::High },
+    ];
+
+    pub fn name(&self) -> String {
+        format!("{}/{}", self.mix.name(), self.congestion.name())
+    }
+
+    /// Offered arrival rate (req/s). Chosen so medium ≈ 0.8× and high ≈
+    /// 1.6–1.9× the default mock capacity for the mix (see EXPERIMENTS.md
+    /// §Calibration); heavy mixes are already stressed at medium, matching
+    /// the paper's heavy/medium failure band.
+    pub fn rate_rps(&self) -> f64 {
+        match (self.mix, self.congestion) {
+            (Mix::Balanced | Mix::ShareGpt, Congestion::Medium) => 12.0,
+            (Mix::Balanced | Mix::ShareGpt, Congestion::High) => 20.0,
+            (Mix::Heavy | Mix::FairnessHeavy, Congestion::Medium) => 10.0,
+            (Mix::Heavy | Mix::FairnessHeavy, Congestion::High) => 14.0,
+        }
+    }
+}
+
+/// Everything defining one cell.
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    pub mix: Mix,
+    pub rate_rps: f64,
+    pub sched: SchedulerCfg,
+    pub info: InfoLevel,
+    /// Multiplicative prior noise L (§4.10); 0 = off.
+    pub noise_l: f64,
+    pub provider: ProviderCfg,
+    pub n_requests: usize,
+    pub slo: SloPolicy,
+}
+
+impl CellSpec {
+    pub fn new(regime: Regime, sched: SchedulerCfg, n_requests: usize) -> CellSpec {
+        CellSpec {
+            mix: regime.mix,
+            rate_rps: regime.rate_rps(),
+            sched,
+            info: InfoLevel::Coarse,
+            noise_l: 0.0,
+            provider: ProviderCfg::default(),
+            n_requests,
+            slo: SloPolicy::default(),
+        }
+    }
+
+    pub fn with_info(mut self, info: InfoLevel) -> CellSpec {
+        self.info = info;
+        self
+    }
+
+    pub fn with_noise(mut self, l: f64) -> CellSpec {
+        self.noise_l = l;
+        self
+    }
+}
+
+/// Run one seed of a cell.
+pub fn run_seed(spec: &CellSpec, seed: u64) -> RunOutput {
+    let mut workload = WorkloadSpec::new(spec.mix, spec.n_requests, spec.rate_rps);
+    workload.slo = spec.slo.clone();
+    let requests = workload.generate(seed);
+    let root = Rng::new(seed ^ 0x5EED_50_u64);
+    let ladder = LadderSource::new(spec.info, root.derive("priors"));
+    let run_with = |src: &mut dyn PriorSource| {
+        run(&requests, src, spec.sched.clone(), spec.provider.clone(), seed)
+    };
+    if spec.noise_l > 0.0 {
+        let mut src = NoisySource::new(ladder, spec.noise_l, root.derive("noise"));
+        run_with(&mut src)
+    } else {
+        let mut src = ladder;
+        run_with(&mut src)
+    }
+}
+
+/// Run all seeds of a cell; returns per-seed metrics.
+pub fn run_cell(spec: &CellSpec, seeds: u64) -> Vec<RunMetrics> {
+    (0..seeds).map(|s| run_seed(spec, s).metrics).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::StrategyKind;
+
+    #[test]
+    fn regime_grid_names() {
+        let names: Vec<String> = Regime::GRID.iter().map(Regime::name).collect();
+        assert_eq!(names, vec!["balanced/medium", "balanced/high", "heavy/medium", "heavy/high"]);
+    }
+
+    #[test]
+    fn high_rate_exceeds_medium() {
+        for mix in [Mix::Balanced, Mix::Heavy] {
+            let med = Regime { mix, congestion: Congestion::Medium }.rate_rps();
+            let high = Regime { mix, congestion: Congestion::High }.rate_rps();
+            assert!(high > med * 1.3);
+        }
+    }
+
+    #[test]
+    fn run_cell_gives_one_metrics_per_seed() {
+        let spec = CellSpec::new(
+            Regime::GRID[0],
+            SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+            40,
+        );
+        let ms = run_cell(&spec, 3);
+        assert_eq!(ms.len(), 3);
+        for m in &ms {
+            assert_eq!(m.n_offered, 40);
+        }
+    }
+
+    #[test]
+    fn same_seed_same_workload_across_strategies() {
+        // Paired comparison guarantee: per-seed request tables are identical
+        // regardless of the policy under test.
+        let a = CellSpec::new(
+            Regime::GRID[1],
+            SchedulerCfg::for_strategy(StrategyKind::DirectNaive),
+            30,
+        );
+        let b = CellSpec::new(
+            Regime::GRID[1],
+            SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+            30,
+        );
+        let wa = WorkloadSpec::new(a.mix, a.n_requests, a.rate_rps).generate(7);
+        let wb = WorkloadSpec::new(b.mix, b.n_requests, b.rate_rps).generate(7);
+        for (x, y) in wa.iter().zip(wb.iter()) {
+            assert_eq!(x.true_output_tokens, y.true_output_tokens);
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! §4.9 — overload-threshold sensitivity: perturb defer/reject cutoffs and
+//! backoff by ±20% from baseline (Final OLC, coarse priors fixed) and check
+//! joint-metric stability.
+
+use anyhow::Result;
+
+use crate::experiments::runner::{run_cell, CellSpec, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
+use crate::metrics::Aggregate;
+use crate::scheduler::{SchedulerCfg, StrategyKind};
+use crate::util::csvio::CsvTable;
+
+pub const FACTORS: [f64; 3] = [0.8, 1.0, 1.2];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let mut table = TextTable::new([
+        "Regime", "Thresholds", "Short P95", "CR", "Satisf.", "Goodput", "Rejects", "Defers",
+    ]);
+    let mut csv = CsvTable::new([
+        "regime", "factor", "short_p95_mean", "cr_mean", "satisfaction_mean", "goodput_mean",
+        "rejects_mean", "defers_mean",
+    ]);
+    // Track max relative drift vs baseline for the summary line.
+    let mut max_sat_drift: f64 = 0.0;
+    let mut max_short_drift: f64 = 0.0;
+    let mut min_cr: f64 = 1.0;
+    for regime in Regime::GRID {
+        let mut baseline: Option<(f64, f64)> = None; // (short, sat)
+        for factor in FACTORS {
+            let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+            sched.overload = sched.overload.perturbed(factor);
+            let spec = CellSpec::new(regime, sched, opts.n_requests);
+            let runs = run_cell(&spec, opts.seeds);
+            let agg = Aggregate::new(&runs);
+            let short = agg.mean_std(|m| m.short_p95_ms);
+            let cr = agg.mean_std(|m| m.completion_rate);
+            let sat = agg.mean_std(|m| m.satisfaction);
+            let good = agg.mean_std(|m| m.goodput_rps);
+            let rej = agg.mean_std(|m| m.rejects_total as f64);
+            let def = agg.mean_std(|m| m.defers_total as f64);
+            if factor == 1.0 {
+                baseline = Some((short.0, sat.0));
+            }
+            if let Some((bs, bsat)) = baseline {
+                if factor != 1.0 {
+                    max_short_drift = max_short_drift.max(((short.0 - bs) / bs).abs());
+                    max_sat_drift = max_sat_drift.max(((sat.0 - bsat) / bsat.max(1e-9)).abs());
+                }
+            }
+            min_cr = min_cr.min(cr.0);
+            let label = if factor == 1.0 { "baseline".to_string() } else { format!("{:+.0}%", (factor - 1.0) * 100.0) };
+            table.row([
+                regime.name(),
+                label.clone(),
+                fmt_pm(short),
+                fmt_rate(cr),
+                fmt_rate(sat),
+                format!("{:.1}±{:.1}", good.0, good.1),
+                format!("{:.1}", rej.0),
+                format!("{:.1}", def.0),
+            ]);
+            csv.row([
+                regime.name(),
+                format!("{factor:.1}"),
+                format!("{:.1}", short.0),
+                format!("{:.4}", cr.0),
+                format!("{:.4}", sat.0),
+                format!("{:.3}", good.0),
+                format!("{:.1}", rej.0),
+                format!("{:.1}", def.0),
+            ]);
+        }
+    }
+    println!("\n§4.9 — threshold sensitivity (±20% on cutoffs + backoff)");
+    println!("{}", table.render());
+    println!(
+        "max drift vs baseline: satisfaction {:.1}%, short P95 {:.1}%; min CR {:.2} \
+         (paper: ≤4.2%, ≤5.9%, CR ≥0.99)",
+        max_sat_drift * 100.0,
+        max_short_drift * 100.0,
+        min_cr
+    );
+    let path = format!("{}/threshold_sensitivity.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

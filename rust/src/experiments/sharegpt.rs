@@ -1,0 +1,64 @@
+//! T6 — ShareGPT real-trace validation (paper §4.1): replay the
+//! ShareGPT-derived output-token distribution (12/42/46/<1 bucket split)
+//! under high congestion; direct_naive vs quota_tiered vs final_adrr_olc.
+
+use anyhow::Result;
+
+use crate::experiments::runner::{run_cell, CellSpec, Congestion, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
+use crate::metrics::Aggregate;
+use crate::scheduler::{SchedulerCfg, StrategyKind};
+use crate::util::csvio::CsvTable;
+use crate::workload::Mix;
+
+pub const STRATEGIES: [StrategyKind; 3] =
+    [StrategyKind::DirectNaive, StrategyKind::QuotaTiered, StrategyKind::FinalAdrrOlc];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let regime = Regime { mix: Mix::ShareGpt, congestion: Congestion::High };
+    let mut table =
+        TextTable::new(["Strategy", "Short P95 (ms)", "Global P95 (ms)", "Makespan (ms)", "Satisfaction"]);
+    let mut csv = CsvTable::new([
+        "strategy", "short_p95_mean", "short_p95_std", "global_p95_mean", "global_p95_std",
+        "makespan_mean", "makespan_std", "satisfaction_mean", "satisfaction_std", "cr_mean",
+        "goodput_mean",
+    ]);
+    for strategy in STRATEGIES {
+        let spec = CellSpec::new(regime, SchedulerCfg::for_strategy(strategy), opts.n_requests);
+        let runs = run_cell(&spec, opts.seeds);
+        let agg = Aggregate::new(&runs);
+        let short = agg.mean_std(|m| m.short_p95_ms);
+        let global = agg.mean_std(|m| m.global_p95_ms);
+        let makespan = agg.mean_std(|m| m.makespan_ms);
+        let sat = agg.mean_std(|m| m.satisfaction);
+        let cr = agg.mean_std(|m| m.completion_rate);
+        let good = agg.mean_std(|m| m.goodput_rps);
+        table.row([
+            strategy.name().to_string(),
+            fmt_pm(short),
+            fmt_pm(global),
+            fmt_pm(makespan),
+            fmt_rate(sat),
+        ]);
+        csv.row([
+            strategy.name().to_string(),
+            format!("{:.1}", short.0),
+            format!("{:.1}", short.1),
+            format!("{:.1}", global.0),
+            format!("{:.1}", global.1),
+            format!("{:.1}", makespan.0),
+            format!("{:.1}", makespan.1),
+            format!("{:.4}", sat.0),
+            format!("{:.4}", sat.1),
+            format!("{:.4}", cr.0),
+            format!("{:.3}", good.0),
+        ]);
+    }
+    println!("\nTable 6 — ShareGPT real-trace validation (high congestion)");
+    println!("{}", table.render());
+    let path = format!("{}/sharegpt_validation.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! # blackbox-sched
+//!
+//! Reproduction of *"Scheduling the Unschedulable: Taming Black-Box LLM
+//! Inference at Scale"* (CS.DC 2026): a client-side, semi-clairvoyant
+//! scheduler for opaque LLM APIs, decomposed into allocation (adaptive DRR),
+//! ordering (feasible-set scoring), and overload control (cost-ladder
+//! shedding), plus the congestion-aware mock provider, workload generators,
+//! experiment harness, and the PJRT-served output-length predictor
+//! (JAX/Pallas, AOT-compiled — see `python/compile/`).
+//!
+//! Layering (see DESIGN.md):
+//! * L3 (this crate): coordination + simulation + experiments.
+//! * L2/L1 (build-time Python): quantile-MLP predictor with Pallas kernels,
+//!   lowered to `artifacts/*.hlo.txt`, executed via [`runtime`].
+
+pub mod bench;
+pub mod config;
+pub mod core;
+pub mod experiments;
+pub mod metrics;
+pub mod predictor;
+pub mod provider;
+pub mod runtime;
+pub mod scheduler;
+pub mod serve;
+pub mod sim;
+pub mod testing;
+pub mod util;
+pub mod workload;
+
+pub use crate::core::{Class, Priors, Request, RequestStatus, TokenBucket};
+pub use scheduler::{ClientScheduler, SchedulerCfg, StrategyKind};

@@ -1,0 +1,294 @@
+//! `bbsched` — leader binary: experiments, single runs, traces, predictor
+//! smoke tests, and the real-time serve demo.
+//!
+//! Usage:
+//!   bbsched exp <name|all> [--seeds N] [--requests N] [--out DIR]
+//!   bbsched run [--strategy S] [--mix M] [--rate R] [--seed N] ...
+//!   bbsched trace gen|show [--out PATH] ...
+//!   bbsched predict [--artifacts DIR] [--n N]        (PJRT smoke + goldens)
+//!   bbsched serve [--rate R] [--requests N] [--scale S] (real-time demo)
+
+use anyhow::{bail, Context, Result};
+
+use blackbox_sched::experiments::{self, ExpOpts};
+use blackbox_sched::metrics::report::TextTable;
+use blackbox_sched::predictor::features::batch_features;
+use blackbox_sched::predictor::{InfoLevel, LadderSource};
+use blackbox_sched::provider::ProviderCfg;
+use blackbox_sched::runtime;
+use blackbox_sched::scheduler::{SchedulerCfg, StrategyKind};
+use blackbox_sched::sim::driver;
+use blackbox_sched::util::cli::Cmd;
+use blackbox_sched::util::rng::Rng;
+use blackbox_sched::workload::{trace, Mix, WorkloadSpec};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(sub) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "exp" => cmd_exp(rest),
+        "run" => cmd_run(rest),
+        "trace" => cmd_trace(rest),
+        "predict" => cmd_predict(rest),
+        "serve" => cmd_serve(rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "bbsched — client-side black-box LLM scheduler (paper reproduction)\n\
+         \n\
+         subcommands:\n\
+         \x20 exp <name|all>   regenerate paper tables/figures ({})\n\
+         \x20 run              one simulated run, printed summary\n\
+         \x20 trace gen|show   generate / inspect workload traces\n\
+         \x20 predict          PJRT predictor smoke test vs golden vectors\n\
+         \x20 serve            real-time serving demo (wall-clock)\n",
+        experiments::ALL_EXPERIMENTS.join(", ")
+    );
+}
+
+fn cmd_exp(args: &[String]) -> Result<()> {
+    let cmd = Cmd::new("exp", "regenerate paper tables/figures")
+        .opt("seeds", "5", "seeds per cell")
+        .opt("requests", "200", "offered requests per run")
+        .opt("out", "paper_results/tables", "CSV output dir")
+        .flag("verbose", "per-seed detail")
+        .positionals();
+    let a = cmd.parse(args)?;
+    if a.help {
+        print!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let name = a.positionals.first().map(String::as_str).unwrap_or("all");
+    let opts = ExpOpts {
+        seeds: a.u64("seeds")?,
+        n_requests: a.usize("requests")?,
+        out_dir: a.str("out").to_string(),
+        verbose: a.flag("verbose"),
+    };
+    experiments::run_experiment(name, &opts)
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let cmd = Cmd::new("run", "one simulated run")
+        .opt(
+            "strategy",
+            "final_adrr_olc",
+            "direct_naive|quota_tiered|adaptive_drr|final_adrr_olc|fair_queuing|short_priority|plain_drr",
+        )
+        .opt("mix", "balanced", "balanced|heavy|sharegpt|fairness_heavy")
+        .opt("rate", "10.0", "arrival rate (req/s)")
+        .opt("requests", "120", "offered requests")
+        .opt("seed", "0", "random seed")
+        .opt("info", "coarse", "no_info|class_only|coarse|oracle")
+        .opt("noise", "0.0", "multiplicative prior noise L")
+        .opt("config", "", "JSON config file (overrides strategy/mix/rate/requests)")
+        .flag("dump-config", "print the full example config schema and exit");
+    let a = cmd.parse(args)?;
+    if a.help {
+        print!("{}", cmd.help_text());
+        return Ok(());
+    }
+    if a.flag("dump-config") {
+        println!("{}", blackbox_sched::config::example_config().to_string_pretty());
+        return Ok(());
+    }
+    let info = InfoLevel::parse(a.str("info"))
+        .with_context(|| format!("bad info level {:?}", a.str("info")))?;
+    let (spec, sched_cfg, provider_cfg, seed, strategy, mix) = if !a.str("config").is_empty() {
+        let cfg = blackbox_sched::config::RunConfig::from_file(a.str("config"))?;
+        let strategy = cfg.scheduler.strategy;
+        let mix = cfg.workload.mix;
+        (cfg.workload, cfg.scheduler, cfg.provider, cfg.seed, strategy, mix)
+    } else {
+        let strategy = StrategyKind::parse(a.str("strategy"))
+            .with_context(|| format!("bad strategy {:?}", a.str("strategy")))?;
+        let mix =
+            Mix::parse(a.str("mix")).with_context(|| format!("bad mix {:?}", a.str("mix")))?;
+        (
+            WorkloadSpec::new(mix, a.usize("requests")?, a.f64("rate")?),
+            SchedulerCfg::for_strategy(strategy),
+            ProviderCfg::default(),
+            a.u64("seed")?,
+            strategy,
+            mix,
+        )
+    };
+    let spec_rate = spec.rate_rps;
+    let requests = spec.generate(seed);
+    let root = Rng::new(seed ^ 0x5EED_50_u64);
+    let noise = a.f64("noise")?;
+    let base = LadderSource::new(info, root.derive("priors"));
+    let output = if noise > 0.0 {
+        let mut src =
+            blackbox_sched::predictor::NoisySource::new(base, noise, root.derive("noise"));
+        driver::run(&requests, &mut src, sched_cfg, provider_cfg, seed)
+    } else {
+        let mut src = base;
+        driver::run(&requests, &mut src, sched_cfg, provider_cfg, seed)
+    };
+    let m = &output.metrics;
+    println!(
+        "strategy={} mix={} rate={} seed={seed} info={}",
+        strategy.name(),
+        mix.name(),
+        spec_rate,
+        info.name()
+    );
+    let mut t = TextTable::new(["metric", "value"]);
+    t.row(["offered", &m.n_offered.to_string()]);
+    t.row(["completed", &m.n_completed.to_string()]);
+    t.row(["rejected", &m.n_rejected.to_string()]);
+    t.row(["timed out", &m.n_timed_out.to_string()]);
+    t.row(["completion rate", &format!("{:.3}", m.completion_rate)]);
+    t.row(["satisfaction", &format!("{:.3}", m.satisfaction)]);
+    t.row(["useful goodput (rps)", &format!("{:.2}", m.goodput_rps)]);
+    t.row(["short P95 (ms)", &format!("{:.1}", m.short_p95_ms)]);
+    t.row(["global P95 (ms)", &format!("{:.1}", m.global_p95_ms)]);
+    t.row(["makespan (ms)", &format!("{:.0}", m.makespan_ms)]);
+    t.row(["defers", &m.defers_total.to_string()]);
+    t.row(["rejects", &m.rejects_total.to_string()]);
+    t.row(["feasibility violations", &m.feasibility_violations.to_string()]);
+    t.row(["peak provider hidden queue", &output.diagnostics.peak_provider_queue.to_string()]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let cmd = Cmd::new("trace", "generate or inspect workload traces")
+        .opt("mix", "balanced", "workload mix")
+        .opt("rate", "10.0", "arrival rate (req/s)")
+        .opt("requests", "120", "request count")
+        .opt("seed", "0", "seed")
+        .opt("out", "/tmp/bbsched_trace.jsonl", "trace path")
+        .positionals();
+    let a = cmd.parse(args)?;
+    if a.help {
+        print!("{}", cmd.help_text());
+        return Ok(());
+    }
+    match a.positionals.first().map(String::as_str) {
+        Some("gen") => {
+            let mix = Mix::parse(a.str("mix")).context("bad mix")?;
+            let spec = WorkloadSpec::new(mix, a.usize("requests")?, a.f64("rate")?);
+            let reqs = spec.generate(a.u64("seed")?);
+            trace::save_trace(a.str("out"), &reqs)?;
+            println!("wrote {} requests to {}", reqs.len(), a.str("out"));
+            Ok(())
+        }
+        Some("show") => {
+            let reqs = trace::load_trace(a.str("out"))?;
+            let mut counts = [0usize; 4];
+            for r in &reqs {
+                counts[r.true_bucket.index()] += 1;
+            }
+            println!("{} requests; bucket mix short/medium/long/xlong = {counts:?}", reqs.len());
+            for r in reqs.iter().take(5) {
+                println!(
+                    "  id={} t={:.0}ms prompt={} task={} out={} bucket={}",
+                    r.id,
+                    r.arrival_ms,
+                    r.prompt_tokens,
+                    r.task.name(),
+                    r.true_output_tokens,
+                    r.true_bucket.name()
+                );
+            }
+            Ok(())
+        }
+        _ => bail!("trace needs 'gen' or 'show'"),
+    }
+}
+
+fn cmd_predict(args: &[String]) -> Result<()> {
+    let cmd = Cmd::new("predict", "PJRT predictor smoke test")
+        .opt("artifacts", &runtime::default_artifacts_dir(), "artifacts dir")
+        .opt("n", "8", "golden rows to check");
+    let a = cmd.parse(args)?;
+    if a.help {
+        print!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let dir = a.str("artifacts");
+    let predictor = runtime::Predictor::load(dir)?;
+    println!(
+        "loaded predictor: d_in={} batches={:?} (train p90 coverage {:.3})",
+        predictor.meta.d_in, predictor.meta.batch_sizes, predictor.meta.training_coverage_p90
+    );
+    let g = &predictor.meta.golden;
+    let n = a.usize("n")?.min(g.features.len());
+    let feats: Vec<f32> = g.features[..n].iter().flatten().copied().collect();
+    let priors = predictor.predict(&feats, n)?;
+    let mut t =
+        TextTable::new(["true tokens", "p50 (rust)", "p50 (python)", "p90 (rust)", "p90 (python)"]);
+    let mut max_rel = 0.0f64;
+    for i in 0..n {
+        let rel = ((priors[i].p50 - g.expected_p50[i]) / g.expected_p50[i])
+            .abs()
+            .max(((priors[i].p90 - g.expected_p90[i]) / g.expected_p90[i]).abs());
+        max_rel = max_rel.max(rel);
+        t.row([
+            format!("{:.0}", g.true_tokens[i]),
+            format!("{:.1}", priors[i].p50),
+            format!("{:.1}", g.expected_p50[i]),
+            format!("{:.1}", priors[i].p90),
+            format!("{:.1}", g.expected_p90[i]),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("max relative error vs python reference: {max_rel:.2e}");
+    if max_rel > 1e-3 {
+        bail!("golden mismatch: PJRT output diverges from the python reference");
+    }
+    println!("predict OK");
+
+    // Throughput spot check with the batched path.
+    let spec = WorkloadSpec::new(Mix::Balanced, 512, 100.0);
+    let reqs = spec.generate(1);
+    let refs: Vec<&blackbox_sched::Request> = reqs.iter().collect();
+    let feats = batch_features(&refs[..512], 512);
+    let t0 = std::time::Instant::now();
+    let _ = predictor.predict(&feats, 512)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("batched predict: 512 rows in {:.1} ms ({:.0} rows/s)", dt * 1e3, 512.0 / dt);
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cmd = Cmd::new("serve", "real-time serving demo")
+        .opt("rate", "20.0", "arrival rate (req/s, model time)")
+        .opt("requests", "60", "request count")
+        .opt("scale", "0.05", "wall-clock ms per model ms (0.05 = 20× faster)")
+        .opt("strategy", "final_adrr_olc", "strategy")
+        .opt("artifacts", &runtime::default_artifacts_dir(), "artifacts dir ('' = analytic priors)");
+    let a = cmd.parse(args)?;
+    if a.help {
+        print!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let strategy = StrategyKind::parse(a.str("strategy")).context("bad strategy")?;
+    blackbox_sched::serve::serve_demo(
+        strategy,
+        a.f64("rate")?,
+        a.usize("requests")?,
+        a.f64("scale")?,
+        a.str("artifacts"),
+    )
+}

@@ -1,0 +1,267 @@
+//! Joint metrics (paper §4.3): short/global tail percentiles over
+//! completions, completion rate, deadline satisfaction, useful goodput,
+//! makespan, and overload action counts — designed so tail improvements
+//! cannot be read in isolation from completion and SLO satisfaction.
+//!
+//! Semantics (documented in DESIGN.md):
+//! * admitted        = offered − rejected (explicit shedding is excluded
+//!                     from CR's denominator — the paper reports CR 1.00
+//!                     alongside nonzero reject counts);
+//! * completion rate = completed / admitted;
+//! * satisfaction    = deadline-met / admitted;
+//! * useful goodput  = deadline-met / makespan (completed AND SLO-met
+//!                     requests per second);
+//! * makespan        = last completion − first arrival.
+
+pub mod report;
+
+use crate::core::{Class, RequestStatus, TokenBucket};
+use crate::util::stats::{mean_std, percentile};
+
+/// Final per-request record produced by the driver.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: usize,
+    pub bucket: TokenBucket,
+    pub class: Class,
+    pub arrival_ms: f64,
+    pub deadline_ms: f64,
+    pub status: RequestStatus,
+    /// Client-perceived latency (completion − arrival), completed only.
+    pub latency_ms: Option<f64>,
+    pub defer_count: u32,
+}
+
+impl RequestOutcome {
+    pub fn completed(&self) -> bool {
+        self.status == RequestStatus::Completed
+    }
+
+    pub fn deadline_met(&self) -> bool {
+        match (self.status, self.latency_ms) {
+            (RequestStatus::Completed, Some(lat)) => self.arrival_ms + lat <= self.deadline_ms,
+            _ => false,
+        }
+    }
+}
+
+/// Aggregated metrics for one run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub n_offered: usize,
+    pub n_completed: usize,
+    pub n_rejected: usize,
+    pub n_timed_out: usize,
+    pub short_p95_ms: f64,
+    pub short_p90_ms: f64,
+    pub global_p95_ms: f64,
+    pub global_std_ms: f64,
+    /// Heavy-class (long+xlong) P90 — Table 4's "Long P90".
+    pub heavy_p90_ms: f64,
+    pub completion_rate: f64,
+    pub satisfaction: f64,
+    pub goodput_rps: f64,
+    pub makespan_ms: f64,
+    pub defers_total: u64,
+    pub rejects_total: u64,
+    pub defers_by_bucket: [u64; 5],
+    pub rejects_by_bucket: [u64; 5],
+    pub feasibility_violations: u64,
+    pub completed_by_bucket: [usize; 4],
+    pub offered_by_bucket: [usize; 4],
+}
+
+/// Compute run metrics from per-request outcomes + scheduler counters.
+pub fn compute(
+    outcomes: &[RequestOutcome],
+    defers_by_bucket: [u64; 5],
+    rejects_by_bucket: [u64; 5],
+    feasibility_violations: u64,
+) -> RunMetrics {
+    let n_offered = outcomes.len();
+    let n_completed = outcomes.iter().filter(|o| o.completed()).count();
+    let n_rejected = outcomes.iter().filter(|o| o.status == RequestStatus::Rejected).count();
+    let n_timed_out = outcomes.iter().filter(|o| o.status == RequestStatus::TimedOut).count();
+    let n_admitted = n_offered.saturating_sub(n_rejected);
+    let n_met = outcomes.iter().filter(|o| o.deadline_met()).count();
+
+    let completed_lat: Vec<f64> =
+        outcomes.iter().filter_map(|o| if o.completed() { o.latency_ms } else { None }).collect();
+    let short_lat: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| o.completed() && o.bucket == TokenBucket::Short)
+        .filter_map(|o| o.latency_ms)
+        .collect();
+    let heavy_lat: Vec<f64> = outcomes
+        .iter()
+        .filter(|o| o.completed() && o.class == Class::Heavy)
+        .filter_map(|o| o.latency_ms)
+        .collect();
+
+    let first_arrival =
+        outcomes.iter().map(|o| o.arrival_ms).fold(f64::INFINITY, f64::min);
+    let last_completion = outcomes
+        .iter()
+        .filter(|o| o.completed())
+        .map(|o| o.arrival_ms + o.latency_ms.unwrap())
+        .fold(0.0f64, f64::max);
+    let makespan_ms = if n_completed > 0 { (last_completion - first_arrival).max(0.0) } else { 0.0 };
+
+    let mut completed_by_bucket = [0usize; 4];
+    let mut offered_by_bucket = [0usize; 4];
+    for o in outcomes {
+        offered_by_bucket[o.bucket.index()] += 1;
+        if o.completed() {
+            completed_by_bucket[o.bucket.index()] += 1;
+        }
+    }
+
+    RunMetrics {
+        n_offered,
+        n_completed,
+        n_rejected,
+        n_timed_out,
+        short_p95_ms: percentile(&short_lat, 95.0).unwrap_or(f64::NAN),
+        short_p90_ms: percentile(&short_lat, 90.0).unwrap_or(f64::NAN),
+        global_p95_ms: percentile(&completed_lat, 95.0).unwrap_or(f64::NAN),
+        global_std_ms: if completed_lat.is_empty() { f64::NAN } else { mean_std(&completed_lat).1 },
+        heavy_p90_ms: percentile(&heavy_lat, 90.0).unwrap_or(f64::NAN),
+        completion_rate: if n_admitted > 0 { n_completed as f64 / n_admitted as f64 } else { 0.0 },
+        satisfaction: if n_admitted > 0 { n_met as f64 / n_admitted as f64 } else { 0.0 },
+        goodput_rps: if makespan_ms > 0.0 { n_met as f64 / (makespan_ms / 1000.0) } else { 0.0 },
+        makespan_ms,
+        defers_total: defers_by_bucket.iter().sum(),
+        rejects_total: rejects_by_bucket.iter().sum(),
+        defers_by_bucket,
+        rejects_by_bucket,
+        feasibility_violations,
+        completed_by_bucket,
+        offered_by_bucket,
+    }
+}
+
+/// Cross-seed aggregate: mean ± std for each scalar field, via an accessor.
+pub struct Aggregate<'a> {
+    pub runs: &'a [RunMetrics],
+}
+
+impl<'a> Aggregate<'a> {
+    pub fn new(runs: &'a [RunMetrics]) -> Self {
+        Aggregate { runs }
+    }
+
+    pub fn mean_std(&self, f: impl Fn(&RunMetrics) -> f64) -> (f64, f64) {
+        let xs: Vec<f64> = self.runs.iter().map(f).filter(|x| x.is_finite()).collect();
+        mean_std(&xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(
+        id: usize,
+        bucket: TokenBucket,
+        arrival: f64,
+        deadline_rel: f64,
+        status: RequestStatus,
+        latency: Option<f64>,
+    ) -> RequestOutcome {
+        RequestOutcome {
+            id,
+            bucket,
+            class: bucket.class(),
+            arrival_ms: arrival,
+            deadline_ms: arrival + deadline_rel,
+            status,
+            latency_ms: latency,
+            defer_count: 0,
+        }
+    }
+
+    #[test]
+    fn basic_counts_and_rates() {
+        let outcomes = vec![
+            outcome(0, TokenBucket::Short, 0.0, 1000.0, RequestStatus::Completed, Some(300.0)),
+            outcome(1, TokenBucket::Short, 10.0, 1000.0, RequestStatus::Completed, Some(2000.0)), // late
+            outcome(2, TokenBucket::XLong, 20.0, 5000.0, RequestStatus::Rejected, None),
+            outcome(3, TokenBucket::Long, 30.0, 5000.0, RequestStatus::TimedOut, None),
+        ];
+        let m = compute(&outcomes, [0; 5], [0, 0, 0, 1, 0], 0);
+        assert_eq!(m.n_offered, 4);
+        assert_eq!(m.n_completed, 2);
+        assert_eq!(m.n_rejected, 1);
+        assert_eq!(m.n_timed_out, 1);
+        // admitted = 3; CR = 2/3; satisfaction = 1/3 (one on-time).
+        assert!((m.completion_rate - 2.0 / 3.0).abs() < 1e-9);
+        assert!((m.satisfaction - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(m.rejects_total, 1);
+        assert_eq!(m.offered_by_bucket, [2, 0, 1, 1]);
+        assert_eq!(m.completed_by_bucket, [2, 0, 0, 0]);
+    }
+
+    #[test]
+    fn goodput_counts_only_met_deadlines() {
+        let outcomes = vec![
+            outcome(0, TokenBucket::Short, 0.0, 1000.0, RequestStatus::Completed, Some(500.0)),
+            outcome(1, TokenBucket::Short, 0.0, 1000.0, RequestStatus::Completed, Some(9_500.0)),
+        ];
+        let m = compute(&outcomes, [0; 5], [0; 5], 0);
+        // makespan = 9_500 ms; 1 met → goodput ≈ 0.105 rps.
+        assert!((m.makespan_ms - 9_500.0).abs() < 1e-9);
+        assert!((m.goodput_rps - 1.0 / 9.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentiles_split_by_bucket_and_class() {
+        let mut outcomes = Vec::new();
+        for i in 0..20 {
+            outcomes.push(outcome(
+                i,
+                TokenBucket::Short,
+                0.0,
+                1e6,
+                RequestStatus::Completed,
+                Some(100.0 + i as f64),
+            ));
+        }
+        for i in 0..3 {
+            outcomes.push(outcome(
+                100 + i,
+                TokenBucket::XLong,
+                0.0,
+                1e6,
+                RequestStatus::Completed,
+                Some(50_000.0),
+            ));
+        }
+        let m = compute(&outcomes, [0; 5], [0; 5], 0);
+        assert!(m.short_p95_ms < 120.0);
+        assert!(m.global_p95_ms > 1000.0, "xlong pulls the global tail");
+        assert_eq!(m.heavy_p90_ms, 50_000.0);
+        assert!(m.short_p90_ms <= m.short_p95_ms);
+    }
+
+    #[test]
+    fn empty_run_is_nan_safe() {
+        let m = compute(&[], [0; 5], [0; 5], 0);
+        assert_eq!(m.n_offered, 0);
+        assert!(m.short_p95_ms.is_nan());
+        assert_eq!(m.completion_rate, 0.0);
+        assert_eq!(m.goodput_rps, 0.0);
+    }
+
+    #[test]
+    fn aggregate_mean_std() {
+        let mut a = RunMetrics::default();
+        a.goodput_rps = 2.0;
+        let mut b = RunMetrics::default();
+        b.goodput_rps = 4.0;
+        let runs = vec![a, b];
+        let agg = Aggregate::new(&runs);
+        let (m, s) = agg.mean_std(|r| r.goodput_rps);
+        assert_eq!(m, 3.0);
+        assert_eq!(s, 1.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Human-readable table rendering for experiment output (the paper-style
+//! `mean ± std` rows printed by `bbsched exp ...`).
+
+use crate::util::csvio::pm;
+
+/// Fixed-width text table builder.
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    widths: Vec<usize>,
+}
+
+impl TextTable {
+    pub fn new<S: Into<String>>(columns: impl IntoIterator<Item = S>) -> Self {
+        let header: Vec<String> = columns.into_iter().map(Into::into).collect();
+        let widths = header.iter().map(|h| h.len()).collect();
+        TextTable { header, rows: Vec::new(), widths }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: impl IntoIterator<Item = S>) {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.header.len(), "row width mismatch");
+        for (w, c) in self.widths.iter_mut().zip(row.iter()) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, (c, w)) in cells.iter().zip(widths).enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{c:<w$}", w = w));
+            }
+            out.push('\n');
+        };
+        line(&self.header, &self.widths, &mut out);
+        let total: usize = self.widths.iter().sum::<usize>() + 2 * (self.widths.len() - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            line(r, &self.widths, &mut out);
+        }
+        out
+    }
+}
+
+/// Format a (mean, std) pair like the paper's tables.
+pub fn fmt_pm(pair: (f64, f64)) -> String {
+    if pair.0.is_nan() {
+        return "–".to_string();
+    }
+    pm(pair.0, pair.1)
+}
+
+/// Format a rate (CR / satisfaction) with 2 decimals, collapsing ±0.00.
+pub fn fmt_rate(pair: (f64, f64)) -> String {
+    if pair.0.is_nan() {
+        return "–".to_string();
+    }
+    if pair.1 < 0.005 {
+        format!("{:.2}", pair.0)
+    } else {
+        format!("{:.2}±{:.2}", pair.0, pair.1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = TextTable::new(["regime", "goodput"]);
+        t.row(["balanced/high", "4.2±1.6"]);
+        t.row(["heavy/med", "0.9"]);
+        let s = t.render();
+        assert!(s.contains("regime"));
+        assert!(s.lines().count() == 4);
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[2].starts_with("balanced/high"));
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(fmt_rate((1.0, 0.0)), "1.00");
+        assert_eq!(fmt_rate((0.92, 0.04)), "0.92±0.04");
+        assert_eq!(fmt_rate((f64::NAN, 0.0)), "–");
+    }
+}

@@ -1,0 +1,89 @@
+//! Feature extraction for the neural predictor — the exact Rust twin of
+//! `python/compile/datagen.py::features_from_raw` (layout asserted against
+//! `predictor_meta.json` by `runtime::meta`).
+
+use crate::core::Request;
+
+/// Feature vector width (must equal the model's D_IN).
+pub const D_IN: usize = 32;
+
+/// Compute the client-observable feature vector for a request.
+///
+/// Layout (lanes 8.. are zero padding):
+///   0: prompt_tokens / 2048
+///   1: log1p(prompt_tokens) / 8
+///   2–5: one-hot task type (chat, summarize, code, extract)
+///   6: temperature
+///   7: max_tokens / 4096
+pub fn features(req: &Request) -> [f32; D_IN] {
+    let mut f = [0.0f32; D_IN];
+    let pt = req.prompt_tokens as f64;
+    f[0] = (pt / 2048.0) as f32;
+    f[1] = (pt.ln_1p() / 8.0) as f32;
+    f[2 + req.task.index()] = 1.0;
+    f[6] = req.temperature as f32;
+    f[7] = (req.max_tokens as f64 / 4096.0) as f32;
+    f
+}
+
+/// Flatten a batch of requests into a row-major feature matrix, zero-padded
+/// to `batch` rows (the AOT artifacts have static batch shapes).
+pub fn batch_features(reqs: &[&Request], batch: usize) -> Vec<f32> {
+    assert!(reqs.len() <= batch, "batch overflow: {} > {batch}", reqs.len());
+    let mut out = vec![0.0f32; batch * D_IN];
+    for (i, r) in reqs.iter().enumerate() {
+        out[i * D_IN..(i + 1) * D_IN].copy_from_slice(&features(r));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Task, TokenBucket};
+
+    fn req(prompt: u32, task: Task, temp: f64, max_tok: u32) -> Request {
+        Request {
+            id: 0,
+            arrival_ms: 0.0,
+            prompt_tokens: prompt,
+            task,
+            temperature: temp,
+            max_tokens: max_tok,
+            deadline_ms: 1000.0,
+            timeout_ms: 2000.0,
+            true_output_tokens: 100,
+            true_bucket: TokenBucket::Medium,
+        }
+    }
+
+    #[test]
+    fn layout_matches_python() {
+        let r = req(100, Task::Code, 0.5, 1024);
+        let f = features(&r);
+        assert!((f[0] - 100.0 / 2048.0).abs() < 1e-7);
+        assert!((f[1] - (101.0f64.ln() / 8.0) as f32).abs() < 1e-6);
+        assert_eq!(f[2], 0.0); // chat
+        assert_eq!(f[4], 1.0); // code
+        assert_eq!(f[6], 0.5);
+        assert!((f[7] - 0.25).abs() < 1e-7);
+        assert!(f[8..].iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn batch_pads_with_zeros() {
+        let r1 = req(10, Task::Chat, 0.0, 256);
+        let r2 = req(20, Task::Extract, 1.0, 512);
+        let m = batch_features(&[&r1, &r2], 4);
+        assert_eq!(m.len(), 4 * D_IN);
+        assert_ne!(m[0], 0.0);
+        assert_eq!(m[2 * D_IN..], vec![0.0; 2 * D_IN][..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch overflow")]
+    fn batch_overflow_panics() {
+        let r = req(10, Task::Chat, 0.0, 256);
+        batch_features(&[&r, &r], 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! The four-level information ladder (paper §4.4): what the client may know
+//! about each request, with the Final (OLC) stack held fixed.
+
+use crate::core::{Priors, Request};
+use crate::predictor::{PriorSource, Route};
+use crate::util::rng::Rng;
+
+/// Neutral p50/p90 used when per-request magnitude is unavailable —
+/// "fixed neutral p50/p90 for budgeting and scoring" (§4.4). Chosen as the
+/// balanced-mix geometric scale; the point is that it is *constant*, so
+/// allocation/ordering/budgets cannot distinguish cheap from expensive work.
+pub const NEUTRAL_P50: f64 = 180.0;
+pub const NEUTRAL_P90: f64 = 900.0;
+
+/// Ladder condition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InfoLevel {
+    /// No per-request estimates and no size-derived routing: one neutral
+    /// lane, neutral priors, uniform (cost-blind) admission severity.
+    NoInfo,
+    /// The generator's class label drives routing + tiered overload, but
+    /// priors stay neutral: "which lane, not how large within the lane."
+    ClassOnly,
+    /// Default semi-clairvoyant setting: coarse per-request p50/p90,
+    /// multiplicatively noisy around truth.
+    Coarse,
+    /// Exact output-token count before dispatch — information frontier,
+    /// not a deployable predictor.
+    Oracle,
+}
+
+impl InfoLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            InfoLevel::NoInfo => "no_info",
+            InfoLevel::ClassOnly => "class_only",
+            InfoLevel::Coarse => "coarse",
+            InfoLevel::Oracle => "oracle",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<InfoLevel> {
+        match s {
+            "no_info" => Some(InfoLevel::NoInfo),
+            "class_only" => Some(InfoLevel::ClassOnly),
+            "coarse" => Some(InfoLevel::Coarse),
+            "oracle" => Some(InfoLevel::Oracle),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [InfoLevel; 4] =
+        [InfoLevel::NoInfo, InfoLevel::ClassOnly, InfoLevel::Coarse, InfoLevel::Oracle];
+}
+
+/// Coarse-prior shape: log-normal multiplicative error on the true count
+/// plus a fixed p90/p50 spread. σ=0.25 ≈ ±28% one-sigma relative error —
+/// "coarse but correlated with actual cost" (§3.3).
+pub const COARSE_SIGMA: f64 = 0.25;
+pub const COARSE_SPREAD: f64 = 1.8;
+
+/// Ladder-conditioned prior source.
+pub struct LadderSource {
+    level: InfoLevel,
+    rng: Rng,
+}
+
+impl LadderSource {
+    pub fn new(level: InfoLevel, rng: Rng) -> Self {
+        LadderSource { level, rng }
+    }
+
+    pub fn level(&self) -> InfoLevel {
+        self.level
+    }
+}
+
+impl PriorSource for LadderSource {
+    fn priors(&mut self, req: &Request) -> (Priors, Route) {
+        match self.level {
+            InfoLevel::NoInfo => {
+                (Priors::new(NEUTRAL_P50, NEUTRAL_P90), Route::neutral())
+            }
+            InfoLevel::ClassOnly => (
+                Priors::new(NEUTRAL_P50, NEUTRAL_P90),
+                Route::from_bucket(req.true_bucket),
+            ),
+            InfoLevel::Coarse => {
+                let factor = self.rng.lognormal(0.0, COARSE_SIGMA);
+                let p50 = (req.true_output_tokens as f64 * factor).max(1.0);
+                let priors = Priors::new(p50, p50 * COARSE_SPREAD);
+                // Routing follows the *predicted* bucket — the client has no
+                // generator label under semi-clairvoyance.
+                (priors, Route::from_bucket(priors.bucket()))
+            }
+            InfoLevel::Oracle => {
+                let t = req.true_output_tokens as f64;
+                (Priors::new(t, t), Route::from_bucket(req.true_bucket))
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        self.level.name().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Class, SloPolicy, TokenBucket};
+    use crate::workload::{Mix, SynthGen};
+
+    fn requests(n: usize) -> Vec<Request> {
+        let mut g = SynthGen::new(Mix::Balanced, Rng::new(3));
+        let slo = SloPolicy::default();
+        (0..n).map(|i| g.sample(i, 0.0, &slo)).collect()
+    }
+
+    #[test]
+    fn no_info_is_constant_and_neutral() {
+        let mut src = LadderSource::new(InfoLevel::NoInfo, Rng::new(1));
+        for r in requests(50) {
+            let (p, route) = src.priors(&r);
+            assert_eq!(p.p50, NEUTRAL_P50);
+            assert_eq!(p.p90, NEUTRAL_P90);
+            assert_eq!(route, Route::neutral());
+        }
+    }
+
+    #[test]
+    fn class_only_routes_but_neutral_magnitude() {
+        let mut src = LadderSource::new(InfoLevel::ClassOnly, Rng::new(1));
+        for r in requests(50) {
+            let (p, route) = src.priors(&r);
+            assert_eq!(p.p50, NEUTRAL_P50, "magnitude must stay neutral");
+            assert_eq!(route.bucket_belief, Some(r.true_bucket));
+            assert_eq!(route.class, r.true_bucket.class());
+        }
+    }
+
+    #[test]
+    fn coarse_correlates_with_truth() {
+        let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(7));
+        let reqs = requests(500);
+        let mut ratios = Vec::new();
+        for r in &reqs {
+            let (p, _) = src.priors(r);
+            ratios.push(p.p50 / r.true_output_tokens as f64);
+            assert!(p.p90 >= p.p50);
+        }
+        let (mean, std) = crate::util::stats::mean_std(&ratios);
+        // log-normal(0, 0.25): mean ≈ e^{σ²/2} ≈ 1.032, sd ≈ 0.26.
+        assert!((mean - 1.03).abs() < 0.08, "mean ratio {mean}");
+        assert!(std > 0.1 && std < 0.5, "std {std}");
+    }
+
+    #[test]
+    fn coarse_routing_can_mislabel() {
+        // With noisy magnitude, bucket beliefs near boundaries can differ
+        // from truth — that's the semi-clairvoyant realism.
+        let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(11));
+        let reqs = requests(2000);
+        let mislabeled = reqs
+            .iter()
+            .filter(|r| {
+                let (_, route) = src.priors(r);
+                route.bucket_belief != Some(r.true_bucket)
+            })
+            .count();
+        assert!(mislabeled > 0, "expected some routing mislabels");
+        assert!((mislabeled as f64) < 0.5 * reqs.len() as f64, "but mostly right");
+    }
+
+    #[test]
+    fn oracle_is_exact() {
+        let mut src = LadderSource::new(InfoLevel::Oracle, Rng::new(1));
+        for r in requests(50) {
+            let (p, route) = src.priors(&r);
+            assert_eq!(p.p50, r.true_output_tokens as f64);
+            assert_eq!(p.p90, p.p50);
+            assert_eq!(route.bucket_belief, Some(r.true_bucket));
+        }
+    }
+
+    #[test]
+    fn short_class_routing() {
+        let mut src = LadderSource::new(InfoLevel::Oracle, Rng::new(1));
+        for r in requests(200) {
+            let (_, route) = src.priors(&r);
+            match r.true_bucket {
+                TokenBucket::Short => assert_eq!(route.class, Class::Interactive),
+                _ => assert_eq!(route.class, Class::Heavy),
+            }
+        }
+    }
+}

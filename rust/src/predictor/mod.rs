@@ -1,0 +1,65 @@
+//! Output-length priors: the semi-clairvoyant signal (paper §3.3, §4.4,
+//! §4.10).
+//!
+//! A `PriorSource` maps a request to the *policy-facing* `(Priors, Route)`
+//! pair — what the scheduler is allowed to know. The four information-ladder
+//! conditions (§4.4) plus the multiplicative-noise wrapper (§4.10) and the
+//! PJRT-served neural predictor (runtime::nn) all implement it.
+
+pub mod features;
+pub mod ladder;
+pub mod noise;
+
+pub use ladder::{InfoLevel, LadderSource, NEUTRAL_P50, NEUTRAL_P90};
+pub use noise::NoisySource;
+
+use crate::core::{Class, Priors, Request, TokenBucket};
+
+/// What the scheduler believes about a request's routing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Route {
+    /// Allocation-layer lane.
+    pub class: Class,
+    /// Bucket belief for tiered overload; `None` = no usable label
+    /// (no-information blind: a single neutral lane, uniform admission).
+    pub bucket_belief: Option<TokenBucket>,
+}
+
+impl Route {
+    pub fn neutral() -> Route {
+        Route { class: Class::Interactive, bucket_belief: None }
+    }
+
+    pub fn from_bucket(b: TokenBucket) -> Route {
+        Route { class: b.class(), bucket_belief: Some(b) }
+    }
+}
+
+/// Source of policy-facing priors. `&mut` because stochastic sources carry
+/// RNG state (deterministic per seed).
+pub trait PriorSource {
+    fn priors(&mut self, req: &Request) -> (Priors, Route);
+    fn name(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neutral_route_has_no_belief() {
+        let r = Route::neutral();
+        assert_eq!(r.bucket_belief, None);
+        assert_eq!(r.class, Class::Interactive);
+    }
+
+    #[test]
+    fn route_from_bucket_maps_class() {
+        assert_eq!(Route::from_bucket(TokenBucket::Short).class, Class::Interactive);
+        assert_eq!(Route::from_bucket(TokenBucket::XLong).class, Class::Heavy);
+        assert_eq!(
+            Route::from_bucket(TokenBucket::Long).bucket_belief,
+            Some(TokenBucket::Long)
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! Predictor-quality sweep support (paper §4.10): deterministic per-request
+//! multiplicative error injected into the *policy-facing* p50/p90 after the
+//! usual coarse prior is formed. Routing buckets and mock physics stay
+//! unchanged — the sweep isolates what the client believes about length.
+
+use crate::core::{Priors, Request};
+use crate::predictor::{PriorSource, Route};
+use crate::util::rng::Rng;
+
+/// Wraps an inner source and multiplies its priors by U[1−L, 1+L].
+pub struct NoisySource<S: PriorSource> {
+    inner: S,
+    level: f64,
+    rng: Rng,
+}
+
+impl<S: PriorSource> NoisySource<S> {
+    /// `level` = L ∈ [0, 1): up to ±100·L % relative error at the endpoints.
+    pub fn new(inner: S, level: f64, rng: Rng) -> Self {
+        assert!((0.0..1.0).contains(&level), "noise level {level} out of range");
+        NoisySource { inner, level, rng }
+    }
+}
+
+impl<S: PriorSource> PriorSource for NoisySource<S> {
+    fn priors(&mut self, req: &Request) -> (Priors, Route) {
+        let (p, route) = self.inner.priors(req);
+        if self.level == 0.0 {
+            return (p, route);
+        }
+        let factor = self.rng.range(1.0 - self.level, 1.0 + self.level);
+        // Routing is NOT recomputed from the noisy value: §4.10 holds
+        // routing buckets fixed and perturbs only the numeric priors.
+        (p.scaled(factor), route)
+    }
+
+    fn name(&self) -> String {
+        format!("{}+noise{:.1}", self.inner.name(), self.level)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::SloPolicy;
+    use crate::predictor::ladder::{InfoLevel, LadderSource};
+    use crate::workload::{Mix, SynthGen};
+
+    fn requests(n: usize) -> Vec<Request> {
+        let mut g = SynthGen::new(Mix::Balanced, Rng::new(3));
+        let slo = SloPolicy::default();
+        (0..n).map(|i| g.sample(i, 0.0, &slo)).collect()
+    }
+
+    #[test]
+    fn zero_noise_is_identity() {
+        let reqs = requests(20);
+        let mut a = LadderSource::new(InfoLevel::Oracle, Rng::new(1));
+        let mut b =
+            NoisySource::new(LadderSource::new(InfoLevel::Oracle, Rng::new(1)), 0.0, Rng::new(2));
+        for r in &reqs {
+            assert_eq!(a.priors(r).0, b.priors(r).0);
+        }
+    }
+
+    #[test]
+    fn noise_bounded_by_level() {
+        let reqs = requests(500);
+        for level in [0.1, 0.2, 0.4, 0.6] {
+            let mut src = NoisySource::new(
+                LadderSource::new(InfoLevel::Oracle, Rng::new(5)),
+                level,
+                Rng::new(9),
+            );
+            for r in &reqs {
+                let (p, _) = src.priors(r);
+                let ratio = p.p50 / r.true_output_tokens as f64;
+                assert!(
+                    ratio >= 1.0 - level - 1e-9 && ratio <= 1.0 + level + 1e-9,
+                    "level={level} ratio={ratio}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn route_unchanged_by_noise() {
+        let reqs = requests(200);
+        let mut base = LadderSource::new(InfoLevel::ClassOnly, Rng::new(5));
+        let mut noisy = NoisySource::new(
+            LadderSource::new(InfoLevel::ClassOnly, Rng::new(5)),
+            0.6,
+            Rng::new(11),
+        );
+        for r in &reqs {
+            assert_eq!(base.priors(r).1, noisy.priors(r).1);
+        }
+    }
+
+    #[test]
+    fn monotone_quantiles_preserved() {
+        let reqs = requests(300);
+        let mut src = NoisySource::new(
+            LadderSource::new(InfoLevel::Coarse, Rng::new(5)),
+            0.6,
+            Rng::new(13),
+        );
+        for r in &reqs {
+            let (p, _) = src.priors(r);
+            assert!(p.p90 >= p.p50 && p.p50 > 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_invalid_level() {
+        let _ = NoisySource::new(LadderSource::new(InfoLevel::Oracle, Rng::new(1)), 1.0, Rng::new(2));
+    }
+}

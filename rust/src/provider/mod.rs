@@ -1,0 +1,336 @@
+//! Congestion-aware mock black-box LLM provider (paper §4.1).
+//!
+//! The mock is an *abstraction* preserving the causal chain the paper needs:
+//! arrival shaping → offered load → load-dependent slowdown → completions.
+//! Its qualitative physics: bigger jobs cost more (linear in output tokens,
+//! validated by the calibration harness with R² ≈ 1), overload hurts
+//! everyone (multiplicative slowdown in concurrent load), and arrivals
+//! beyond the concurrency limit queue FIFO *inside* the provider — the
+//! hidden head-of-line effect that naive client dispatch suffers.
+//!
+//! Nothing in this module is visible to the scheduler except completion
+//! timing: the black-box boundary is enforced by the driver only ever
+//! handing the client `(request id, completion time)`.
+
+pub mod calibration;
+
+use std::collections::VecDeque;
+
+use crate::core::ReqId;
+use crate::util::rng::Rng;
+
+/// Provider physics parameters.
+///
+/// The mock has **no hard admission gate** at typical loads: the paper's
+/// abstraction is "per-request delay grows with concurrent load", so the
+/// congestion cost of over-submitting is a *slowdown everyone pays*, not a
+/// clean queue. `max_concurrency` is a distant hard ceiling (a real vendor
+/// eventually queues or 429s); the operative knob is `slowdown_ref` — the
+/// concurrency at which service stretches by `1 + slowdown_gamma`.
+#[derive(Debug, Clone)]
+pub struct ProviderCfg {
+    /// Fixed per-request overhead (network + prefill), ms.
+    pub base_ms: f64,
+    /// Linear generation cost per output token, ms.
+    pub per_token_ms: f64,
+    /// Hard concurrency ceiling; beyond this, requests queue FIFO unseen.
+    pub max_concurrency: usize,
+    /// Congestion slowdown amplitude: service × (1 + γ·((n−1)/ref)^p).
+    pub slowdown_gamma: f64,
+    /// Congestion curve exponent p.
+    pub slowdown_exp: f64,
+    /// Reference concurrency for the slowdown curve.
+    pub slowdown_ref: f64,
+    /// Log-normal service jitter sigma (0 = deterministic).
+    pub jitter_sigma: f64,
+}
+
+impl Default for ProviderCfg {
+    fn default() -> Self {
+        // Defaults put the joint metrics in the paper's bands (short P95
+        // ≈ 320 ms under structured policies); see EXPERIMENTS.md
+        // §Calibration for the sweep that chose them.
+        ProviderCfg {
+            base_ms: 150.0,
+            per_token_ms: 0.9,
+            max_concurrency: 64,
+            slowdown_gamma: 0.8,
+            slowdown_exp: 1.5,
+            slowdown_ref: 8.0,
+            jitter_sigma: 0.06,
+        }
+    }
+}
+
+impl ProviderCfg {
+    /// Paper-scale calibration constants (Volcengine Doubao fit:
+    /// 3294 + 18.7·tokens). Used by the Table-3 calibration experiment.
+    pub fn paper_scale() -> Self {
+        ProviderCfg {
+            base_ms: 3294.0,
+            per_token_ms: 18.7,
+            max_concurrency: 64,
+            slowdown_gamma: 0.0,
+            slowdown_exp: 1.0,
+            slowdown_ref: 8.0,
+            jitter_sigma: 0.12,
+        }
+    }
+
+    /// Mean service time for a token count at a given running count.
+    pub fn service_ms(&self, output_tokens: f64, running: usize) -> f64 {
+        (self.base_ms + self.per_token_ms * output_tokens) * self.slowdown(running)
+    }
+
+    /// Multiplicative slowdown when `running` requests (including the new
+    /// one) occupy the engine. Uncapped: flooding the provider stretches
+    /// everyone's generation time.
+    pub fn slowdown(&self, running: usize) -> f64 {
+        if running <= 1 {
+            return 1.0;
+        }
+        let frac = (running - 1) as f64 / self.slowdown_ref.max(1.0);
+        1.0 + self.slowdown_gamma * frac.powf(self.slowdown_exp)
+    }
+
+    /// Rough capacity estimate (req/s) for a mean token count at the
+    /// reference concurrency — used to express offered load as a ratio.
+    pub fn capacity_rps(&self, mean_tokens: f64) -> f64 {
+        let n = self.slowdown_ref.max(1.0);
+        let mean_service_s = self.service_ms(mean_tokens, n as usize) / 1000.0;
+        n / mean_service_s
+    }
+}
+
+/// Event emitted by the provider toward the DES: request `id` will complete
+/// at absolute time `finish_ms`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Started {
+    pub id: ReqId,
+    pub finish_ms: f64,
+}
+
+/// The mock provider. All state here is invisible to the scheduler.
+pub struct MockProvider {
+    cfg: ProviderCfg,
+    rng: Rng,
+    /// Requests currently generating.
+    running: usize,
+    /// Hidden FIFO of (req, tokens) waiting for a slot.
+    waiting: VecDeque<(ReqId, f64)>,
+    // ---- introspection for tests/experiments (not exposed to the client) ----
+    peak_running: usize,
+    peak_waiting: usize,
+    total_started: u64,
+}
+
+impl MockProvider {
+    pub fn new(cfg: ProviderCfg, rng: Rng) -> Self {
+        MockProvider {
+            cfg,
+            rng,
+            running: 0,
+            waiting: VecDeque::new(),
+            peak_running: 0,
+            peak_waiting: 0,
+            total_started: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &ProviderCfg {
+        &self.cfg
+    }
+
+    fn sample_service(&mut self, tokens: f64) -> f64 {
+        let mean = self.cfg.service_ms(tokens, self.running);
+        if self.cfg.jitter_sigma > 0.0 {
+            // Log-normal with median = mean service (mu = ln mean).
+            mean * self.rng.lognormal(0.0, self.cfg.jitter_sigma)
+        } else {
+            mean
+        }
+    }
+
+    fn start(&mut self, id: ReqId, tokens: f64, now: f64) -> Started {
+        self.running += 1;
+        self.peak_running = self.peak_running.max(self.running);
+        self.total_started += 1;
+        let service = self.sample_service(tokens);
+        Started { id, finish_ms: now + service }
+    }
+
+    /// Client submits a request. Returns `Some(Started)` if a slot was free,
+    /// else the request queues invisibly and `None` is returned.
+    pub fn submit(&mut self, id: ReqId, output_tokens: f64, now: f64) -> Option<Started> {
+        if self.running < self.cfg.max_concurrency {
+            Some(self.start(id, output_tokens, now))
+        } else {
+            self.waiting.push_back((id, output_tokens));
+            self.peak_waiting = self.peak_waiting.max(self.waiting.len());
+            None
+        }
+    }
+
+    /// A running request finished; promote queued work. Returns newly
+    /// started requests (the DES schedules their completions).
+    pub fn on_finish(&mut self, now: f64) -> Vec<Started> {
+        debug_assert!(self.running > 0, "finish with nothing running");
+        self.running -= 1;
+        let mut started = Vec::new();
+        while self.running < self.cfg.max_concurrency {
+            match self.waiting.pop_front() {
+                Some((id, tokens)) => started.push(self.start(id, tokens, now)),
+                None => break,
+            }
+        }
+        started
+    }
+
+    // ---- test/experiment introspection ----
+    pub fn running(&self) -> usize {
+        self.running
+    }
+
+    pub fn hidden_queue_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn peak_running(&self) -> usize {
+        self.peak_running
+    }
+
+    pub fn peak_hidden_queue(&self) -> usize {
+        self.peak_waiting
+    }
+
+    pub fn total_started(&self) -> u64 {
+        self.total_started
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn provider(cap: usize) -> MockProvider {
+        let cfg = ProviderCfg {
+            base_ms: 100.0,
+            per_token_ms: 1.0,
+            max_concurrency: cap,
+            slowdown_gamma: 1.0,
+            slowdown_exp: 1.0,
+            slowdown_ref: 3.0,
+            jitter_sigma: 0.0,
+        };
+        MockProvider::new(cfg, Rng::new(1))
+    }
+
+    #[test]
+    fn linear_cost_no_load() {
+        let mut p = provider(4);
+        let s = p.submit(0, 100.0, 0.0).unwrap();
+        assert!((s.finish_ms - 200.0).abs() < 1e-9); // 100 + 1.0*100, no slowdown
+    }
+
+    #[test]
+    fn slowdown_grows_with_load_uncapped() {
+        let cfg = ProviderCfg::default();
+        let s1 = cfg.slowdown(1);
+        let s2 = cfg.slowdown(2);
+        let s8 = cfg.slowdown(8);
+        let s40 = cfg.slowdown(40);
+        assert_eq!(s1, 1.0);
+        assert!(s2 > s1 && s8 > s2 && s40 > s8);
+        // At ref+1 running, the slowdown equals 1 + gamma by construction.
+        let at_ref = cfg.slowdown(cfg.slowdown_ref as usize + 1);
+        assert!((at_ref - (1.0 + cfg.slowdown_gamma)).abs() < 1e-9);
+        // Flooding is punished superlinearly (the naive pathology).
+        assert!(s40 > 5.0, "s40={s40}");
+    }
+
+    #[test]
+    fn queues_beyond_capacity_fifo() {
+        let mut p = provider(2);
+        assert!(p.submit(0, 10.0, 0.0).is_some());
+        assert!(p.submit(1, 10.0, 0.0).is_some());
+        assert!(p.submit(2, 10.0, 0.0).is_none());
+        assert!(p.submit(3, 10.0, 0.0).is_none());
+        assert_eq!(p.hidden_queue_len(), 2);
+        assert_eq!(p.running(), 2);
+        let started = p.on_finish(50.0);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].id, 2, "FIFO order");
+        assert_eq!(p.hidden_queue_len(), 1);
+    }
+
+    #[test]
+    fn second_request_sees_slowdown() {
+        let mut p = provider(4);
+        let a = p.submit(0, 100.0, 0.0).unwrap();
+        let b = p.submit(1, 100.0, 0.0).unwrap();
+        // running=2, ref=3: slowdown = 1 + 1.0·(1/3) = 1.333…
+        assert!((a.finish_ms - 200.0).abs() < 1e-9);
+        assert!((b.finish_ms - 200.0 * (1.0 + 1.0 / 3.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn jitter_is_seed_deterministic() {
+        let cfg = ProviderCfg { jitter_sigma: 0.1, ..ProviderCfg::default() };
+        let mut p1 = MockProvider::new(cfg.clone(), Rng::new(9));
+        let mut p2 = MockProvider::new(cfg, Rng::new(9));
+        for i in 0..10 {
+            let a = p1.submit(i, 500.0, 0.0);
+            let b = p2.submit(i, 500.0, 0.0);
+            assert_eq!(a, b);
+            if p1.running() == p1.cfg.max_concurrency {
+                p1.on_finish(1.0);
+                p2.on_finish(1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn peak_tracking() {
+        let mut p = provider(1);
+        p.submit(0, 10.0, 0.0);
+        p.submit(1, 10.0, 0.0);
+        p.submit(2, 10.0, 0.0);
+        assert_eq!(p.peak_running(), 1);
+        assert_eq!(p.peak_hidden_queue(), 2);
+        assert_eq!(p.total_started(), 1);
+    }
+
+    #[test]
+    fn capacity_estimate_sane() {
+        let cfg = ProviderCfg::default();
+        let cap = cfg.capacity_rps(352.0);
+        assert!(cap > 1.0 && cap < 50.0, "capacity={cap}");
+    }
+
+    #[test]
+    fn drain_all_queued() {
+        use crate::testing::prop;
+        prop::forall(30, |g| {
+            let capn = g.usize_in(1, 6);
+            let mut p = provider(capn);
+            let n = g.usize_in(1, 40);
+            let mut completed = 0usize;
+            let mut inflight: Vec<ReqId> = Vec::new();
+            for i in 0..n {
+                if p.submit(i, g.f64_in(10.0, 3000.0), 0.0).is_some() {
+                    inflight.push(i);
+                }
+            }
+            // Finish everything: each on_finish may start more.
+            let mut pending = inflight.len();
+            while pending > 0 {
+                completed += 1;
+                pending -= 1;
+                pending += p.on_finish(completed as f64).len();
+            }
+            assert_eq!(completed, n, "all requests eventually run");
+            assert_eq!(p.hidden_queue_len(), 0);
+            assert_eq!(p.running(), 0);
+        });
+    }
+}

@@ -1,0 +1,164 @@
+//! `predictor_meta.json` parsing + constants-drift guard.
+//!
+//! The artifact metadata carries the generative-model constants the
+//! predictor was trained under; `check_constants` asserts they match the
+//! constants compiled into this binary (`workload::synth::GEN_CONSTANTS`),
+//! so a stale artifact cannot silently serve an out-of-distribution model.
+
+use anyhow::{bail, Context, Result};
+
+use crate::core::TokenBucket;
+use crate::util::jsonio::Json;
+use crate::workload::synth::GEN_CONSTANTS;
+
+/// Golden input/output vectors for the runtime numerics test.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub features: Vec<Vec<f32>>,
+    pub expected_p50: Vec<f64>,
+    pub expected_p90: Vec<f64>,
+    pub true_tokens: Vec<f64>,
+}
+
+/// Parsed predictor metadata.
+#[derive(Debug, Clone)]
+pub struct PredictorMeta {
+    pub d_in: usize,
+    pub token_scale: f64,
+    pub batch_sizes: Vec<usize>,
+    pub artifacts: Vec<String>,
+    pub golden: Golden,
+    pub training_coverage_p90: f64,
+    raw: Json,
+}
+
+impl PredictorMeta {
+    pub fn load(path: &str) -> Result<PredictorMeta> {
+        let j = Json::read_file(path).with_context(|| format!("reading {path}"))?;
+        let model = j.req("model")?;
+        let d_in = model.req("d_in")?.as_usize().context("model.d_in")?;
+        let token_scale = model.req("token_scale")?.as_f64().context("model.token_scale")?;
+        let batch_sizes: Vec<usize> = model
+            .req("batch_sizes")?
+            .as_arr()
+            .context("model.batch_sizes")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let artifacts: Vec<String> = j
+            .req("artifacts")?
+            .as_arr()
+            .context("artifacts")?
+            .iter()
+            .filter_map(|a| a.as_str().map(str::to_string))
+            .collect();
+        if artifacts.len() != batch_sizes.len() {
+            bail!("artifacts/batch_sizes length mismatch");
+        }
+        let g = j.req("golden")?;
+        let features = g
+            .req("features")?
+            .as_arr()
+            .context("golden.features")?
+            .iter()
+            .map(|row| {
+                row.f64_array().map(|v| v.into_iter().map(|x| x as f32).collect::<Vec<f32>>())
+            })
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        let golden = Golden {
+            features,
+            expected_p50: g.req("expected_p50")?.f64_array()?,
+            expected_p90: g.req("expected_p90")?.f64_array()?,
+            true_tokens: g.req("true_tokens")?.f64_array()?,
+        };
+        let training_coverage_p90 =
+            j.get("training").map(|t| t.f64_or("coverage_p90", f64::NAN)).unwrap_or(f64::NAN);
+        Ok(PredictorMeta { d_in, token_scale, batch_sizes, artifacts, golden, training_coverage_p90, raw: j })
+    }
+
+    /// Assert the artifact's generative-model constants match this binary's.
+    pub fn check_constants(&self) -> Result<()> {
+        let dg = self.raw.req("datagen")?;
+        // Bucket bounds.
+        let buckets = dg.req("buckets")?;
+        for b in TokenBucket::ALL {
+            let bounds = buckets.req(b.name())?.f64_array()?;
+            let (lo, hi) = b.bounds();
+            if bounds != vec![lo as f64, hi as f64] {
+                bail!("bucket {} bounds drift: artifact {:?} vs binary {:?}", b.name(), bounds, (lo, hi));
+            }
+        }
+        // Prompt model.
+        let close = |a: &[f64], b: &[f64]| {
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() < 1e-9)
+        };
+        let alpha = dg.req("prompt_alpha")?.f64_array()?;
+        let beta = dg.req("prompt_beta")?.f64_array()?;
+        if !close(&alpha, &GEN_CONSTANTS.prompt_alpha) || !close(&beta, &GEN_CONSTANTS.prompt_beta) {
+            bail!("prompt alpha/beta drift");
+        }
+        let sigma = dg.req("prompt_sigma")?.as_f64().context("prompt_sigma")?;
+        if (sigma - GEN_CONSTANTS.prompt_sigma).abs() > 1e-9 {
+            bail!("prompt_sigma drift: {sigma}");
+        }
+        // Task-given-bucket matrix.
+        let tgb = dg.req("task_given_bucket")?;
+        for (bi, b) in TokenBucket::ALL.iter().enumerate() {
+            let row = tgb.req(b.name())?.f64_array()?;
+            if !close(&row, &GEN_CONSTANTS.task_given_bucket[bi]) {
+                bail!("task_given_bucket[{}] drift", b.name());
+            }
+        }
+        // Max-tokens grid.
+        let grid = dg.req("max_tokens_grid")?.f64_array()?;
+        let want: Vec<f64> = GEN_CONSTANTS.max_tokens_grid.iter().map(|x| *x as f64).collect();
+        if grid != want {
+            bail!("max_tokens_grid drift");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    #[test]
+    fn parses_and_checks_real_artifacts_when_present() {
+        let dir = default_artifacts_dir();
+        if !artifacts_available(&dir) {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let meta = PredictorMeta::load(&format!("{dir}/predictor_meta.json")).unwrap();
+        assert_eq!(meta.d_in, 32);
+        assert_eq!(meta.batch_sizes, vec![128, 512]);
+        assert_eq!(meta.golden.features.len(), meta.golden.expected_p50.len());
+        meta.check_constants().expect("constants must match");
+        for (p50, p90) in meta.golden.expected_p50.iter().zip(&meta.golden.expected_p90) {
+            assert!(p90 >= p50, "monotone golden quantiles");
+        }
+    }
+
+    #[test]
+    fn detects_bucket_drift() {
+        let text = r#"{
+          "model": {"d_in": 32, "token_scale": 256, "batch_sizes": [128]},
+          "artifacts": ["a.hlo.txt"],
+          "golden": {"features": [[0.0]], "expected_p50": [1], "expected_p90": [2], "true_tokens": [1]},
+          "datagen": {"buckets": {"short": [8, 63], "medium": [65, 256], "long": [257, 1024], "xlong": [1025, 4096]},
+                      "prompt_alpha": [2.2, 4.1, 1.8, 3.5], "prompt_beta": [0.55, 0.35, 0.7, 0.3],
+                      "prompt_sigma": 0.45,
+                      "task_given_bucket": {"short": [0.45, 0.05, 0.1, 0.4], "medium": [0.4, 0.2, 0.25, 0.15],
+                                             "long": [0.25, 0.35, 0.3, 0.1], "xlong": [0.1, 0.4, 0.45, 0.05]},
+                      "max_tokens_grid": [256, 512, 1024, 2048, 4096]}
+        }"#;
+        let path = std::env::temp_dir().join("bbsched_meta_drift.json");
+        std::fs::write(&path, text).unwrap();
+        let meta = PredictorMeta::load(path.to_str().unwrap()).unwrap();
+        let err = meta.check_constants().unwrap_err();
+        assert!(format!("{err:#}").contains("bounds drift"), "{err:#}");
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,112 @@
+//! PJRT runtime: load the AOT-compiled predictor (HLO text emitted by
+//! `python/compile/aot.py`) and execute it from the Rust hot path.
+//!
+//! Python never runs here — the artifacts are self-contained HLO with the
+//! trained weights baked in as constants. Interchange is HLO *text* (the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id serialized
+//! protos; the text parser reassigns ids).
+
+pub mod meta;
+pub mod nn;
+
+pub use meta::PredictorMeta;
+pub use nn::NnPriorSource;
+
+use anyhow::{bail, Context, Result};
+
+use crate::core::Priors;
+use crate::predictor::features::D_IN;
+
+/// A compiled predictor executable at one static batch size.
+struct BatchExe {
+    batch: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The AOT predictor served through PJRT.
+pub struct Predictor {
+    _client: xla::PjRtClient,
+    exes: Vec<BatchExe>,
+    pub meta: PredictorMeta,
+}
+
+impl Predictor {
+    /// Load every artifact listed in `predictor_meta.json` and compile it on
+    /// the PJRT CPU client.
+    pub fn load(artifacts_dir: &str) -> Result<Predictor> {
+        let meta = PredictorMeta::load(&format!("{artifacts_dir}/predictor_meta.json"))
+            .context("loading predictor_meta.json (run `make artifacts`)")?;
+        meta.check_constants().context("artifact/binary constants drift")?;
+        if meta.d_in != D_IN {
+            bail!("artifact d_in {} != binary D_IN {}", meta.d_in, D_IN);
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = Vec::new();
+        for (batch, name) in meta.batch_sizes.iter().zip(meta.artifacts.iter()) {
+            let path = format!("{artifacts_dir}/{name}");
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            exes.push(BatchExe { batch: *batch, exe });
+        }
+        exes.sort_by_key(|e| e.batch);
+        Ok(Predictor { _client: client, exes, meta })
+    }
+
+    /// Largest compiled batch size.
+    pub fn max_batch(&self) -> usize {
+        self.exes.last().map(|e| e.batch).unwrap_or(0)
+    }
+
+    /// Run the predictor on `n` feature rows (row-major `n × D_IN`).
+    /// Rows beyond the chosen executable's batch are processed in chunks.
+    /// Returns one `Priors` per input row.
+    pub fn predict(&self, features: &[f32], n: usize) -> Result<Vec<Priors>> {
+        assert_eq!(features.len(), n * D_IN, "feature matrix shape");
+        let mut out = Vec::with_capacity(n);
+        let mut row = 0;
+        while row < n {
+            let remaining = n - row;
+            // Smallest executable that covers the remainder, else the largest.
+            let exe = self
+                .exes
+                .iter()
+                .find(|e| e.batch >= remaining)
+                .or_else(|| self.exes.last())
+                .context("no compiled executables")?;
+            let take = remaining.min(exe.batch);
+            let mut padded = vec![0.0f32; exe.batch * D_IN];
+            padded[..take * D_IN].copy_from_slice(&features[row * D_IN..(row + take) * D_IN]);
+            let quantiles = self.execute_one(exe, &padded)?;
+            for i in 0..take {
+                out.push(Priors::new(quantiles[2 * i] as f64, quantiles[2 * i + 1] as f64));
+            }
+            row += take;
+        }
+        Ok(out)
+    }
+
+    /// Execute one padded batch; returns the raw (batch × 2) quantile rows.
+    fn execute_one(&self, exe: &BatchExe, padded: &[f32]) -> Result<Vec<f32>> {
+        let x = xla::Literal::vec1(padded).reshape(&[exe.batch as i64, D_IN as i64])?;
+        let result = exe.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        if v.len() != exe.batch * 2 {
+            bail!("unexpected output size {} (want {})", v.len(), exe.batch * 2);
+        }
+        Ok(v)
+    }
+}
+
+/// Artifacts directory default, overridable via BBSCHED_ARTIFACTS.
+pub fn default_artifacts_dir() -> String {
+    std::env::var("BBSCHED_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// True if artifacts exist (integration tests skip gracefully otherwise).
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(&format!("{dir}/predictor_meta.json")).exists()
+}

@@ -1,0 +1,69 @@
+//! Neural prior source: the trained quantile MLP served through PJRT as a
+//! `PriorSource` — the deployable analogue of the paper's SageSched
+//! predictor premise. Used by the end-to-end example and the `*_nn`
+//! strategy variants; table experiments default to the analytic ladder
+//! (matching the paper's controlled setup).
+
+use crate::core::{Priors, Request};
+use crate::predictor::features::{batch_features, features, D_IN};
+use crate::predictor::{PriorSource, Route};
+use crate::runtime::Predictor;
+
+/// Per-request prior source backed by the PJRT predictor.
+///
+/// Each `priors()` call executes one (padded) kernel batch; for bulk
+/// workloads prefer [`NnPriorSource::predict_all`] which packs requests into
+/// the largest compiled batch.
+pub struct NnPriorSource {
+    predictor: Predictor,
+    calls: u64,
+}
+
+impl NnPriorSource {
+    pub fn new(predictor: Predictor) -> Self {
+        NnPriorSource { predictor, calls: 0 }
+    }
+
+    pub fn predictor(&self) -> &Predictor {
+        &self.predictor
+    }
+
+    pub fn calls(&self) -> u64 {
+        self.calls
+    }
+
+    /// Batched bulk prediction: one PJRT execution per `max_batch` rows.
+    pub fn predict_all(&mut self, requests: &[&Request]) -> anyhow::Result<Vec<(Priors, Route)>> {
+        let mut out = Vec::with_capacity(requests.len());
+        let bmax = self.predictor.max_batch();
+        for chunk in requests.chunks(bmax.max(1)) {
+            let feats = batch_features(chunk, chunk.len());
+            let priors = self.predictor.predict(&feats, chunk.len())?;
+            self.calls += 1;
+            for p in priors {
+                out.push((p, Route::from_bucket(p.bucket())));
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl PriorSource for NnPriorSource {
+    fn priors(&mut self, req: &Request) -> (Priors, Route) {
+        let f: [f32; D_IN] = features(req);
+        self.calls += 1;
+        let p = self
+            .predictor
+            .predict(&f, 1)
+            .expect("PJRT predictor execution failed")
+            .pop()
+            .expect("one row in, one prior out");
+        // Semi-clairvoyant routing: the class lane follows the *predicted*
+        // bucket — the client has no generator label.
+        (p, Route::from_bucket(p.bucket()))
+    }
+
+    fn name(&self) -> String {
+        "nn_pjrt".to_string()
+    }
+}

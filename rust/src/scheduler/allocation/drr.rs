@@ -1,0 +1,253 @@
+//! Deficit Round Robin with congestion-adaptive weights and work-conserving
+//! borrowing — the paper's allocation design (§3.1 layer 1).
+//!
+//! Each class keeps a deficit counter in estimated-token units. When
+//! visited, a backlogged class earns `quantum × effective_weight`; it may
+//! send when its deficit covers the head's estimated cost. An idle class's
+//! deficit resets (classic DRR), so its unused share is consumed by the
+//! backlogged peer — work conservation. Congestion feedback scales the
+//! interactive class's effective weight up under stress, biasing send
+//! opportunities toward latency-sensitive work exactly when it matters.
+
+use super::{AllocCtx, Allocator};
+use crate::core::Class;
+
+#[derive(Debug, Clone)]
+pub struct DrrCfg {
+    /// Tokens granted per visit (before weighting).
+    pub quantum_tokens: f64,
+    /// Base weights (interactive, heavy).
+    pub w_interactive: f64,
+    pub w_heavy: f64,
+    /// Interactive weight multiplier grows to (1 + gain) at severity 1.
+    pub adaptive_gain: f64,
+}
+
+impl Default for DrrCfg {
+    fn default() -> Self {
+        DrrCfg { quantum_tokens: 400.0, w_interactive: 2.0, w_heavy: 1.0, adaptive_gain: 1.5 }
+    }
+}
+
+pub struct AdaptiveDrr {
+    cfg: DrrCfg,
+    deficit: [f64; 2],
+    /// Round-robin pointer: which class is visited next.
+    ptr: usize,
+    /// Whether the class under the pointer has already received its quantum
+    /// for the current visit (classic DRR grants once per visit).
+    granted_this_visit: bool,
+    /// Rotations bound per decision (cost/quantum can need several grants).
+    max_rotations: usize,
+    /// Whether weights react to congestion (false = plain DRR ablation).
+    adaptive: bool,
+}
+
+impl AdaptiveDrr {
+    pub fn new(cfg: DrrCfg) -> Self {
+        AdaptiveDrr {
+            cfg,
+            deficit: [0.0, 0.0],
+            ptr: 0,
+            granted_this_visit: false,
+            max_rotations: 64,
+            adaptive: true,
+        }
+    }
+
+    /// Plain DRR without congestion adaptation (ablation).
+    pub fn non_adaptive(cfg: DrrCfg) -> Self {
+        AdaptiveDrr { adaptive: false, ..Self::new(cfg) }
+    }
+
+    fn eff_weight(&self, class: Class, congestion: f64) -> f64 {
+        match class {
+            Class::Interactive => {
+                let boost = if self.adaptive { 1.0 + self.cfg.adaptive_gain * congestion } else { 1.0 };
+                self.cfg.w_interactive * boost
+            }
+            Class::Heavy => self.cfg.w_heavy,
+        }
+    }
+
+    pub fn deficit(&self, class: Class) -> f64 {
+        self.deficit[class.index()]
+    }
+
+    fn advance(&mut self) {
+        self.ptr = 1 - self.ptr;
+        self.granted_this_visit = false;
+    }
+}
+
+impl Allocator for AdaptiveDrr {
+    fn next_class(&mut self, ctx: &AllocCtx) -> Option<Class> {
+        if !ctx.any_backlog() {
+            return None;
+        }
+        // Visit classes round-robin; a backlogged class earns one quantum
+        // per *visit* (not per call — on_send keeps the pointer in place so
+        // a class serves its whole deficit burst before rotating, classic
+        // DRR). Bounded: with at least one backlogged class, each full
+        // rotation strictly increases that class's deficit, so eligibility
+        // is reached in ≤ cost/quantum rotations (capped by max_rotations
+        // for safety — hitting the cap grants the most-starved backlogged
+        // class anyway to preserve work conservation).
+        for _ in 0..self.max_rotations * 2 {
+            let class = Class::ALL[self.ptr];
+            match ctx.head(class) {
+                None => {
+                    // Idle class: reset deficit (classic DRR), pass the
+                    // opportunity to the peer — borrowing.
+                    self.deficit[class.index()] = 0.0;
+                    self.advance();
+                }
+                Some(cost) => {
+                    if self.deficit[class.index()] >= cost {
+                        return Some(class);
+                    }
+                    if !self.granted_this_visit {
+                        self.granted_this_visit = true;
+                        self.deficit[class.index()] +=
+                            self.cfg.quantum_tokens * self.eff_weight(class, ctx.congestion);
+                        if self.deficit[class.index()] >= cost {
+                            return Some(class);
+                        }
+                    }
+                    self.advance();
+                }
+            }
+        }
+        // Safety valve: pick the backlogged class with the largest
+        // deficit/cost ratio so the scheduler never stalls with free slots.
+        Class::ALL
+            .iter()
+            .copied()
+            .filter(|c| ctx.head(*c).is_some())
+            .max_by(|a, b| {
+                let ra = self.deficit[a.index()] / ctx.head(*a).unwrap().max(1.0);
+                let rb = self.deficit[b.index()] / ctx.head(*b).unwrap().max(1.0);
+                ra.partial_cmp(&rb).unwrap()
+            })
+    }
+
+    fn on_send(&mut self, class: Class, cost: f64) {
+        let d = &mut self.deficit[class.index()];
+        *d = (*d - cost).max(-cost); // deficit may dip; clamp runaway
+    }
+
+    fn name(&self) -> &'static str {
+        if self.adaptive {
+            "adaptive_drr"
+        } else {
+            "drr"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ctx;
+    use super::*;
+
+    fn drr() -> AdaptiveDrr {
+        AdaptiveDrr::new(DrrCfg::default())
+    }
+
+    #[test]
+    fn empty_queues_yield_none() {
+        let mut d = drr();
+        assert_eq!(d.next_class(&ctx(None, None)), None);
+    }
+
+    #[test]
+    fn single_backlog_borrows_everything() {
+        let mut d = drr();
+        // Only heavy backlogged: must always be served (work conservation),
+        // even with a huge head cost.
+        for _ in 0..10 {
+            let c = d.next_class(&ctx(None, Some(3000.0))).unwrap();
+            assert_eq!(c, Class::Heavy);
+            d.on_send(Class::Heavy, 3000.0);
+        }
+    }
+
+    #[test]
+    fn share_follows_weights() {
+        let mut d = drr();
+        let mut sends = [0u32; 2];
+        // Equal head costs; interactive weight 2 vs heavy 1 → ≈2:1 token share.
+        for _ in 0..3000 {
+            let c = d.next_class(&ctx(Some(100.0), Some(100.0))).unwrap();
+            sends[c.index()] += 1;
+            d.on_send(c, 100.0);
+        }
+        let ratio = sends[0] as f64 / sends[1] as f64;
+        assert!((ratio - 2.0).abs() < 0.2, "ratio={ratio} sends={sends:?}");
+    }
+
+    #[test]
+    fn token_share_balances_unequal_costs() {
+        // DRR equalizes *token* share, not send counts: with heavy heads 10×
+        // the cost, heavy should get ~10× fewer sends at equal weights.
+        let mut d = AdaptiveDrr::new(DrrCfg {
+            w_interactive: 1.0,
+            w_heavy: 1.0,
+            ..DrrCfg::default()
+        });
+        let mut tokens = [0f64; 2];
+        for _ in 0..5000 {
+            let c = d.next_class(&ctx(Some(50.0), Some(500.0))).unwrap();
+            let cost = if c == Class::Interactive { 50.0 } else { 500.0 };
+            tokens[c.index()] += cost;
+            d.on_send(c, cost);
+        }
+        let ratio = tokens[0] / tokens[1];
+        assert!((ratio - 1.0).abs() < 0.25, "token ratio={ratio}");
+    }
+
+    #[test]
+    fn congestion_boosts_interactive() {
+        let share = |congestion: f64| {
+            let mut d = drr();
+            let mut sends = [0u32; 2];
+            for _ in 0..2000 {
+                let mut c = ctx(Some(100.0), Some(100.0));
+                c.congestion = congestion;
+                let cls = d.next_class(&c).unwrap();
+                sends[cls.index()] += 1;
+                d.on_send(cls, 100.0);
+            }
+            sends[0] as f64 / (sends[0] + sends[1]) as f64
+        };
+        let calm = share(0.0);
+        let stressed = share(1.0);
+        assert!(stressed > calm + 0.1, "calm={calm} stressed={stressed}");
+    }
+
+    #[test]
+    fn non_adaptive_ignores_congestion() {
+        let mut d = AdaptiveDrr::non_adaptive(DrrCfg::default());
+        let mut sends = [0u32; 2];
+        for _ in 0..2000 {
+            let mut c = ctx(Some(100.0), Some(100.0));
+            c.congestion = 1.0;
+            let cls = d.next_class(&c).unwrap();
+            sends[cls.index()] += 1;
+            d.on_send(cls, 100.0);
+        }
+        let ratio = sends[0] as f64 / sends[1] as f64;
+        assert!((ratio - 2.0).abs() < 0.2, "ratio={ratio}");
+    }
+
+    #[test]
+    fn idle_class_deficit_resets() {
+        let mut d = drr();
+        // Build interactive deficit…
+        let _ = d.next_class(&ctx(Some(10_000.0), None));
+        assert!(d.deficit(Class::Interactive) > 0.0);
+        // …then interactive goes idle: a decision with it empty resets it.
+        let _ = d.next_class(&ctx(None, Some(100.0)));
+        assert_eq!(d.deficit(Class::Interactive), 0.0);
+    }
+}

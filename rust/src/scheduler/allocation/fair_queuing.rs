@@ -1,0 +1,101 @@
+//! Fair Queuing allocation (paper §4.6): strict round-robin alternation of
+//! send opportunities between classes, regardless of request size — the
+//! "equal service opportunities" objective. Work-conserving: an empty
+//! class's turn passes to the backlogged peer.
+
+use super::{AllocCtx, Allocator};
+use crate::core::Class;
+
+pub struct FairQueuing {
+    /// Class that gets the next opportunity.
+    ptr: usize,
+}
+
+impl FairQueuing {
+    pub fn new() -> Self {
+        FairQueuing { ptr: 0 }
+    }
+}
+
+impl Default for FairQueuing {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Allocator for FairQueuing {
+    fn next_class(&mut self, ctx: &AllocCtx) -> Option<Class> {
+        let first = Class::ALL[self.ptr];
+        let second = Class::ALL[1 - self.ptr];
+        if ctx.head(first).is_some() {
+            Some(first)
+        } else if ctx.head(second).is_some() {
+            Some(second)
+        } else {
+            None
+        }
+    }
+
+    fn on_send(&mut self, class: Class, _cost: f64) {
+        // Alternate after every send the served class actually took; if the
+        // other class was empty the pointer still flips, which is fine — its
+        // next turn comes right back.
+        self.ptr = 1 - class.index();
+    }
+
+    fn name(&self) -> &'static str {
+        "fair_queuing"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ctx;
+    use super::*;
+
+    #[test]
+    fn alternates_between_backlogged_classes() {
+        let mut fq = FairQueuing::new();
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            let c = fq.next_class(&ctx(Some(10.0), Some(1000.0))).unwrap();
+            order.push(c);
+            fq.on_send(c, 1.0);
+        }
+        assert_eq!(
+            order,
+            vec![
+                Class::Interactive,
+                Class::Heavy,
+                Class::Interactive,
+                Class::Heavy,
+                Class::Interactive,
+                Class::Heavy
+            ]
+        );
+    }
+
+    #[test]
+    fn size_blind() {
+        // Costs do not affect the alternation (unlike DRR).
+        let mut fq = FairQueuing::new();
+        let mut sends = [0u32; 2];
+        for _ in 0..1000 {
+            let c = fq.next_class(&ctx(Some(10.0), Some(4000.0))).unwrap();
+            sends[c.index()] += 1;
+            fq.on_send(c, if c == Class::Interactive { 10.0 } else { 4000.0 });
+        }
+        assert_eq!(sends[0], sends[1]);
+    }
+
+    #[test]
+    fn work_conserving_on_empty_peer() {
+        let mut fq = FairQueuing::new();
+        for _ in 0..5 {
+            let c = fq.next_class(&ctx(None, Some(100.0))).unwrap();
+            assert_eq!(c, Class::Heavy);
+            fq.on_send(c, 100.0);
+        }
+        assert_eq!(fq.next_class(&ctx(None, None)), None);
+    }
+}

@@ -1,0 +1,70 @@
+//! Allocation layer (paper §3.1 layer 1): inter-class share of send
+//! opportunities. Implementations: adaptive DRR (the paper's design),
+//! Fair Queuing (round-robin, §4.6), Short-Priority (strict priority,
+//! §4.6), and quota-tiered isolation (baseline in §4.5).
+
+pub mod drr;
+pub mod fair_queuing;
+pub mod paced_fifo;
+pub mod quota;
+pub mod short_priority;
+
+pub use drr::{AdaptiveDrr, DrrCfg};
+pub use fair_queuing::FairQueuing;
+pub use paced_fifo::PacedFifo;
+pub use quota::QuotaTiered;
+pub use short_priority::ShortPriority;
+
+use crate::core::Class;
+
+/// Context for one allocation decision — only client-observable signals.
+#[derive(Debug, Clone, Copy)]
+pub struct AllocCtx {
+    /// Congestion signal in [0, 1] (overload severity; 0 when unknown).
+    pub congestion: f64,
+    /// Client in-flight counts per class.
+    pub inflight_by_class: [usize; 2],
+    /// Estimated cost (p50 tokens) of each class's *ordered* head, None if
+    /// the class queue is empty.
+    pub head_cost: [Option<f64>; 2],
+    /// Arrival time of each class's ordered head (for class-blind FIFO).
+    pub head_arrival: [Option<f64>; 2],
+}
+
+impl AllocCtx {
+    pub fn head(&self, class: Class) -> Option<f64> {
+        self.head_cost[class.index()]
+    }
+
+    pub fn any_backlog(&self) -> bool {
+        self.head_cost.iter().any(Option::is_some)
+    }
+}
+
+/// Inter-class share policy.
+pub trait Allocator {
+    /// Which class gets the next send opportunity? `None` = no eligible
+    /// class (all queues empty, or quota exhausted for backlogged classes).
+    fn next_class(&mut self, ctx: &AllocCtx) -> Option<Class>;
+
+    /// Account a completed send of `cost` estimated tokens.
+    fn on_send(&mut self, class: Class, cost: f64);
+
+    fn name(&self) -> &'static str;
+
+    /// Quota-style allocators constrain per-class concurrency; DRR-style
+    /// ones rely on the global in-flight cap only.
+    fn class_quota(&self, _class: Class) -> Option<usize> {
+        None
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn ctx(head_int: Option<f64>, head_heavy: Option<f64>) -> AllocCtx {
+    AllocCtx {
+        congestion: 0.0,
+        inflight_by_class: [0, 0],
+        head_cost: [head_int, head_heavy],
+        head_arrival: [head_int.map(|_| 0.0), head_heavy.map(|_| 0.0)],
+    }
+}

@@ -1,0 +1,75 @@
+//! Paced global FIFO — the "Direct (FIFO)" baseline of Table 4 (§4.6).
+//!
+//! Unlike `DirectNaive` (which floods the provider), paced FIFO respects the
+//! client's in-flight budget but ignores classes entirely: the next send
+//! opportunity always goes to the oldest queued request, whichever class it
+//! sits in. Size-blind and class-blind — the pre-semi-clairvoyant default.
+
+use super::{AllocCtx, Allocator};
+use crate::core::Class;
+
+/// Chooses the class whose head arrived first. Requires `head_arrival` to
+/// be populated in the context (the scheduler fills it for all allocators).
+pub struct PacedFifo;
+
+impl PacedFifo {
+    pub fn new() -> Self {
+        PacedFifo
+    }
+}
+
+impl Default for PacedFifo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Allocator for PacedFifo {
+    fn next_class(&mut self, ctx: &AllocCtx) -> Option<Class> {
+        match (ctx.head_arrival[0], ctx.head_arrival[1]) {
+            (Some(a), Some(b)) => {
+                if a <= b {
+                    Some(Class::Interactive)
+                } else {
+                    Some(Class::Heavy)
+                }
+            }
+            (Some(_), None) => Some(Class::Interactive),
+            (None, Some(_)) => Some(Class::Heavy),
+            (None, None) => None,
+        }
+    }
+
+    fn on_send(&mut self, _class: Class, _cost: f64) {}
+
+    fn name(&self) -> &'static str {
+        "paced_fifo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ctx;
+    use super::*;
+
+    #[test]
+    fn picks_older_head_across_classes() {
+        let mut pf = PacedFifo::new();
+        let mut c = ctx(Some(10.0), Some(1000.0));
+        c.head_arrival = [Some(50.0), Some(20.0)];
+        assert_eq!(pf.next_class(&c), Some(Class::Heavy));
+        c.head_arrival = [Some(5.0), Some(20.0)];
+        assert_eq!(pf.next_class(&c), Some(Class::Interactive));
+    }
+
+    #[test]
+    fn single_class_served() {
+        let mut pf = PacedFifo::new();
+        let mut c = ctx(None, Some(1000.0));
+        c.head_arrival = [None, Some(20.0)];
+        assert_eq!(pf.next_class(&c), Some(Class::Heavy));
+        let mut c = ctx(None, None);
+        c.head_arrival = [None, None];
+        assert_eq!(pf.next_class(&c), None);
+    }
+}

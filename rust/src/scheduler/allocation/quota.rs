@@ -1,0 +1,83 @@
+//! Quota-tiered isolation (paper §4.5 baseline): fixed per-class in-flight
+//! slot quotas, *not* work-conserving — an idle class's slots stay idle.
+//! Protects short tails unconditionally but strands heavy work under
+//! heavy-dominated mixes (the completion collapse in Table 2).
+
+use super::{AllocCtx, Allocator};
+use crate::core::Class;
+
+pub struct QuotaTiered {
+    quota: [usize; 2],
+}
+
+impl QuotaTiered {
+    /// `quota_interactive` + `quota_heavy` should equal the client's global
+    /// in-flight budget (the scheduler also enforces the global cap).
+    pub fn new(quota_interactive: usize, quota_heavy: usize) -> Self {
+        assert!(quota_interactive > 0 && quota_heavy > 0);
+        QuotaTiered { quota: [quota_interactive, quota_heavy] }
+    }
+}
+
+impl Allocator for QuotaTiered {
+    fn next_class(&mut self, ctx: &AllocCtx) -> Option<Class> {
+        // Serve interactive first within its quota, then heavy within its
+        // own; never borrow.
+        for class in Class::ALL {
+            if ctx.head(class).is_some() && ctx.inflight_by_class[class.index()] < self.quota[class.index()]
+            {
+                return Some(class);
+            }
+        }
+        None
+    }
+
+    fn on_send(&mut self, _class: Class, _cost: f64) {}
+
+    fn name(&self) -> &'static str {
+        "quota_tiered"
+    }
+
+    fn class_quota(&self, class: Class) -> Option<usize> {
+        Some(self.quota[class.index()])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ctx;
+    use super::*;
+
+    #[test]
+    fn respects_quota() {
+        let mut q = QuotaTiered::new(2, 1);
+        let mut c = ctx(Some(10.0), Some(100.0));
+        c.inflight_by_class = [2, 0]; // interactive full
+        assert_eq!(q.next_class(&c), Some(Class::Heavy));
+        c.inflight_by_class = [2, 1]; // both full
+        assert_eq!(q.next_class(&c), None, "no borrowing even with backlog");
+    }
+
+    #[test]
+    fn not_work_conserving() {
+        let mut q = QuotaTiered::new(2, 1);
+        let mut c = ctx(None, Some(100.0));
+        c.inflight_by_class = [0, 1];
+        // Interactive slots free but its queue empty; heavy at quota: stall.
+        assert_eq!(q.next_class(&c), None);
+    }
+
+    #[test]
+    fn interactive_preferred() {
+        let mut q = QuotaTiered::new(2, 2);
+        let c = ctx(Some(10.0), Some(10.0));
+        assert_eq!(q.next_class(&c), Some(Class::Interactive));
+    }
+
+    #[test]
+    fn exposes_quota() {
+        let q = QuotaTiered::new(3, 1);
+        assert_eq!(q.class_quota(Class::Interactive), Some(3));
+        assert_eq!(q.class_quota(Class::Heavy), Some(1));
+    }
+}

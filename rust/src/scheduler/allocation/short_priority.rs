@@ -1,0 +1,58 @@
+//! Short-Priority allocation (paper §4.6): strict priority for the
+//! interactive class — heavy work is served only when no interactive
+//! request is pending. Optimizes interactive tails at the cost of heavy
+//! starvation (the +116% long-P90 "fairness tax" of Table 4).
+
+use super::{AllocCtx, Allocator};
+use crate::core::Class;
+
+pub struct ShortPriority;
+
+impl ShortPriority {
+    pub fn new() -> Self {
+        ShortPriority
+    }
+}
+
+impl Default for ShortPriority {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Allocator for ShortPriority {
+    fn next_class(&mut self, ctx: &AllocCtx) -> Option<Class> {
+        if ctx.head(Class::Interactive).is_some() {
+            Some(Class::Interactive)
+        } else if ctx.head(Class::Heavy).is_some() {
+            Some(Class::Heavy)
+        } else {
+            None
+        }
+    }
+
+    fn on_send(&mut self, _class: Class, _cost: f64) {}
+
+    fn name(&self) -> &'static str {
+        "short_priority"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ctx;
+    use super::*;
+
+    #[test]
+    fn interactive_always_wins() {
+        let mut sp = ShortPriority::new();
+        assert_eq!(sp.next_class(&ctx(Some(1e6), Some(1.0))), Some(Class::Interactive));
+    }
+
+    #[test]
+    fn heavy_only_when_interactive_empty() {
+        let mut sp = ShortPriority::new();
+        assert_eq!(sp.next_class(&ctx(None, Some(1.0))), Some(Class::Heavy));
+        assert_eq!(sp.next_class(&ctx(None, None)), None);
+    }
+}

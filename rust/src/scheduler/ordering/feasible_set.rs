@@ -1,0 +1,215 @@
+//! Slowdown-aware feasible-set ordering (paper §3.1 layer 2).
+//!
+//! Among requests eligible under fairness constraints, score candidates:
+//!
+//!   score = w_wait · (wait / cost) − w_size · (size / ref) + w_urg · urgency
+//!
+//! favoring older and smaller jobs while respecting deadline urgency. The
+//! *feasible set* restricts candidates to those whose estimated completion
+//! (client-side service estimate on the p90 prior) still meets the deadline;
+//! if no candidate is feasible the rule falls back to the full set and
+//! counts a feasibility violation (the paper reports zero across all runs —
+//! our integration tests assert the counter stays 0 in the main benchmark).
+
+use super::Ordering;
+use crate::scheduler::queues::SchedRequest;
+
+#[derive(Debug, Clone)]
+pub struct OrderingCfg {
+    pub w_wait: f64,
+    pub w_size: f64,
+    pub w_urgency: f64,
+    /// Normalizing token reference for the size term.
+    pub ref_tokens: f64,
+    /// Client-side belief of the provider's linear service model (for the
+    /// feasibility estimate; learned constants would also work — kept
+    /// explicit so the feasibility rule is auditable).
+    pub est_base_ms: f64,
+    pub est_per_token_ms: f64,
+    /// Safety multiplier on the estimate (provider congestion headroom).
+    pub est_slack_factor: f64,
+}
+
+impl Default for OrderingCfg {
+    fn default() -> Self {
+        OrderingCfg {
+            w_wait: 1.0,
+            w_size: 0.6,
+            w_urgency: 0.8,
+            ref_tokens: 512.0,
+            est_base_ms: 150.0,
+            est_per_token_ms: 0.9,
+            est_slack_factor: 1.5,
+        }
+    }
+}
+
+pub struct FeasibleSet {
+    cfg: OrderingCfg,
+    violations: u64,
+}
+
+impl FeasibleSet {
+    pub fn new(cfg: OrderingCfg) -> Self {
+        FeasibleSet { cfg, violations: 0 }
+    }
+
+    /// Times the full set had no feasible candidate (fallback taken).
+    pub fn violations(&self) -> u64 {
+        self.violations
+    }
+
+    /// Estimated service time for a prior (p90, conservative).
+    fn est_service_ms(&self, p90_tokens: f64) -> f64 {
+        (self.cfg.est_base_ms + self.cfg.est_per_token_ms * p90_tokens) * self.cfg.est_slack_factor
+    }
+
+    fn feasible(&self, r: &SchedRequest, now: f64) -> bool {
+        now + self.est_service_ms(r.priors.p90) <= r.deadline_ms
+    }
+
+    /// The paper's score; higher = release sooner.
+    pub fn score(&self, r: &SchedRequest, now: f64) -> f64 {
+        let c = &self.cfg;
+        let wait_s = r.wait_ms(now) / 1000.0;
+        let cost = r.priors.p50.max(1.0);
+        // wait/cost in seconds-per-kilotoken so magnitudes are O(1).
+        let wait_term = wait_s / (cost / 1000.0);
+        let size_term = r.priors.p50 / c.ref_tokens;
+        // Urgency ramps 0→1 as slack shrinks below the urgency window
+        // (one estimated service time).
+        let window = self.est_service_ms(r.priors.p90).max(1.0);
+        let slack = r.deadline_ms - now;
+        let urgency = (1.0 - slack / (2.0 * window)).clamp(0.0, 1.0);
+        c.w_wait * wait_term - c.w_size * size_term + c.w_urgency * urgency
+    }
+}
+
+trait WaitExt {
+    fn wait_ms(&self, now: f64) -> f64;
+}
+
+impl WaitExt for SchedRequest {
+    fn wait_ms(&self, now: f64) -> f64 {
+        (now - self.arrival_ms).max(0.0)
+    }
+}
+
+impl Ordering for FeasibleSet {
+    fn select(&mut self, queue: &[SchedRequest], now: f64) -> Option<usize> {
+        if queue.is_empty() {
+            return None;
+        }
+        let feasible: Vec<usize> =
+            (0..queue.len()).filter(|i| self.feasible(&queue[*i], now)).collect();
+        let candidates: Vec<usize> = if feasible.is_empty() {
+            self.violations += 1;
+            (0..queue.len()).collect()
+        } else {
+            feasible
+        };
+        candidates
+            .into_iter()
+            .map(|i| (i, self.score(&queue[i], now)))
+            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    fn name(&self) -> &'static str {
+        "feasible_set"
+    }
+
+    fn feasibility_violations(&self) -> u64 {
+        self.violations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_util::sreq;
+    use super::*;
+
+    fn fs() -> FeasibleSet {
+        FeasibleSet::new(OrderingCfg::default())
+    }
+
+    #[test]
+    fn favors_older_jobs() {
+        let mut f = fs();
+        // Same size/deadline-slack; the older one wins.
+        let q = vec![sreq(1, 1000.0, 500.0, 1e6), sreq(2, 0.0, 500.0, 1e6)];
+        assert_eq!(f.select(&q, 2000.0), Some(1));
+    }
+
+    #[test]
+    fn favors_smaller_jobs() {
+        let mut f = fs();
+        let q = vec![sreq(1, 0.0, 3000.0, 1e6), sreq(2, 0.0, 300.0, 1e6)];
+        assert_eq!(f.select(&q, 100.0), Some(1));
+    }
+
+    #[test]
+    fn urgency_overrides_size() {
+        let mut f = fs();
+        // Large job right at its deadline window vs small job with huge slack.
+        let big_deadline = 100.0 + (170.0 + 0.9 * 3000.0 * 1.5) * 1.4; // inside 2×window
+        let q = vec![sreq(1, 0.0, 2000.0, big_deadline), sreq(2, 0.0, 400.0, 1e7)];
+        let s_big = f.score(&q[0], 100.0);
+        let s_small = f.score(&q[1], 100.0);
+        assert!(s_big > s_small - 2.0, "urgency should lift the big job: {s_big} vs {s_small}");
+    }
+
+    #[test]
+    fn infeasible_candidates_excluded() {
+        let mut f = fs();
+        // Request 1's deadline already passed; request 2 comfortably feasible.
+        let q = vec![sreq(1, 0.0, 100.0, 50.0), sreq(2, 0.0, 4000.0, 1e7)];
+        assert_eq!(f.select(&q, 100.0), Some(1), "feasible big beats infeasible small");
+        assert_eq!(f.violations(), 0);
+    }
+
+    #[test]
+    fn all_infeasible_falls_back_and_counts() {
+        let mut f = fs();
+        let q = vec![sreq(1, 0.0, 100.0, 10.0), sreq(2, 0.0, 200.0, 20.0)];
+        let sel = f.select(&q, 100.0);
+        assert!(sel.is_some());
+        assert_eq!(f.violations(), 1);
+    }
+
+    #[test]
+    fn empty_queue() {
+        let mut f = fs();
+        assert_eq!(f.select(&[], 0.0), None);
+        assert_eq!(f.violations(), 0);
+    }
+
+    #[test]
+    fn score_monotone_in_wait() {
+        let f = fs();
+        let r = sreq(1, 0.0, 500.0, 1e6);
+        assert!(f.score(&r, 5000.0) > f.score(&r, 1000.0));
+    }
+
+    #[test]
+    fn prop_select_in_bounds() {
+        use crate::testing::prop;
+        prop::forall(100, |g| {
+            let mut f = fs();
+            let n = g.usize_in(1, 30);
+            let q: Vec<_> = (0..n)
+                .map(|i| {
+                    sreq(
+                        i,
+                        g.f64_in(0.0, 1000.0),
+                        g.f64_in(10.0, 4000.0),
+                        g.f64_in(0.0, 200_000.0),
+                    )
+                })
+                .collect();
+            let now = g.f64_in(0.0, 5000.0);
+            let sel = f.select(&q, now).unwrap();
+            assert!(sel < q.len());
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Ordering layer (paper §3.1 layer 2): intra-class sequencing. The paper's
+//! design is the slowdown-aware feasible-set rule for the heavy class;
+//! FIFO/SJF/EDF are baselines and ablations.
+
+pub mod feasible_set;
+
+pub use feasible_set::{FeasibleSet, OrderingCfg};
+
+use crate::scheduler::queues::SchedRequest;
+
+/// Intra-class sequencing policy: pick the index of the next request to
+/// release from `queue` (None iff empty).
+pub trait Ordering {
+    fn select(&mut self, queue: &[SchedRequest], now: f64) -> Option<usize>;
+    fn name(&self) -> &'static str;
+
+    /// Feasibility violations recorded so far (only `FeasibleSet` tracks
+    /// these; everything else reports 0).
+    fn feasibility_violations(&self) -> u64 {
+        0
+    }
+}
+
+/// First-in-first-out (queues are arrival-ordered, so index 0).
+pub struct Fifo;
+
+impl Ordering for Fifo {
+    fn select(&mut self, queue: &[SchedRequest], _now: f64) -> Option<usize> {
+        if queue.is_empty() {
+            None
+        } else {
+            Some(0)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+}
+
+/// Shortest job first by p50 prior (ties → older first).
+pub struct Sjf;
+
+impl Ordering for Sjf {
+    fn select(&mut self, queue: &[SchedRequest], _now: f64) -> Option<usize> {
+        queue
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.priors
+                    .p50
+                    .partial_cmp(&b.priors.p50)
+                    .unwrap()
+                    .then(a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap())
+            })
+            .map(|(i, _)| i)
+    }
+
+    fn name(&self) -> &'static str {
+        "sjf"
+    }
+}
+
+/// Earliest deadline first.
+pub struct Edf;
+
+impl Ordering for Edf {
+    fn select(&mut self, queue: &[SchedRequest], _now: f64) -> Option<usize> {
+        queue
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.deadline_ms.partial_cmp(&b.deadline_ms).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_util {
+    use crate::core::{Priors, TokenBucket};
+    use crate::predictor::Route;
+    use crate::scheduler::queues::SchedRequest;
+
+    pub fn sreq(id: usize, arrival: f64, p50: f64, deadline: f64) -> SchedRequest {
+        SchedRequest {
+            id,
+            arrival_ms: arrival,
+            deadline_ms: deadline,
+            priors: Priors::new(p50, p50 * 1.5),
+            route: Route::from_bucket(TokenBucket::from_tokens(p50)),
+            defer_attempts: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_util::sreq;
+    use super::*;
+
+    #[test]
+    fn fifo_picks_head() {
+        let q = vec![sreq(1, 0.0, 500.0, 1e5), sreq(2, 1.0, 10.0, 1e5)];
+        assert_eq!(Fifo.select(&q, 10.0), Some(0));
+        assert_eq!(Fifo.select(&[], 10.0), None);
+    }
+
+    #[test]
+    fn sjf_picks_smallest() {
+        let q = vec![sreq(1, 0.0, 500.0, 1e5), sreq(2, 1.0, 10.0, 1e5), sreq(3, 2.0, 100.0, 1e5)];
+        assert_eq!(Sjf.select(&q, 10.0), Some(1));
+    }
+
+    #[test]
+    fn sjf_ties_break_by_age() {
+        let q = vec![sreq(1, 5.0, 100.0, 1e5), sreq(2, 1.0, 100.0, 1e5)];
+        assert_eq!(Sjf.select(&q, 10.0), Some(1));
+    }
+
+    #[test]
+    fn edf_picks_earliest_deadline() {
+        let q = vec![sreq(1, 0.0, 10.0, 9000.0), sreq(2, 1.0, 10.0, 4000.0)];
+        assert_eq!(Edf.select(&q, 10.0), Some(1));
+    }
+}

@@ -1,0 +1,133 @@
+//! Cost-ladder bucket policies (paper §3.1 layer 3 and §4.7).
+//!
+//! A bucket weight ∈ {0, 1, 2} gates which actions a request is exposed to:
+//! weight 0 = always admitted; weight ≥ 1 = deferrable at t_defer and
+//! rejectable at t_reject_long; weight ≥ 2 = rejectable already at
+//! t_reject_xlong. Short requests are weight 0 under every *labeled*
+//! policy — "short requests are never rejected". A request with no bucket
+//! belief (no-information blind) carries weight 1: uniform admission
+//! severity that cannot protect shorts it cannot identify.
+
+use crate::core::TokenBucket;
+
+/// Admission decision for one candidate release.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OverloadDecision {
+    Admit,
+    Defer { delay_ms: f64 },
+    Reject,
+}
+
+/// The shedding shape (§4.7 comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BucketPolicy {
+    /// Default: medium=0, long=1, xlong=2 — sacrifice concentrates on the
+    /// most expensive work.
+    CostLadder,
+    /// One shared mid-tier severity for all non-short work (class-agnostic,
+    /// defer-heavy, rarely rejects).
+    UniformMild,
+    /// Harshest non-short tier applied uniformly (rejects early across all
+    /// non-short classes).
+    UniformHarsh,
+    /// Inverted long/xlong ordering — stress contrast only.
+    Reverse,
+}
+
+impl BucketPolicy {
+    pub fn weight(self, bucket: Option<TokenBucket>) -> u8 {
+        let Some(bucket) = bucket else {
+            return 1; // neutral lane: uniform admission severity
+        };
+        match self {
+            BucketPolicy::CostLadder => match bucket {
+                TokenBucket::Short | TokenBucket::Medium => 0,
+                TokenBucket::Long => 1,
+                TokenBucket::XLong => 2,
+            },
+            BucketPolicy::UniformMild => match bucket {
+                TokenBucket::Short => 0,
+                _ => 1,
+            },
+            BucketPolicy::UniformHarsh => match bucket {
+                TokenBucket::Short => 0,
+                _ => 2,
+            },
+            BucketPolicy::Reverse => match bucket {
+                TokenBucket::Short | TokenBucket::Medium => 0,
+                TokenBucket::Long => 2,
+                TokenBucket::XLong => 1,
+            },
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BucketPolicy::CostLadder => "cost_ladder",
+            BucketPolicy::UniformMild => "uniform_mild",
+            BucketPolicy::UniformHarsh => "uniform_harsh",
+            BucketPolicy::Reverse => "reverse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BucketPolicy> {
+        match s {
+            "cost_ladder" | "ladder" => Some(BucketPolicy::CostLadder),
+            "uniform_mild" => Some(BucketPolicy::UniformMild),
+            "uniform_harsh" => Some(BucketPolicy::UniformHarsh),
+            "reverse" => Some(BucketPolicy::Reverse),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [BucketPolicy; 4] = [
+        BucketPolicy::CostLadder,
+        BucketPolicy::UniformMild,
+        BucketPolicy::UniformHarsh,
+        BucketPolicy::Reverse,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_weights() {
+        let p = BucketPolicy::CostLadder;
+        assert_eq!(p.weight(Some(TokenBucket::Short)), 0);
+        assert_eq!(p.weight(Some(TokenBucket::Medium)), 0);
+        assert_eq!(p.weight(Some(TokenBucket::Long)), 1);
+        assert_eq!(p.weight(Some(TokenBucket::XLong)), 2);
+    }
+
+    #[test]
+    fn uniform_variants() {
+        assert_eq!(BucketPolicy::UniformMild.weight(Some(TokenBucket::XLong)), 1);
+        assert_eq!(BucketPolicy::UniformMild.weight(Some(TokenBucket::Medium)), 1);
+        assert_eq!(BucketPolicy::UniformHarsh.weight(Some(TokenBucket::Medium)), 2);
+        assert_eq!(BucketPolicy::UniformHarsh.weight(Some(TokenBucket::Short)), 0);
+    }
+
+    #[test]
+    fn reverse_inverts() {
+        assert_eq!(BucketPolicy::Reverse.weight(Some(TokenBucket::Long)), 2);
+        assert_eq!(BucketPolicy::Reverse.weight(Some(TokenBucket::XLong)), 1);
+    }
+
+    #[test]
+    fn neutral_lane_weight_one() {
+        for p in BucketPolicy::ALL {
+            assert_eq!(p.weight(None), 1, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in BucketPolicy::ALL {
+            assert_eq!(BucketPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(BucketPolicy::parse("ladder"), Some(BucketPolicy::CostLadder));
+        assert_eq!(BucketPolicy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,291 @@
+//! Overload control layer (paper §3.1 layer 3): explicit admit/defer/reject
+//! at the client admission boundary, replacing implicit timeout failures
+//! with objective-aligned shedding.
+
+pub mod ladder;
+pub mod severity;
+
+pub use ladder::{BucketPolicy, OverloadDecision};
+pub use severity::SeveritySignals;
+
+use crate::core::TokenBucket;
+use crate::scheduler::queues::SchedRequest;
+
+/// Overload controller configuration. Threshold defaults are the paper's:
+/// defer at 0.45, reject-xlong at 0.65, reject-long at 0.80; cost-ladder
+/// bucket weights medium=0, long=1, xlong=2; shorts never rejected.
+#[derive(Debug, Clone)]
+pub struct OverloadCfg {
+    pub enabled: bool,
+    pub w_load: f64,
+    pub w_queue: f64,
+    pub w_tail: f64,
+    pub t_defer: f64,
+    pub t_reject_xlong: f64,
+    pub t_reject_long: f64,
+    pub bucket_policy: BucketPolicy,
+    /// Base deferral backoff; doubles per attempt up to `defer_cap_ms`.
+    pub defer_base_ms: f64,
+    pub defer_cap_ms: f64,
+    /// Queue-pressure normalization (estimated queued tokens at pressure 1).
+    pub queue_budget_tokens: f64,
+    /// tail_latency_ratio ≥ this counts as full tail pressure.
+    pub tail_ratio_cap: f64,
+}
+
+impl Default for OverloadCfg {
+    fn default() -> Self {
+        OverloadCfg {
+            enabled: true,
+            w_load: 0.4,
+            w_queue: 0.3,
+            w_tail: 0.3,
+            t_defer: 0.45,
+            t_reject_xlong: 0.65,
+            t_reject_long: 0.80,
+            bucket_policy: BucketPolicy::CostLadder,
+            defer_base_ms: 400.0,
+            defer_cap_ms: 6_400.0,
+            queue_budget_tokens: 6_000.0,
+            tail_ratio_cap: 1.5,
+        }
+    }
+}
+
+impl OverloadCfg {
+    pub fn disabled() -> Self {
+        OverloadCfg { enabled: false, ..Default::default() }
+    }
+
+    /// Scale the three thresholds and backoff (sensitivity sweep §4.9).
+    pub fn perturbed(&self, factor: f64) -> Self {
+        OverloadCfg {
+            t_defer: self.t_defer * factor,
+            t_reject_xlong: self.t_reject_xlong * factor,
+            t_reject_long: self.t_reject_long * factor,
+            defer_base_ms: self.defer_base_ms * factor,
+            ..self.clone()
+        }
+    }
+}
+
+/// Stateful controller: computes severity from observable signals and maps
+/// (severity, bucket belief) through the bucket policy.
+pub struct OverloadController {
+    cfg: OverloadCfg,
+    /// Action counters by *true-at-decision* belief bucket index (4 = no
+    /// belief / neutral lane).
+    pub defers_by_bucket: [u64; 5],
+    pub rejects_by_bucket: [u64; 5],
+    last_severity: f64,
+}
+
+impl OverloadController {
+    pub fn new(cfg: OverloadCfg) -> Self {
+        OverloadController {
+            cfg,
+            defers_by_bucket: [0; 5],
+            rejects_by_bucket: [0; 5],
+            last_severity: 0.0,
+        }
+    }
+
+    pub fn cfg(&self) -> &OverloadCfg {
+        &self.cfg
+    }
+
+    /// Severity in [0, 1]: w_load·provider_load + w_queue·queue_pressure +
+    /// w_tail·tail_latency_ratio (each input normalized to [0, 1]).
+    pub fn severity(&mut self, s: &SeveritySignals) -> f64 {
+        let c = &self.cfg;
+        let load = s.provider_load.clamp(0.0, 1.0);
+        let queue = (s.queued_tokens / c.queue_budget_tokens).clamp(0.0, 1.0);
+        let tail = (s.tail_latency_ratio / c.tail_ratio_cap).clamp(0.0, 1.0);
+        let sev = (c.w_load * load + c.w_queue * queue + c.w_tail * tail)
+            / (c.w_load + c.w_queue + c.w_tail);
+        self.last_severity = sev;
+        sev
+    }
+
+    pub fn last_severity(&self) -> f64 {
+        self.last_severity
+    }
+
+    /// Decide for a candidate at the given severity.
+    pub fn decide(&mut self, req: &SchedRequest, severity: f64) -> OverloadDecision {
+        if !self.cfg.enabled {
+            return OverloadDecision::Admit;
+        }
+        let weight = self.cfg.bucket_policy.weight(req.route.bucket_belief);
+        let decision = if weight >= 2 && severity >= self.cfg.t_reject_xlong {
+            OverloadDecision::Reject
+        } else if weight >= 1 && severity >= self.cfg.t_reject_long {
+            OverloadDecision::Reject
+        } else if weight >= 1 && severity >= self.cfg.t_defer {
+            let backoff = (self.cfg.defer_base_ms * 2f64.powi(req.defer_attempts as i32))
+                .min(self.cfg.defer_cap_ms);
+            OverloadDecision::Defer { delay_ms: backoff }
+        } else {
+            OverloadDecision::Admit
+        };
+        let bidx = req.route.bucket_belief.map(TokenBucket::index).unwrap_or(4);
+        match decision {
+            OverloadDecision::Defer { .. } => self.defers_by_bucket[bidx] += 1,
+            OverloadDecision::Reject => self.rejects_by_bucket[bidx] += 1,
+            OverloadDecision::Admit => {}
+        }
+        decision
+    }
+
+    pub fn total_defers(&self) -> u64 {
+        self.defers_by_bucket.iter().sum()
+    }
+
+    pub fn total_rejects(&self) -> u64 {
+        self.rejects_by_bucket.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Priors;
+    use crate::predictor::Route;
+
+    fn sreq(bucket: Option<TokenBucket>, attempts: u32) -> SchedRequest {
+        SchedRequest {
+            id: 0,
+            arrival_ms: 0.0,
+            deadline_ms: 1e6,
+            priors: Priors::new(100.0, 200.0),
+            route: match bucket {
+                Some(b) => Route::from_bucket(b),
+                None => Route::neutral(),
+            },
+            defer_attempts: attempts,
+        }
+    }
+
+    fn signals(load: f64, queued: f64, tail: f64) -> SeveritySignals {
+        SeveritySignals { provider_load: load, queued_tokens: queued, tail_latency_ratio: tail }
+    }
+
+    #[test]
+    fn severity_normalized() {
+        let mut c = OverloadController::new(OverloadCfg::default());
+        assert_eq!(c.severity(&signals(0.0, 0.0, 0.0)), 0.0);
+        let max = c.severity(&signals(1.0, 1e9, 1e9));
+        assert!((max - 1.0).abs() < 1e-9);
+        let mid = c.severity(&signals(0.5, 3_000.0, 0.75));
+        assert!((mid - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calm_admits_everything() {
+        let mut c = OverloadController::new(OverloadCfg::default());
+        for b in TokenBucket::ALL {
+            assert_eq!(c.decide(&sreq(Some(b), 0), 0.2), OverloadDecision::Admit);
+        }
+        assert_eq!(c.total_defers() + c.total_rejects(), 0);
+    }
+
+    #[test]
+    fn ladder_thresholds() {
+        let mut c = OverloadController::new(OverloadCfg::default());
+        // severity 0.5: long/xlong deferred, short/medium admitted.
+        assert_eq!(c.decide(&sreq(Some(TokenBucket::Short), 0), 0.5), OverloadDecision::Admit);
+        assert_eq!(c.decide(&sreq(Some(TokenBucket::Medium), 0), 0.5), OverloadDecision::Admit);
+        assert!(matches!(
+            c.decide(&sreq(Some(TokenBucket::Long), 0), 0.5),
+            OverloadDecision::Defer { .. }
+        ));
+        // severity 0.7: xlong rejected, long still deferred.
+        assert_eq!(c.decide(&sreq(Some(TokenBucket::XLong), 0), 0.7), OverloadDecision::Reject);
+        assert!(matches!(
+            c.decide(&sreq(Some(TokenBucket::Long), 0), 0.7),
+            OverloadDecision::Defer { .. }
+        ));
+        // severity 0.85: long rejected too; short/medium never.
+        assert_eq!(c.decide(&sreq(Some(TokenBucket::Long), 0), 0.85), OverloadDecision::Reject);
+        assert_eq!(c.decide(&sreq(Some(TokenBucket::Short), 0), 0.85), OverloadDecision::Admit);
+        assert_eq!(c.decide(&sreq(Some(TokenBucket::Medium), 0), 0.85), OverloadDecision::Admit);
+    }
+
+    #[test]
+    fn shorts_never_rejected_under_any_labeled_policy() {
+        for policy in [
+            BucketPolicy::CostLadder,
+            BucketPolicy::UniformMild,
+            BucketPolicy::UniformHarsh,
+            BucketPolicy::Reverse,
+        ] {
+            let mut c =
+                OverloadController::new(OverloadCfg { bucket_policy: policy, ..Default::default() });
+            for sev in [0.5, 0.7, 0.9, 1.0] {
+                assert_eq!(
+                    c.decide(&sreq(Some(TokenBucket::Short), 0), sev),
+                    OverloadDecision::Admit,
+                    "{policy:?} sev={sev}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let mut c = OverloadController::new(OverloadCfg::default());
+        let d0 = c.decide(&sreq(Some(TokenBucket::Long), 0), 0.5);
+        let d3 = c.decide(&sreq(Some(TokenBucket::Long), 3), 0.5);
+        let d9 = c.decide(&sreq(Some(TokenBucket::Long), 9), 0.5);
+        match (d0, d3, d9) {
+            (
+                OverloadDecision::Defer { delay_ms: a },
+                OverloadDecision::Defer { delay_ms: b },
+                OverloadDecision::Defer { delay_ms: z },
+            ) => {
+                assert_eq!(a, 400.0);
+                assert_eq!(b, 3200.0);
+                assert_eq!(z, 6400.0, "capped");
+            }
+            other => panic!("expected defers, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disabled_admits_always() {
+        let mut c = OverloadController::new(OverloadCfg::disabled());
+        assert_eq!(c.decide(&sreq(Some(TokenBucket::XLong), 0), 1.0), OverloadDecision::Admit);
+    }
+
+    #[test]
+    fn neutral_lane_uniform_admission() {
+        // No bucket belief (no-info blind): weight 1 for everything — even
+        // (unknowably) short requests get deferred under stress.
+        let mut c = OverloadController::new(OverloadCfg::default());
+        assert!(matches!(c.decide(&sreq(None, 0), 0.5), OverloadDecision::Defer { .. }));
+        assert_eq!(c.decide(&sreq(None, 0), 0.85), OverloadDecision::Reject);
+        assert_eq!(c.defers_by_bucket[4], 1);
+        assert_eq!(c.rejects_by_bucket[4], 1);
+    }
+
+    #[test]
+    fn action_counters_track_buckets() {
+        let mut c = OverloadController::new(OverloadCfg::default());
+        c.decide(&sreq(Some(TokenBucket::XLong), 0), 0.7);
+        c.decide(&sreq(Some(TokenBucket::Long), 0), 0.5);
+        c.decide(&sreq(Some(TokenBucket::Long), 0), 0.5);
+        assert_eq!(c.rejects_by_bucket[TokenBucket::XLong.index()], 1);
+        assert_eq!(c.defers_by_bucket[TokenBucket::Long.index()], 2);
+        assert_eq!(c.total_rejects(), 1);
+        assert_eq!(c.total_defers(), 2);
+    }
+
+    #[test]
+    fn perturbed_scales_thresholds() {
+        let base = OverloadCfg::default();
+        let hi = base.perturbed(1.2);
+        assert!((hi.t_defer - 0.54).abs() < 1e-9);
+        assert!((hi.defer_base_ms - 480.0).abs() < 1e-9);
+        assert_eq!(hi.w_load, base.w_load);
+    }
+}

@@ -1,0 +1,61 @@
+//! Severity inputs — the three observable signals (paper §3.1 layer 3):
+//! provider load (in-flight vs the client's budget), queue pressure
+//! (estimated queued tokens), and tail behavior (latency/deadline ratio of
+//! recent completions).
+
+use crate::scheduler::queues::ClassQueues;
+use crate::scheduler::state::ApiState;
+
+/// Raw (pre-normalization) severity inputs.
+#[derive(Debug, Clone, Copy)]
+pub struct SeveritySignals {
+    /// In-flight / client budget, already in [0, 1].
+    pub provider_load: f64,
+    /// Sum of queued p50 token estimates.
+    pub queued_tokens: f64,
+    /// EWMA of completion latency / deadline budget (≈1 = at deadline).
+    pub tail_latency_ratio: f64,
+}
+
+impl SeveritySignals {
+    /// Gather signals from the client-observable state.
+    pub fn gather(state: &ApiState, queues: &ClassQueues, max_inflight: usize) -> SeveritySignals {
+        SeveritySignals {
+            provider_load: state.inflight() as f64 / max_inflight.max(1) as f64,
+            queued_tokens: queues.queued_tokens(),
+            tail_latency_ratio: state.tail_ratio.get_or(0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Class, Priors, TokenBucket};
+    use crate::predictor::Route;
+    use crate::scheduler::queues::SchedRequest;
+
+    #[test]
+    fn gather_reads_state() {
+        let mut state = ApiState::new();
+        let mut queues = ClassQueues::new();
+        state.on_send(1, Class::Interactive, 100.0, 0.0);
+        state.on_send(2, Class::Heavy, 900.0, 0.0);
+        queues.push(SchedRequest {
+            id: 3,
+            arrival_ms: 0.0,
+            deadline_ms: 100.0,
+            priors: Priors::new(700.0, 1400.0),
+            route: Route::from_bucket(TokenBucket::Long),
+            defer_attempts: 0,
+        });
+        let s = SeveritySignals::gather(&state, &queues, 8);
+        assert_eq!(s.provider_load, 2.0 / 8.0);
+        assert_eq!(s.queued_tokens, 700.0);
+        assert_eq!(s.tail_latency_ratio, 0.0);
+
+        state.on_completion(1, 2500.0, 2500.0);
+        let s = SeveritySignals::gather(&state, &queues, 8);
+        assert!((s.tail_latency_ratio - 1.0).abs() < 1e-9);
+    }
+}

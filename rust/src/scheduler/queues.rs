@@ -1,0 +1,158 @@
+//! Per-class client-side queues holding the scheduler's view of pending
+//! requests.
+
+use crate::core::{Class, Priors, ReqId};
+use crate::predictor::Route;
+
+/// The scheduler's view of one pending request (no hidden fields).
+#[derive(Debug, Clone)]
+pub struct SchedRequest {
+    pub id: ReqId,
+    pub arrival_ms: f64,
+    pub deadline_ms: f64,
+    pub priors: Priors,
+    pub route: Route,
+    /// Number of times overload control has deferred this request.
+    pub defer_attempts: u32,
+}
+
+impl SchedRequest {
+    pub fn class(&self) -> Class {
+        self.route.class
+    }
+}
+
+/// Two FIFO-ordered vectors (ordering policies select an index; removal is
+/// O(n) with n = queue depth, which stays small — see benches).
+pub struct ClassQueues {
+    queues: [Vec<SchedRequest>; 2],
+    /// Running sum of queued p50 estimates — the queue-pressure signal is
+    /// read once per pump iteration, so it is maintained incrementally
+    /// instead of rescanned (EXPERIMENTS.md §Perf opt 2).
+    queued_tokens: f64,
+}
+
+impl ClassQueues {
+    pub fn new() -> Self {
+        ClassQueues { queues: [Vec::new(), Vec::new()], queued_tokens: 0.0 }
+    }
+
+    pub fn push(&mut self, req: SchedRequest) {
+        self.queued_tokens += req.priors.p50;
+        self.queues[req.class().index()].push(req);
+    }
+
+    /// Re-insert a deferred request keeping arrival order (stable position
+    /// by arrival time) so deferral does not silently reset its seniority.
+    pub fn push_ordered(&mut self, req: SchedRequest) {
+        self.queued_tokens += req.priors.p50;
+        let q = &mut self.queues[req.class().index()];
+        let pos = q.partition_point(|r| r.arrival_ms <= req.arrival_ms);
+        q.insert(pos, req);
+    }
+
+    pub fn queue(&self, class: Class) -> &[SchedRequest] {
+        &self.queues[class.index()]
+    }
+
+    pub fn remove_at(&mut self, class: Class, idx: usize) -> SchedRequest {
+        let req = self.queues[class.index()].remove(idx);
+        self.queued_tokens -= req.priors.p50;
+        req
+    }
+
+    /// Remove by request id (timeout cancel). Returns the request if found.
+    pub fn remove_id(&mut self, id: ReqId) -> Option<SchedRequest> {
+        for q in &mut self.queues {
+            if let Some(pos) = q.iter().position(|r| r.id == id) {
+                let req = q.remove(pos);
+                self.queued_tokens -= req.priors.p50;
+                return Some(req);
+            }
+        }
+        None
+    }
+
+    pub fn len(&self, class: Class) -> usize {
+        self.queues[class.index()].len()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.queues[0].len() + self.queues[1].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_len() == 0
+    }
+
+    /// Sum of queued p50 token estimates (queue-pressure signal).
+    /// O(1): maintained incrementally by push/remove.
+    pub fn queued_tokens(&self) -> f64 {
+        self.queued_tokens
+    }
+}
+
+impl Default for ClassQueues {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::TokenBucket;
+
+    fn sreq(id: ReqId, arrival: f64, bucket: TokenBucket, p50: f64) -> SchedRequest {
+        SchedRequest {
+            id,
+            arrival_ms: arrival,
+            deadline_ms: arrival + 1000.0,
+            priors: Priors::new(p50, p50 * 1.5),
+            route: Route::from_bucket(bucket),
+            defer_attempts: 0,
+        }
+    }
+
+    #[test]
+    fn routes_to_class_queues() {
+        let mut q = ClassQueues::new();
+        q.push(sreq(1, 0.0, TokenBucket::Short, 30.0));
+        q.push(sreq(2, 1.0, TokenBucket::XLong, 2000.0));
+        q.push(sreq(3, 2.0, TokenBucket::Medium, 100.0));
+        assert_eq!(q.len(Class::Interactive), 1);
+        assert_eq!(q.len(Class::Heavy), 2);
+        assert_eq!(q.total_len(), 3);
+        assert_eq!(q.queued_tokens(), 2130.0);
+    }
+
+    #[test]
+    fn remove_by_id() {
+        let mut q = ClassQueues::new();
+        q.push(sreq(1, 0.0, TokenBucket::Short, 30.0));
+        q.push(sreq(2, 1.0, TokenBucket::Long, 500.0));
+        assert_eq!(q.remove_id(2).unwrap().id, 2);
+        assert_eq!(q.remove_id(2).map(|r| r.id), None);
+        assert_eq!(q.total_len(), 1);
+    }
+
+    #[test]
+    fn push_ordered_preserves_arrival_order() {
+        let mut q = ClassQueues::new();
+        q.push(sreq(1, 10.0, TokenBucket::Long, 500.0));
+        q.push(sreq(2, 30.0, TokenBucket::Long, 500.0));
+        // Deferred request that arrived at t=20 goes back between them.
+        q.push_ordered(sreq(3, 20.0, TokenBucket::Long, 500.0));
+        let ids: Vec<ReqId> = q.queue(Class::Heavy).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn remove_at_returns_request() {
+        let mut q = ClassQueues::new();
+        q.push(sreq(5, 0.0, TokenBucket::XLong, 1500.0));
+        let r = q.remove_at(Class::Heavy, 0);
+        assert_eq!(r.id, 5);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,152 @@
+//! API-visible state: everything the client can legitimately observe at the
+//! black-box boundary (paper §2: "feedback is delayed and aggregate").
+//!
+//! The scheduler never sees provider internals — only its own submissions,
+//! completions with client-measured latency, and quantities derived from
+//! them. This module is that boundary, as a type.
+
+use crate::core::{Class, ReqId};
+use crate::util::stats::{Ewma, RecentWindow};
+use std::collections::HashMap;
+
+/// Observable client-side state.
+pub struct ApiState {
+    /// Requests submitted and not yet completed/abandoned.
+    inflight: HashMap<ReqId, InflightEntry>,
+    inflight_by_class: [usize; 2],
+    /// In-flight estimated token work (p50 sums), for load signals.
+    inflight_tokens: f64,
+    /// Recent completion latencies (ms), windowed.
+    pub recent_latency: RecentWindow,
+    /// EWMA of latency / deadline-budget ratio among completions — the
+    /// tail_latency_ratio input to overload severity.
+    pub tail_ratio: Ewma,
+    completions: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct InflightEntry {
+    class: Class,
+    est_tokens: f64,
+    sent_ms: f64,
+}
+
+impl ApiState {
+    pub fn new() -> Self {
+        ApiState {
+            inflight: HashMap::new(),
+            inflight_by_class: [0, 0],
+            inflight_tokens: 0.0,
+            recent_latency: RecentWindow::new(64),
+            tail_ratio: Ewma::new(0.15),
+            completions: 0,
+        }
+    }
+
+    pub fn on_send(&mut self, id: ReqId, class: Class, est_tokens: f64, now: f64) {
+        let prev = self
+            .inflight
+            .insert(id, InflightEntry { class, est_tokens, sent_ms: now });
+        debug_assert!(prev.is_none(), "double send for {id}");
+        self.inflight_by_class[class.index()] += 1;
+        self.inflight_tokens += est_tokens;
+    }
+
+    /// Completion observed; returns the class it freed (None if unknown —
+    /// e.g. completion after abandon).
+    pub fn on_completion(&mut self, id: ReqId, latency_ms: f64, deadline_budget_ms: f64) -> Option<Class> {
+        let entry = self.inflight.remove(&id)?;
+        self.inflight_by_class[entry.class.index()] -= 1;
+        self.inflight_tokens -= entry.est_tokens;
+        self.recent_latency.push(latency_ms);
+        if deadline_budget_ms > 0.0 {
+            self.tail_ratio.push(latency_ms / deadline_budget_ms);
+        }
+        self.completions += 1;
+        Some(entry.class)
+    }
+
+    /// Client gave up on an in-flight request (timeout): frees the client's
+    /// slot without a latency sample.
+    pub fn on_abandon(&mut self, id: ReqId) -> Option<Class> {
+        let entry = self.inflight.remove(&id)?;
+        self.inflight_by_class[entry.class.index()] -= 1;
+        self.inflight_tokens -= entry.est_tokens;
+        Some(entry.class)
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    pub fn inflight_class(&self, class: Class) -> usize {
+        self.inflight_by_class[class.index()]
+    }
+
+    pub fn inflight_tokens(&self) -> f64 {
+        self.inflight_tokens
+    }
+
+    pub fn is_inflight(&self, id: ReqId) -> bool {
+        self.inflight.contains_key(&id)
+    }
+
+    pub fn sent_ms(&self, id: ReqId) -> Option<f64> {
+        self.inflight.get(&id).map(|e| e.sent_ms)
+    }
+
+    pub fn completions(&self) -> u64 {
+        self.completions
+    }
+}
+
+impl Default for ApiState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_complete_cycle() {
+        let mut s = ApiState::new();
+        s.on_send(1, Class::Interactive, 50.0, 10.0);
+        s.on_send(2, Class::Heavy, 800.0, 11.0);
+        assert_eq!(s.inflight(), 2);
+        assert_eq!(s.inflight_class(Class::Heavy), 1);
+        assert_eq!(s.inflight_tokens(), 850.0);
+        assert_eq!(s.sent_ms(1), Some(10.0));
+
+        let freed = s.on_completion(1, 300.0, 2500.0);
+        assert_eq!(freed, Some(Class::Interactive));
+        assert_eq!(s.inflight(), 1);
+        assert_eq!(s.inflight_tokens(), 800.0);
+        assert_eq!(s.completions(), 1);
+        assert_eq!(s.recent_latency.len(), 1);
+        assert!((s.tail_ratio.get().unwrap() - 0.12).abs() < 1e-9);
+    }
+
+    #[test]
+    fn abandon_frees_without_latency_sample() {
+        let mut s = ApiState::new();
+        s.on_send(1, Class::Heavy, 2000.0, 0.0);
+        assert_eq!(s.on_abandon(1), Some(Class::Heavy));
+        assert_eq!(s.inflight(), 0);
+        assert_eq!(s.recent_latency.len(), 0);
+        assert_eq!(s.on_abandon(1), None, "idempotent");
+        assert_eq!(s.on_completion(1, 10.0, 10.0), None, "late completion ignored");
+    }
+
+    #[test]
+    fn tail_ratio_tracks_pressure() {
+        let mut s = ApiState::new();
+        for i in 0..20 {
+            s.on_send(i, Class::Interactive, 10.0, 0.0);
+            s.on_completion(i, 5000.0, 2500.0); // 2× over budget
+        }
+        assert!(s.tail_ratio.get().unwrap() > 1.5);
+    }
+}

@@ -1,0 +1,326 @@
+//! Real-time serving driver: the identical scheduler policy code running
+//! against wall-clock time with real threads and channels (the offline
+//! image has no tokio; std threads + mpsc fill the role).
+//!
+//! Architecture:
+//! * a **provider thread** owns the mock black-box API: it receives
+//!   submissions over a channel, enforces the hidden concurrency limit +
+//!   FIFO, and emits completions back at the right wall-clock instants;
+//! * the **client thread** (caller) runs the scheduler loop: waits for the
+//!   earliest of {next arrival, next retry, next timeout, a completion},
+//!   feeds the scheduler, and submits its Send actions.
+//!
+//! Model time is scaled by `scale` (wall ms per model ms) so demos finish
+//! in seconds while preserving the physics ratios. If AOT artifacts are
+//! present, per-request priors come from the PJRT predictor at admission
+//! time — the full L3→runtime→L1/L2 path on the live request path.
+
+use std::collections::BinaryHeap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::core::{ReqId, RequestStatus};
+use crate::metrics::{compute, RequestOutcome};
+use crate::predictor::{InfoLevel, LadderSource, PriorSource};
+use crate::provider::ProviderCfg;
+use crate::runtime::{artifacts_available, NnPriorSource, Predictor};
+use crate::scheduler::{Action, ClientScheduler, SchedulerCfg, StrategyKind};
+use crate::util::rng::Rng;
+use crate::workload::{Mix, WorkloadSpec};
+
+/// Message into the provider thread.
+enum ToProvider {
+    Submit { id: ReqId, output_tokens: f64 },
+    Shutdown,
+}
+
+/// Provider thread: hidden concurrency + FIFO + load-dependent service, on
+/// wall-clock time. Completions are sent as (id, completion_wall_instant).
+fn provider_thread(
+    cfg: ProviderCfg,
+    scale: f64,
+    rx: mpsc::Receiver<ToProvider>,
+    tx: mpsc::Sender<ReqId>,
+    seed: u64,
+) {
+    struct Finish {
+        at: Instant,
+        id: ReqId,
+    }
+    impl PartialEq for Finish {
+        fn eq(&self, other: &Self) -> bool {
+            self.at == other.at
+        }
+    }
+    impl Eq for Finish {}
+    impl PartialOrd for Finish {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Finish {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            other.at.cmp(&self.at) // min-heap
+        }
+    }
+
+    let mut rng = Rng::new(seed).derive("provider");
+    let mut running: BinaryHeap<Finish> = BinaryHeap::new();
+    let mut waiting: std::collections::VecDeque<(ReqId, f64)> = Default::default();
+    let service =
+        |cfg: &ProviderCfg, rng: &mut Rng, tokens: f64, n_running: usize| -> Duration {
+            let mean = cfg.service_ms(tokens, n_running);
+            let ms = if cfg.jitter_sigma > 0.0 {
+                mean * rng.lognormal(0.0, cfg.jitter_sigma)
+            } else {
+                mean
+            };
+            Duration::from_secs_f64(ms * scale / 1000.0)
+        };
+    loop {
+        // Drain due completions.
+        let now = Instant::now();
+        while running.peek().map(|f| f.at <= now).unwrap_or(false) {
+            let f = running.pop().unwrap();
+            let _ = tx.send(f.id);
+            // Promote hidden queue.
+            if let Some((id, tokens)) = waiting.pop_front() {
+                let n = running.len() + 1;
+                let d = service(&cfg, &mut rng, tokens, n);
+                running.push(Finish { at: Instant::now() + d, id });
+            }
+        }
+        // Wait for the next submission or the next finish.
+        let timeout = running
+            .peek()
+            .map(|f| f.at.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(ToProvider::Submit { id, output_tokens }) => {
+                if running.len() < cfg.max_concurrency {
+                    let n = running.len() + 1;
+                    let d = service(&cfg, &mut rng, output_tokens, n);
+                    running.push(Finish { at: Instant::now() + d, id });
+                } else {
+                    waiting.push_back((id, output_tokens));
+                }
+            }
+            Ok(ToProvider::Shutdown) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+/// Run the real-time demo; prints live progress and a final metrics table.
+pub fn serve_demo(
+    strategy: StrategyKind,
+    rate_rps: f64,
+    n_requests: usize,
+    scale: f64,
+    artifacts_dir: &str,
+) -> Result<()> {
+    let seed = 0u64;
+    let spec = WorkloadSpec::new(Mix::Balanced, n_requests, rate_rps);
+    let requests = spec.generate(seed);
+
+    // Priors: PJRT predictor when artifacts exist, analytic ladder otherwise.
+    let mut nn_source: Option<NnPriorSource> = if !artifacts_dir.is_empty()
+        && artifacts_available(artifacts_dir)
+    {
+        println!("using PJRT predictor from {artifacts_dir}");
+        Some(NnPriorSource::new(Predictor::load(artifacts_dir)?))
+    } else {
+        println!("artifacts not found — using analytic coarse priors");
+        None
+    };
+    let mut analytic = LadderSource::new(InfoLevel::Coarse, Rng::new(seed).derive("priors"));
+
+    let (to_provider, provider_rx) = mpsc::channel::<ToProvider>();
+    let (completion_tx, completion_rx) = mpsc::channel::<ReqId>();
+    let provider_cfg = ProviderCfg::default();
+    let pcfg = provider_cfg.clone();
+    let handle =
+        std::thread::spawn(move || provider_thread(pcfg, scale, provider_rx, completion_tx, seed));
+
+    let mut scheduler = ClientScheduler::new(SchedulerCfg::for_strategy(strategy));
+    let epoch = Instant::now();
+    let to_model_ms = |i: Instant| i.duration_since(epoch).as_secs_f64() * 1000.0 / scale;
+    let to_wall = |model_ms: f64| epoch + Duration::from_secs_f64(model_ms * scale / 1000.0);
+
+    let mut status = vec![RequestStatus::Queued; n_requests];
+    let mut latency: Vec<Option<f64>> = vec![None; n_requests];
+    let mut defer_counts = vec![0u32; n_requests];
+    // Pending client-side timers: (wall instant, kind, id).
+    enum Timer {
+        Arrival,
+        Retry,
+        Timeout,
+    }
+    let mut timers: Vec<(Instant, Timer, ReqId)> = Vec::new();
+    for r in &requests {
+        timers.push((to_wall(r.arrival_ms), Timer::Arrival, r.id));
+        timers.push((to_wall(r.timeout_ms), Timer::Timeout, r.id));
+    }
+    let mut arrived = 0usize;
+    let mut done = 0usize;
+
+    let apply = |actions: Vec<Action>,
+                     timers: &mut Vec<(Instant, Timer, ReqId)>,
+                     status: &mut Vec<RequestStatus>,
+                     defer_counts: &mut Vec<u32>| {
+        for a in actions {
+            match a {
+                Action::Send { id } => {
+                    status[id] = RequestStatus::InFlight;
+                    let _ = to_provider.send(ToProvider::Submit {
+                        id,
+                        output_tokens: requests[id].true_output_tokens as f64,
+                    });
+                }
+                Action::Retry { id, at_ms } => {
+                    status[id] = RequestStatus::Deferred;
+                    defer_counts[id] += 1;
+                    timers.push((to_wall(at_ms), Timer::Retry, id));
+                }
+                Action::Reject { id } => {
+                    status[id] = RequestStatus::Rejected;
+                }
+            }
+        }
+    };
+
+    while done + timers.len() > 0 && !(timers.is_empty() && done >= arrived && arrived == n_requests)
+    {
+        // Find earliest timer.
+        timers.sort_by_key(|(at, _, _)| *at);
+        let next_at = timers.first().map(|(at, _, _)| *at);
+        let timeout = next_at
+            .map(|at| at.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(20));
+        match completion_rx.recv_timeout(timeout) {
+            Ok(id) => {
+                let now_ms = to_model_ms(Instant::now());
+                if status[id] == RequestStatus::InFlight {
+                    status[id] = RequestStatus::Completed;
+                    let lat = now_ms - requests[id].arrival_ms;
+                    latency[id] = Some(lat);
+                    done += 1;
+                    let budget = requests[id].deadline_ms - requests[id].arrival_ms;
+                    let actions = scheduler.on_completion(id, lat, budget, now_ms);
+                    apply(actions, &mut timers, &mut status, &mut defer_counts);
+                    let met = lat <= budget;
+                    println!(
+                        "[{:>8.0}ms] done  #{id:<4} {}  latency {:>7.0}ms  {}",
+                        now_ms,
+                        requests[id].true_bucket.name(),
+                        lat,
+                        if met { "SLO ✓" } else { "SLO ✗" }
+                    );
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let now = Instant::now();
+                // Fire every due timer.
+                let mut i = 0;
+                while i < timers.len() {
+                    if timers[i].0 <= now {
+                        let (_, kind, id) = timers.remove(i);
+                        let now_ms = to_model_ms(Instant::now());
+                        match kind {
+                            Timer::Arrival => {
+                                arrived += 1;
+                                let (p, route) = match nn_source.as_mut() {
+                                    Some(nn) => nn.priors(&requests[id]),
+                                    None => analytic.priors(&requests[id]),
+                                };
+                                println!(
+                                    "[{:>8.0}ms] admit #{id:<4} {}  prior p50={:.0} p90={:.0}",
+                                    now_ms,
+                                    requests[id].true_bucket.name(),
+                                    p.p50,
+                                    p.p90
+                                );
+                                let actions = scheduler.on_arrival(&requests[id], p, route, now_ms);
+                                apply(actions, &mut timers, &mut status, &mut defer_counts);
+                            }
+                            Timer::Retry => {
+                                if status[id] == RequestStatus::Deferred {
+                                    status[id] = RequestStatus::Queued;
+                                    let actions = scheduler.on_retry_due(id, now_ms);
+                                    apply(actions, &mut timers, &mut status, &mut defer_counts);
+                                }
+                            }
+                            Timer::Timeout => {
+                                if matches!(
+                                    status[id],
+                                    RequestStatus::Queued
+                                        | RequestStatus::Deferred
+                                        | RequestStatus::InFlight
+                                ) {
+                                    let actions = scheduler.cancel(id, now_ms);
+                                    status[id] = RequestStatus::TimedOut;
+                                    println!("[{:>8.0}ms] TIMEOUT #{id}", now_ms);
+                                    apply(actions, &mut timers, &mut status, &mut defer_counts);
+                                }
+                            }
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+                // Count terminal rejects toward done.
+                done = status
+                    .iter()
+                    .filter(|s| {
+                        matches!(
+                            s,
+                            RequestStatus::Completed
+                                | RequestStatus::Rejected
+                                | RequestStatus::TimedOut
+                        )
+                    })
+                    .count();
+                if done == n_requests && timers.iter().all(|(_, k, _)| !matches!(k, Timer::Arrival))
+                {
+                    break;
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    let _ = to_provider.send(ToProvider::Shutdown);
+    let _ = handle.join();
+
+    let outcomes: Vec<RequestOutcome> = requests
+        .iter()
+        .map(|r| RequestOutcome {
+            id: r.id,
+            bucket: r.true_bucket,
+            class: r.true_bucket.class(),
+            arrival_ms: r.arrival_ms,
+            deadline_ms: r.deadline_ms,
+            status: status[r.id],
+            latency_ms: latency[r.id],
+            defer_count: defer_counts[r.id],
+        })
+        .collect();
+    let m = compute(
+        &outcomes,
+        scheduler.controller().defers_by_bucket,
+        scheduler.controller().rejects_by_bucket,
+        scheduler.feasibility_violations(),
+    );
+    println!("\n== serve summary ({}) ==", strategy.name());
+    println!("offered {}  completed {}  rejected {}  timed-out {}", m.n_offered, m.n_completed, m.n_rejected, m.n_timed_out);
+    println!(
+        "completion {:.3}  satisfaction {:.3}  goodput {:.2} req/s  short P95 {:.0} ms  global P95 {:.0} ms",
+        m.completion_rate, m.satisfaction, m.goodput_rps, m.short_p95_ms, m.global_p95_ms
+    );
+    if let Some(nn) = &nn_source {
+        println!("PJRT predictor calls on the live path: {}", nn.calls());
+    }
+    Ok(())
+}

@@ -1,0 +1,280 @@
+//! Virtual-time run driver: wires workload → scheduler → mock provider on
+//! the discrete-event engine and produces per-request outcomes.
+//!
+//! The driver is the only component that sees both sides of the black-box
+//! boundary: it hands the scheduler nothing but arrival/completion events
+//! and hands the provider nothing but submissions. All experiment tables
+//! are produced by running this driver across seeds/policies/regimes.
+
+use crate::core::{ReqId, Request, RequestStatus};
+use crate::metrics::{compute, RequestOutcome, RunMetrics};
+use crate::predictor::PriorSource;
+use crate::provider::{MockProvider, ProviderCfg};
+use crate::scheduler::{Action, ClientScheduler, SchedulerCfg};
+use crate::sim::EventQueue;
+use crate::util::rng::Rng;
+
+/// DES event payloads.
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrival(ReqId),
+    ProviderDone(ReqId),
+    Retry(ReqId),
+    Timeout(ReqId),
+}
+
+/// Extra run diagnostics beyond `RunMetrics`.
+#[derive(Debug, Clone, Default)]
+pub struct RunDiagnostics {
+    pub events_processed: u64,
+    pub sends: u64,
+    pub peak_provider_queue: usize,
+    pub peak_inflight: usize,
+}
+
+/// Outcome bundle of one simulated run.
+pub struct RunOutput {
+    pub metrics: RunMetrics,
+    pub outcomes: Vec<RequestOutcome>,
+    pub diagnostics: RunDiagnostics,
+}
+
+/// Simulate one run to completion.
+///
+/// `prior_source` is consulted once per request, in arrival order, before
+/// the run starts — priors are a pure function of the request, so
+/// precomputing preserves semantics while letting the PJRT-backed source
+/// batch its kernel invocations.
+pub fn run(
+    requests: &[Request],
+    prior_source: &mut dyn PriorSource,
+    sched_cfg: SchedulerCfg,
+    provider_cfg: ProviderCfg,
+    seed: u64,
+) -> RunOutput {
+    let mut scheduler = ClientScheduler::new(sched_cfg);
+    let mut provider = MockProvider::new(provider_cfg, Rng::new(seed).derive("provider"));
+
+    let n = requests.len();
+    let priors: Vec<_> = requests.iter().map(|r| prior_source.priors(r)).collect();
+
+    let mut status = vec![RequestStatus::Queued; n];
+    let mut latency: Vec<Option<f64>> = vec![None; n];
+    let mut defer_counts = vec![0u32; n];
+    let mut sends = 0u64;
+    let mut peak_inflight = 0usize;
+
+    let mut q: EventQueue<Ev> = EventQueue::with_capacity(n * 4);
+    for r in requests {
+        q.push(r.arrival_ms, Ev::Arrival(r.id));
+        q.push(r.timeout_ms, Ev::Timeout(r.id));
+    }
+
+    while let Some((now, ev)) = q.pop() {
+        let mut actions: Vec<Action> = Vec::new();
+        match ev {
+            Ev::Arrival(id) => {
+                let (p, route) = priors[id];
+                actions = scheduler.on_arrival(&requests[id], p, route, now);
+            }
+            Ev::ProviderDone(id) => {
+                // Promote hidden-queue work first (provider-internal).
+                for started in provider.on_finish(now) {
+                    q.push(started.finish_ms, Ev::ProviderDone(started.id));
+                }
+                if status[id] == RequestStatus::InFlight {
+                    status[id] = RequestStatus::Completed;
+                    let lat = now - requests[id].arrival_ms;
+                    latency[id] = Some(lat);
+                    let budget = requests[id].deadline_ms - requests[id].arrival_ms;
+                    actions = scheduler.on_completion(id, lat, budget, now);
+                }
+                // TimedOut → client already abandoned; completion is unobserved.
+            }
+            Ev::Retry(id) => {
+                if status[id] == RequestStatus::Deferred {
+                    status[id] = RequestStatus::Queued;
+                    actions = scheduler.on_retry_due(id, now);
+                }
+            }
+            Ev::Timeout(id) => {
+                if matches!(status[id], RequestStatus::Queued | RequestStatus::Deferred | RequestStatus::InFlight)
+                {
+                    actions = scheduler.cancel(id, now);
+                    status[id] = RequestStatus::TimedOut;
+                }
+            }
+        }
+        // Apply scheduler actions; sending can cascade (a Send fills a slot;
+        // the provider may queue it internally).
+        for a in actions {
+            match a {
+                Action::Send { id } => {
+                    debug_assert_eq!(status[id], RequestStatus::Queued, "send of non-queued {id}");
+                    status[id] = RequestStatus::InFlight;
+                    sends += 1;
+                    peak_inflight = peak_inflight.max(scheduler.state().inflight());
+                    if let Some(started) =
+                        provider.submit(id, requests[id].true_output_tokens as f64, now)
+                    {
+                        q.push(started.finish_ms, Ev::ProviderDone(started.id));
+                    }
+                }
+                Action::Retry { id, at_ms } => {
+                    status[id] = RequestStatus::Deferred;
+                    defer_counts[id] += 1;
+                    q.push(at_ms, Ev::Retry(id));
+                }
+                Action::Reject { id } => {
+                    status[id] = RequestStatus::Rejected;
+                }
+            }
+        }
+    }
+
+    let outcomes: Vec<RequestOutcome> = requests
+        .iter()
+        .map(|r| RequestOutcome {
+            id: r.id,
+            bucket: r.true_bucket,
+            class: r.true_bucket.class(),
+            arrival_ms: r.arrival_ms,
+            deadline_ms: r.deadline_ms,
+            status: status[r.id],
+            latency_ms: latency[r.id],
+            defer_count: defer_counts[r.id],
+        })
+        .collect();
+
+    let metrics = compute(
+        &outcomes,
+        scheduler.controller().defers_by_bucket,
+        scheduler.controller().rejects_by_bucket,
+        scheduler.feasibility_violations(),
+    );
+    RunOutput {
+        metrics,
+        outcomes,
+        diagnostics: RunDiagnostics {
+            events_processed: q.processed(),
+            sends,
+            peak_provider_queue: provider.peak_hidden_queue(),
+            peak_inflight,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::RequestStatus;
+    use crate::predictor::{InfoLevel, LadderSource};
+    use crate::scheduler::StrategyKind;
+    use crate::workload::{Mix, WorkloadSpec};
+
+    fn run_strategy(strategy: StrategyKind, mix: Mix, rate: f64, seed: u64) -> RunOutput {
+        let spec = WorkloadSpec::new(mix, 80, rate);
+        let requests = spec.generate(seed);
+        let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(seed).derive("priors"));
+        run(
+            &requests,
+            &mut src,
+            SchedulerCfg::for_strategy(strategy),
+            ProviderCfg::default(),
+            seed,
+        )
+    }
+
+    #[test]
+    fn all_requests_reach_terminal_state() {
+        for strategy in [
+            StrategyKind::DirectNaive,
+            StrategyKind::QuotaTiered,
+            StrategyKind::AdaptiveDrr,
+            StrategyKind::FinalAdrrOlc,
+            StrategyKind::FairQueuing,
+            StrategyKind::ShortPriority,
+        ] {
+            let out = run_strategy(strategy, Mix::Balanced, 6.0, 1);
+            for o in &out.outcomes {
+                assert!(
+                    matches!(
+                        o.status,
+                        RequestStatus::Completed | RequestStatus::Rejected | RequestStatus::TimedOut
+                    ),
+                    "{strategy:?}: request {} stuck in {:?}",
+                    o.id,
+                    o.status
+                );
+            }
+            assert_eq!(out.metrics.n_offered, 80, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_strategy(StrategyKind::FinalAdrrOlc, Mix::Heavy, 8.0, 3);
+        let b = run_strategy(StrategyKind::FinalAdrrOlc, Mix::Heavy, 8.0, 3);
+        assert_eq!(a.metrics.n_completed, b.metrics.n_completed);
+        assert_eq!(a.metrics.rejects_total, b.metrics.rejects_total);
+        assert!((a.metrics.global_p95_ms - b.metrics.global_p95_ms).abs() < 1e-12);
+        for (x, y) in a.outcomes.iter().zip(b.outcomes.iter()) {
+            assert_eq!(x.status, y.status);
+            assert_eq!(x.latency_ms, y.latency_ms);
+        }
+    }
+
+    #[test]
+    fn low_load_completes_everything() {
+        let out = run_strategy(StrategyKind::FinalAdrrOlc, Mix::Balanced, 1.0, 5);
+        assert_eq!(out.metrics.completion_rate, 1.0);
+        assert_eq!(out.metrics.n_rejected, 0);
+        assert!(out.metrics.satisfaction > 0.95);
+    }
+
+    #[test]
+    fn naive_floods_provider() {
+        let naive = run_strategy(StrategyKind::DirectNaive, Mix::Heavy, 10.0, 7);
+        let shaped = run_strategy(StrategyKind::FinalAdrrOlc, Mix::Heavy, 10.0, 7);
+        // Naive pushes far more concurrent work into the provider (paying
+        // the slowdown curve); shaped policies pace near their budget.
+        assert!(
+            naive.diagnostics.peak_inflight > 2 * shaped.diagnostics.peak_inflight,
+            "naive={} shaped={}",
+            naive.diagnostics.peak_inflight,
+            shaped.diagnostics.peak_inflight
+        );
+    }
+
+    #[test]
+    fn shaping_protects_short_tail_under_stress() {
+        let naive = run_strategy(StrategyKind::DirectNaive, Mix::Balanced, 10.0, 11);
+        let shaped = run_strategy(StrategyKind::FinalAdrrOlc, Mix::Balanced, 10.0, 11);
+        assert!(
+            shaped.metrics.short_p95_ms < naive.metrics.short_p95_ms,
+            "shaped={} naive={}",
+            shaped.metrics.short_p95_ms,
+            naive.metrics.short_p95_ms
+        );
+    }
+
+    #[test]
+    fn rejects_only_from_final_stack() {
+        let adrr = run_strategy(StrategyKind::AdaptiveDrr, Mix::Heavy, 10.0, 13);
+        assert_eq!(adrr.metrics.rejects_total, 0, "no OLC → no rejects");
+        assert_eq!(adrr.metrics.defers_total, 0);
+    }
+
+    #[test]
+    fn shorts_never_rejected_by_final() {
+        for seed in 0..5 {
+            let out = run_strategy(StrategyKind::FinalAdrrOlc, Mix::Heavy, 12.0, seed);
+            assert_eq!(out.metrics.rejects_by_bucket[0], 0, "seed {seed}");
+            for o in &out.outcomes {
+                if o.bucket == crate::core::TokenBucket::Short {
+                    assert_ne!(o.status, RequestStatus::Rejected);
+                }
+            }
+        }
+    }
+}

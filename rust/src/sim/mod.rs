@@ -1,0 +1,169 @@
+//! Discrete-event simulation engine.
+//!
+//! A binary-heap event queue keyed by (time, sequence) — the sequence number
+//! makes tie-breaking deterministic, which the five-seed reproducibility of
+//! every paper table depends on. The engine is generic over the event
+//! payload; the experiment driver (`experiments::driver`) owns the handler
+//! loop.
+
+pub mod driver;
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry: min-ordered by (time, seq).
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap; NaN times are a programmer error.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN event time")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic future-event list.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    next_seq: u64,
+    popped: u64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0, popped: 0 }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue { heap: BinaryHeap::with_capacity(cap), next_seq: 0, popped: 0 }
+    }
+
+    /// Schedule `payload` at absolute time `t` (ms).
+    pub fn push(&mut self, t: f64, payload: E) {
+        debug_assert!(t.is_finite(), "non-finite event time {t}");
+        self.heap.push(Entry { time: t, seq: self.next_seq, payload });
+        self.next_seq += 1;
+    }
+
+    /// Pop the earliest event: `(time, payload)`.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|e| {
+            self.popped += 1;
+            (e.time, e.payload)
+        })
+    }
+
+    /// Earliest scheduled time without popping.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total events processed so far (engine throughput metric).
+    pub fn processed(&self) -> u64 {
+        self.popped
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, "c");
+        q.push(1.0, "a");
+        q.push(3.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(2.0, 1);
+        q.push(2.0, 2);
+        q.push(2.0, 3);
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn peek_and_len() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+        q.push(7.5, ());
+        q.push(2.5, ());
+        assert_eq!(q.peek_time(), Some(2.5));
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.peek_time(), Some(7.5));
+        assert_eq!(q.processed(), 1);
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        use crate::testing::prop;
+        prop::forall(50, |g| {
+            let mut q = EventQueue::new();
+            let mut last = f64::NEG_INFINITY;
+            let n = g.usize_in(1, 100);
+            for _ in 0..n {
+                for _ in 0..g.usize_in(1, 4) {
+                    q.push(g.f64_in(0.0, 1000.0), ());
+                }
+                if g.bool() {
+                    if let Some((t, _)) = q.pop() {
+                        // Popped times must be >= any previously popped time
+                        // only when no earlier pushes happen later — instead
+                        // assert heap property directly: pop ≤ new peek.
+                        if let Some(nt) = q.peek_time() {
+                            assert!(t <= nt);
+                        }
+                        let _ = last; // silence unused in release
+                        last = t;
+                    }
+                }
+            }
+            // Drain: fully sorted.
+            let mut prev = f64::NEG_INFINITY;
+            while let Some((t, _)) = q.pop() {
+                assert!(t >= prev);
+                prev = t;
+            }
+        });
+    }
+}

@@ -1,0 +1,3 @@
+//! Test-support substrates (the image vendors no proptest/quickcheck).
+
+pub mod prop;

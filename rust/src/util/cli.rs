@@ -1,0 +1,291 @@
+//! Declarative CLI argument parser (the image vendors no clap).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, required-argument errors, and auto-generated
+//! `--help` text. Used by `rust/src/main.rs` and every example binary.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag: {0} (try --help)")]
+    UnknownFlag(String),
+    #[error("flag {0} expects a value")]
+    MissingValue(String),
+    #[error("missing required argument: --{0}")]
+    MissingRequired(String),
+    #[error("invalid value for --{flag}: {value:?} ({expected})")]
+    Invalid { flag: String, value: String, expected: &'static str },
+    #[error("unexpected positional argument: {0}")]
+    UnexpectedPositional(String),
+}
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+    required: bool,
+}
+
+/// Declarative command spec: `Cmd::new("run").opt(...).flag(...)`.
+#[derive(Debug, Clone)]
+pub struct Cmd {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    allow_positionals: bool,
+}
+
+impl Cmd {
+    pub fn new(name: &str, about: &str) -> Self {
+        Cmd { name: name.to_string(), about: about.to_string(), opts: Vec::new(), allow_positionals: false }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: Some(default.to_string()),
+            required: false,
+        });
+        self
+    }
+
+    /// `--name <value>`, required.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: None,
+            required: true,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+            required: false,
+        });
+        self
+    }
+
+    pub fn positionals(mut self) -> Self {
+        self.allow_positionals = true;
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let head = if o.takes_value {
+                format!("  --{} <v>", o.name)
+            } else {
+                format!("  --{}", o.name)
+            };
+            let def = match (&o.default, o.required) {
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, true) => " [required]".to_string(),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{head:<26}{}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse a raw arg list (without the binary/subcommand names).
+    pub fn parse(&self, args: &[String]) -> Result<Args, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut positionals: Vec<String> = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                values.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Ok(Args { help: true, ..Args::new(values, flags, positionals) });
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(a.clone()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i).cloned().ok_or_else(|| CliError::MissingValue(a.clone()))?
+                        }
+                    };
+                    values.insert(name, v);
+                } else {
+                    flags.push(name);
+                }
+            } else if self.allow_positionals {
+                positionals.push(a.clone());
+            } else {
+                return Err(CliError::UnexpectedPositional(a.clone()));
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if o.required && !values.contains_key(&o.name) {
+                return Err(CliError::MissingRequired(o.name.clone()));
+            }
+        }
+        Ok(Args::new(values, flags, positionals))
+    }
+}
+
+/// Parsed arguments with typed accessors.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+    pub help: bool,
+}
+
+impl Args {
+    fn new(values: BTreeMap<String, String>, flags: Vec<String>, positionals: Vec<String>) -> Self {
+        Args { values, flags, positionals, help: false }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name).unwrap_or_else(|| panic!("undeclared option {name}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| CliError::Invalid {
+            flag: name.to_string(),
+            value: v.to_string(),
+            expected: "number",
+        })
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| CliError::Invalid {
+            flag: name.to_string(),
+            value: v.to_string(),
+            expected: "integer",
+        })
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        Ok(self.u64(name)? as usize)
+    }
+
+    /// Comma-separated list.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        let v = self.str(name);
+        if v.is_empty() {
+            Vec::new()
+        } else {
+            v.split(',').map(|s| s.trim().to_string()).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Cmd {
+        Cmd::new("run", "run an experiment")
+            .opt("seeds", "5", "number of seeds")
+            .opt("regime", "balanced_high", "regime name")
+            .req("out", "output path")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&argv(&["--out", "/tmp/x", "--seeds=7"])).unwrap();
+        assert_eq!(a.usize("seeds").unwrap(), 7);
+        assert_eq!(a.str("regime"), "balanced_high");
+        assert_eq!(a.str("out"), "/tmp/x");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn flags() {
+        let a = cmd().parse(&argv(&["--out", "x", "--verbose"])).unwrap();
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required() {
+        assert!(matches!(cmd().parse(&argv(&[])), Err(CliError::MissingRequired(_))));
+    }
+
+    #[test]
+    fn unknown_flag() {
+        assert!(matches!(
+            cmd().parse(&argv(&["--out", "x", "--nope"])),
+            Err(CliError::UnknownFlag(_))
+        ));
+    }
+
+    #[test]
+    fn bad_number() {
+        let a = cmd().parse(&argv(&["--out", "x", "--seeds", "abc"])).unwrap();
+        assert!(matches!(a.usize("seeds"), Err(CliError::Invalid { .. })));
+    }
+
+    #[test]
+    fn help_flag() {
+        let a = cmd().parse(&argv(&["--help"])).unwrap();
+        assert!(a.help);
+        assert!(cmd().help_text().contains("--seeds"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = cmd()
+            .opt("ls", "a,b", "list")
+            .parse(&argv(&["--out", "x", "--ls", "p, q ,r"]))
+            .unwrap();
+        assert_eq!(a.list("ls"), vec!["p", "q", "r"]);
+    }
+
+    #[test]
+    fn positionals_rejected_unless_allowed() {
+        assert!(cmd().parse(&argv(&["--out", "x", "stray"])).is_err());
+        let a = cmd().positionals().parse(&argv(&["--out", "x", "stray"])).unwrap();
+        assert_eq!(a.positionals, vec!["stray"]);
+    }
+}

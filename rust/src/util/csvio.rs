@@ -1,0 +1,110 @@
+//! CSV writer for `paper_results/tables/*.csv` — mirrors the CSV artifacts
+//! the paper cites (`prior_ablation_summary.csv`, etc.).
+
+use std::io::Write;
+
+/// Minimal CSV table builder with RFC-4180 quoting.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new<S: Into<String>>(columns: impl IntoIterator<Item = S>) -> Self {
+        CsvTable { header: columns.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn columns(&self) -> &[String] {
+        &self.header
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Push a row; panics if the width mismatches the header (programmer error).
+    pub fn row<S: Into<String>>(&mut self, cells: impl IntoIterator<Item = S>) {
+        let row: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row width {} != header width {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, &self.header);
+        for row in &self.rows {
+            write_record(&mut out, row);
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+fn write_record(out: &mut String, cells: &[String]) {
+    for (i, cell) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            out.push('"');
+            out.push_str(&cell.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(cell);
+        }
+    }
+    out.push('\n');
+}
+
+/// Format `mean ± std` the way the paper's tables print it.
+pub fn pm(mean: f64, std: f64) -> String {
+    if mean.abs() >= 100.0 {
+        format!("{mean:.0}±{std:.0}")
+    } else if mean.abs() >= 10.0 {
+        format!("{mean:.1}±{std:.1}")
+    } else {
+        format!("{mean:.2}±{std:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_table() {
+        let mut t = CsvTable::new(["a", "b"]);
+        t.row(["1", "2"]);
+        t.row(["x,y", "q\"z"]);
+        assert_eq!(t.to_string(), "a,b\n1,2\n\"x,y\",\"q\"\"z\"\n");
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row width")]
+    fn width_mismatch_panics() {
+        let mut t = CsvTable::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn pm_formats() {
+        assert_eq!(pm(347.4, 27.5), "347±28");
+        assert_eq!(pm(4.2, 1.6), "4.20±1.60");
+        assert_eq!(pm(17.4, 1.3), "17.4±1.3");
+    }
+}

@@ -1,0 +1,9 @@
+//! Dependency-free substrates: deterministic RNG, JSON/CSV I/O, CLI
+//! parsing, and statistics (the offline image vendors only the `xla`
+//! closure, so these replace rand/serde/clap/criterion-adjacent helpers).
+
+pub mod cli;
+pub mod csvio;
+pub mod jsonio;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,123 @@
+//! Arrival processes: Poisson (default), deterministic (calibration), and
+//! burst-modulated Poisson (extension experiments).
+
+use crate::util::rng::Rng;
+
+/// Generator of successive arrival instants.
+pub struct ArrivalProcess {
+    kind: Kind,
+    rng: Rng,
+}
+
+enum Kind {
+    /// Exponential inter-arrivals with the given rate (req/s).
+    Poisson { rate_rps: f64 },
+    /// Fixed inter-arrival gap (ms).
+    Uniform { gap_ms: f64 },
+    /// Markov-modulated Poisson: alternates calm/burst phases.
+    Bursty {
+        calm_rps: f64,
+        burst_rps: f64,
+        mean_phase_ms: f64,
+        in_burst: bool,
+        phase_ends_ms: f64,
+    },
+}
+
+impl ArrivalProcess {
+    pub fn poisson(rate_rps: f64, rng: Rng) -> Self {
+        assert!(rate_rps > 0.0);
+        ArrivalProcess { kind: Kind::Poisson { rate_rps }, rng }
+    }
+
+    pub fn uniform(gap_ms: f64, rng: Rng) -> Self {
+        assert!(gap_ms > 0.0);
+        ArrivalProcess { kind: Kind::Uniform { gap_ms }, rng }
+    }
+
+    pub fn bursty(calm_rps: f64, burst_rps: f64, mean_phase_ms: f64, rng: Rng) -> Self {
+        assert!(calm_rps > 0.0 && burst_rps > 0.0 && mean_phase_ms > 0.0);
+        ArrivalProcess {
+            kind: Kind::Bursty {
+                calm_rps,
+                burst_rps,
+                mean_phase_ms,
+                in_burst: false,
+                phase_ends_ms: 0.0,
+            },
+            rng,
+        }
+    }
+
+    /// Next arrival instant strictly after `now` (ms).
+    pub fn next_after(&mut self, now: f64) -> f64 {
+        match &mut self.kind {
+            Kind::Poisson { rate_rps } => now + self.rng.exp(*rate_rps / 1000.0),
+            Kind::Uniform { gap_ms } => now + *gap_ms,
+            Kind::Bursty { calm_rps, burst_rps, mean_phase_ms, in_burst, phase_ends_ms } => {
+                if now >= *phase_ends_ms {
+                    *in_burst = !*in_burst;
+                    *phase_ends_ms = now + self.rng.exp(1.0 / *mean_phase_ms);
+                }
+                let rate = if *in_burst { *burst_rps } else { *calm_rps };
+                now + self.rng.exp(rate / 1000.0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let mut p = ArrivalProcess::poisson(10.0, Rng::new(1));
+        let mut t = 0.0;
+        let n = 20_000;
+        for _ in 0..n {
+            t = p.next_after(t);
+        }
+        let rate = n as f64 / (t / 1000.0);
+        assert!((rate - 10.0).abs() < 0.3, "rate={rate}");
+    }
+
+    #[test]
+    fn arrivals_strictly_increase() {
+        let mut p = ArrivalProcess::poisson(100.0, Rng::new(2));
+        let mut t = 0.0;
+        for _ in 0..1000 {
+            let nt = p.next_after(t);
+            assert!(nt > t);
+            t = nt;
+        }
+    }
+
+    #[test]
+    fn uniform_gap() {
+        let mut p = ArrivalProcess::uniform(50.0, Rng::new(3));
+        assert_eq!(p.next_after(0.0), 50.0);
+        assert_eq!(p.next_after(50.0), 100.0);
+    }
+
+    #[test]
+    fn bursty_has_higher_variance_than_poisson() {
+        let gaps = |mut p: ArrivalProcess| {
+            let mut t = 0.0;
+            let mut gs = Vec::new();
+            for _ in 0..20_000 {
+                let nt = p.next_after(t);
+                gs.push(nt - t);
+                t = nt;
+            }
+            gs
+        };
+        let pg = gaps(ArrivalProcess::poisson(10.0, Rng::new(5)));
+        let bg = gaps(ArrivalProcess::bursty(4.0, 40.0, 2_000.0, Rng::new(5)));
+        let cv = |g: &[f64]| {
+            let (m, s) = crate::util::stats::mean_std(g);
+            s / m
+        };
+        assert!(cv(&bg) > cv(&pg) * 1.2, "burst cv={} poisson cv={}", cv(&bg), cv(&pg));
+    }
+}

@@ -1,0 +1,150 @@
+//! Workload generation: synthetic request sampler (shared generative model
+//! with the predictor's training data), arrival processes, the ShareGPT-
+//! derived distribution, and trace record/replay.
+
+pub mod arrivals;
+pub mod synth;
+pub mod trace;
+
+pub use arrivals::ArrivalProcess;
+pub use synth::{Mix, SynthGen, GEN_CONSTANTS};
+
+use crate::core::{Request, SloPolicy};
+use crate::util::rng::Rng;
+
+/// Arrival-process shape for a workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    /// Memoryless arrivals at `rate_rps` (the paper's default).
+    Poisson,
+    /// Markov-modulated bursts: calm/burst phases alternate with the given
+    /// mean phase length; `rate_rps` is reinterpreted as the calm rate and
+    /// `burst_factor × rate_rps` as the burst rate (extension experiments).
+    Bursty { burst_factor: f64, mean_phase_ms: f64 },
+}
+
+/// Everything needed to materialize one run's offered load.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub mix: Mix,
+    /// Number of requests offered.
+    pub n_requests: usize,
+    /// Mean arrival rate, requests/second.
+    pub rate_rps: f64,
+    /// SLO policy assigning deadlines/timeouts by true bucket.
+    pub slo: SloPolicy,
+    /// Arrival-process shape.
+    pub arrivals: ArrivalKind,
+}
+
+impl WorkloadSpec {
+    pub fn new(mix: Mix, n_requests: usize, rate_rps: f64) -> Self {
+        WorkloadSpec {
+            mix,
+            n_requests,
+            rate_rps,
+            slo: SloPolicy::default(),
+            arrivals: ArrivalKind::Poisson,
+        }
+    }
+
+    pub fn bursty(mut self, burst_factor: f64, mean_phase_ms: f64) -> Self {
+        self.arrivals = ArrivalKind::Bursty { burst_factor, mean_phase_ms };
+        self
+    }
+
+    /// Materialize the full request table for a seed. Deterministic:
+    /// (spec, seed) → identical Vec<Request>.
+    pub fn generate(&self, seed: u64) -> Vec<Request> {
+        let root = Rng::new(seed);
+        let mut arrivals = match self.arrivals {
+            ArrivalKind::Poisson => ArrivalProcess::poisson(self.rate_rps, root.derive("arrivals")),
+            ArrivalKind::Bursty { burst_factor, mean_phase_ms } => ArrivalProcess::bursty(
+                self.rate_rps,
+                self.rate_rps * burst_factor,
+                mean_phase_ms,
+                root.derive("arrivals"),
+            ),
+        };
+        let mut synth = SynthGen::new(self.mix, root.derive("synth"));
+        let mut out = Vec::with_capacity(self.n_requests);
+        let mut now = 0.0;
+        for id in 0..self.n_requests {
+            now = arrivals.next_after(now);
+            out.push(synth.sample(id, now, &self.slo));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::TokenBucket;
+
+    #[test]
+    fn generate_is_deterministic() {
+        let spec = WorkloadSpec::new(Mix::Balanced, 50, 8.0);
+        let a = spec.generate(42);
+        let b = spec.generate(42);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.true_output_tokens, y.true_output_tokens);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let spec = WorkloadSpec::new(Mix::Balanced, 50, 8.0);
+        let a = spec.generate(1);
+        let b = spec.generate(2);
+        assert!(a.iter().zip(b.iter()).any(|(x, y)| x.true_output_tokens != y.true_output_tokens));
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_sane() {
+        let spec = WorkloadSpec::new(Mix::Heavy, 400, 10.0);
+        let reqs = spec.generate(7);
+        let mut prev = 0.0;
+        for r in &reqs {
+            assert!(r.arrival_ms >= prev);
+            prev = r.arrival_ms;
+        }
+        // 400 arrivals at 10/s ≈ 40 s span (±30%).
+        let span_s = reqs.last().unwrap().arrival_ms / 1000.0;
+        assert!((28.0..55.0).contains(&span_s), "span={span_s}");
+    }
+
+    #[test]
+    fn deadlines_match_bucket_slo() {
+        let spec = WorkloadSpec::new(Mix::Balanced, 100, 8.0);
+        let slo = SloPolicy::default();
+        for r in spec.generate(3) {
+            let rel = r.deadline_ms - r.arrival_ms;
+            assert!((rel - slo.deadline_for(r.true_bucket)).abs() < 1e-9);
+            assert!(r.timeout_ms > r.deadline_ms);
+        }
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let spec = WorkloadSpec::new(Mix::ShareGpt, 20, 5.0);
+        for (i, r) in spec.generate(0).iter().enumerate() {
+            assert_eq!(r.id, i);
+        }
+    }
+
+    #[test]
+    fn heavy_mix_is_heavier() {
+        let bal = WorkloadSpec::new(Mix::Balanced, 2000, 8.0).generate(5);
+        let heavy = WorkloadSpec::new(Mix::Heavy, 2000, 8.0).generate(5);
+        let frac_heavy = |rs: &[Request]| {
+            rs.iter().filter(|r| matches!(r.true_bucket, TokenBucket::Long | TokenBucket::XLong)).count()
+                as f64
+                / rs.len() as f64
+        };
+        assert!(frac_heavy(&heavy) > frac_heavy(&bal) + 0.2);
+    }
+}

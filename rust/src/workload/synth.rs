@@ -1,0 +1,235 @@
+//! Synthetic request sampler — the Rust twin of
+//! `python/compile/datagen.py`'s generative model.
+//!
+//! The constants here MUST stay in lockstep with the Python side: the
+//! predictor is trained on the Python sampler and served (via PJRT) against
+//! requests from this one. `GEN_CONSTANTS` carries the canonical values and
+//! `runtime::meta::check_constants` asserts them against
+//! `artifacts/predictor_meta.json` at load time; the integration test
+//! `tests/meta_consistency.rs` does the same in CI.
+
+use crate::core::{Request, SloPolicy, Task, TokenBucket};
+use crate::util::rng::Rng;
+
+/// Workload mixes over (short, medium, long, xlong).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mix {
+    /// Paper §4.2: 50/25/15/10.
+    Balanced,
+    /// Paper §4.2: 20/20/30/30.
+    Heavy,
+    /// Paper §4.1 ShareGPT-English split: 12/42/46/<1 (modeled as 1%).
+    ShareGpt,
+    /// Table 4's fairness workload: 70% long/xlong.
+    FairnessHeavy,
+}
+
+impl Mix {
+    pub fn weights(self) -> [f64; 4] {
+        match self {
+            Mix::Balanced => [0.50, 0.25, 0.15, 0.10],
+            Mix::Heavy => [0.20, 0.20, 0.30, 0.30],
+            Mix::ShareGpt => [0.12, 0.42, 0.45, 0.01],
+            Mix::FairnessHeavy => [0.20, 0.10, 0.40, 0.30],
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Mix::Balanced => "balanced",
+            Mix::Heavy => "heavy",
+            Mix::ShareGpt => "sharegpt",
+            Mix::FairnessHeavy => "fairness_heavy",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Mix> {
+        match s {
+            "balanced" => Some(Mix::Balanced),
+            "heavy" => Some(Mix::Heavy),
+            "sharegpt" => Some(Mix::ShareGpt),
+            "fairness_heavy" => Some(Mix::FairnessHeavy),
+            _ => None,
+        }
+    }
+
+    /// Mean output tokens under this mix (for capacity estimates).
+    pub fn mean_tokens(self) -> f64 {
+        let w = self.weights();
+        TokenBucket::ALL
+            .iter()
+            .zip(w.iter())
+            .map(|(b, wi)| wi * b.geo_mid())
+            .sum()
+    }
+}
+
+/// Canonical generative-model constants (mirrors datagen.py; checked
+/// against predictor_meta.json).
+pub struct GenConstants {
+    pub task_given_bucket: [[f64; 4]; 4],
+    pub prompt_alpha: [f64; 4],
+    pub prompt_beta: [f64; 4],
+    pub prompt_sigma: f64,
+    pub max_tokens_grid: [u32; 5],
+}
+
+pub const GEN_CONSTANTS: GenConstants = GenConstants {
+    task_given_bucket: [
+        [0.45, 0.05, 0.10, 0.40], // short
+        [0.40, 0.20, 0.25, 0.15], // medium
+        [0.25, 0.35, 0.30, 0.10], // long
+        [0.10, 0.40, 0.45, 0.05], // xlong
+    ],
+    prompt_alpha: [2.2, 4.1, 1.8, 3.5],
+    prompt_beta: [0.55, 0.35, 0.70, 0.30],
+    prompt_sigma: 0.45,
+    max_tokens_grid: [256, 512, 1024, 2048, 4096],
+};
+
+/// Stateful sampler bound to a mix + RNG stream.
+pub struct SynthGen {
+    mix: Mix,
+    rng: Rng,
+}
+
+impl SynthGen {
+    pub fn new(mix: Mix, rng: Rng) -> Self {
+        SynthGen { mix, rng }
+    }
+
+    /// Sample one request arriving at `arrival_ms`.
+    pub fn sample(&mut self, id: usize, arrival_ms: f64, slo: &SloPolicy) -> Request {
+        let c = &GEN_CONSTANTS;
+        let bucket_idx = self.rng.categorical(&self.mix.weights());
+        let bucket = TokenBucket::ALL[bucket_idx];
+        let (lo, hi) = bucket.bounds();
+        let out_tok = self
+            .rng
+            .log_uniform(lo as f64, hi as f64)
+            .round()
+            .clamp(lo as f64, hi as f64) as u32;
+
+        let task_idx = self.rng.categorical(&c.task_given_bucket[bucket_idx]);
+        let task = Task::from_index(task_idx);
+
+        let ln_prompt = c.prompt_alpha[task_idx]
+            + c.prompt_beta[task_idx] * (out_tok as f64).ln()
+            + self.rng.normal() * c.prompt_sigma;
+        let prompt_tokens = ln_prompt.exp().round().clamp(4.0, 4096.0) as u32;
+
+        let temperature = (self.rng.f64() * 20.0).round() / 20.0;
+        let max_tokens = *c
+            .max_tokens_grid
+            .iter()
+            .find(|g| **g >= hi)
+            .unwrap_or(c.max_tokens_grid.last().unwrap());
+
+        Request {
+            id,
+            arrival_ms,
+            prompt_tokens,
+            task,
+            temperature,
+            max_tokens,
+            deadline_ms: arrival_ms + slo.deadline_for(bucket),
+            timeout_ms: arrival_ms + slo.timeout_for(bucket),
+            true_output_tokens: out_tok,
+            true_bucket: bucket,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn sample_n(mix: Mix, n: usize, seed: u64) -> Vec<Request> {
+        let mut g = SynthGen::new(mix, Rng::new(seed));
+        let slo = SloPolicy::default();
+        (0..n).map(|i| g.sample(i, i as f64, &slo)).collect()
+    }
+
+    #[test]
+    fn tokens_within_bucket_bounds() {
+        for r in sample_n(Mix::Balanced, 2000, 1) {
+            let (lo, hi) = r.true_bucket.bounds();
+            assert!(r.true_output_tokens >= lo && r.true_output_tokens <= hi);
+        }
+    }
+
+    #[test]
+    fn mix_proportions_converge() {
+        for mix in [Mix::Balanced, Mix::Heavy, Mix::ShareGpt, Mix::FairnessHeavy] {
+            let reqs = sample_n(mix, 40_000, 5);
+            let mut counts = [0usize; 4];
+            for r in &reqs {
+                counts[r.true_bucket.index()] += 1;
+            }
+            for (i, w) in mix.weights().iter().enumerate() {
+                let frac = counts[i] as f64 / reqs.len() as f64;
+                assert!((frac - w).abs() < 0.015, "{mix:?} bucket {i}: {frac} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn prompt_tokens_clamped_and_correlated() {
+        let reqs = sample_n(Mix::Balanced, 20_000, 9);
+        assert!(reqs.iter().all(|r| (4..=4096).contains(&r.prompt_tokens)));
+        // log-log correlation between prompt and output should be clearly
+        // positive — the predictor's signal.
+        let xs: Vec<f64> = reqs.iter().map(|r| (r.prompt_tokens as f64).ln()).collect();
+        let ys: Vec<f64> = reqs.iter().map(|r| (r.true_output_tokens as f64).ln()).collect();
+        let n = xs.len() as f64;
+        let mx = xs.iter().sum::<f64>() / n;
+        let my = ys.iter().sum::<f64>() / n;
+        let cov: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum::<f64>() / n;
+        let sx = (xs.iter().map(|x| (x - mx) * (x - mx)).sum::<f64>() / n).sqrt();
+        let sy = (ys.iter().map(|y| (y - my) * (y - my)).sum::<f64>() / n).sqrt();
+        let r = cov / (sx * sy);
+        assert!(r > 0.3, "correlation too weak: {r}");
+    }
+
+    #[test]
+    fn max_tokens_covers_bucket() {
+        prop::forall(20, |g| {
+            let seed = g.u64();
+            for r in sample_n(Mix::Heavy, 200, seed) {
+                let (_, hi) = r.true_bucket.bounds();
+                assert!(r.max_tokens >= hi);
+                assert!(GEN_CONSTANTS.max_tokens_grid.contains(&r.max_tokens));
+            }
+        });
+    }
+
+    #[test]
+    fn temperature_grid() {
+        for r in sample_n(Mix::Balanced, 500, 11) {
+            let scaled = r.temperature * 20.0;
+            assert!((scaled - scaled.round()).abs() < 1e-9);
+            assert!((0.0..=1.0).contains(&r.temperature));
+        }
+    }
+
+    #[test]
+    fn mean_tokens_ordering() {
+        assert!(Mix::Heavy.mean_tokens() > Mix::Balanced.mean_tokens());
+        assert!(Mix::FairnessHeavy.mean_tokens() > Mix::Balanced.mean_tokens());
+    }
+
+    #[test]
+    fn task_distribution_bucket_dependent() {
+        let reqs = sample_n(Mix::Heavy, 40_000, 13);
+        // xlong work should be dominated by code+summarize (0.85 weight).
+        let xlong: Vec<&Request> =
+            reqs.iter().filter(|r| r.true_bucket == TokenBucket::XLong).collect();
+        let cs = xlong
+            .iter()
+            .filter(|r| matches!(r.task, Task::Code | Task::Summarize))
+            .count() as f64
+            / xlong.len() as f64;
+        assert!(cs > 0.75, "code+summarize frac in xlong = {cs}");
+    }
+}

@@ -1,0 +1,123 @@
+//! Trace record/replay: JSON-lines serialization of request tables, so a
+//! workload can be generated once, inspected, edited, and replayed across
+//! policies (the paper's "controlled evaluation" requires every policy to
+//! see the identical arrival sequence — replay guarantees it even across
+//! binaries).
+
+use crate::core::{Request, Task, TokenBucket};
+use crate::util::jsonio::{Json, JsonError};
+
+/// Serialize one request to a JSON object.
+pub fn request_to_json(r: &Request) -> Json {
+    Json::obj()
+        .set("id", r.id)
+        .set("arrival_ms", r.arrival_ms)
+        .set("prompt_tokens", r.prompt_tokens as u64)
+        .set("task", r.task.name())
+        .set("temperature", r.temperature)
+        .set("max_tokens", r.max_tokens as u64)
+        .set("deadline_ms", r.deadline_ms)
+        .set("timeout_ms", r.timeout_ms)
+        .set("true_output_tokens", r.true_output_tokens as u64)
+        .set("true_bucket", r.true_bucket.name())
+}
+
+/// Parse one request back.
+pub fn request_from_json(j: &Json) -> Result<Request, JsonError> {
+    let missing = |k: &str| JsonError::Missing(k.to_string());
+    let task_name = j.req("task")?.as_str().ok_or_else(|| missing("task"))?;
+    let task = Task::ALL
+        .iter()
+        .copied()
+        .find(|t| t.name() == task_name)
+        .ok_or_else(|| missing("task(valid)"))?;
+    let bucket_name = j.req("true_bucket")?.as_str().ok_or_else(|| missing("true_bucket"))?;
+    let bucket = TokenBucket::parse(bucket_name).ok_or_else(|| missing("true_bucket(valid)"))?;
+    Ok(Request {
+        id: j.req("id")?.as_usize().ok_or_else(|| missing("id"))?,
+        arrival_ms: j.req("arrival_ms")?.as_f64().ok_or_else(|| missing("arrival_ms"))?,
+        prompt_tokens: j.req("prompt_tokens")?.as_u64().ok_or_else(|| missing("prompt_tokens"))?
+            as u32,
+        task,
+        temperature: j.req("temperature")?.as_f64().ok_or_else(|| missing("temperature"))?,
+        max_tokens: j.req("max_tokens")?.as_u64().ok_or_else(|| missing("max_tokens"))? as u32,
+        deadline_ms: j.req("deadline_ms")?.as_f64().ok_or_else(|| missing("deadline_ms"))?,
+        timeout_ms: j.req("timeout_ms")?.as_f64().ok_or_else(|| missing("timeout_ms"))?,
+        true_output_tokens: j
+            .req("true_output_tokens")?
+            .as_u64()
+            .ok_or_else(|| missing("true_output_tokens"))? as u32,
+        true_bucket: bucket,
+    })
+}
+
+/// Write a trace as JSON lines.
+pub fn save_trace(path: &str, requests: &[Request]) -> Result<(), JsonError> {
+    let mut out = String::new();
+    for r in requests {
+        out.push_str(&request_to_json(r).to_string_compact());
+        out.push('\n');
+    }
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Load a JSON-lines trace.
+pub fn load_trace(path: &str) -> Result<Vec<Request>, JsonError> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        out.push(request_from_json(&Json::parse(line)?)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Mix, WorkloadSpec};
+
+    #[test]
+    fn roundtrip_via_json() {
+        let reqs = WorkloadSpec::new(Mix::Balanced, 30, 8.0).generate(3);
+        for r in &reqs {
+            let j = request_to_json(r);
+            let back = request_from_json(&j).unwrap();
+            assert_eq!(back.id, r.id);
+            assert_eq!(back.true_output_tokens, r.true_output_tokens);
+            assert_eq!(back.true_bucket, r.true_bucket);
+            assert_eq!(back.task, r.task);
+            assert!((back.arrival_ms - r.arrival_ms).abs() < 1e-9);
+            assert!((back.deadline_ms - r.deadline_ms).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn roundtrip_via_file() {
+        let reqs = WorkloadSpec::new(Mix::Heavy, 25, 10.0).generate(7);
+        let path = std::env::temp_dir().join("bbsched_trace_test.jsonl");
+        let path = path.to_str().unwrap();
+        save_trace(path, &reqs).unwrap();
+        let back = load_trace(path).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(back.iter()) {
+            assert_eq!(a.true_output_tokens, b.true_output_tokens);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let j = Json::parse(r#"{"id": 1}"#).unwrap();
+        assert!(request_from_json(&j).is_err());
+        let j = Json::parse(r#"{"id":1,"arrival_ms":0,"prompt_tokens":5,"task":"nope","temperature":0,"max_tokens":10,"deadline_ms":1,"timeout_ms":2,"true_output_tokens":3,"true_bucket":"short"}"#).unwrap();
+        assert!(request_from_json(&j).is_err());
+    }
+}

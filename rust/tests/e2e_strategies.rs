@@ -1,0 +1,159 @@
+//! Integration: every strategy, end to end, on the DES driver — lifecycle
+//! invariants, determinism, and the black-box constraint.
+
+use blackbox_sched::core::{RequestStatus, TokenBucket};
+use blackbox_sched::predictor::{InfoLevel, LadderSource};
+use blackbox_sched::provider::ProviderCfg;
+use blackbox_sched::scheduler::{SchedulerCfg, StrategyKind};
+use blackbox_sched::sim::driver::{run, RunOutput};
+use blackbox_sched::util::rng::Rng;
+use blackbox_sched::workload::{Mix, WorkloadSpec};
+
+const ALL_STRATEGIES: [StrategyKind; 8] = [
+    StrategyKind::DirectNaive,
+    StrategyKind::PacedFifo,
+    StrategyKind::QuotaTiered,
+    StrategyKind::AdaptiveDrr,
+    StrategyKind::FinalAdrrOlc,
+    StrategyKind::FairQueuing,
+    StrategyKind::ShortPriority,
+    StrategyKind::PlainDrr,
+];
+
+fn run_one(strategy: StrategyKind, mix: Mix, rate: f64, n: usize, seed: u64) -> RunOutput {
+    let requests = WorkloadSpec::new(mix, n, rate).generate(seed);
+    let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(seed).derive("priors"));
+    run(&requests, &mut src, SchedulerCfg::for_strategy(strategy), ProviderCfg::default(), seed)
+}
+
+#[test]
+fn every_strategy_terminates_every_request() {
+    for strategy in ALL_STRATEGIES {
+        for (mix, rate) in [(Mix::Balanced, 20.0), (Mix::Heavy, 14.0), (Mix::ShareGpt, 20.0)] {
+            let out = run_one(strategy, mix, rate, 150, 42);
+            assert_eq!(out.metrics.n_offered, 150);
+            for o in &out.outcomes {
+                assert!(
+                    matches!(
+                        o.status,
+                        RequestStatus::Completed | RequestStatus::Rejected | RequestStatus::TimedOut
+                    ),
+                    "{strategy:?}/{mix:?}: req {} in {:?}",
+                    o.id,
+                    o.status
+                );
+            }
+            // Accounting identity.
+            assert_eq!(
+                out.metrics.n_completed + out.metrics.n_rejected + out.metrics.n_timed_out,
+                150,
+                "{strategy:?}/{mix:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn runs_are_bit_deterministic() {
+    for strategy in [StrategyKind::FinalAdrrOlc, StrategyKind::QuotaTiered] {
+        let a = run_one(strategy, Mix::Heavy, 14.0, 120, 9);
+        let b = run_one(strategy, Mix::Heavy, 14.0, 120, 9);
+        for (x, y) in a.outcomes.iter().zip(b.outcomes.iter()) {
+            assert_eq!(x.status, y.status);
+            assert_eq!(x.latency_ms, y.latency_ms);
+            assert_eq!(x.defer_count, y.defer_count);
+        }
+        assert_eq!(a.diagnostics.sends, b.diagnostics.sends);
+    }
+}
+
+#[test]
+fn only_overload_strategies_shed() {
+    for strategy in ALL_STRATEGIES {
+        let out = run_one(strategy, Mix::Heavy, 14.0, 150, 3);
+        if strategy != StrategyKind::FinalAdrrOlc {
+            assert_eq!(out.metrics.rejects_total, 0, "{strategy:?} must not reject");
+            assert_eq!(out.metrics.defers_total, 0, "{strategy:?} must not defer");
+        }
+    }
+}
+
+#[test]
+fn final_stack_never_rejects_shorts_or_mediums() {
+    for seed in 0..8 {
+        let out = run_one(StrategyKind::FinalAdrrOlc, Mix::Heavy, 16.0, 200, seed);
+        assert_eq!(out.metrics.rejects_by_bucket[TokenBucket::Short.index()], 0);
+        assert_eq!(out.metrics.rejects_by_bucket[TokenBucket::Medium.index()], 0);
+        assert_eq!(out.metrics.defers_by_bucket[TokenBucket::Short.index()], 0);
+        assert_eq!(out.metrics.defers_by_bucket[TokenBucket::Medium.index()], 0);
+    }
+}
+
+#[test]
+fn zero_feasibility_violations_in_paper_regimes() {
+    // The paper reports zero ordering-layer feasibility violations across
+    // all runs; our main-benchmark regimes must reproduce that.
+    for (mix, rate) in [(Mix::Balanced, 12.0), (Mix::Balanced, 20.0), (Mix::Heavy, 10.0), (Mix::Heavy, 14.0)]
+    {
+        for seed in 0..5 {
+            let out = run_one(StrategyKind::FinalAdrrOlc, mix, rate, 200, seed);
+            assert_eq!(
+                out.metrics.feasibility_violations, 0,
+                "{mix:?}@{rate}: seed {seed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn shaping_beats_naive_on_short_tail_under_stress() {
+    let mut wins = 0;
+    for seed in 0..5 {
+        let naive = run_one(StrategyKind::DirectNaive, Mix::Heavy, 14.0, 200, seed);
+        let shaped = run_one(StrategyKind::FinalAdrrOlc, Mix::Heavy, 14.0, 200, seed);
+        if shaped.metrics.short_p95_ms < naive.metrics.short_p95_ms {
+            wins += 1;
+        }
+    }
+    assert!(wins >= 4, "shaped won only {wins}/5 seeds");
+}
+
+#[test]
+fn quota_trades_completion_for_isolation_in_heavy_regimes() {
+    let mut quota_cr = 0.0;
+    let mut drr_cr = 0.0;
+    for seed in 0..5 {
+        quota_cr += run_one(StrategyKind::QuotaTiered, Mix::Heavy, 14.0, 200, seed)
+            .metrics
+            .completion_rate;
+        drr_cr += run_one(StrategyKind::AdaptiveDrr, Mix::Heavy, 14.0, 200, seed)
+            .metrics
+            .completion_rate;
+    }
+    assert!(
+        drr_cr > quota_cr + 0.25,
+        "work conservation must buy completion: drr {drr_cr} vs quota {quota_cr} (sum of 5)"
+    );
+}
+
+#[test]
+fn latencies_are_physical() {
+    // No completion can be faster than the provider's base cost, and client
+    // latency must be ≥ service time (it includes queueing).
+    let out = run_one(StrategyKind::FinalAdrrOlc, Mix::Balanced, 20.0, 200, 1);
+    let base = ProviderCfg::default().base_ms;
+    for o in &out.outcomes {
+        if let Some(lat) = o.latency_ms {
+            assert!(lat > base * 0.5, "req {} latency {lat} below physical floor", o.id);
+        }
+    }
+}
+
+#[test]
+fn realtime_serve_driver_matches_policy_semantics() {
+    // The wall-clock driver (threads + channels) must run the same stack to
+    // completion with the analytic prior source; 40 requests at 100× time
+    // compression keeps this under a couple of wall seconds.
+    blackbox_sched::serve::serve_demo(StrategyKind::FinalAdrrOlc, 20.0, 40, 0.01, "")
+        .expect("serve demo failed");
+}

@@ -1,0 +1,183 @@
+//! Integration: the paper's headline qualitative claims, asserted as tests
+//! (reduced seed counts — the full tables come from `bbsched exp`).
+
+use blackbox_sched::experiments::runner::{run_cell, CellSpec, Congestion, Regime};
+use blackbox_sched::metrics::Aggregate;
+use blackbox_sched::predictor::InfoLevel;
+use blackbox_sched::scheduler::overload::BucketPolicy;
+use blackbox_sched::scheduler::{SchedulerCfg, StrategyKind};
+use blackbox_sched::workload::Mix;
+
+const SEEDS: u64 = 3;
+const N: usize = 200;
+
+fn mean(runs: &[blackbox_sched::metrics::RunMetrics], f: impl Fn(&blackbox_sched::metrics::RunMetrics) -> f64) -> f64 {
+    Aggregate::new(runs).mean_std(f).0
+}
+
+fn final_cell(regime: Regime, info: InfoLevel) -> Vec<blackbox_sched::metrics::RunMetrics> {
+    run_cell(
+        &CellSpec::new(regime, SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc), N)
+            .with_info(info),
+        SEEDS,
+    )
+}
+
+#[test]
+fn ladder_magnitude_is_the_threshold_for_short_tails() {
+    // §4.4: removing magnitude priors inflates short P95 by large factors in
+    // stressed cells; class labels alone recover most routing benefit.
+    let bh = Regime { mix: Mix::Balanced, congestion: Congestion::High };
+    let blind = mean(&final_cell(bh, InfoLevel::NoInfo), |m| m.short_p95_ms);
+    let class_only = mean(&final_cell(bh, InfoLevel::ClassOnly), |m| m.short_p95_ms);
+    let coarse = mean(&final_cell(bh, InfoLevel::Coarse), |m| m.short_p95_ms);
+    let oracle = mean(&final_cell(bh, InfoLevel::Oracle), |m| m.short_p95_ms);
+    assert!(blind > 2.0 * coarse, "no-info {blind:.0} vs coarse {coarse:.0}");
+    assert!(class_only < blind * 0.6, "class routing must recover most of the gap");
+    // Oracle tracks coarse: the practical bar is coarse magnitude.
+    assert!((oracle - coarse).abs() < 0.35 * coarse, "oracle {oracle:.0} vs coarse {coarse:.0}");
+}
+
+#[test]
+fn ladder_degrades_satisfaction_when_blind() {
+    let hh = Regime { mix: Mix::Heavy, congestion: Congestion::High };
+    let blind = mean(&final_cell(hh, InfoLevel::NoInfo), |m| m.satisfaction);
+    let coarse = mean(&final_cell(hh, InfoLevel::Coarse), |m| m.satisfaction);
+    assert!(coarse > blind + 0.1, "coarse {coarse:.2} vs blind {blind:.2}");
+}
+
+#[test]
+fn full_stack_holds_the_balanced_high_headline() {
+    // §4.5: under balanced/high the full stack reaches full completion and
+    // satisfaction with short P95 within tens of ms of quota-tiered.
+    let bh = Regime { mix: Mix::Balanced, congestion: Congestion::High };
+    let full = run_cell(
+        &CellSpec::new(bh, SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc), N),
+        SEEDS,
+    );
+    let quota = run_cell(
+        &CellSpec::new(bh, SchedulerCfg::for_strategy(StrategyKind::QuotaTiered), N),
+        SEEDS,
+    );
+    assert!(mean(&full, |m| m.completion_rate) > 0.99);
+    assert!(mean(&full, |m| m.satisfaction) > 0.97);
+    let gap = mean(&full, |m| m.short_p95_ms) - mean(&quota, |m| m.short_p95_ms);
+    assert!(gap.abs() < 150.0, "short-P95 gap vs quota: {gap:.0} ms");
+}
+
+#[test]
+fn cost_ladder_beats_uniform_mild_on_goodput() {
+    // §4.7: gentle class-agnostic admission hides overload in the queue and
+    // collapses useful goodput; the ladder sheds legibly and keeps it.
+    let hh = Regime { mix: Mix::Heavy, congestion: Congestion::High };
+    let run_policy = |policy: BucketPolicy| {
+        let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+        sched.overload.bucket_policy = policy;
+        run_cell(&CellSpec::new(hh, sched, N), SEEDS)
+    };
+    let ladder = run_policy(BucketPolicy::CostLadder);
+    let mild = run_policy(BucketPolicy::UniformMild);
+    assert!(
+        mean(&ladder, |m| m.goodput_rps) > 1.3 * mean(&mild, |m| m.goodput_rps),
+        "ladder {:.2} vs mild {:.2}",
+        mean(&ladder, |m| m.goodput_rps),
+        mean(&mild, |m| m.goodput_rps)
+    );
+    // Mild never rejects — overload hides as mass deferral.
+    assert_eq!(mean(&mild, |m| m.rejects_total as f64), 0.0);
+    assert!(mean(&mild, |m| m.defers_total as f64) > 2.0 * mean(&ladder, |m| m.defers_total as f64));
+}
+
+#[test]
+fn rejections_concentrate_on_xlong() {
+    // Figure 5: the default ladder's rejections land on xlong; long is
+    // mostly deferred; medium is untouched.
+    let hh = Regime { mix: Mix::Heavy, congestion: Congestion::High };
+    let runs = run_cell(
+        &CellSpec::new(hh, SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc), N),
+        SEEDS,
+    );
+    let mut rejects = [0u64; 5];
+    let mut defers = [0u64; 5];
+    for m in &runs {
+        for i in 0..5 {
+            rejects[i] += m.rejects_by_bucket[i];
+            defers[i] += m.defers_by_bucket[i];
+        }
+    }
+    assert_eq!(rejects[0], 0, "short");
+    assert_eq!(rejects[1], 0, "medium");
+    assert!(rejects[3] > rejects[2], "xlong bears the majority of rejections: {rejects:?}");
+    assert!(defers[2] > 0, "longs are deferred under stress: {defers:?}");
+}
+
+#[test]
+fn noise_sweep_degrades_gracefully() {
+    // §4.10: up to 60% multiplicative prior error must not collapse the
+    // joint operating point.
+    let bh = Regime { mix: Mix::Balanced, congestion: Congestion::High };
+    let base = run_cell(
+        &CellSpec::new(bh, SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc), N),
+        SEEDS,
+    );
+    let noisy = run_cell(
+        &CellSpec::new(bh, SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc), N)
+            .with_noise(0.6),
+        SEEDS,
+    );
+    let cr_drop = mean(&base, |m| m.completion_rate) - mean(&noisy, |m| m.completion_rate);
+    assert!(cr_drop < 0.05, "CR collapse under noise: {cr_drop}");
+    let p95_ratio = mean(&noisy, |m| m.short_p95_ms) / mean(&base, |m| m.short_p95_ms);
+    assert!(p95_ratio < 1.5, "short tail blow-up under noise: {p95_ratio}");
+}
+
+#[test]
+fn threshold_perturbation_is_stable() {
+    // §4.9: ±20% on cutoffs/backoff moves joint metrics only modestly.
+    let bh = Regime { mix: Mix::Balanced, congestion: Congestion::High };
+    let run_factor = |f: f64| {
+        let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+        sched.overload = sched.overload.perturbed(f);
+        run_cell(&CellSpec::new(bh, sched, N), SEEDS)
+    };
+    let base = run_factor(1.0);
+    for f in [0.8, 1.2] {
+        let pert = run_factor(f);
+        assert!(mean(&pert, |m| m.completion_rate) > 0.97, "factor {f}");
+        let sat_drift =
+            (mean(&pert, |m| m.satisfaction) - mean(&base, |m| m.satisfaction)).abs();
+        assert!(sat_drift < 0.08, "factor {f}: satisfaction drift {sat_drift}");
+    }
+}
+
+#[test]
+fn fair_queuing_taxes_longs_less_than_short_priority() {
+    // Table 4 direction: both improve shorts over paced FIFO; FQ's long
+    // overhead stays at or below Short-Priority's.
+    use blackbox_sched::core::SloPolicy;
+    let regime = Regime { mix: Mix::FairnessHeavy, congestion: Congestion::High };
+    let run_alloc = |strategy: StrategyKind| {
+        let mut sched = SchedulerCfg::for_strategy(strategy);
+        sched.interactive_bypass = 0;
+        sched.max_inflight = 2;
+        let mut spec = CellSpec::new(regime, sched, N);
+        spec.rate_rps = 0.75;
+        spec.provider.base_ms = 2000.0;
+        spec.slo = SloPolicy { timeout_factor: 20.0, ..SloPolicy::default() };
+        run_cell(&spec, SEEDS)
+    };
+    let fifo = run_alloc(StrategyKind::PacedFifo);
+    let sp = run_alloc(StrategyKind::ShortPriority);
+    let fq = run_alloc(StrategyKind::FairQueuing);
+    let short = |runs: &[blackbox_sched::metrics::RunMetrics]| mean(runs, |m| m.short_p90_ms);
+    let long = |runs: &[blackbox_sched::metrics::RunMetrics]| mean(runs, |m| m.heavy_p90_ms);
+    assert!(short(&sp) < 0.5 * short(&fifo), "SP must protect shorts");
+    assert!(short(&fq) < 0.5 * short(&fifo), "FQ must protect shorts");
+    assert!(long(&sp) > long(&fifo), "SP taxes longs");
+    assert!(
+        long(&fq) <= long(&sp) * 1.02,
+        "FQ tax {:.0} must not exceed SP tax {:.0}",
+        long(&fq),
+        long(&sp)
+    );
+}

@@ -1,0 +1,121 @@
+//! Integration: the PJRT runtime path — artifact load, golden numerics,
+//! batched prediction, and a full simulated run with the neural prior
+//! source on the admission path. Skips (with a notice) when artifacts have
+//! not been built; `make artifacts && cargo test` exercises everything.
+
+use blackbox_sched::core::TokenBucket;
+use blackbox_sched::predictor::features::batch_features;
+use blackbox_sched::predictor::PriorSource;
+use blackbox_sched::provider::ProviderCfg;
+use blackbox_sched::runtime::{artifacts_available, default_artifacts_dir, NnPriorSource, Predictor};
+use blackbox_sched::scheduler::{SchedulerCfg, StrategyKind};
+use blackbox_sched::sim::driver;
+use blackbox_sched::workload::{Mix, WorkloadSpec};
+
+fn predictor() -> Option<Predictor> {
+    let dir = default_artifacts_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Predictor::load(&dir).expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn golden_vectors_match_python_reference() {
+    let Some(p) = predictor() else { return };
+    let g = &p.meta.golden;
+    let n = g.features.len();
+    let feats: Vec<f32> = g.features.iter().flatten().copied().collect();
+    let priors = p.predict(&feats, n).unwrap();
+    for i in 0..n {
+        let rel50 = ((priors[i].p50 - g.expected_p50[i]) / g.expected_p50[i]).abs();
+        let rel90 = ((priors[i].p90 - g.expected_p90[i]) / g.expected_p90[i]).abs();
+        assert!(rel50 < 1e-3 && rel90 < 1e-3, "row {i}: rel50={rel50} rel90={rel90}");
+        assert!(priors[i].p90 >= priors[i].p50, "monotone quantiles");
+    }
+}
+
+#[test]
+fn batch_and_single_paths_agree() {
+    let Some(p) = predictor() else { return };
+    let reqs = WorkloadSpec::new(Mix::Balanced, 300, 50.0).generate(3);
+    let refs: Vec<&blackbox_sched::Request> = reqs.iter().collect();
+    // Bulk (chunked over b512/b128 executables)…
+    let feats: Vec<f32> = refs.iter().flat_map(|r| blackbox_sched::predictor::features::features(r)).collect();
+    let bulk = p.predict(&feats, refs.len()).unwrap();
+    // …vs singles (padded b128 path).
+    for (i, r) in refs.iter().enumerate().step_by(37) {
+        let f1 = batch_features(&[*r], 1);
+        let single = p.predict(&f1, 1).unwrap()[0];
+        assert!(
+            (single.p50 - bulk[i].p50).abs() < 1e-3 * bulk[i].p50.max(1.0),
+            "row {i}: {} vs {}",
+            single.p50,
+            bulk[i].p50
+        );
+    }
+}
+
+#[test]
+fn predictor_is_informative_about_buckets() {
+    // The trained model must separate cheap from expensive work — the whole
+    // premise. Check rank correlation on fresh synthetic requests.
+    let Some(p) = predictor() else { return };
+    let reqs = WorkloadSpec::new(Mix::Balanced, 1000, 50.0).generate(11);
+    let refs: Vec<&blackbox_sched::Request> = reqs.iter().collect();
+    let feats: Vec<f32> =
+        refs.iter().flat_map(|r| blackbox_sched::predictor::features::features(r)).collect();
+    let priors = p.predict(&feats, refs.len()).unwrap();
+    // Mean predicted p50 must be monotone in the true bucket.
+    let mut sums = [0.0f64; 4];
+    let mut counts = [0usize; 4];
+    for (r, prior) in refs.iter().zip(&priors) {
+        sums[r.true_bucket.index()] += prior.p50;
+        counts[r.true_bucket.index()] += 1;
+    }
+    let means: Vec<f64> =
+        (0..4).map(|i| sums[i] / counts[i].max(1) as f64).collect();
+    assert!(
+        means[0] < means[1] && means[1] < means[2] && means[2] < means[3],
+        "bucket-mean p50 not monotone: {means:?}"
+    );
+    // p90 over-coverage: most true counts fall below the p90 estimate
+    // (trained to 0.9; tolerate sampling slack).
+    let covered = refs
+        .iter()
+        .zip(&priors)
+        .filter(|(r, prior)| (r.true_output_tokens as f64) <= prior.p90)
+        .count();
+    let frac = covered as f64 / refs.len() as f64;
+    assert!(frac > 0.8, "p90 coverage {frac}");
+}
+
+#[test]
+fn full_run_with_neural_priors_on_admission_path() {
+    let Some(p) = predictor() else { return };
+    let mut nn = NnPriorSource::new(p);
+    let requests = WorkloadSpec::new(Mix::Heavy, 120, 14.0).generate(5);
+    let out = driver::run(
+        &requests,
+        &mut nn,
+        SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+        ProviderCfg::default(),
+        5,
+    );
+    assert_eq!(out.metrics.n_offered, 120);
+    assert!(out.metrics.completion_rate > 0.9, "cr={}", out.metrics.completion_rate);
+    assert!(out.metrics.short_p95_ms < 1_000.0, "short tail {}", out.metrics.short_p95_ms);
+    // The neural route must never reject what it believes is short.
+    assert_eq!(out.metrics.rejects_by_bucket[TokenBucket::Short.index()], 0);
+    assert_eq!(nn.calls(), 120, "one PJRT call per admission");
+}
+
+#[test]
+fn meta_constants_guard_is_enforced() {
+    let Some(p) = predictor() else { return };
+    // check_constants already ran inside load; assert the metadata reports
+    // the calibrated training quality we ship with.
+    assert!(p.meta.training_coverage_p90 > 0.8 && p.meta.training_coverage_p90 <= 1.0);
+    assert_eq!(p.meta.batch_sizes, vec![128, 512]);
+}
