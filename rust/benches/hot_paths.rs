@@ -104,9 +104,9 @@ fn main() {
     });
     lat.truncate(10_000);
 
-    // ---- PJRT predictor (artifact-gated) ----
+    // ---- PJRT predictor (feature- and artifact-gated) ----
     let dir = default_artifacts_dir();
-    if artifacts_available(&dir) {
+    if cfg!(feature = "pjrt") && artifacts_available(&dir) {
         let predictor = Predictor::load(&dir).expect("artifacts present but unloadable");
         let refs: Vec<&blackbox_sched::Request> = reqs.iter().take(512).collect();
         let feats512 = batch_features(&refs, 512);
@@ -120,7 +120,7 @@ fn main() {
             std::hint::black_box(out[0].p50);
         });
     } else {
-        println!("(skipping PJRT benches: run `make artifacts` first)");
+        println!("(skipping PJRT benches: build with --features pjrt and run `make artifacts`)");
     }
 
     let _ = Class::Interactive; // keep import for doc symmetry

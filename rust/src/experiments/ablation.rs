@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use crate::experiments::runner::{run_cell, CellSpec, Congestion, Regime};
+use crate::experiments::runner::{CellSpec, Congestion, Regime};
 use crate::experiments::ExpOpts;
 use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
 use crate::metrics::Aggregate;
@@ -26,8 +26,46 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "ablation", "variant", "short_p95_mean", "global_p95_mean", "cr_mean",
         "satisfaction_mean", "goodput_mean",
     ]);
-    let mut emit = |ablation: &str, variant: &str, spec: CellSpec, seeds: u64| {
-        let runs = run_cell(&spec, seeds);
+    // Build the whole variant list first so one sweep covers all three
+    // ablations; row order matches the previous serial emission.
+    let mut labels: Vec<(&str, &str)> = Vec::new();
+    let mut specs: Vec<CellSpec> = Vec::new();
+
+    // 1. Heavy-lane ordering under heavy/high.
+    for (name, kind) in [
+        ("feasible_set", OrderingKind::FeasibleSet),
+        ("fifo", OrderingKind::Fifo),
+        ("sjf", OrderingKind::Sjf),
+        ("edf", OrderingKind::Edf),
+    ] {
+        let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+        sched.heavy_ordering = kind;
+        labels.push(("heavy ordering", name));
+        specs.push(CellSpec::new(hh, sched, opts.n_requests));
+    }
+
+    // 2. DRR adaptation under balanced/high. Measured with the bypass off:
+    //    the interactive lane must win its share through *allocation*, which
+    //    is exactly where congestion-scaled weights act.
+    for (name, strategy) in
+        [("adaptive", StrategyKind::AdaptiveDrr), ("plain", StrategyKind::PlainDrr)]
+    {
+        let mut sched = SchedulerCfg::for_strategy(strategy);
+        sched.interactive_bypass = 0;
+        labels.push(("drr weights", name));
+        specs.push(CellSpec::new(bh, sched, opts.n_requests));
+    }
+
+    // 3. Interactive bypass headroom under heavy/high.
+    for bypass in [0usize, 4] {
+        let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+        sched.interactive_bypass = bypass;
+        labels.push(("interactive bypass", if bypass == 0 { "off" } else { "+4 slots" }));
+        specs.push(CellSpec::new(hh, sched, opts.n_requests));
+    }
+
+    let all_runs = opts.sweep().run_cells(&specs, opts.seeds);
+    for ((ablation, variant), runs) in labels.iter().zip(all_runs) {
         let agg = Aggregate::new(&runs);
         let short = agg.mean_std(|m| m.short_p95_ms);
         let global = agg.mean_std(|m| m.global_p95_ms);
@@ -52,41 +90,6 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
             format!("{:.4}", sat.0),
             format!("{:.3}", good.0),
         ]);
-    };
-
-    // 1. Heavy-lane ordering under heavy/high.
-    for (name, kind) in [
-        ("feasible_set", OrderingKind::FeasibleSet),
-        ("fifo", OrderingKind::Fifo),
-        ("sjf", OrderingKind::Sjf),
-        ("edf", OrderingKind::Edf),
-    ] {
-        let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
-        sched.heavy_ordering = kind;
-        emit("heavy ordering", name, CellSpec::new(hh, sched, opts.n_requests), opts.seeds);
-    }
-
-    // 2. DRR adaptation under balanced/high. Measured with the bypass off:
-    //    the interactive lane must win its share through *allocation*, which
-    //    is exactly where congestion-scaled weights act.
-    for (name, strategy) in
-        [("adaptive", StrategyKind::AdaptiveDrr), ("plain", StrategyKind::PlainDrr)]
-    {
-        let mut sched = SchedulerCfg::for_strategy(strategy);
-        sched.interactive_bypass = 0;
-        emit("drr weights", name, CellSpec::new(bh, sched, opts.n_requests), opts.seeds);
-    }
-
-    // 3. Interactive bypass headroom under heavy/high.
-    for bypass in [0usize, 4] {
-        let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
-        sched.interactive_bypass = bypass;
-        emit(
-            "interactive bypass",
-            if bypass == 0 { "off" } else { "+4 slots" },
-            CellSpec::new(hh, sched, opts.n_requests),
-            opts.seeds,
-        );
     }
 
     println!("\nAblations — what each design choice buys (extension beyond the paper)");

@@ -11,7 +11,7 @@ use crate::experiments::runner::{CellSpec, Congestion, Regime};
 use crate::experiments::ExpOpts;
 use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
 use crate::metrics::{Aggregate, RunMetrics};
-use crate::predictor::{InfoLevel, LadderSource};
+use crate::predictor::LadderSource;
 use crate::scheduler::{SchedulerCfg, StrategyKind};
 use crate::sim::driver;
 use crate::util::csvio::CsvTable;
@@ -21,18 +21,14 @@ use crate::workload::{Mix, WorkloadSpec};
 pub const BURST_FACTOR: f64 = 4.0;
 pub const MEAN_PHASE_MS: f64 = 2_000.0;
 
-fn run_bursty_cell(spec: &CellSpec, seeds: u64) -> Vec<RunMetrics> {
-    (0..seeds)
-        .map(|seed| {
-            let workload = WorkloadSpec::new(spec.mix, spec.n_requests, spec.rate_rps)
-                .bursty(BURST_FACTOR, MEAN_PHASE_MS);
-            let requests = workload.generate(seed);
-            let mut src =
-                LadderSource::new(spec.info, Rng::new(seed ^ 0x5EED_50_u64).derive("priors"));
-            driver::run(&requests, &mut src, spec.sched.clone(), spec.provider.clone(), seed)
-                .metrics
-        })
-        .collect()
+/// One seed of a bursty-arrival cell; pure in (spec, seed), so the sweep
+/// engine can fan seeds out in any worker order.
+fn run_bursty_seed(spec: &CellSpec, seed: u64) -> RunMetrics {
+    let workload = WorkloadSpec::new(spec.mix, spec.n_requests, spec.rate_rps)
+        .bursty(BURST_FACTOR, MEAN_PHASE_MS);
+    let requests = workload.generate(seed);
+    let mut src = LadderSource::new(spec.info, Rng::new(seed ^ 0x5EED_50_u64).derive("priors"));
+    driver::run(&requests, &mut src, spec.sched.clone(), spec.provider.clone(), seed).metrics
 }
 
 pub fn run(opts: &ExpOpts) -> Result<()> {
@@ -49,37 +45,47 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "regime", "strategy", "short_p95_mean", "short_p95_std", "global_p95_mean", "cr_mean",
         "satisfaction_mean", "goodput_mean",
     ]);
+    let mut cells = Vec::new();
     for regime in regimes {
         for strategy in strategies {
-            let spec =
-                CellSpec::new(regime, SchedulerCfg::for_strategy(strategy), opts.n_requests);
-            let runs = run_bursty_cell(&spec, opts.seeds);
-            let agg = Aggregate::new(&runs);
-            let short = agg.mean_std(|m| m.short_p95_ms);
-            let global = agg.mean_std(|m| m.global_p95_ms);
-            let cr = agg.mean_std(|m| m.completion_rate);
-            let sat = agg.mean_std(|m| m.satisfaction);
-            let good = agg.mean_std(|m| m.goodput_rps);
-            table.row([
-                format!("{} (bursty)", regime.name()),
-                strategy.name().to_string(),
-                fmt_pm(short),
-                fmt_pm(global),
-                fmt_rate(cr),
-                fmt_rate(sat),
-                format!("{:.1}±{:.1}", good.0, good.1),
-            ]);
-            csv.row([
-                regime.name(),
-                strategy.name().to_string(),
-                format!("{:.1}", short.0),
-                format!("{:.1}", short.1),
-                format!("{:.1}", global.0),
-                format!("{:.4}", cr.0),
-                format!("{:.4}", sat.0),
-                format!("{:.3}", good.0),
-            ]);
+            cells.push((regime, strategy));
         }
+    }
+    let specs: Vec<CellSpec> = cells
+        .iter()
+        .map(|(regime, strategy)| {
+            CellSpec::new(*regime, SchedulerCfg::for_strategy(*strategy), opts.n_requests)
+        })
+        .collect();
+    let all_runs = opts
+        .sweep()
+        .map_cells(specs.len(), opts.seeds, |cell, seed| run_bursty_seed(&specs[cell], seed));
+    for ((regime, strategy), runs) in cells.into_iter().zip(all_runs) {
+        let agg = Aggregate::new(&runs);
+        let short = agg.mean_std(|m| m.short_p95_ms);
+        let global = agg.mean_std(|m| m.global_p95_ms);
+        let cr = agg.mean_std(|m| m.completion_rate);
+        let sat = agg.mean_std(|m| m.satisfaction);
+        let good = agg.mean_std(|m| m.goodput_rps);
+        table.row([
+            format!("{} (bursty)", regime.name()),
+            strategy.name().to_string(),
+            fmt_pm(short),
+            fmt_pm(global),
+            fmt_rate(cr),
+            fmt_rate(sat),
+            format!("{:.1}±{:.1}", good.0, good.1),
+        ]);
+        csv.row([
+            regime.name(),
+            strategy.name().to_string(),
+            format!("{:.1}", short.0),
+            format!("{:.1}", short.1),
+            format!("{:.1}", global.0),
+            format!("{:.4}", cr.0),
+            format!("{:.4}", sat.0),
+            format!("{:.3}", good.0),
+        ]);
     }
     println!("\nBurst robustness (extension): 4× bursts, ~2 s phases, calm = regime rate");
     println!("{}", table.render());

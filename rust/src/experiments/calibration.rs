@@ -1,6 +1,11 @@
 //! T3 — latency calibration (paper §4.1, Table 3,
 //! `latency_calibration.csv`): 18 low-load single requests across three
 //! buckets against the paper-scale mock; linear fit + R².
+//!
+//! Deliberately not on the parallel sweep engine: the harness is one
+//! provider probed strictly sequentially (concurrency would add the
+//! slowdown term the measurement must exclude), and the whole experiment
+//! is 18 simulated requests — there is no grid to fan out.
 
 use anyhow::Result;
 

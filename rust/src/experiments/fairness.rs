@@ -6,7 +6,7 @@
 use anyhow::Result;
 
 use crate::core::SloPolicy;
-use crate::experiments::runner::{run_cell, CellSpec, Congestion, Regime};
+use crate::experiments::runner::{CellSpec, Congestion, Regime};
 use crate::experiments::ExpOpts;
 use crate::metrics::report::TextTable;
 use crate::metrics::Aggregate;
@@ -24,37 +24,46 @@ fn pct_delta(base: f64, x: f64) -> f64 {
 
 pub fn run(opts: &ExpOpts) -> Result<()> {
     let regime = Regime { mix: Mix::FairnessHeavy, congestion: Congestion::High };
-    let mut rows = Vec::new();
-    for strategy in STRATEGIES {
-        // Pure allocation-layer comparison: no interactive bypass — every
-        // class competes for the same paced send opportunities, so the
-        // *allocator* is the only difference (the paper's Table 4 setting).
-        let mut sched = SchedulerCfg::for_strategy(strategy);
-        sched.interactive_bypass = 0;
-        // A tight client budget makes send opportunities the scarce
-        // resource the allocators are fighting over (the paper's fairness
-        // numbers imply near-serial service: long P90s of ~50–105 s).
-        sched.max_inflight = 2;
-        sched.quota_interactive = 1;
-        sched.quota_heavy = 1;
-        let mut spec = CellSpec::new(regime, sched, opts.n_requests);
-        // Deep saturation, near-disabled give-ups: the starvation tax needs
-        // room to accumulate rather than being censored by client timeouts
-        // (Table 4 reports latency only). A higher per-request base cost
-        // makes interactive work a non-trivial capacity share, as under the
-        // paper's production-scale physics (base ≈ 3.3 s).
-        spec.rate_rps = 0.75;
-        spec.provider.base_ms = 2000.0;
-        spec.slo = SloPolicy { timeout_factor: 20.0, ..SloPolicy::default() };
-        let runs = run_cell(&spec, opts.seeds);
-        let agg = Aggregate::new(&runs);
-        rows.push((
-            strategy,
-            agg.mean_std(|m| m.short_p90_ms).0,
-            agg.mean_std(|m| m.heavy_p90_ms).0,
-            agg.mean_std(|m| m.global_std_ms).0,
-        ));
-    }
+    let specs: Vec<CellSpec> = STRATEGIES
+        .iter()
+        .map(|strategy| {
+            // Pure allocation-layer comparison: no interactive bypass — every
+            // class competes for the same paced send opportunities, so the
+            // *allocator* is the only difference (the paper's Table 4 setting).
+            let mut sched = SchedulerCfg::for_strategy(*strategy);
+            sched.interactive_bypass = 0;
+            // A tight client budget makes send opportunities the scarce
+            // resource the allocators are fighting over (the paper's fairness
+            // numbers imply near-serial service: long P90s of ~50–105 s).
+            sched.max_inflight = 2;
+            sched.quota_interactive = 1;
+            sched.quota_heavy = 1;
+            let mut spec = CellSpec::new(regime, sched, opts.n_requests);
+            // Deep saturation, near-disabled give-ups: the starvation tax needs
+            // room to accumulate rather than being censored by client timeouts
+            // (Table 4 reports latency only). A higher per-request base cost
+            // makes interactive work a non-trivial capacity share, as under the
+            // paper's production-scale physics (base ≈ 3.3 s).
+            spec.rate_rps = 0.75;
+            spec.provider.base_ms = 2000.0;
+            spec.slo = SloPolicy { timeout_factor: 20.0, ..SloPolicy::default() };
+            spec
+        })
+        .collect();
+    let all_runs = opts.sweep().run_cells(&specs, opts.seeds);
+    let rows: Vec<_> = STRATEGIES
+        .iter()
+        .zip(&all_runs)
+        .map(|(strategy, runs)| {
+            let agg = Aggregate::new(runs);
+            (
+                *strategy,
+                agg.mean_std(|m| m.short_p90_ms).0,
+                agg.mean_std(|m| m.heavy_p90_ms).0,
+                agg.mean_std(|m| m.global_std_ms).0,
+            )
+        })
+        .collect();
     let (base_short, base_long) = (rows[0].1, rows[0].2);
 
     let mut table =

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::experiments::runner::{run_cell, CellSpec, Regime};
+use crate::experiments::runner::{CellSpec, Regime};
 use crate::experiments::ExpOpts;
 use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
 use crate::metrics::{Aggregate, RunMetrics};
@@ -19,16 +19,29 @@ pub struct LadderCell {
 }
 
 pub fn run_grid(opts: &ExpOpts) -> Vec<LadderCell> {
-    let mut out = Vec::new();
+    let mut cells = Vec::new();
     for regime in Regime::GRID {
         for info in InfoLevel::ALL {
-            let spec =
-                CellSpec::new(regime, SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc), opts.n_requests)
-                    .with_info(info);
-            out.push(LadderCell { regime, info, runs: run_cell(&spec, opts.seeds) });
+            cells.push((regime, info));
         }
     }
-    out
+    let specs: Vec<CellSpec> = cells
+        .iter()
+        .map(|(regime, info)| {
+            CellSpec::new(
+                *regime,
+                SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+                opts.n_requests,
+            )
+            .with_info(*info)
+        })
+        .collect();
+    let all_runs = opts.sweep().run_cells(&specs, opts.seeds);
+    cells
+        .into_iter()
+        .zip(all_runs)
+        .map(|((regime, info), runs)| LadderCell { regime, info, runs })
+        .collect()
 }
 
 pub fn render(cells: &[LadderCell], opts: &ExpOpts) -> Result<()> {

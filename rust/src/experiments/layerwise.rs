@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::experiments::runner::{run_cell, CellSpec, Congestion, Regime};
+use crate::experiments::runner::{CellSpec, Congestion, Regime};
 use crate::experiments::ExpOpts;
 use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
 use crate::metrics::Aggregate;
@@ -30,37 +30,45 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "regime", "strategy", "short_p95_mean", "short_p95_std", "goodput_mean", "goodput_std",
         "cr_mean", "cr_std", "satisfaction_mean", "satisfaction_std",
     ]);
+    let mut cells = Vec::new();
     for regime in regimes {
         for strategy in PROGRESSION {
-            let spec =
-                CellSpec::new(regime, SchedulerCfg::for_strategy(strategy), opts.n_requests);
-            let runs = run_cell(&spec, opts.seeds);
-            let agg = Aggregate::new(&runs);
-            let short = agg.mean_std(|m| m.short_p95_ms);
-            let good = agg.mean_std(|m| m.goodput_rps);
-            let cr = agg.mean_std(|m| m.completion_rate);
-            let sat = agg.mean_std(|m| m.satisfaction);
-            table.row([
-                regime.name(),
-                strategy.name().to_string(),
-                fmt_pm(short),
-                format!("{:.1}±{:.1}", good.0, good.1),
-                fmt_rate(cr),
-                fmt_rate(sat),
-            ]);
-            csv.row([
-                regime.name(),
-                strategy.name().to_string(),
-                format!("{:.1}", short.0),
-                format!("{:.1}", short.1),
-                format!("{:.3}", good.0),
-                format!("{:.3}", good.1),
-                format!("{:.4}", cr.0),
-                format!("{:.4}", cr.1),
-                format!("{:.4}", sat.0),
-                format!("{:.4}", sat.1),
-            ]);
+            cells.push((regime, strategy));
         }
+    }
+    let specs: Vec<CellSpec> = cells
+        .iter()
+        .map(|(regime, strategy)| {
+            CellSpec::new(*regime, SchedulerCfg::for_strategy(*strategy), opts.n_requests)
+        })
+        .collect();
+    let all_runs = opts.sweep().run_cells(&specs, opts.seeds);
+    for ((regime, strategy), runs) in cells.into_iter().zip(all_runs) {
+        let agg = Aggregate::new(&runs);
+        let short = agg.mean_std(|m| m.short_p95_ms);
+        let good = agg.mean_std(|m| m.goodput_rps);
+        let cr = agg.mean_std(|m| m.completion_rate);
+        let sat = agg.mean_std(|m| m.satisfaction);
+        table.row([
+            regime.name(),
+            strategy.name().to_string(),
+            fmt_pm(short),
+            format!("{:.1}±{:.1}", good.0, good.1),
+            fmt_rate(cr),
+            fmt_rate(sat),
+        ]);
+        csv.row([
+            regime.name(),
+            strategy.name().to_string(),
+            format!("{:.1}", short.0),
+            format!("{:.1}", short.1),
+            format!("{:.3}", good.0),
+            format!("{:.3}", good.1),
+            format!("{:.4}", cr.0),
+            format!("{:.4}", cr.1),
+            format!("{:.4}", sat.0),
+            format!("{:.4}", sat.1),
+        ]);
     }
     println!("\nFigure 7 — layerwise progression under high congestion");
     println!("{}", table.render());

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::experiments::runner::{run_cell, CellSpec, Regime};
+use crate::experiments::runner::{CellSpec, Regime};
 use crate::experiments::ExpOpts;
 use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
 use crate::metrics::{Aggregate, RunMetrics};
@@ -21,22 +21,31 @@ pub struct CellResult {
     pub runs: Vec<RunMetrics>,
 }
 
-/// Run the full grid (all four regimes × strategies × seeds).
+/// Run the full grid (all four regimes × strategies × seeds), fanned out
+/// across the parallel sweep engine; cell order matches the serial loop.
 pub fn run_grid(opts: &ExpOpts, include_naive: bool) -> Vec<CellResult> {
-    let mut out = Vec::new();
     let mut strategies: Vec<StrategyKind> = TABLE_STRATEGIES.to_vec();
     if include_naive {
         strategies.insert(0, StrategyKind::DirectNaive);
     }
+    let mut cells = Vec::new();
     for regime in Regime::GRID {
         for strategy in &strategies {
-            let spec =
-                CellSpec::new(regime, SchedulerCfg::for_strategy(*strategy), opts.n_requests);
-            let runs = run_cell(&spec, opts.seeds);
-            out.push(CellResult { regime, strategy: *strategy, runs });
+            cells.push((regime, *strategy));
         }
     }
-    out
+    let specs: Vec<CellSpec> = cells
+        .iter()
+        .map(|(regime, strategy)| {
+            CellSpec::new(*regime, SchedulerCfg::for_strategy(*strategy), opts.n_requests)
+        })
+        .collect();
+    let all_runs = opts.sweep().run_cells(&specs, opts.seeds);
+    cells
+        .into_iter()
+        .zip(all_runs)
+        .map(|((regime, strategy), runs)| CellResult { regime, strategy, runs })
+        .collect()
 }
 
 pub fn render(results: &[CellResult], opts: &ExpOpts) -> Result<()> {

@@ -15,7 +15,7 @@ pub mod runner;
 pub mod sensitivity;
 pub mod sharegpt;
 
-pub use runner::{run_cell, CellSpec, Congestion, Regime};
+pub use runner::{run_cell, run_seed, CellSpec, Congestion, ParallelSweep, Regime};
 
 use anyhow::{bail, Result};
 
@@ -28,6 +28,9 @@ pub struct ExpOpts {
     pub n_requests: usize,
     /// Output directory for the paper-parity CSVs.
     pub out_dir: String,
+    /// Sweep worker threads (0 = all cores). Results are byte-identical
+    /// for every value — see [`ParallelSweep`].
+    pub jobs: usize,
     /// Print per-seed detail.
     pub verbose: bool,
 }
@@ -38,8 +41,16 @@ impl Default for ExpOpts {
             seeds: 5,
             n_requests: 200,
             out_dir: "paper_results/tables".to_string(),
+            jobs: 0,
             verbose: false,
         }
+    }
+}
+
+impl ExpOpts {
+    /// The sweep engine every grid experiment fans out on.
+    pub fn sweep(&self) -> ParallelSweep {
+        ParallelSweep::new(self.jobs)
     }
 }
 

@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::experiments::runner::{run_cell, CellSpec, Regime};
+use crate::experiments::runner::{CellSpec, Regime};
 use crate::experiments::ExpOpts;
 use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
 use crate::metrics::Aggregate;
@@ -22,42 +22,51 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "satisfaction_mean", "satisfaction_std", "goodput_mean", "goodput_std",
     ]);
     let mut collapse_check: Vec<(String, f64, f64)> = Vec::new();
+    let mut cells = Vec::new();
     for regime in Regime::GRID {
         for l in LEVELS {
-            let spec = CellSpec::new(
-                regime,
+            cells.push((regime, l));
+        }
+    }
+    let specs: Vec<CellSpec> = cells
+        .iter()
+        .map(|(regime, l)| {
+            CellSpec::new(
+                *regime,
                 SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
                 opts.n_requests,
             )
-            .with_noise(l);
-            let runs = run_cell(&spec, opts.seeds);
-            let agg = Aggregate::new(&runs);
-            let short = agg.mean_std(|m| m.short_p95_ms);
-            let cr = agg.mean_std(|m| m.completion_rate);
-            let sat = agg.mean_std(|m| m.satisfaction);
-            let good = agg.mean_std(|m| m.goodput_rps);
-            collapse_check.push((regime.name(), l, cr.0));
-            table.row([
-                regime.name(),
-                format!("{l:.1}"),
-                fmt_pm(short),
-                fmt_rate(cr),
-                fmt_rate(sat),
-                format!("{:.1}±{:.1}", good.0, good.1),
-            ]);
-            csv.row([
-                regime.name(),
-                format!("{l:.1}"),
-                format!("{:.1}", short.0),
-                format!("{:.1}", short.1),
-                format!("{:.4}", cr.0),
-                format!("{:.4}", cr.1),
-                format!("{:.4}", sat.0),
-                format!("{:.4}", sat.1),
-                format!("{:.3}", good.0),
-                format!("{:.3}", good.1),
-            ]);
-        }
+            .with_noise(*l)
+        })
+        .collect();
+    let all_runs = opts.sweep().run_cells(&specs, opts.seeds);
+    for ((regime, l), runs) in cells.into_iter().zip(all_runs) {
+        let agg = Aggregate::new(&runs);
+        let short = agg.mean_std(|m| m.short_p95_ms);
+        let cr = agg.mean_std(|m| m.completion_rate);
+        let sat = agg.mean_std(|m| m.satisfaction);
+        let good = agg.mean_std(|m| m.goodput_rps);
+        collapse_check.push((regime.name(), l, cr.0));
+        table.row([
+            regime.name(),
+            format!("{l:.1}"),
+            fmt_pm(short),
+            fmt_rate(cr),
+            fmt_rate(sat),
+            format!("{:.1}±{:.1}", good.0, good.1),
+        ]);
+        csv.row([
+            regime.name(),
+            format!("{l:.1}"),
+            format!("{:.1}", short.0),
+            format!("{:.1}", short.1),
+            format!("{:.4}", cr.0),
+            format!("{:.4}", cr.1),
+            format!("{:.4}", sat.0),
+            format!("{:.4}", sat.1),
+            format!("{:.3}", good.0),
+            format!("{:.3}", good.1),
+        ]);
     }
     println!("\nFigure 8 — predictor-noise sweep (Final OLC fixed)");
     println!("{}", table.render());

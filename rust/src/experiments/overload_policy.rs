@@ -7,7 +7,7 @@
 use anyhow::Result;
 
 use crate::core::TokenBucket;
-use crate::experiments::runner::{run_cell, CellSpec, Congestion, Regime};
+use crate::experiments::runner::{CellSpec, Congestion, Regime};
 use crate::experiments::ExpOpts;
 use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
 use crate::metrics::Aggregate;
@@ -19,15 +19,20 @@ use crate::workload::Mix;
 /// Figure 5: overload action counts by bucket, summed over Final (OLC) runs
 /// across all four regimes.
 pub fn action_histogram(opts: &ExpOpts) -> ([u64; 5], [u64; 5]) {
+    let specs: Vec<CellSpec> = Regime::GRID
+        .iter()
+        .map(|regime| {
+            CellSpec::new(
+                *regime,
+                SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+                opts.n_requests,
+            )
+        })
+        .collect();
     let mut defers = [0u64; 5];
     let mut rejects = [0u64; 5];
-    for regime in Regime::GRID {
-        let spec = CellSpec::new(
-            regime,
-            SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
-            opts.n_requests,
-        );
-        for m in run_cell(&spec, opts.seeds) {
+    for runs in opts.sweep().run_cells(&specs, opts.seeds) {
+        for m in runs {
             for i in 0..5 {
                 defers[i] += m.defers_by_bucket[i];
                 rejects[i] += m.rejects_by_bucket[i];
@@ -66,50 +71,59 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "global_p95_std", "cr_mean", "cr_std", "satisfaction_mean", "satisfaction_std",
         "goodput_mean", "goodput_std", "rejects_mean", "rejects_std", "defers_mean", "defers_std",
     ]);
+    let mut cells = Vec::new();
     for regime in regimes {
         for policy in BucketPolicy::ALL {
-            let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
-            sched.overload.bucket_policy = policy;
-            let spec = CellSpec::new(regime, sched, opts.n_requests);
-            let runs = run_cell(&spec, opts.seeds);
-            let agg = Aggregate::new(&runs);
-            let short = agg.mean_std(|m| m.short_p95_ms);
-            let global = agg.mean_std(|m| m.global_p95_ms);
-            let cr = agg.mean_std(|m| m.completion_rate);
-            let sat = agg.mean_std(|m| m.satisfaction);
-            let good = agg.mean_std(|m| m.goodput_rps);
-            let rej = agg.mean_std(|m| m.rejects_total as f64);
-            let def = agg.mean_std(|m| m.defers_total as f64);
-            table.row([
-                regime.name(),
-                policy.name().to_string(),
-                fmt_pm(short),
-                fmt_pm(global),
-                fmt_rate(cr),
-                fmt_rate(sat),
-                format!("{:.1}±{:.1}", good.0, good.1),
-                format!("{:.1}±{:.1}", rej.0, rej.1),
-                format!("{:.1}±{:.1}", def.0, def.1),
-            ]);
-            csv.row([
-                regime.name(),
-                policy.name().to_string(),
-                format!("{:.1}", short.0),
-                format!("{:.1}", short.1),
-                format!("{:.1}", global.0),
-                format!("{:.1}", global.1),
-                format!("{:.4}", cr.0),
-                format!("{:.4}", cr.1),
-                format!("{:.4}", sat.0),
-                format!("{:.4}", sat.1),
-                format!("{:.3}", good.0),
-                format!("{:.3}", good.1),
-                format!("{:.1}", rej.0),
-                format!("{:.1}", rej.1),
-                format!("{:.1}", def.0),
-                format!("{:.1}", def.1),
-            ]);
+            cells.push((regime, policy));
         }
+    }
+    let specs: Vec<CellSpec> = cells
+        .iter()
+        .map(|(regime, policy)| {
+            let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+            sched.overload.bucket_policy = *policy;
+            CellSpec::new(*regime, sched, opts.n_requests)
+        })
+        .collect();
+    let all_runs = opts.sweep().run_cells(&specs, opts.seeds);
+    for ((regime, policy), runs) in cells.into_iter().zip(all_runs) {
+        let agg = Aggregate::new(&runs);
+        let short = agg.mean_std(|m| m.short_p95_ms);
+        let global = agg.mean_std(|m| m.global_p95_ms);
+        let cr = agg.mean_std(|m| m.completion_rate);
+        let sat = agg.mean_std(|m| m.satisfaction);
+        let good = agg.mean_std(|m| m.goodput_rps);
+        let rej = agg.mean_std(|m| m.rejects_total as f64);
+        let def = agg.mean_std(|m| m.defers_total as f64);
+        table.row([
+            regime.name(),
+            policy.name().to_string(),
+            fmt_pm(short),
+            fmt_pm(global),
+            fmt_rate(cr),
+            fmt_rate(sat),
+            format!("{:.1}±{:.1}", good.0, good.1),
+            format!("{:.1}±{:.1}", rej.0, rej.1),
+            format!("{:.1}±{:.1}", def.0, def.1),
+        ]);
+        csv.row([
+            regime.name(),
+            policy.name().to_string(),
+            format!("{:.1}", short.0),
+            format!("{:.1}", short.1),
+            format!("{:.1}", global.0),
+            format!("{:.1}", global.1),
+            format!("{:.4}", cr.0),
+            format!("{:.4}", cr.1),
+            format!("{:.4}", sat.0),
+            format!("{:.4}", sat.1),
+            format!("{:.3}", good.0),
+            format!("{:.3}", good.1),
+            format!("{:.1}", rej.0),
+            format!("{:.1}", rej.1),
+            format!("{:.1}", def.0),
+            format!("{:.1}", def.1),
+        ]);
     }
     println!("\nTable 5 — overload bucket_policy comparison (Final OLC fixed)");
     println!("{}", table.render());

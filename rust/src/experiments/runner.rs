@@ -9,6 +9,7 @@ use crate::predictor::{InfoLevel, LadderSource, NoisySource, PriorSource};
 use crate::provider::ProviderCfg;
 use crate::scheduler::SchedulerCfg;
 use crate::sim::driver::{run, RunOutput};
+use crate::util::pool;
 use crate::util::rng::Rng;
 use crate::workload::{Mix, WorkloadSpec};
 
@@ -121,9 +122,59 @@ pub fn run_seed(spec: &CellSpec, seed: u64) -> RunOutput {
     }
 }
 
-/// Run all seeds of a cell; returns per-seed metrics.
+/// Run all seeds of a cell serially; returns per-seed metrics. This is the
+/// reference implementation the parallel sweep must match byte-for-byte.
 pub fn run_cell(spec: &CellSpec, seeds: u64) -> Vec<RunMetrics> {
     (0..seeds).map(|s| run_seed(spec, s).metrics).collect()
+}
+
+/// Deterministic parallel sweep over `CellSpec × seed` jobs.
+///
+/// Fans the grid out across a scoped worker pool ([`pool::scoped_map`]) and
+/// reassembles the results in submission order, so every table and CSV is
+/// byte-identical to a serial [`run_cell`] loop. Each `(cell, seed)` job
+/// regenerates its own request table from the seed and owns all of its
+/// simulation state, which preserves the paired-comparison guarantee: the
+/// per-seed request tables are identical across policies regardless of how
+/// the workers interleave.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelSweep {
+    jobs: usize,
+}
+
+impl ParallelSweep {
+    /// `jobs == 0` uses all available cores.
+    pub fn new(jobs: usize) -> ParallelSweep {
+        ParallelSweep { jobs }
+    }
+
+    /// Configured worker count (0 = all cores).
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Run `seeds` seeds of every cell; `out[i][s]` is cell `i`, seed `s` —
+    /// exactly the shape a serial `specs.iter().map(run_cell)` produces.
+    pub fn run_cells(&self, specs: &[CellSpec], seeds: u64) -> Vec<Vec<RunMetrics>> {
+        self.map_cells(specs.len(), seeds, |cell, seed| run_seed(&specs[cell], seed).metrics)
+    }
+
+    /// Generalized fan-out: evaluate `f(cell_index, seed)` for every pair
+    /// and regroup the results per cell in submission order. Experiments
+    /// with custom per-seed runners (e.g. bursty arrivals) use this
+    /// directly.
+    pub fn map_cells<R, F>(&self, n_cells: usize, seeds: u64, f: F) -> Vec<Vec<R>>
+    where
+        R: Send,
+        F: Fn(usize, u64) -> R + Sync,
+    {
+        let pairs: Vec<(usize, u64)> =
+            (0..n_cells).flat_map(|c| (0..seeds).map(move |s| (c, s))).collect();
+        let mut flat = pool::scoped_map(pairs, self.jobs, |(c, s)| f(c, s)).into_iter();
+        (0..n_cells)
+            .map(|_| (0..seeds).map(|_| flat.next().expect("one result per job")).collect())
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -158,6 +209,67 @@ mod tests {
         for m in &ms {
             assert_eq!(m.n_offered, 40);
         }
+    }
+
+    fn metrics_bitwise_equal(a: &RunMetrics, b: &RunMetrics) {
+        assert_eq!(a.n_offered, b.n_offered);
+        assert_eq!(a.n_completed, b.n_completed);
+        assert_eq!(a.n_rejected, b.n_rejected);
+        assert_eq!(a.n_timed_out, b.n_timed_out);
+        assert_eq!(a.defers_total, b.defers_total);
+        assert_eq!(a.rejects_total, b.rejects_total);
+        assert_eq!(a.feasibility_violations, b.feasibility_violations);
+        // Bit-compare floats (NaN-safe): identical computations must land on
+        // identical bits for CSVs to be byte-identical.
+        for (x, y) in [
+            (a.short_p95_ms, b.short_p95_ms),
+            (a.global_p95_ms, b.global_p95_ms),
+            (a.completion_rate, b.completion_rate),
+            (a.satisfaction, b.satisfaction),
+            (a.goodput_rps, b.goodput_rps),
+            (a.makespan_ms, b.makespan_ms),
+            (a.heavy_p90_ms, b.heavy_p90_ms),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits(), "float drift: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_run_cell() {
+        // 2 regimes × 2 policies × 3 seeds, at several worker counts.
+        let mut specs = Vec::new();
+        for regime in [Regime::GRID[0], Regime::GRID[3]] {
+            for strategy in [StrategyKind::QuotaTiered, StrategyKind::FinalAdrrOlc] {
+                specs.push(CellSpec::new(regime, SchedulerCfg::for_strategy(strategy), 30));
+            }
+        }
+        let serial: Vec<Vec<RunMetrics>> = specs.iter().map(|s| run_cell(s, 3)).collect();
+        for jobs in [1usize, 2, 4, 7] {
+            let par = ParallelSweep::new(jobs).run_cells(&specs, 3);
+            assert_eq!(par.len(), serial.len(), "jobs={jobs}");
+            for (cell_par, cell_ser) in par.iter().zip(&serial) {
+                assert_eq!(cell_par.len(), 3);
+                for (a, b) in cell_par.iter().zip(cell_ser) {
+                    metrics_bitwise_equal(a, b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn map_cells_regroups_in_submission_order() {
+        let sweep = ParallelSweep::new(4);
+        let out = sweep.map_cells(3, 4, |cell, seed| (cell, seed));
+        assert_eq!(out.len(), 3);
+        for (c, row) in out.iter().enumerate() {
+            let want: Vec<(usize, u64)> = (0..4u64).map(|s| (c, s)).collect();
+            assert_eq!(row, &want);
+        }
+        // Degenerate shapes stay well-formed.
+        assert_eq!(sweep.map_cells(0, 5, |c, s| (c, s)).len(), 0);
+        let zero_seeds = sweep.map_cells(2, 0, |c, s| (c, s));
+        assert_eq!(zero_seeds.len(), 2);
+        assert!(zero_seeds.iter().all(|row| row.is_empty()));
     }
 
     #[test]

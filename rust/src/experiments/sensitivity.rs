@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::experiments::runner::{run_cell, CellSpec, Regime};
+use crate::experiments::runner::{CellSpec, Regime};
 use crate::experiments::ExpOpts;
 use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
 use crate::metrics::Aggregate;
@@ -25,13 +25,27 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
     let mut max_sat_drift: f64 = 0.0;
     let mut max_short_drift: f64 = 0.0;
     let mut min_cr: f64 = 1.0;
+    let mut cells = Vec::new();
+    for regime in Regime::GRID {
+        for factor in FACTORS {
+            cells.push((regime, factor));
+        }
+    }
+    let specs: Vec<CellSpec> = cells
+        .iter()
+        .map(|(regime, factor)| {
+            let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+            sched.overload = sched.overload.perturbed(*factor);
+            CellSpec::new(*regime, sched, opts.n_requests)
+        })
+        .collect();
+    let all_runs = opts.sweep().run_cells(&specs, opts.seeds);
+    let mut results = cells.into_iter().zip(all_runs);
     for regime in Regime::GRID {
         let mut baseline: Option<(f64, f64)> = None; // (short, sat)
         for factor in FACTORS {
-            let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
-            sched.overload = sched.overload.perturbed(factor);
-            let spec = CellSpec::new(regime, sched, opts.n_requests);
-            let runs = run_cell(&spec, opts.seeds);
+            let ((cell_regime, cell_factor), runs) = results.next().expect("one result per cell");
+            debug_assert!(cell_regime == regime && cell_factor == factor);
             let agg = Aggregate::new(&runs);
             let short = agg.mean_std(|m| m.short_p95_ms);
             let cr = agg.mean_std(|m| m.completion_rate);

@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::experiments::runner::{run_cell, CellSpec, Congestion, Regime};
+use crate::experiments::runner::{CellSpec, Congestion, Regime};
 use crate::experiments::ExpOpts;
 use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
 use crate::metrics::Aggregate;
@@ -24,9 +24,14 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "makespan_mean", "makespan_std", "satisfaction_mean", "satisfaction_std", "cr_mean",
         "goodput_mean",
     ]);
-    for strategy in STRATEGIES {
-        let spec = CellSpec::new(regime, SchedulerCfg::for_strategy(strategy), opts.n_requests);
-        let runs = run_cell(&spec, opts.seeds);
+    let specs: Vec<CellSpec> = STRATEGIES
+        .iter()
+        .map(|strategy| {
+            CellSpec::new(regime, SchedulerCfg::for_strategy(*strategy), opts.n_requests)
+        })
+        .collect();
+    let all_runs = opts.sweep().run_cells(&specs, opts.seeds);
+    for (strategy, runs) in STRATEGIES.iter().zip(all_runs) {
         let agg = Aggregate::new(&runs);
         let short = agg.mean_std(|m| m.short_p95_ms);
         let global = agg.mean_std(|m| m.global_p95_ms);

@@ -2,7 +2,7 @@
 //! smoke tests, and the real-time serve demo.
 //!
 //! Usage:
-//!   bbsched exp <name|all> [--seeds N] [--requests N] [--out DIR]
+//!   bbsched exp <name|all> [--seeds N] [--requests N] [--jobs N] [--out DIR]
 //!   bbsched run [--strategy S] [--mix M] [--rate R] [--seed N] ...
 //!   bbsched trace gen|show [--out PATH] ...
 //!   bbsched predict [--artifacts DIR] [--n N]        (PJRT smoke + goldens)
@@ -68,6 +68,7 @@ fn cmd_exp(args: &[String]) -> Result<()> {
     let cmd = Cmd::new("exp", "regenerate paper tables/figures")
         .opt("seeds", "5", "seeds per cell")
         .opt("requests", "200", "offered requests per run")
+        .opt("jobs", "0", "sweep worker threads (0 = all cores; output is identical for any value)")
         .opt("out", "paper_results/tables", "CSV output dir")
         .flag("verbose", "per-seed detail")
         .positionals();
@@ -81,6 +82,7 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         seeds: a.u64("seeds")?,
         n_requests: a.usize("requests")?,
         out_dir: a.str("out").to_string(),
+        jobs: a.usize("jobs")?,
         verbose: a.flag("verbose"),
     };
     experiments::run_experiment(name, &opts)

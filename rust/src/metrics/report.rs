@@ -33,7 +33,7 @@ impl TextTable {
                 if i > 0 {
                     out.push_str("  ");
                 }
-                out.push_str(&format!("{c:<w$}", w = w));
+                out.push_str(&format!("{c:<w$}", w = *w));
             }
             out.push('\n');
         };

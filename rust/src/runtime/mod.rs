@@ -5,6 +5,13 @@
 //! trained weights baked in as constants. Interchange is HLO *text* (the
 //! image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id serialized
 //! protos; the text parser reassigns ids).
+//!
+//! The execution path needs the `xla` PJRT bindings, which not every build
+//! environment vendors, so it is gated behind the `pjrt` cargo feature.
+//! Without the feature a stub [`Predictor`] with the identical signature is
+//! compiled instead: `load` fails with an actionable message and every
+//! caller (serve demo, `bbsched predict`, benches) degrades to the analytic
+//! ladder sources, keeping the default build dependency-free.
 
 pub mod meta;
 pub mod nn;
@@ -12,94 +19,146 @@ pub mod nn;
 pub use meta::PredictorMeta;
 pub use nn::NnPriorSource;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use anyhow::{bail, Context, Result};
 
-use crate::core::Priors;
-use crate::predictor::features::D_IN;
+    use super::meta::PredictorMeta;
+    use crate::core::Priors;
+    use crate::predictor::features::D_IN;
 
-/// A compiled predictor executable at one static batch size.
-struct BatchExe {
-    batch: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The AOT predictor served through PJRT.
-pub struct Predictor {
-    _client: xla::PjRtClient,
-    exes: Vec<BatchExe>,
-    pub meta: PredictorMeta,
-}
-
-impl Predictor {
-    /// Load every artifact listed in `predictor_meta.json` and compile it on
-    /// the PJRT CPU client.
-    pub fn load(artifacts_dir: &str) -> Result<Predictor> {
-        let meta = PredictorMeta::load(&format!("{artifacts_dir}/predictor_meta.json"))
-            .context("loading predictor_meta.json (run `make artifacts`)")?;
-        meta.check_constants().context("artifact/binary constants drift")?;
-        if meta.d_in != D_IN {
-            bail!("artifact d_in {} != binary D_IN {}", meta.d_in, D_IN);
-        }
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut exes = Vec::new();
-        for (batch, name) in meta.batch_sizes.iter().zip(meta.artifacts.iter()) {
-            let path = format!("{artifacts_dir}/{name}");
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing HLO text {path}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-            exes.push(BatchExe { batch: *batch, exe });
-        }
-        exes.sort_by_key(|e| e.batch);
-        Ok(Predictor { _client: client, exes, meta })
+    /// A compiled predictor executable at one static batch size.
+    struct BatchExe {
+        batch: usize,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    /// Largest compiled batch size.
-    pub fn max_batch(&self) -> usize {
-        self.exes.last().map(|e| e.batch).unwrap_or(0)
+    /// The AOT predictor served through PJRT.
+    pub struct Predictor {
+        _client: xla::PjRtClient,
+        exes: Vec<BatchExe>,
+        pub meta: PredictorMeta,
     }
 
-    /// Run the predictor on `n` feature rows (row-major `n × D_IN`).
-    /// Rows beyond the chosen executable's batch are processed in chunks.
-    /// Returns one `Priors` per input row.
-    pub fn predict(&self, features: &[f32], n: usize) -> Result<Vec<Priors>> {
-        assert_eq!(features.len(), n * D_IN, "feature matrix shape");
-        let mut out = Vec::with_capacity(n);
-        let mut row = 0;
-        while row < n {
-            let remaining = n - row;
-            // Smallest executable that covers the remainder, else the largest.
-            let exe = self
-                .exes
-                .iter()
-                .find(|e| e.batch >= remaining)
-                .or_else(|| self.exes.last())
-                .context("no compiled executables")?;
-            let take = remaining.min(exe.batch);
-            let mut padded = vec![0.0f32; exe.batch * D_IN];
-            padded[..take * D_IN].copy_from_slice(&features[row * D_IN..(row + take) * D_IN]);
-            let quantiles = self.execute_one(exe, &padded)?;
-            for i in 0..take {
-                out.push(Priors::new(quantiles[2 * i] as f64, quantiles[2 * i + 1] as f64));
+    impl Predictor {
+        /// Load every artifact listed in `predictor_meta.json` and compile
+        /// it on the PJRT CPU client.
+        pub fn load(artifacts_dir: &str) -> Result<Predictor> {
+            let meta = PredictorMeta::load(&format!("{artifacts_dir}/predictor_meta.json"))
+                .context("loading predictor_meta.json (run `make artifacts`)")?;
+            meta.check_constants().context("artifact/binary constants drift")?;
+            if meta.d_in != D_IN {
+                bail!("artifact d_in {} != binary D_IN {}", meta.d_in, D_IN);
             }
-            row += take;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let mut exes = Vec::new();
+            for (batch, name) in meta.batch_sizes.iter().zip(meta.artifacts.iter()) {
+                let path = format!("{artifacts_dir}/{name}");
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parsing HLO text {path}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+                exes.push(BatchExe { batch: *batch, exe });
+            }
+            exes.sort_by_key(|e| e.batch);
+            Ok(Predictor { _client: client, exes, meta })
         }
-        Ok(out)
-    }
 
-    /// Execute one padded batch; returns the raw (batch × 2) quantile rows.
-    fn execute_one(&self, exe: &BatchExe, padded: &[f32]) -> Result<Vec<f32>> {
-        let x = xla::Literal::vec1(padded).reshape(&[exe.batch as i64, D_IN as i64])?;
-        let result = exe.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → 1-tuple.
-        let out = result.to_tuple1()?;
-        let v = out.to_vec::<f32>()?;
-        if v.len() != exe.batch * 2 {
-            bail!("unexpected output size {} (want {})", v.len(), exe.batch * 2);
+        /// Largest compiled batch size.
+        pub fn max_batch(&self) -> usize {
+            self.exes.last().map(|e| e.batch).unwrap_or(0)
         }
-        Ok(v)
+
+        /// Run the predictor on `n` feature rows (row-major `n × D_IN`).
+        /// Rows beyond the chosen executable's batch are processed in
+        /// chunks. Returns one `Priors` per input row.
+        pub fn predict(&self, features: &[f32], n: usize) -> Result<Vec<Priors>> {
+            assert_eq!(features.len(), n * D_IN, "feature matrix shape");
+            let mut out = Vec::with_capacity(n);
+            let mut row = 0;
+            while row < n {
+                let remaining = n - row;
+                // Smallest executable that covers the remainder, else the largest.
+                let exe = self
+                    .exes
+                    .iter()
+                    .find(|e| e.batch >= remaining)
+                    .or_else(|| self.exes.last())
+                    .context("no compiled executables")?;
+                let take = remaining.min(exe.batch);
+                let mut padded = vec![0.0f32; exe.batch * D_IN];
+                padded[..take * D_IN]
+                    .copy_from_slice(&features[row * D_IN..(row + take) * D_IN]);
+                let quantiles = self.execute_one(exe, &padded)?;
+                for i in 0..take {
+                    out.push(Priors::new(quantiles[2 * i] as f64, quantiles[2 * i + 1] as f64));
+                }
+                row += take;
+            }
+            Ok(out)
+        }
+
+        /// Execute one padded batch; returns the raw (batch × 2) quantile rows.
+        fn execute_one(&self, exe: &BatchExe, padded: &[f32]) -> Result<Vec<f32>> {
+            let x = xla::Literal::vec1(padded).reshape(&[exe.batch as i64, D_IN as i64])?;
+            let result = exe.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True → 1-tuple.
+            let out = result.to_tuple1()?;
+            let v = out.to_vec::<f32>()?;
+            if v.len() != exe.batch * 2 {
+                bail!("unexpected output size {} (want {})", v.len(), exe.batch * 2);
+            }
+            Ok(v)
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Predictor;
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    use anyhow::{bail, Result};
+
+    use super::meta::PredictorMeta;
+    use crate::core::Priors;
+
+    /// Stub predictor compiled when the `pjrt` feature is disabled (the
+    /// default in environments without the vendored `xla` bindings). The
+    /// public surface matches the real runtime so every caller compiles
+    /// unchanged; loading fails with an actionable message and the callers
+    /// fall back to the analytic ladder sources.
+    pub struct Predictor {
+        /// Parsed artifact metadata (never populated by the stub; the field
+        /// exists so metadata consumers compile against both builds).
+        pub meta: PredictorMeta,
+    }
+
+    impl Predictor {
+        /// Always fails: the execution path needs the `pjrt` feature.
+        pub fn load(artifacts_dir: &str) -> Result<Predictor> {
+            bail!(
+                "PJRT runtime disabled: this binary was built without the `pjrt` \
+                 cargo feature, so artifacts in {artifacts_dir:?} cannot be served; \
+                 rebuild with `--features pjrt` (requires the xla bindings) or use \
+                 the analytic prior sources"
+            )
+        }
+
+        /// Largest compiled batch size (0: nothing is ever compiled).
+        pub fn max_batch(&self) -> usize {
+            0
+        }
+
+        /// Always fails: no executables exist without the `pjrt` feature.
+        pub fn predict(&self, _features: &[f32], _n: usize) -> Result<Vec<Priors>> {
+            bail!("PJRT runtime disabled: built without the `pjrt` feature")
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub::Predictor;
 
 /// Artifacts directory default, overridable via BBSCHED_ARTIFACTS.
 pub fn default_artifacts_dir() -> String {

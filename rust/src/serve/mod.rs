@@ -126,14 +126,17 @@ pub fn serve_demo(
     let spec = WorkloadSpec::new(Mix::Balanced, n_requests, rate_rps);
     let requests = spec.generate(seed);
 
-    // Priors: PJRT predictor when artifacts exist, analytic ladder otherwise.
-    let mut nn_source: Option<NnPriorSource> = if !artifacts_dir.is_empty()
+    // Priors: PJRT predictor when the runtime is compiled in and artifacts
+    // exist, analytic ladder otherwise (the default build ships a stub
+    // runtime, so artifacts on disk must not turn into a hard failure).
+    let mut nn_source: Option<NnPriorSource> = if cfg!(feature = "pjrt")
+        && !artifacts_dir.is_empty()
         && artifacts_available(artifacts_dir)
     {
         println!("using PJRT predictor from {artifacts_dir}");
         Some(NnPriorSource::new(Predictor::load(artifacts_dir)?))
     } else {
-        println!("artifacts not found — using analytic coarse priors");
+        println!("artifacts not found or PJRT disabled — using analytic coarse priors");
         None
     };
     let mut analytic = LadderSource::new(InfoLevel::Coarse, Rng::new(seed).derive("priors"));

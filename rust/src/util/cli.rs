@@ -5,20 +5,34 @@
 //! `--help` text. Used by `rust/src/main.rs` and every example binary.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag: {0} (try --help)")]
     UnknownFlag(String),
-    #[error("flag {0} expects a value")]
     MissingValue(String),
-    #[error("missing required argument: --{0}")]
     MissingRequired(String),
-    #[error("invalid value for --{flag}: {value:?} ({expected})")]
     Invalid { flag: String, value: String, expected: &'static str },
-    #[error("unexpected positional argument: {0}")]
     UnexpectedPositional(String),
 }
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::UnknownFlag(flag) => write!(f, "unknown flag: {flag} (try --help)"),
+            CliError::MissingValue(flag) => write!(f, "flag {flag} expects a value"),
+            CliError::MissingRequired(name) => write!(f, "missing required argument: --{name}"),
+            CliError::Invalid { flag, value, expected } => {
+                write!(f, "invalid value for --{flag}: {value:?} ({expected})")
+            }
+            CliError::UnexpectedPositional(arg) => {
+                write!(f, "unexpected positional argument: {arg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// One declared option.
 #[derive(Debug, Clone)]

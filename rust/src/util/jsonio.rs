@@ -21,16 +21,40 @@ pub enum Json {
     Obj(Vec<(String, Json)>),
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json type error: expected {expected} at {path}")]
     Type { expected: &'static str, path: String },
-    #[error("json missing key: {0}")]
     Missing(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => write!(f, "json parse error at byte {pos}: {msg}"),
+            JsonError::Type { expected, path } => {
+                write!(f, "json type error: expected {expected} at {path}")
+            }
+            JsonError::Missing(key) => write!(f, "json missing key: {key}"),
+            JsonError::Io(err) => write!(f, "io: {err}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            JsonError::Io(err) => Some(err),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for JsonError {
+    fn from(err: std::io::Error) -> JsonError {
+        JsonError::Io(err)
+    }
 }
 
 impl Json {

@@ -1,9 +1,11 @@
 //! Dependency-free substrates: deterministic RNG, JSON/CSV I/O, CLI
-//! parsing, and statistics (the offline image vendors only the `xla`
-//! closure, so these replace rand/serde/clap/criterion-adjacent helpers).
+//! parsing, statistics, and the scoped worker pool (the offline image
+//! vendors only the `xla` closure, so these replace
+//! rand/serde/clap/rayon/criterion-adjacent helpers).
 
 pub mod cli;
 pub mod csvio;
 pub mod jsonio;
+pub mod pool;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,134 @@
+//! Scoped worker pool for deterministic fan-out (std::thread only — the
+//! offline image vendors no rayon).
+//!
+//! [`scoped_map`] runs a function over a work list on up to `jobs` threads
+//! and returns the results **in input order**, so a parallel experiment
+//! sweep is byte-identical to a serial one. Workers claim the next
+//! unclaimed index from a shared atomic counter (dynamic load balancing —
+//! experiment cells have very uneven costs), and every item is executed
+//! exactly once: the counter hands each index to exactly one worker, and
+//! the per-slot `Option` take asserts single ownership.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count meaning "all available cores".
+pub const ALL_CORES: usize = 0;
+
+/// Number of worker threads used when `jobs == 0` (all available cores).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` with up to `jobs` workers, preserving input order.
+///
+/// `jobs == 0` means [`default_jobs`]; the effective worker count is also
+/// capped by the item count. With one worker the items run serially on the
+/// calling thread — the same code path a `--jobs 1` sweep takes. A panic in
+/// `f` propagates to the caller after the scope joins its workers.
+pub fn scoped_map<T, R, F>(items: Vec<T>, jobs: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let requested = if jobs == ALL_CORES { default_jobs() } else { jobs };
+    let jobs = requested.min(n.max(1));
+    if jobs <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // Per-slot locks (not one big queue lock): claims are index-based via
+    // the atomic counter, so workers never contend on the same slot.
+    let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().expect("index claimed exactly once");
+                let r = f(item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = scoped_map(items, 8, |x| x * 3);
+        assert_eq!(out, (0..257).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn executes_every_job_exactly_once_under_contention() {
+        // Many more jobs than cores, with uneven per-item work so workers
+        // race on the claim counter: every per-item counter must end at 1.
+        let n = 500;
+        let counts: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        let out = scoped_map((0..n).collect::<Vec<usize>>(), 16, |i| {
+            counts[i].fetch_add(1, Ordering::SeqCst);
+            // Uneven spin: early items are much more expensive.
+            let mut acc = 0u64;
+            for k in 0..((n - i) as u64 * 50) {
+                acc = acc.wrapping_add(std::hint::black_box(k));
+            }
+            (i, acc)
+        });
+        assert_eq!(out.len(), n);
+        for (idx, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "item {idx} run count");
+        }
+        for (idx, (i, _)) in out.iter().enumerate() {
+            assert_eq!(*i, idx, "result slot matches input slot");
+        }
+    }
+
+    #[test]
+    fn matches_serial_for_any_job_count() {
+        let serial = scoped_map((0..40).collect::<Vec<i64>>(), 1, |x| x * x - 7);
+        for jobs in [0, 2, 3, 8, 64] {
+            let par = scoped_map((0..40).collect::<Vec<i64>>(), jobs, |x| x * x - 7);
+            assert_eq!(par, serial, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let out = scoped_map(vec![10, 20], 32, |x| x + 1);
+        assert_eq!(out, vec![11, 21]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<u32> = scoped_map(Vec::<u32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+
+    #[test]
+    fn moves_non_copy_items() {
+        let items: Vec<String> = (0..20).map(|i| format!("req-{i}")).collect();
+        let out = scoped_map(items, 4, |s| s.len());
+        assert_eq!(out[0], 5);
+        assert_eq!(out[19], 6);
+    }
+}

@@ -1,0 +1,97 @@
+//! Integration: the deterministic-parallelism contract. `ParallelSweep`
+//! must reproduce serial `run_cell` output bit-for-bit — same cells, same
+//! order, same float bits — for any worker count, because the experiment
+//! CSVs are required to be byte-identical between `--jobs 1` and
+//! `--jobs N` (CI diffs them on every run).
+
+use blackbox_sched::experiments::runner::{run_cell, CellSpec, Congestion, ParallelSweep, Regime};
+use blackbox_sched::metrics::RunMetrics;
+use blackbox_sched::scheduler::{SchedulerCfg, StrategyKind};
+use blackbox_sched::util::pool;
+use blackbox_sched::workload::Mix;
+
+fn grid_2x2() -> Vec<CellSpec> {
+    let regimes = [
+        Regime { mix: Mix::Balanced, congestion: Congestion::High },
+        Regime { mix: Mix::Heavy, congestion: Congestion::Medium },
+    ];
+    let strategies = [StrategyKind::QuotaTiered, StrategyKind::FinalAdrrOlc];
+    let mut specs = Vec::new();
+    for regime in regimes {
+        for strategy in strategies {
+            specs.push(CellSpec::new(regime, SchedulerCfg::for_strategy(strategy), 40));
+        }
+    }
+    specs
+}
+
+fn assert_metrics_identical(a: &RunMetrics, b: &RunMetrics, ctx: &str) {
+    assert_eq!(a.n_offered, b.n_offered, "{ctx}");
+    assert_eq!(a.n_completed, b.n_completed, "{ctx}");
+    assert_eq!(a.n_rejected, b.n_rejected, "{ctx}");
+    assert_eq!(a.n_timed_out, b.n_timed_out, "{ctx}");
+    assert_eq!(a.defers_total, b.defers_total, "{ctx}");
+    assert_eq!(a.rejects_total, b.rejects_total, "{ctx}");
+    assert_eq!(a.defers_by_bucket, b.defers_by_bucket, "{ctx}");
+    assert_eq!(a.rejects_by_bucket, b.rejects_by_bucket, "{ctx}");
+    assert_eq!(a.completed_by_bucket, b.completed_by_bucket, "{ctx}");
+    assert_eq!(a.feasibility_violations, b.feasibility_violations, "{ctx}");
+    for (name, x, y) in [
+        ("short_p95_ms", a.short_p95_ms, b.short_p95_ms),
+        ("short_p90_ms", a.short_p90_ms, b.short_p90_ms),
+        ("global_p95_ms", a.global_p95_ms, b.global_p95_ms),
+        ("global_std_ms", a.global_std_ms, b.global_std_ms),
+        ("heavy_p90_ms", a.heavy_p90_ms, b.heavy_p90_ms),
+        ("completion_rate", a.completion_rate, b.completion_rate),
+        ("satisfaction", a.satisfaction, b.satisfaction),
+        ("goodput_rps", a.goodput_rps, b.goodput_rps),
+        ("makespan_ms", a.makespan_ms, b.makespan_ms),
+    ] {
+        // Bit comparison is NaN-safe and catches any cross-thread float
+        // drift that a tolerance compare would mask.
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name} {x} vs {y}");
+    }
+}
+
+#[test]
+fn sweep_is_bit_identical_to_serial_for_2x2x3_grid() {
+    let specs = grid_2x2();
+    let serial: Vec<Vec<RunMetrics>> = specs.iter().map(|s| run_cell(s, 3)).collect();
+    for jobs in [1usize, 2, 3, 4, 8] {
+        let par = ParallelSweep::new(jobs).run_cells(&specs, 3);
+        assert_eq!(par.len(), serial.len());
+        for (cell, (pc, sc)) in par.iter().zip(&serial).enumerate() {
+            assert_eq!(pc.len(), sc.len(), "cell {cell}");
+            for (seed, (a, b)) in pc.iter().zip(sc).enumerate() {
+                assert_metrics_identical(a, b, &format!("jobs={jobs} cell={cell} seed={seed}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sweep_preserves_paired_comparison_across_policies() {
+    // The controlled-evaluation requirement survives parallel execution:
+    // per-seed offered-by-bucket tables are identical across policies in
+    // the same regime, because every job regenerates its workload from the
+    // (regime, seed) pair alone.
+    let specs = grid_2x2();
+    let runs = ParallelSweep::new(4).run_cells(&specs, 3);
+    // Cells 0 and 1 share a regime; so do cells 2 and 3.
+    for pair in [(0usize, 1usize), (2, 3)] {
+        for seed in 0..3 {
+            assert_eq!(
+                runs[pair.0][seed].offered_by_bucket,
+                runs[pair.1][seed].offered_by_bucket,
+                "policies in one regime must see identical per-seed workloads"
+            );
+        }
+    }
+}
+
+#[test]
+fn pool_default_jobs_reflects_cores() {
+    // Smoke check that the default worker count is sane on this host.
+    let jobs = pool::default_jobs();
+    assert!(jobs >= 1 && jobs <= 4096);
+}

@@ -1,0 +1,176 @@
+//! Minimal, vendored stand-in for the `anyhow` crate.
+//!
+//! The offline build image has no crates.io access, so the workspace ships
+//! the small slice of anyhow's API this codebase actually uses as a path
+//! dependency: [`Error`], [`Result`], the [`Context`] extension trait, and
+//! the [`bail!`]/[`anyhow!`]/[`ensure!`] macros.
+//!
+//! Differences from upstream anyhow, chosen for a dependency-free build:
+//! * `Error` is a plain `Box<dyn std::error::Error + Send + Sync>` type
+//!   alias, so every `?` conversion rides the std `From` impls (any
+//!   `std::error::Error + Send + Sync` type, plus `String`/`&str`).
+//! * Context frames are [`ContextError`] wrappers; normal `Display` prints
+//!   the outermost message and alternate (`{:#}`) formatting prints the
+//!   full `outer: inner: …` chain, matching upstream's report style.
+//! * No backtrace capture and no downcasting helpers (unused here).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Boxed dynamic error. Any `std::error::Error + Send + Sync` value
+/// converts into it via `?`; strings convert via the std `From` impls.
+pub type Error = Box<dyn StdError + Send + Sync + 'static>;
+
+/// `Result` with a boxed-error default, mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// One context frame stacked on top of an underlying cause.
+#[derive(Debug)]
+pub struct ContextError {
+    context: String,
+    source: Error,
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}: {:#}", self.context, self.source)
+        } else {
+            write!(f, "{}", self.context)
+        }
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        Some(&*self.source)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`, like `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap the error (or `None`) with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            Box::new(ContextError { context: context.to_string(), source: e.into() }) as Error
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            Box::new(ContextError { context: f().to_string(), source: e.into() }) as Error
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::from(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::from(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::from(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    fn fails() -> Result<()> {
+        bail!("broke at step {}", 3)
+    }
+
+    #[test]
+    fn bail_formats_message() {
+        let err = fails().unwrap_err();
+        assert_eq!(err.to_string(), "broke at step 3");
+        assert_eq!(format!("{err:#}"), "broke at step 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err::<(), std::io::Error>(io_err())?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert!(err.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_under_alternate_formatting() {
+        let err: Error = Err::<(), _>(io_err()).context("reading meta").unwrap_err();
+        assert_eq!(err.to_string(), "reading meta");
+        let full = format!("{err:#}");
+        assert!(full.starts_with("reading meta: "), "{full}");
+        assert!(full.contains("gone"), "{full}");
+        // Double-wrapped context keeps the whole chain visible.
+        let err2: Error = Err::<(), _>(err).with_context(|| "loading predictor").unwrap_err();
+        let full2 = format!("{err2:#}");
+        assert!(full2.starts_with("loading predictor: reading meta: "), "{full2}");
+    }
+
+    #[test]
+    fn option_context() {
+        let err = None::<u32>.context("missing value").unwrap_err();
+        assert_eq!(err.to_string(), "missing value");
+        let ok = Some(7u32).with_context(|| "unused").unwrap();
+        assert_eq!(ok, 7);
+    }
+
+    #[test]
+    fn ensure_returns_on_false() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(2).unwrap(), 2);
+        assert!(check(-1).unwrap_err().to_string().contains("-1"));
+    }
+
+    #[test]
+    fn source_chain_is_walkable() {
+        let err: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        let src = err.source().expect("context keeps the cause");
+        assert!(src.to_string().contains("gone"));
+    }
+}
