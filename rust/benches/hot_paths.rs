@@ -3,17 +3,30 @@
 //! These are the numbers tracked in EXPERIMENTS.md §Perf.
 
 use blackbox_sched::bench::Suite;
-use blackbox_sched::core::{Class, Priors};
+use blackbox_sched::core::{Class, Priors, TokenBucket};
 use blackbox_sched::predictor::features::batch_features;
-use blackbox_sched::predictor::{InfoLevel, LadderSource, PriorSource};
+use blackbox_sched::predictor::{InfoLevel, LadderSource, PriorSource, Route};
 use blackbox_sched::provider::{MockProvider, ProviderCfg};
 use blackbox_sched::runtime::{artifacts_available, default_artifacts_dir, Predictor};
+use blackbox_sched::scheduler::ordering::{FeasibleSet, Ordering, OrderingCfg};
+use blackbox_sched::scheduler::queues::{ClassQueues, SchedRequest};
 use blackbox_sched::scheduler::{Action, ClientScheduler, SchedulerCfg, StrategyKind};
 use blackbox_sched::sim::driver;
 use blackbox_sched::sim::EventQueue;
 use blackbox_sched::util::rng::Rng;
-use blackbox_sched::util::stats::percentile;
+use blackbox_sched::util::stats::{percentile, percentile_sorted};
 use blackbox_sched::workload::{Mix, WorkloadSpec};
+
+fn heavy_sreq(id: usize, arrival: f64, p50: f64) -> SchedRequest {
+    SchedRequest {
+        id,
+        arrival_ms: arrival,
+        deadline_ms: arrival + 40_000.0,
+        priors: Priors::new(p50, p50 * 1.5),
+        route: Route::from_bucket(TokenBucket::Long),
+        defer_attempts: 0,
+    }
+}
 
 fn main() {
     let mut suite = Suite::new("hot_paths");
@@ -46,6 +59,44 @@ fn main() {
         let (t, v) = q.pop().unwrap();
         q.push(t + 1000.0, v);
     });
+    let mut qc: EventQueue<u32> = EventQueue::new();
+    for i in 0..1000 {
+        qc.push_cancelable(i as f64, i);
+    }
+    let mut cancel_t = 1000.0;
+    suite.bench("event queue: cancelable churn (1k queue)", || {
+        // push a timer, cancel it, recycle one live entry — the lazy
+        // deletion path plus slot reuse.
+        let id = qc.push_cancelable(cancel_t, 0);
+        cancel_t += 1.0;
+        qc.cancel(id);
+        let (t, v) = qc.pop().unwrap();
+        qc.push_cancelable(t + 1000.0, v);
+    });
+
+    // ---- slab-indexed scheduler queues ----
+    let mut cq = ClassQueues::new();
+    for id in 0..10_000 {
+        cq.push(heavy_sreq(id, id as f64, 300.0));
+    }
+    let mut next_id = 10_000usize;
+    let mut oldest = 0usize;
+    suite.bench("queues: push + remove_id (10k deep)", || {
+        cq.push(heavy_sreq(next_id, next_id as f64, 300.0));
+        next_id += 1;
+        std::hint::black_box(cq.remove_id(oldest));
+        oldest += 1;
+    });
+    let mut fq = ClassQueues::new();
+    for id in 0..1_000 {
+        fq.push(heavy_sreq(id, id as f64, 100.0 + (id % 29) as f64 * 100.0));
+    }
+    let mut fsel = FeasibleSet::new(OrderingCfg::default());
+    let mut sel_now = 1_000.0;
+    suite.bench("ordering: feasible-set select (1k deep)", || {
+        sel_now += 1.0;
+        std::hint::black_box(fsel.select(fq.view(Class::Heavy), sel_now));
+    });
 
     // ---- provider ----
     let mut provider = MockProvider::new(ProviderCfg::default(), Rng::new(3));
@@ -70,14 +121,18 @@ fn main() {
     let mut j = 0usize;
     let mut sched = ClientScheduler::new(SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc));
     let mut ladder = LadderSource::new(InfoLevel::Coarse, Rng::new(11));
+    let mut actions: Vec<Action> = Vec::new();
+    let mut drain: Vec<Action> = Vec::new();
     suite.bench("scheduler: arrival→actions (Final OLC)", || {
         let r = &reqs[j % reqs.len()];
         let (p, route) = ladder.priors(r);
-        let actions = sched.on_arrival(r, p, route, j as f64);
+        actions.clear();
+        sched.on_arrival(r, p, route, j as f64, &mut actions);
         // Drain sends so in-flight doesn't saturate: fake completions.
-        for a in actions {
-            if let Action::Send { id } = a {
-                sched.on_completion(id, 200.0, 2500.0, j as f64 + 1.0);
+        for a in &actions {
+            if let Action::Send { id } = *a {
+                drain.clear();
+                sched.on_completion(id, 200.0, 2500.0, j as f64 + 1.0, &mut drain);
             }
         }
         j += 1;
@@ -98,11 +153,15 @@ fn main() {
     });
 
     // ---- metrics ----
-    let mut lat: Vec<f64> = (0..10_000).map(|i| (i as f64 * 37.7) % 5000.0).collect();
+    let lat: Vec<f64> = (0..10_000).map(|i| (i as f64 * 37.7) % 5000.0).collect();
     suite.bench("metrics: p95 over 10k samples", || {
         std::hint::black_box(percentile(&lat, 95.0));
     });
-    lat.truncate(10_000);
+    let mut sorted = lat.clone();
+    sorted.sort_unstable_by(f64::total_cmp);
+    suite.bench("metrics: p95 presorted (one-sort path)", || {
+        std::hint::black_box(percentile_sorted(&sorted, 95.0));
+    });
 
     // ---- PJRT predictor (feature- and artifact-gated) ----
     let dir = default_artifacts_dir();
@@ -123,7 +182,5 @@ fn main() {
         println!("(skipping PJRT benches: build with --features pjrt and run `make artifacts`)");
     }
 
-    let _ = Class::Interactive; // keep import for doc symmetry
-    let _ = Priors::new(1.0, 2.0);
     suite.finish();
 }

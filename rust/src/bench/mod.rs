@@ -6,7 +6,23 @@
 //! a criterion-style `name  time/iter  ±std  iters` table. End-to-end table
 //! benches reuse the same harness with one iteration per seed.
 
+pub mod perf;
+
 use std::time::Instant;
+
+/// Peak resident set size of this process in kB (`VmHWM` from
+/// `/proc/self/status`) — the perf harness's memory proxy. Returns 0 on
+/// platforms without procfs.
+pub fn peak_rss_kb() -> u64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                return rest.split_whitespace().next().and_then(|v| v.parse().ok()).unwrap_or(0);
+            }
+        }
+    }
+    0
+}
 
 /// One measured benchmark result.
 #[derive(Debug, Clone)]

@@ -1,0 +1,242 @@
+//! `bbsched bench` — the standardized scale/perf harness behind BENCH.json.
+//!
+//! Runs the full DES driver over a large-scale workload (default 10k and
+//! 100k requests) for **every** strategy, measuring wall time, engine
+//! throughput (events/s), timer-cancellation effectiveness, and a peak-RSS
+//! proxy, then writes the results as `BENCH.json` so the repo accumulates a
+//! perf trajectory across PRs. A per-strategy scaling exponent
+//! (`ln(t_hi/t_lo) / ln(n_hi/n_lo)`) makes O(n²) regressions visible at a
+//! glance: healthy hot paths stay near 1.0.
+//!
+//! Numbers are informational, not gating — CI runs `bbsched bench --smoke`
+//! and fails only on panic, uploading BENCH.json as an artifact.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::bench::peak_rss_kb;
+use crate::metrics::report::TextTable;
+use crate::predictor::{InfoLevel, LadderSource};
+use crate::provider::ProviderCfg;
+use crate::scheduler::{SchedulerCfg, StrategyKind};
+use crate::sim::driver;
+use crate::util::jsonio::Json;
+use crate::util::rng::Rng;
+use crate::workload::{Mix, WorkloadSpec};
+
+/// Scale-bench configuration (CLI-settable via `bbsched bench`).
+#[derive(Debug, Clone)]
+pub struct ScaleBenchOpts {
+    /// Request counts to run, ascending; the scaling exponent compares the
+    /// first and last.
+    pub sizes: Vec<usize>,
+    /// Offered arrival rate (req/s). The default sits in the paper's
+    /// "high congestion" band so queues carry realistic depth.
+    pub rate_rps: f64,
+    pub mix: Mix,
+    pub seed: u64,
+    /// Where to write BENCH.json.
+    pub out_path: String,
+}
+
+impl Default for ScaleBenchOpts {
+    fn default() -> Self {
+        ScaleBenchOpts {
+            sizes: vec![10_000, 100_000],
+            rate_rps: 20.0,
+            mix: Mix::Balanced,
+            seed: 0,
+            out_path: "BENCH.json".to_string(),
+        }
+    }
+}
+
+struct RunRecord {
+    strategy: &'static str,
+    requests: usize,
+    wall_ms: f64,
+    events_processed: u64,
+    events_skipped: u64,
+    timers_canceled: u64,
+    events_per_sec: f64,
+    sends: u64,
+    completed: usize,
+    rejected: usize,
+    timed_out: usize,
+    /// Process-lifetime VmHWM after this run — monotone across records
+    /// (earlier memory-heavy runs dominate later readings).
+    peak_rss_kb: u64,
+    /// VmHWM growth attributable to this run (reading after − before);
+    /// 0 when the run stayed under the previous high-water mark.
+    peak_rss_growth_kb: u64,
+}
+
+impl RunRecord {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("strategy", self.strategy)
+            .set("requests", self.requests)
+            .set("wall_ms", self.wall_ms)
+            .set("events_processed", self.events_processed)
+            .set("events_skipped", self.events_skipped)
+            .set("timers_canceled", self.timers_canceled)
+            .set("events_per_sec", self.events_per_sec)
+            .set("sends", self.sends)
+            .set("completed", self.completed)
+            .set("rejected", self.rejected)
+            .set("timed_out", self.timed_out)
+            .set("peak_rss_kb", self.peak_rss_kb)
+            .set("peak_rss_growth_kb", self.peak_rss_growth_kb)
+    }
+}
+
+/// Run the scale bench: every strategy × every size, one shared workload
+/// per size (the paired-comparison guarantee), BENCH.json at the end.
+pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
+    anyhow::ensure!(!opts.sizes.is_empty(), "bench needs at least one size");
+    let mut records: Vec<RunRecord> = Vec::new();
+
+    for &n in &opts.sizes {
+        println!(
+            "== scale bench: {n} requests, {} req/s, mix {} ==",
+            opts.rate_rps,
+            opts.mix.name()
+        );
+        let requests = WorkloadSpec::new(opts.mix, n, opts.rate_rps).generate(opts.seed);
+        for strategy in StrategyKind::ALL {
+            let mut src = LadderSource::new(
+                InfoLevel::Coarse,
+                Rng::new(opts.seed ^ 0x5EED_50_u64).derive("priors"),
+            );
+            let rss_before = peak_rss_kb();
+            let t0 = Instant::now();
+            let out = driver::run(
+                &requests,
+                &mut src,
+                SchedulerCfg::for_strategy(strategy),
+                ProviderCfg::default(),
+                opts.seed,
+            );
+            let wall_s = t0.elapsed().as_secs_f64();
+            let rss_after = peak_rss_kb();
+            let d = &out.diagnostics;
+            let rec = RunRecord {
+                strategy: strategy.name(),
+                requests: n,
+                wall_ms: wall_s * 1e3,
+                events_processed: d.events_processed,
+                events_skipped: d.events_skipped,
+                timers_canceled: d.timers_canceled,
+                events_per_sec: if wall_s > 0.0 { d.events_processed as f64 / wall_s } else { 0.0 },
+                sends: d.sends,
+                completed: out.metrics.n_completed,
+                rejected: out.metrics.n_rejected,
+                timed_out: out.metrics.n_timed_out,
+                peak_rss_kb: rss_after,
+                peak_rss_growth_kb: rss_after.saturating_sub(rss_before),
+            };
+            println!(
+                "  {:<16} {:>9.1} ms  {:>10.0} ev/s  {:>8} events  {:>6} canceled  CR {:.3}",
+                rec.strategy,
+                rec.wall_ms,
+                rec.events_per_sec,
+                rec.events_processed,
+                rec.timers_canceled,
+                out.metrics.completion_rate,
+            );
+            records.push(rec);
+        }
+    }
+
+    // Scaling exponents: first vs last size per strategy. Near 1.0 means
+    // the hot path is linear in offered load; 2.0 would be the old O(n²).
+    let mut scaling: Vec<Json> = Vec::new();
+    if opts.sizes.len() >= 2 {
+        let n_lo = opts.sizes[0];
+        let n_hi = *opts.sizes.last().unwrap();
+        println!("\n-- scaling {n_lo} → {n_hi} (exponent ≈ 1.0 is linear) --");
+        let mut t = TextTable::new(["strategy", "wall lo (ms)", "wall hi (ms)", "exponent"]);
+        for strategy in StrategyKind::ALL {
+            let find = |n: usize| {
+                records
+                    .iter()
+                    .find(|r| r.strategy == strategy.name() && r.requests == n)
+                    .map(|r| r.wall_ms)
+            };
+            if let (Some(lo), Some(hi)) = (find(n_lo), find(n_hi)) {
+                let exponent = if lo > 0.0 && hi > 0.0 {
+                    (hi / lo).ln() / (n_hi as f64 / n_lo as f64).ln()
+                } else {
+                    f64::NAN
+                };
+                t.row([
+                    strategy.name().to_string(),
+                    format!("{lo:.1}"),
+                    format!("{hi:.1}"),
+                    format!("{exponent:.2}"),
+                ]);
+                scaling.push(
+                    Json::obj()
+                        .set("strategy", strategy.name())
+                        .set("n_lo", n_lo)
+                        .set("n_hi", n_hi)
+                        .set("wall_lo_ms", lo)
+                        .set("wall_hi_ms", hi)
+                        .set("exponent", exponent),
+                );
+            }
+        }
+        println!("{}", t.render());
+    }
+
+    let doc = Json::obj()
+        .set("bench", "scale")
+        .set("mix", opts.mix.name())
+        .set("rate_rps", opts.rate_rps)
+        .set("seed", opts.seed)
+        .set("sizes", opts.sizes.clone())
+        .set("runs", Json::Arr(records.iter().map(RunRecord::to_json).collect()))
+        .set("scaling", Json::Arr(scaling));
+    doc.write_file(&opts.out_path)?;
+    println!("wrote {}", opts.out_path);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_bench_runs_and_writes_json() {
+        let out_path = std::env::temp_dir().join("bbsched_bench_test.json");
+        let opts = ScaleBenchOpts {
+            sizes: vec![40, 80],
+            rate_rps: 12.0,
+            out_path: out_path.to_string_lossy().into_owned(),
+            ..ScaleBenchOpts::default()
+        };
+        run_scale_bench(&opts).expect("bench runs");
+        let doc = Json::read_file(&opts.out_path).expect("BENCH.json parses");
+        let runs = doc.get("runs").and_then(Json::as_arr).expect("runs array");
+        assert_eq!(runs.len(), 2 * StrategyKind::ALL.len());
+        let scaling = doc.get("scaling").and_then(Json::as_arr).expect("scaling array");
+        assert_eq!(scaling.len(), StrategyKind::ALL.len());
+        for r in runs {
+            assert!(r.get("wall_ms").and_then(Json::as_f64).unwrap() >= 0.0);
+            let n = r.get("requests").and_then(Json::as_usize).unwrap();
+            let done = r.get("completed").and_then(Json::as_usize).unwrap()
+                + r.get("rejected").and_then(Json::as_usize).unwrap()
+                + r.get("timed_out").and_then(Json::as_usize).unwrap();
+            assert_eq!(done, n, "conservation in bench records");
+        }
+        let _ = std::fs::remove_file(&opts.out_path);
+    }
+
+    #[test]
+    fn peak_rss_proxy_is_sane() {
+        let kb = peak_rss_kb();
+        // Either procfs is absent (0) or we report something plausible.
+        assert!(kb == 0 || kb > 100, "peak_rss_kb = {kb}");
+    }
+}

@@ -4,12 +4,14 @@
 //! Usage:
 //!   bbsched exp <name|all> [--seeds N] [--requests N] [--jobs N] [--out DIR]
 //!   bbsched run [--strategy S] [--mix M] [--rate R] [--seed N] ...
+//!   bbsched bench [--sizes N,N] [--rate R] [--out BENCH.json] [--smoke]
 //!   bbsched trace gen|show [--out PATH] ...
 //!   bbsched predict [--artifacts DIR] [--n N]        (PJRT smoke + goldens)
 //!   bbsched serve [--rate R] [--requests N] [--scale S] (real-time demo)
 
 use anyhow::{bail, Context, Result};
 
+use blackbox_sched::bench::perf::{run_scale_bench, ScaleBenchOpts};
 use blackbox_sched::experiments::{self, ExpOpts};
 use blackbox_sched::metrics::report::TextTable;
 use blackbox_sched::predictor::features::batch_features;
@@ -39,6 +41,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     match sub.as_str() {
         "exp" => cmd_exp(rest),
         "run" => cmd_run(rest),
+        "bench" => cmd_bench(rest),
         "trace" => cmd_trace(rest),
         "predict" => cmd_predict(rest),
         "serve" => cmd_serve(rest),
@@ -57,6 +60,7 @@ fn print_usage() {
          subcommands:\n\
          \x20 exp <name|all>   regenerate paper tables/figures ({})\n\
          \x20 run              one simulated run, printed summary\n\
+         \x20 bench            scale/perf harness (all strategies) → BENCH.json\n\
          \x20 trace gen|show   generate / inspect workload traces\n\
          \x20 predict          PJRT predictor smoke test vs golden vectors\n\
          \x20 serve            real-time serving demo (wall-clock)\n",
@@ -171,6 +175,41 @@ fn cmd_run(args: &[String]) -> Result<()> {
     t.row(["peak provider hidden queue", &output.diagnostics.peak_provider_queue.to_string()]);
     println!("{}", t.render());
     Ok(())
+}
+
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let cmd = Cmd::new("bench", "scale/perf harness: every strategy at large request counts")
+        .opt("sizes", "10000,100000", "comma-separated request counts per run")
+        .opt("rate", "20.0", "arrival rate (req/s)")
+        .opt("mix", "balanced", "balanced|heavy|sharegpt|fairness_heavy")
+        .opt("seed", "0", "random seed (one shared workload per size)")
+        .opt("out", "BENCH.json", "output JSON path")
+        .flag("smoke", "CI smoke sizes (1000,5000); numbers informational, fails only on panic");
+    let a = cmd.parse(args)?;
+    if a.help {
+        print!("{}", cmd.help_text());
+        return Ok(());
+    }
+    let sizes: Vec<usize> = if a.flag("smoke") {
+        if a.str("sizes") != "10000,100000" {
+            bail!("--smoke picks its own sizes (1000,5000); pass either --smoke or --sizes");
+        }
+        vec![1_000, 5_000]
+    } else {
+        let mut sizes = Vec::new();
+        for s in a.list("sizes") {
+            sizes.push(s.parse::<usize>().ok().with_context(|| format!("bad size {s:?}"))?);
+        }
+        sizes
+    };
+    let opts = ScaleBenchOpts {
+        sizes,
+        rate_rps: a.f64("rate")?,
+        mix: Mix::parse(a.str("mix")).with_context(|| format!("bad mix {:?}", a.str("mix")))?,
+        seed: a.u64("seed")?,
+        out_path: a.str("out").to_string(),
+    };
+    run_scale_bench(&opts)
 }
 
 fn cmd_trace(args: &[String]) -> Result<()> {

@@ -16,7 +16,7 @@
 pub mod report;
 
 use crate::core::{Class, RequestStatus, TokenBucket};
-use crate::util::stats::{mean_std, percentile};
+use crate::util::stats::{mean_std, percentile_sorted};
 
 /// Final per-request record produced by the driver.
 #[derive(Debug, Clone)]
@@ -85,18 +85,30 @@ pub fn compute(
     let n_admitted = n_offered.saturating_sub(n_rejected);
     let n_met = outcomes.iter().filter(|o| o.deadline_met()).count();
 
-    let completed_lat: Vec<f64> =
+    let mut completed_lat: Vec<f64> =
         outcomes.iter().filter_map(|o| if o.completed() { o.latency_ms } else { None }).collect();
-    let short_lat: Vec<f64> = outcomes
+    let mut short_lat: Vec<f64> = outcomes
         .iter()
         .filter(|o| o.completed() && o.bucket == TokenBucket::Short)
         .filter_map(|o| o.latency_ms)
         .collect();
-    let heavy_lat: Vec<f64> = outcomes
+    let mut heavy_lat: Vec<f64> = outcomes
         .iter()
         .filter(|o| o.completed() && o.class == Class::Heavy)
         .filter_map(|o| o.latency_ms)
         .collect();
+    // One sort per latency vector per run; every percentile below reads the
+    // sorted slice directly instead of clone-and-selecting per call.
+    completed_lat.sort_unstable_by(f64::total_cmp);
+    short_lat.sort_unstable_by(f64::total_cmp);
+    heavy_lat.sort_unstable_by(f64::total_cmp);
+    let pct = |xs: &[f64], p: f64| {
+        if xs.is_empty() {
+            f64::NAN
+        } else {
+            percentile_sorted(xs, p)
+        }
+    };
 
     let first_arrival =
         outcomes.iter().map(|o| o.arrival_ms).fold(f64::INFINITY, f64::min);
@@ -121,11 +133,11 @@ pub fn compute(
         n_completed,
         n_rejected,
         n_timed_out,
-        short_p95_ms: percentile(&short_lat, 95.0).unwrap_or(f64::NAN),
-        short_p90_ms: percentile(&short_lat, 90.0).unwrap_or(f64::NAN),
-        global_p95_ms: percentile(&completed_lat, 95.0).unwrap_or(f64::NAN),
+        short_p95_ms: pct(&short_lat, 95.0),
+        short_p90_ms: pct(&short_lat, 90.0),
+        global_p95_ms: pct(&completed_lat, 95.0),
         global_std_ms: if completed_lat.is_empty() { f64::NAN } else { mean_std(&completed_lat).1 },
-        heavy_p90_ms: percentile(&heavy_lat, 90.0).unwrap_or(f64::NAN),
+        heavy_p90_ms: pct(&heavy_lat, 90.0),
         completion_rate: if n_admitted > 0 { n_completed as f64 / n_admitted as f64 } else { 0.0 },
         satisfaction: if n_admitted > 0 { n_met as f64 / n_admitted as f64 } else { 0.0 },
         goodput_rps: if makespan_ms > 0.0 { n_met as f64 / (makespan_ms / 1000.0) } else { 0.0 },

@@ -5,6 +5,12 @@
 //! **overload** layer may block (defer) or shed (reject) that release.
 //! Everything here conditions only on client-observable state
 //! (`state::ApiState`) and policy-facing priors — the black-box constraint.
+//!
+//! Hot-path contract: every entry point *appends* its actions to a
+//! caller-owned buffer instead of returning a fresh `Vec` — the driver
+//! reuses one buffer for the whole run, so steady-state dispatch performs
+//! no per-event allocations (queues are slab-backed, ordering selection is
+//! a single pass, and removal is O(1) by id).
 
 pub mod allocation;
 pub mod ordering;
@@ -45,6 +51,18 @@ pub enum StrategyKind {
 }
 
 impl StrategyKind {
+    /// Every strategy, in the paper's presentation order (baselines first).
+    pub const ALL: [StrategyKind; 8] = [
+        StrategyKind::DirectNaive,
+        StrategyKind::PacedFifo,
+        StrategyKind::QuotaTiered,
+        StrategyKind::AdaptiveDrr,
+        StrategyKind::FinalAdrrOlc,
+        StrategyKind::FairQueuing,
+        StrategyKind::ShortPriority,
+        StrategyKind::PlainDrr,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             StrategyKind::DirectNaive => "direct_naive",
@@ -247,10 +265,21 @@ impl ClientScheduler {
         self.ordering[1].feasibility_violations()
     }
 
-    // ---- event entry points (all return actions for the driver) ----
+    // ---- event entry points ----
+    //
+    // All of them append the actions the driver must take to `out`; the
+    // caller owns (and typically reuses) the buffer and clears it between
+    // events.
 
     /// New request arrives with its policy-facing priors + route.
-    pub fn on_arrival(&mut self, req: &Request, priors: Priors, route: Route, now: f64) -> Vec<Action> {
+    pub fn on_arrival(
+        &mut self,
+        req: &Request,
+        priors: Priors,
+        route: Route,
+        now: f64,
+        out: &mut Vec<Action>,
+    ) {
         let sreq = SchedRequest {
             id: req.id,
             arrival_ms: req.arrival_ms,
@@ -262,45 +291,51 @@ impl ClientScheduler {
         if self.cfg.strategy == StrategyKind::DirectNaive {
             // Uncontrolled: straight to the provider, unbounded in-flight.
             self.state.on_send(sreq.id, route.class, priors.p50, now);
-            return vec![Action::Send { id: sreq.id }];
+            out.push(Action::Send { id: sreq.id });
+            return;
         }
         self.queues.push(sreq);
-        self.pump(now)
+        self.pump(now, out);
     }
 
     /// A deferral backoff expired: the request re-enters its queue.
-    pub fn on_retry_due(&mut self, id: ReqId, now: f64) -> Vec<Action> {
+    pub fn on_retry_due(&mut self, id: ReqId, now: f64, out: &mut Vec<Action>) {
         if let Some(sreq) = self.deferred.remove(&id) {
             self.queues.push_ordered(sreq);
         }
-        self.pump(now)
+        self.pump(now, out);
     }
 
     /// Completion observed (client-measured latency).
-    pub fn on_completion(&mut self, id: ReqId, latency_ms: f64, deadline_budget_ms: f64, now: f64) -> Vec<Action> {
+    pub fn on_completion(
+        &mut self,
+        id: ReqId,
+        latency_ms: f64,
+        deadline_budget_ms: f64,
+        now: f64,
+        out: &mut Vec<Action>,
+    ) {
         self.state.on_completion(id, latency_ms, deadline_budget_ms);
         if self.cfg.strategy == StrategyKind::DirectNaive {
-            return Vec::new();
+            return;
         }
-        self.pump(now)
+        self.pump(now, out);
     }
 
     /// Client gives up on a request (hard timeout). Removes it from any
     /// client-side holding area; frees the slot if it was in flight.
-    pub fn cancel(&mut self, id: ReqId, now: f64) -> Vec<Action> {
+    pub fn cancel(&mut self, id: ReqId, now: f64, out: &mut Vec<Action>) {
         let was_inflight = self.state.on_abandon(id).is_some();
         let _ = self.queues.remove_id(id);
         let _ = self.deferred.remove(&id);
         if was_inflight && self.cfg.strategy != StrategyKind::DirectNaive {
-            return self.pump(now);
+            self.pump(now, out);
         }
-        Vec::new()
     }
 
     /// Core release loop: allocation → ordering → overload, repeated while
-    /// slots and eligible work remain.
-    pub fn pump(&mut self, now: f64) -> Vec<Action> {
-        let mut actions = Vec::new();
+    /// slots and eligible work remain. Appends actions to `out`.
+    pub fn pump(&mut self, now: f64, out: &mut Vec<Action>) {
         debug_assert!(self.cfg.strategy != StrategyKind::DirectNaive);
         // Quota-tiered is strict isolation: no interactive bypass.
         let bypass = if self.cfg.strategy == StrategyKind::QuotaTiered {
@@ -327,18 +362,25 @@ impl ClientScheduler {
             let severity = self.controller.severity(&signals);
 
             // Ordered head per class (classes at their cap are masked out).
-            let mut head_idx = [None, None];
+            // Selection names the winner by id; the slab resolves it O(1).
+            // Score-based orderings scan the class queue (scores are
+            // time-varying, so no static index applies), but the live
+            // queue depth is bounded by the SLO timeout window × arrival
+            // rate — timed-out requests leave — so per-release cost does
+            // not grow with total run size.
+            let mut head_id: [Option<ReqId>; 2] = [None, None];
             let mut head_cost = [None, None];
             let mut head_arrival = [None, None];
             for class in Class::ALL {
-                if !can_send[class.index()] {
+                let ci = class.index();
+                if !can_send[ci] {
                     continue;
                 }
-                let q = self.queues.queue(class);
-                if let Some(i) = self.ordering[class.index()].select(q, now) {
-                    head_idx[class.index()] = Some(i);
-                    head_cost[class.index()] = Some(q[i].priors.p50);
-                    head_arrival[class.index()] = Some(q[i].arrival_ms);
+                if let Some(id) = self.ordering[ci].select(self.queues.view(class), now) {
+                    let r = self.queues.get(id).expect("ordering selected a queued id");
+                    head_id[ci] = Some(id);
+                    head_cost[ci] = Some(r.priors.p50);
+                    head_arrival[ci] = Some(r.arrival_ms);
                 }
             }
             let ctx = AllocCtx {
@@ -354,31 +396,29 @@ impl ClientScheduler {
             let Some(class) = allocator.next_class(&ctx) else {
                 break;
             };
-            let idx = head_idx[class.index()].expect("allocator picked a backlogged class");
+            let id = head_id[class.index()].expect("allocator picked a backlogged class");
             let decision = {
-                let candidate = &self.queues.queue(class)[idx];
+                let candidate = self.queues.get(id).expect("candidate still queued");
                 self.controller.decide(candidate, severity)
             };
-            let mut sreq = self.queues.remove_at(class, idx);
+            let mut sreq = self.queues.remove_id(id).expect("candidate still queued");
             match decision {
                 OverloadDecision::Admit => {
                     self.allocator.as_mut().unwrap().on_send(class, sreq.priors.p50);
                     self.state.on_send(sreq.id, class, sreq.priors.p50, now);
-                    actions.push(Action::Send { id: sreq.id });
+                    out.push(Action::Send { id: sreq.id });
                 }
                 OverloadDecision::Defer { delay_ms } => {
                     sreq.defer_attempts += 1;
-                    let id = sreq.id;
                     let at = now + delay_ms;
                     self.deferred.insert(id, sreq);
-                    actions.push(Action::Retry { id, at_ms: at });
+                    out.push(Action::Retry { id, at_ms: at });
                 }
                 OverloadDecision::Reject => {
-                    actions.push(Action::Reject { id: sreq.id });
+                    out.push(Action::Reject { id: sreq.id });
                 }
             }
         }
-        actions
     }
 
     /// Run-level stats snapshot.
@@ -414,7 +454,7 @@ mod tests {
         let mut actions = Vec::new();
         for r in reqs {
             let (p, route) = src.priors(r);
-            actions.extend(sched.on_arrival(r, p, route, r.arrival_ms));
+            sched.on_arrival(r, p, route, r.arrival_ms, &mut actions);
         }
         actions
     }
@@ -459,7 +499,8 @@ mod tests {
             .filter_map(|a| if let Action::Send { id } = a { Some(*id) } else { None })
             .collect();
         assert_eq!(first.len(), 2);
-        let next = sched.on_completion(first[0], 300.0, 2500.0, 1_000.0);
+        let mut next = Vec::new();
+        sched.on_completion(first[0], 300.0, 2500.0, 1_000.0, &mut next);
         assert_eq!(
             next.iter().filter(|a| matches!(a, Action::Send { .. })).count(),
             1,
@@ -489,7 +530,8 @@ mod tests {
             .find(|r| r.true_bucket == TokenBucket::Short)
             .expect("a short sample");
         let (p, route) = src.priors(&short);
-        let actions = sched.on_arrival(&short, p, route, 500.0);
+        let mut actions = Vec::new();
+        sched.on_arrival(&short, p, route, 500.0, &mut actions);
         assert!(
             actions.iter().any(|a| matches!(a, Action::Send { id } if *id == short.id)),
             "short must bypass the saturated budget: {actions:?}"
@@ -512,12 +554,14 @@ mod tests {
         assert_eq!(sched.queued(), 2);
         // Cancel a queued request: queue shrinks, no new send (slot busy).
         let queued_id = reqs.iter().map(|r| r.id).find(|id| *id != sent).unwrap();
-        let actions = sched.cancel(queued_id, 100.0);
+        let mut actions = Vec::new();
+        sched.cancel(queued_id, 100.0, &mut actions);
         assert!(actions.is_empty());
         assert_eq!(sched.queued(), 1);
         // Cancel the in-flight request: the slot frees and the pump releases
         // the remaining queued one.
-        let actions = sched.cancel(sent, 200.0);
+        actions.clear();
+        sched.cancel(sent, 200.0, &mut actions);
         assert_eq!(actions.iter().filter(|a| matches!(a, Action::Send { .. })).count(), 1);
     }
 
@@ -546,7 +590,8 @@ mod tests {
         // Releases are evaluated when a slot frees: completing the in-flight
         // request while queue pressure is saturated must defer/reject the
         // next heavy candidates instead of admitting them.
-        let actions = sched.on_completion(sent, 5_000.0, 2_500.0, 6_000.0);
+        let mut actions = Vec::new();
+        sched.on_completion(sent, 5_000.0, 2_500.0, 6_000.0, &mut actions);
         let deferred: Vec<(ReqId, f64)> = actions
             .iter()
             .filter_map(|a| if let Action::Retry { id, at_ms } = a { Some((*id, *at_ms)) } else { None })
@@ -555,22 +600,14 @@ mod tests {
         assert_eq!(sched.deferred_count(), deferred.len());
         // Retry re-enters the queue (or sheds again) — never lost.
         let before = sched.deferred_count();
-        let _ = sched.on_retry_due(deferred[0].0, deferred[0].1);
+        let mut retry_actions = Vec::new();
+        sched.on_retry_due(deferred[0].0, deferred[0].1, &mut retry_actions);
         assert!(sched.deferred_count() <= before);
     }
 
     #[test]
     fn strategy_parse_roundtrip() {
-        for s in [
-            StrategyKind::DirectNaive,
-            StrategyKind::QuotaTiered,
-            StrategyKind::AdaptiveDrr,
-            StrategyKind::FinalAdrrOlc,
-            StrategyKind::FairQueuing,
-            StrategyKind::ShortPriority,
-            StrategyKind::PlainDrr,
-            StrategyKind::PacedFifo,
-        ] {
+        for s in StrategyKind::ALL {
             assert_eq!(StrategyKind::parse(s.name()), Some(s));
         }
         assert_eq!(StrategyKind::parse("bogus"), None);

@@ -10,9 +10,15 @@
 //! if no candidate is feasible the rule falls back to the full set and
 //! counts a feasibility violation (the paper reports zero across all runs —
 //! our integration tests assert the counter stays 0 in the main benchmark).
+//!
+//! Selection is one pass over the queue view with no intermediate index
+//! vectors: the best feasible and best overall candidates are tracked
+//! simultaneously (the previous implementation allocated two `Vec<usize>`
+//! per pump iteration, which dominated allocator traffic at scale).
 
 use super::Ordering;
-use crate::scheduler::queues::SchedRequest;
+use crate::core::ReqId;
+use crate::scheduler::queues::{QueueView, SchedRequest};
 
 #[derive(Debug, Clone)]
 pub struct OrderingCfg {
@@ -96,23 +102,29 @@ impl WaitExt for SchedRequest {
 }
 
 impl Ordering for FeasibleSet {
-    fn select(&mut self, queue: &[SchedRequest], now: f64) -> Option<usize> {
-        if queue.is_empty() {
-            return None;
+    fn select(&mut self, queue: QueueView<'_>, now: f64) -> Option<ReqId> {
+        // `>=` keeps the later candidate on score ties, matching the
+        // previous max_by-based selection (max_by returns the last maximum)
+        // so this refactor changes no run output.
+        let mut best_feasible: Option<(ReqId, f64)> = None;
+        let mut best_any: Option<(ReqId, f64)> = None;
+        for r in queue.iter() {
+            let s = self.score(r, now);
+            if best_any.map_or(true, |(_, b)| s >= b) {
+                best_any = Some((r.id, s));
+            }
+            if self.feasible(r, now) && best_feasible.map_or(true, |(_, b)| s >= b) {
+                best_feasible = Some((r.id, s));
+            }
         }
-        let feasible: Vec<usize> =
-            (0..queue.len()).filter(|i| self.feasible(&queue[*i], now)).collect();
-        let candidates: Vec<usize> = if feasible.is_empty() {
-            self.violations += 1;
-            (0..queue.len()).collect()
-        } else {
-            feasible
-        };
-        candidates
-            .into_iter()
-            .map(|i| (i, self.score(&queue[i], now)))
-            .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
-            .map(|(i, _)| i)
+        match (best_feasible, best_any) {
+            (Some((id, _)), _) => Some(id),
+            (None, Some((id, _))) => {
+                self.violations += 1;
+                Some(id)
+            }
+            (None, None) => None,
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -126,7 +138,7 @@ impl Ordering for FeasibleSet {
 
 #[cfg(test)]
 mod tests {
-    use super::super::test_util::sreq;
+    use super::super::test_util::{queues_of, sreq, HEAVY};
     use super::*;
 
     fn fs() -> FeasibleSet {
@@ -136,26 +148,27 @@ mod tests {
     #[test]
     fn favors_older_jobs() {
         let mut f = fs();
-        // Same size/deadline-slack; the older one wins.
-        let q = vec![sreq(1, 1000.0, 500.0, 1e6), sreq(2, 0.0, 500.0, 1e6)];
-        assert_eq!(f.select(&q, 2000.0), Some(1));
+        // Same size/deadline-slack; the older one (id 2) wins.
+        let q = queues_of(vec![sreq(1, 1000.0, 500.0, 1e6), sreq(2, 0.0, 500.0, 1e6)]);
+        assert_eq!(f.select(q.view(HEAVY), 2000.0), Some(2));
     }
 
     #[test]
     fn favors_smaller_jobs() {
         let mut f = fs();
-        let q = vec![sreq(1, 0.0, 3000.0, 1e6), sreq(2, 0.0, 300.0, 1e6)];
-        assert_eq!(f.select(&q, 100.0), Some(1));
+        let q = queues_of(vec![sreq(1, 0.0, 3000.0, 1e6), sreq(2, 0.0, 300.0, 1e6)]);
+        assert_eq!(f.select(q.view(HEAVY), 100.0), Some(2));
     }
 
     #[test]
     fn urgency_overrides_size() {
-        let mut f = fs();
+        let f = fs();
         // Large job right at its deadline window vs small job with huge slack.
         let big_deadline = 100.0 + (170.0 + 0.9 * 3000.0 * 1.5) * 1.4; // inside 2×window
-        let q = vec![sreq(1, 0.0, 2000.0, big_deadline), sreq(2, 0.0, 400.0, 1e7)];
-        let s_big = f.score(&q[0], 100.0);
-        let s_small = f.score(&q[1], 100.0);
+        let big = sreq(1, 0.0, 2000.0, big_deadline);
+        let small = sreq(2, 0.0, 400.0, 1e7);
+        let s_big = f.score(&big, 100.0);
+        let s_small = f.score(&small, 100.0);
         assert!(s_big > s_small - 2.0, "urgency should lift the big job: {s_big} vs {s_small}");
     }
 
@@ -163,16 +176,20 @@ mod tests {
     fn infeasible_candidates_excluded() {
         let mut f = fs();
         // Request 1's deadline already passed; request 2 comfortably feasible.
-        let q = vec![sreq(1, 0.0, 100.0, 50.0), sreq(2, 0.0, 4000.0, 1e7)];
-        assert_eq!(f.select(&q, 100.0), Some(1), "feasible big beats infeasible small");
+        let q = queues_of(vec![sreq(1, 0.0, 100.0, 50.0), sreq(2, 0.0, 4000.0, 1e7)]);
+        assert_eq!(
+            f.select(q.view(HEAVY), 100.0),
+            Some(2),
+            "feasible big beats infeasible small"
+        );
         assert_eq!(f.violations(), 0);
     }
 
     #[test]
     fn all_infeasible_falls_back_and_counts() {
         let mut f = fs();
-        let q = vec![sreq(1, 0.0, 100.0, 10.0), sreq(2, 0.0, 200.0, 20.0)];
-        let sel = f.select(&q, 100.0);
+        let q = queues_of(vec![sreq(1, 0.0, 100.0, 10.0), sreq(2, 0.0, 200.0, 20.0)]);
+        let sel = f.select(q.view(HEAVY), 100.0);
         assert!(sel.is_some());
         assert_eq!(f.violations(), 1);
     }
@@ -180,7 +197,8 @@ mod tests {
     #[test]
     fn empty_queue() {
         let mut f = fs();
-        assert_eq!(f.select(&[], 0.0), None);
+        let q = queues_of(vec![]);
+        assert_eq!(f.select(q.view(HEAVY), 0.0), None);
         assert_eq!(f.violations(), 0);
     }
 
@@ -192,12 +210,12 @@ mod tests {
     }
 
     #[test]
-    fn prop_select_in_bounds() {
+    fn prop_select_returns_a_queued_id() {
         use crate::testing::prop;
         prop::forall(100, |g| {
             let mut f = fs();
             let n = g.usize_in(1, 30);
-            let q: Vec<_> = (0..n)
+            let reqs: Vec<_> = (0..n)
                 .map(|i| {
                     sreq(
                         i,
@@ -207,9 +225,48 @@ mod tests {
                     )
                 })
                 .collect();
+            let q = queues_of(reqs);
             let now = g.f64_in(0.0, 5000.0);
-            let sel = f.select(&q, now).unwrap();
-            assert!(sel < q.len());
+            let sel = f.select(q.view(HEAVY), now).unwrap();
+            assert!(sel < n, "selected id {sel} not in 0..{n}");
+            assert!(q.get(sel).is_some(), "selected id must still be queued");
+        });
+    }
+
+    #[test]
+    fn single_pass_matches_two_phase_reference() {
+        use crate::testing::prop;
+        // The fused selection must agree with the spec's two-phase rule:
+        // argmax score over the feasible set, else argmax over everything.
+        prop::forall(100, |g| {
+            let mut f = fs();
+            let n = g.usize_in(1, 25);
+            let reqs: Vec<_> = (0..n)
+                .map(|i| {
+                    sreq(
+                        i,
+                        g.f64_in(0.0, 2000.0),
+                        g.f64_in(10.0, 4000.0),
+                        g.f64_in(0.0, 60_000.0),
+                    )
+                })
+                .collect();
+            let now = g.f64_in(0.0, 10_000.0);
+            let reference = {
+                let r = fs();
+                let feasible: Vec<&SchedRequest> = reqs
+                    .iter()
+                    .filter(|x| now + r.est_service_ms(x.priors.p90) <= x.deadline_ms)
+                    .collect();
+                let pool: Vec<&SchedRequest> =
+                    if feasible.is_empty() { reqs.iter().collect() } else { feasible };
+                pool.into_iter()
+                    .map(|x| (x.id, r.score(x, now)))
+                    .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
+                    .map(|(id, _)| id)
+            };
+            let q = queues_of(reqs);
+            assert_eq!(f.select(q.view(HEAVY), now), reference);
         });
     }
 }

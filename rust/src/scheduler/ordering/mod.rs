@@ -1,17 +1,22 @@
 //! Ordering layer (paper §3.1 layer 2): intra-class sequencing. The paper's
 //! design is the slowdown-aware feasible-set rule for the heavy class;
 //! FIFO/SJF/EDF are baselines and ablations.
+//!
+//! Policies select over a borrowed [`QueueView`] and name the winner by
+//! request id — a single pass with no intermediate allocations, and the
+//! scheduler removes the winner in O(1) through the slab's id index.
 
 pub mod feasible_set;
 
 pub use feasible_set::{FeasibleSet, OrderingCfg};
 
-use crate::scheduler::queues::SchedRequest;
+use crate::core::ReqId;
+use crate::scheduler::queues::QueueView;
 
-/// Intra-class sequencing policy: pick the index of the next request to
+/// Intra-class sequencing policy: pick the id of the next request to
 /// release from `queue` (None iff empty).
 pub trait Ordering {
-    fn select(&mut self, queue: &[SchedRequest], now: f64) -> Option<usize>;
+    fn select(&mut self, queue: QueueView<'_>, now: f64) -> Option<ReqId>;
     fn name(&self) -> &'static str;
 
     /// Feasibility violations recorded so far (only `FeasibleSet` tracks
@@ -21,16 +26,12 @@ pub trait Ordering {
     }
 }
 
-/// First-in-first-out (queues are arrival-ordered, so index 0).
+/// First-in-first-out (queues are arrival-ordered, so the head). O(1).
 pub struct Fifo;
 
 impl Ordering for Fifo {
-    fn select(&mut self, queue: &[SchedRequest], _now: f64) -> Option<usize> {
-        if queue.is_empty() {
-            None
-        } else {
-            Some(0)
-        }
+    fn select(&mut self, queue: QueueView<'_>, _now: f64) -> Option<ReqId> {
+        queue.head().map(|r| r.id)
     }
 
     fn name(&self) -> &'static str {
@@ -42,18 +43,21 @@ impl Ordering for Fifo {
 pub struct Sjf;
 
 impl Ordering for Sjf {
-    fn select(&mut self, queue: &[SchedRequest], _now: f64) -> Option<usize> {
-        queue
-            .iter()
-            .enumerate()
-            .min_by(|(_, a), (_, b)| {
-                a.priors
-                    .p50
-                    .partial_cmp(&b.priors.p50)
-                    .unwrap()
-                    .then(a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap())
-            })
-            .map(|(i, _)| i)
+    fn select(&mut self, queue: QueueView<'_>, _now: f64) -> Option<ReqId> {
+        let mut best: Option<&crate::scheduler::queues::SchedRequest> = None;
+        for r in queue.iter() {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    r.priors.p50 < b.priors.p50
+                        || (r.priors.p50 == b.priors.p50 && r.arrival_ms < b.arrival_ms)
+                }
+            };
+            if better {
+                best = Some(r);
+            }
+        }
+        best.map(|r| r.id)
     }
 
     fn name(&self) -> &'static str {
@@ -61,16 +65,18 @@ impl Ordering for Sjf {
     }
 }
 
-/// Earliest deadline first.
+/// Earliest deadline first (ties → FIFO position, i.e. first seen).
 pub struct Edf;
 
 impl Ordering for Edf {
-    fn select(&mut self, queue: &[SchedRequest], _now: f64) -> Option<usize> {
-        queue
-            .iter()
-            .enumerate()
-            .min_by(|(_, a), (_, b)| a.deadline_ms.partial_cmp(&b.deadline_ms).unwrap())
-            .map(|(i, _)| i)
+    fn select(&mut self, queue: QueueView<'_>, _now: f64) -> Option<ReqId> {
+        let mut best: Option<&crate::scheduler::queues::SchedRequest> = None;
+        for r in queue.iter() {
+            if best.map_or(true, |b| r.deadline_ms < b.deadline_ms) {
+                best = Some(r);
+            }
+        }
+        best.map(|r| r.id)
     }
 
     fn name(&self) -> &'static str {
@@ -80,49 +86,67 @@ impl Ordering for Edf {
 
 #[cfg(test)]
 pub(crate) mod test_util {
-    use crate::core::{Priors, TokenBucket};
+    use crate::core::{Class, Priors, TokenBucket};
     use crate::predictor::Route;
-    use crate::scheduler::queues::SchedRequest;
+    use crate::scheduler::queues::{ClassQueues, SchedRequest};
 
+    /// Test request. Routed to the heavy class regardless of p50 so that
+    /// ordering tests exercise one queue in push order.
     pub fn sreq(id: usize, arrival: f64, p50: f64, deadline: f64) -> SchedRequest {
         SchedRequest {
             id,
             arrival_ms: arrival,
             deadline_ms: deadline,
             priors: Priors::new(p50, p50 * 1.5),
-            route: Route::from_bucket(TokenBucket::from_tokens(p50)),
+            route: Route::from_bucket(TokenBucket::Long),
             defer_attempts: 0,
         }
     }
+
+    /// Build slab queues holding `reqs` in order (all heavy-class).
+    pub fn queues_of(reqs: Vec<SchedRequest>) -> ClassQueues {
+        let mut q = ClassQueues::new();
+        for r in reqs {
+            q.push(r);
+        }
+        q
+    }
+
+    pub const HEAVY: Class = Class::Heavy;
 }
 
 #[cfg(test)]
 mod tests {
-    use super::test_util::sreq;
+    use super::test_util::{queues_of, sreq, HEAVY};
     use super::*;
 
     #[test]
     fn fifo_picks_head() {
-        let q = vec![sreq(1, 0.0, 500.0, 1e5), sreq(2, 1.0, 10.0, 1e5)];
-        assert_eq!(Fifo.select(&q, 10.0), Some(0));
-        assert_eq!(Fifo.select(&[], 10.0), None);
+        let q = queues_of(vec![sreq(1, 0.0, 500.0, 1e5), sreq(2, 1.0, 10.0, 1e5)]);
+        assert_eq!(Fifo.select(q.view(HEAVY), 10.0), Some(1));
+        let empty = queues_of(vec![]);
+        assert_eq!(Fifo.select(empty.view(HEAVY), 10.0), None);
     }
 
     #[test]
     fn sjf_picks_smallest() {
-        let q = vec![sreq(1, 0.0, 500.0, 1e5), sreq(2, 1.0, 10.0, 1e5), sreq(3, 2.0, 100.0, 1e5)];
-        assert_eq!(Sjf.select(&q, 10.0), Some(1));
+        let q = queues_of(vec![
+            sreq(1, 0.0, 500.0, 1e5),
+            sreq(2, 1.0, 10.0, 1e5),
+            sreq(3, 2.0, 100.0, 1e5),
+        ]);
+        assert_eq!(Sjf.select(q.view(HEAVY), 10.0), Some(2));
     }
 
     #[test]
     fn sjf_ties_break_by_age() {
-        let q = vec![sreq(1, 5.0, 100.0, 1e5), sreq(2, 1.0, 100.0, 1e5)];
-        assert_eq!(Sjf.select(&q, 10.0), Some(1));
+        let q = queues_of(vec![sreq(1, 5.0, 100.0, 1e5), sreq(2, 1.0, 100.0, 1e5)]);
+        assert_eq!(Sjf.select(q.view(HEAVY), 10.0), Some(2));
     }
 
     #[test]
     fn edf_picks_earliest_deadline() {
-        let q = vec![sreq(1, 0.0, 10.0, 9000.0), sreq(2, 1.0, 10.0, 4000.0)];
-        assert_eq!(Edf.select(&q, 10.0), Some(1));
+        let q = queues_of(vec![sreq(1, 0.0, 10.0, 9000.0), sreq(2, 1.0, 10.0, 4000.0)]);
+        assert_eq!(Edf.select(q.view(HEAVY), 10.0), Some(2));
     }
 }

@@ -1,8 +1,19 @@
 //! Per-class client-side queues holding the scheduler's view of pending
 //! requests.
+//!
+//! Storage is a slab: every queued [`SchedRequest`] lives in a stable slot,
+//! the two classes are intrusive doubly-linked lists threaded through the
+//! slots, and a dense id→slot table makes [`ClassQueues::remove_id`] O(1).
+//! The previous representation (two `Vec`s with `Vec::remove`) cost O(n)
+//! per removal and an O(n) scan per timeout cancel, which dominated the
+//! event loop at large queue depths; the slab makes push/remove O(1) and
+//! ordered re-insertion O(min(distance from head, distance from tail)) —
+//! the lists stay arrival-sorted, so the boundary is found from both ends.
 
 use crate::core::{Class, Priors, ReqId};
 use crate::predictor::Route;
+
+const NIL: u32 = u32::MAX;
 
 /// The scheduler's view of one pending request (no hidden fields).
 #[derive(Debug, Clone)]
@@ -22,10 +33,26 @@ impl SchedRequest {
     }
 }
 
-/// Two FIFO-ordered vectors (ordering policies select an index; removal is
-/// O(n) with n = queue depth, which stays small — see benches).
+/// One slab slot: the request plus its intrusive list links. Free slots
+/// keep their last request value (plain data, no heap) and chain through
+/// `next` onto the free list.
+struct Slot {
+    req: SchedRequest,
+    prev: u32,
+    next: u32,
+    occupied: bool,
+}
+
+/// Slab-backed per-class FIFO queues with an id→slot index.
 pub struct ClassQueues {
-    queues: [Vec<SchedRequest>; 2],
+    slots: Vec<Slot>,
+    free_head: u32,
+    head: [u32; 2],
+    tail: [u32; 2],
+    len: [usize; 2],
+    /// ReqId → slot (NIL when not queued). Ids are dense per run (the
+    /// request table index), so a flat table beats hashing on the hot path.
+    index: Vec<u32>,
     /// Running sum of queued p50 estimates — the queue-pressure signal is
     /// read once per pump iteration, so it is maintained incrementally
     /// instead of rescanned (EXPERIMENTS.md §Perf opt 2).
@@ -34,51 +61,205 @@ pub struct ClassQueues {
 
 impl ClassQueues {
     pub fn new() -> Self {
-        ClassQueues { queues: [Vec::new(), Vec::new()], queued_tokens: 0.0 }
+        ClassQueues {
+            slots: Vec::new(),
+            free_head: NIL,
+            head: [NIL, NIL],
+            tail: [NIL, NIL],
+            len: [0, 0],
+            index: Vec::new(),
+            queued_tokens: 0.0,
+        }
     }
 
-    pub fn push(&mut self, req: SchedRequest) {
+    /// Allocate a slot for `req`, register it in the id index, and account
+    /// its tokens. Links are initialized to NIL; the caller wires them.
+    fn alloc(&mut self, req: SchedRequest) -> u32 {
         self.queued_tokens += req.priors.p50;
-        self.queues[req.class().index()].push(req);
+        let id = req.id;
+        let slot = match self.free_head {
+            NIL => {
+                assert!(self.slots.len() < NIL as usize, "queue slot space exhausted");
+                self.slots.push(Slot { req, prev: NIL, next: NIL, occupied: true });
+                (self.slots.len() - 1) as u32
+            }
+            s => {
+                self.free_head = self.slots[s as usize].next;
+                let sl = &mut self.slots[s as usize];
+                sl.req = req;
+                sl.prev = NIL;
+                sl.next = NIL;
+                sl.occupied = true;
+                s
+            }
+        };
+        if id >= self.index.len() {
+            self.index.resize(id + 1, NIL);
+        }
+        debug_assert_eq!(self.index[id], NIL, "request {id} queued twice");
+        self.index[id] = slot;
+        slot
     }
 
-    /// Re-insert a deferred request keeping arrival order (stable position
-    /// by arrival time) so deferral does not silently reset its seniority.
-    pub fn push_ordered(&mut self, req: SchedRequest) {
-        self.queued_tokens += req.priors.p50;
-        let q = &mut self.queues[req.class().index()];
-        let pos = q.partition_point(|r| r.arrival_ms <= req.arrival_ms);
-        q.insert(pos, req);
-    }
-
-    pub fn queue(&self, class: Class) -> &[SchedRequest] {
-        &self.queues[class.index()]
-    }
-
-    pub fn remove_at(&mut self, class: Class, idx: usize) -> SchedRequest {
-        let req = self.queues[class.index()].remove(idx);
+    /// Unlink `slot` from class list `c`, retire it, and return the request.
+    fn unlink(&mut self, slot: u32, c: usize) -> SchedRequest {
+        let (prev, next) = {
+            let s = &self.slots[slot as usize];
+            debug_assert!(s.occupied, "unlink of free slot");
+            (s.prev, s.next)
+        };
+        if prev == NIL {
+            self.head[c] = next;
+        } else {
+            self.slots[prev as usize].next = next;
+        }
+        if next == NIL {
+            self.tail[c] = prev;
+        } else {
+            self.slots[next as usize].prev = prev;
+        }
+        self.len[c] -= 1;
+        let s = &mut self.slots[slot as usize];
+        s.occupied = false;
+        s.next = self.free_head;
+        self.free_head = slot;
+        let req = s.req.clone();
+        self.index[req.id] = NIL;
         self.queued_tokens -= req.priors.p50;
         req
     }
 
-    /// Remove by request id (timeout cancel). Returns the request if found.
-    pub fn remove_id(&mut self, id: ReqId) -> Option<SchedRequest> {
-        for q in &mut self.queues {
-            if let Some(pos) = q.iter().position(|r| r.id == id) {
-                let req = q.remove(pos);
-                self.queued_tokens -= req.priors.p50;
-                return Some(req);
-            }
+    /// Append to the tail of the request's class queue. O(1).
+    pub fn push(&mut self, req: SchedRequest) {
+        let c = req.class().index();
+        let slot = self.alloc(req);
+        let t = self.tail[c];
+        self.slots[slot as usize].prev = t;
+        if t == NIL {
+            self.head[c] = slot;
+        } else {
+            self.slots[t as usize].next = slot;
         }
-        None
+        self.tail[c] = slot;
+        self.len[c] += 1;
+    }
+
+    /// Re-insert a deferred request keeping arrival order (stable position
+    /// by arrival time) so deferral does not silently reset its seniority.
+    ///
+    /// The class lists stay arrival-sorted (plain pushes happen in event
+    /// time order; this method preserves the order), so the insertion
+    /// boundary — after the last node with `arrival_ms <=` the request's —
+    /// is approached from both ends at once: O(min(distance from head,
+    /// distance from tail)). Old deferred requests land near the head,
+    /// urgency-deferred fresh ones near the tail; both walks are short.
+    pub fn push_ordered(&mut self, req: SchedRequest) {
+        let c = req.class().index();
+        let arrival = req.arrival_ms;
+        let mut front = self.head[c];
+        let mut back = self.tail[c];
+        loop {
+            if front == NIL {
+                // Empty class list.
+                self.push(req);
+                return;
+            }
+            if self.slots[front as usize].req.arrival_ms > arrival {
+                // `front` is the first strictly-newer node.
+                let slot = self.alloc(req);
+                self.link_before(slot, front, c);
+                return;
+            }
+            if self.slots[back as usize].req.arrival_ms <= arrival {
+                // `back` is the last not-newer node: insert right after it.
+                let next = self.slots[back as usize].next;
+                if next == NIL {
+                    self.push(req);
+                } else {
+                    let slot = self.alloc(req);
+                    self.link_before(slot, next, c);
+                }
+                return;
+            }
+            front = self.slots[front as usize].next;
+            back = self.slots[back as usize].prev;
+        }
+    }
+
+    /// Link freshly allocated `slot` immediately before occupied node `at`.
+    fn link_before(&mut self, slot: u32, at: u32, c: usize) {
+        let prev = self.slots[at as usize].prev;
+        self.slots[slot as usize].prev = prev;
+        self.slots[slot as usize].next = at;
+        self.slots[at as usize].prev = slot;
+        if prev == NIL {
+            self.head[c] = slot;
+        } else {
+            self.slots[prev as usize].next = slot;
+        }
+        self.len[c] += 1;
+    }
+
+    /// Remove the `idx`-th request (FIFO position) of a class. O(idx);
+    /// kept for tests and model-checking — the dispatch path removes by id.
+    pub fn remove_at(&mut self, class: Class, idx: usize) -> SchedRequest {
+        let c = class.index();
+        let mut at = self.head[c];
+        for _ in 0..idx {
+            assert!(at != NIL, "remove_at index {idx} out of bounds");
+            at = self.slots[at as usize].next;
+        }
+        assert!(at != NIL, "remove_at index {idx} out of bounds");
+        self.unlink(at, c)
+    }
+
+    /// Remove by request id (dispatch + timeout cancel). O(1).
+    pub fn remove_id(&mut self, id: ReqId) -> Option<SchedRequest> {
+        let slot = *self.index.get(id)?;
+        if slot == NIL {
+            return None;
+        }
+        let c = self.slots[slot as usize].req.class().index();
+        Some(self.unlink(slot, c))
+    }
+
+    /// Queued request by id, if present. O(1).
+    pub fn get(&self, id: ReqId) -> Option<&SchedRequest> {
+        let slot = *self.index.get(id)?;
+        if slot == NIL {
+            None
+        } else {
+            Some(&self.slots[slot as usize].req)
+        }
+    }
+
+    /// Oldest request of a class (FIFO head). O(1).
+    pub fn head(&self, class: Class) -> Option<&SchedRequest> {
+        let h = self.head[class.index()];
+        if h == NIL {
+            None
+        } else {
+            Some(&self.slots[h as usize].req)
+        }
+    }
+
+    /// Iterate a class queue in FIFO order.
+    pub fn iter(&self, class: Class) -> QueueIter<'_> {
+        QueueIter { queues: self, at: self.head[class.index()] }
+    }
+
+    /// Borrowed view of one class queue — what ordering policies select
+    /// from without materializing a slice.
+    pub fn view(&self, class: Class) -> QueueView<'_> {
+        QueueView { queues: self, class }
     }
 
     pub fn len(&self, class: Class) -> usize {
-        self.queues[class.index()].len()
+        self.len[class.index()]
     }
 
     pub fn total_len(&self) -> usize {
-        self.queues[0].len() + self.queues[1].len()
+        self.len[0] + self.len[1]
     }
 
     pub fn is_empty(&self) -> bool {
@@ -95,6 +276,50 @@ impl ClassQueues {
 impl Default for ClassQueues {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// FIFO-order iterator over one class queue.
+pub struct QueueIter<'a> {
+    queues: &'a ClassQueues,
+    at: u32,
+}
+
+impl<'a> Iterator for QueueIter<'a> {
+    type Item = &'a SchedRequest;
+
+    fn next(&mut self) -> Option<&'a SchedRequest> {
+        if self.at == NIL {
+            return None;
+        }
+        let s = &self.queues.slots[self.at as usize];
+        self.at = s.next;
+        Some(&s.req)
+    }
+}
+
+/// Borrowed single-class view handed to ordering policies.
+#[derive(Clone, Copy)]
+pub struct QueueView<'a> {
+    queues: &'a ClassQueues,
+    class: Class,
+}
+
+impl<'a> QueueView<'a> {
+    pub fn iter(&self) -> QueueIter<'a> {
+        self.queues.iter(self.class)
+    }
+
+    pub fn head(&self) -> Option<&'a SchedRequest> {
+        self.queues.head(self.class)
+    }
+
+    pub fn len(&self) -> usize {
+        self.queues.len(self.class)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -133,6 +358,7 @@ mod tests {
         q.push(sreq(2, 1.0, TokenBucket::Long, 500.0));
         assert_eq!(q.remove_id(2).unwrap().id, 2);
         assert_eq!(q.remove_id(2).map(|r| r.id), None);
+        assert_eq!(q.remove_id(999).map(|r| r.id), None, "unknown id");
         assert_eq!(q.total_len(), 1);
     }
 
@@ -143,8 +369,33 @@ mod tests {
         q.push(sreq(2, 30.0, TokenBucket::Long, 500.0));
         // Deferred request that arrived at t=20 goes back between them.
         q.push_ordered(sreq(3, 20.0, TokenBucket::Long, 500.0));
-        let ids: Vec<ReqId> = q.queue(Class::Heavy).iter().map(|r| r.id).collect();
+        let ids: Vec<ReqId> = q.iter(Class::Heavy).map(|r| r.id).collect();
         assert_eq!(ids, vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn push_ordered_ties_keep_earlier_first() {
+        let mut q = ClassQueues::new();
+        q.push(sreq(1, 10.0, TokenBucket::Long, 500.0));
+        // Same arrival: the re-inserted request goes after the incumbent
+        // (partition on `<=`, matching the old Vec implementation).
+        q.push_ordered(sreq(2, 10.0, TokenBucket::Long, 500.0));
+        let ids: Vec<ReqId> = q.iter(Class::Heavy).map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn push_ordered_near_both_ends_and_middle() {
+        let mut q = ClassQueues::new();
+        for id in 0..8 {
+            q.push(sreq(id, (id * 10) as f64, TokenBucket::Long, 100.0));
+        }
+        q.push_ordered(sreq(100, 5.0, TokenBucket::Long, 100.0)); // near head
+        q.push_ordered(sreq(101, 75.0, TokenBucket::Long, 100.0)); // near tail
+        q.push_ordered(sreq(102, 35.0, TokenBucket::Long, 100.0)); // middle
+        q.push_ordered(sreq(103, 999.0, TokenBucket::Long, 100.0)); // append
+        let ids: Vec<ReqId> = q.iter(Class::Heavy).map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 100, 1, 2, 3, 102, 4, 5, 6, 7, 101, 103]);
     }
 
     #[test]
@@ -154,5 +405,138 @@ mod tests {
         let r = q.remove_at(Class::Heavy, 0);
         assert_eq!(r.id, 5);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn head_get_and_view() {
+        let mut q = ClassQueues::new();
+        assert!(q.head(Class::Heavy).is_none());
+        q.push(sreq(7, 0.0, TokenBucket::Long, 400.0));
+        q.push(sreq(8, 1.0, TokenBucket::Long, 900.0));
+        assert_eq!(q.head(Class::Heavy).unwrap().id, 7);
+        assert_eq!(q.get(8).unwrap().priors.p50, 900.0);
+        assert!(q.get(9).is_none());
+        let v = q.view(Class::Heavy);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v.head().unwrap().id, 7);
+        assert_eq!(v.iter().count(), 2);
+        assert!(q.view(Class::Interactive).is_empty());
+    }
+
+    #[test]
+    fn slots_are_reused_after_removal() {
+        let mut q = ClassQueues::new();
+        for id in 0..64 {
+            q.push(sreq(id, id as f64, TokenBucket::Long, 100.0));
+        }
+        for id in 0..64 {
+            assert_eq!(q.remove_id(id).unwrap().id, id);
+        }
+        // Refill: the slab must not grow beyond its high-water mark.
+        for id in 64..128 {
+            q.push(sreq(id, id as f64, TokenBucket::Long, 100.0));
+        }
+        assert_eq!(q.slots.len(), 64);
+        assert_eq!(q.total_len(), 64);
+        let ids: Vec<ReqId> = q.iter(Class::Heavy).map(|r| r.id).collect();
+        assert_eq!(ids, (64..128).collect::<Vec<_>>());
+    }
+
+    /// Model-checks the slab against the original two-Vec implementation:
+    /// production-shaped push/push_ordered/remove_at/remove_id sequences
+    /// (plain pushes in nondecreasing event time, ordered re-inserts with
+    /// past arrivals — the DES contract) must keep per-class order
+    /// identical and `queued_tokens` equal to the true sum (the incremental
+    /// counter's invariant).
+    #[test]
+    fn prop_matches_vec_model_and_queued_tokens_never_drifts() {
+        use crate::testing::prop;
+
+        prop::forall(120, |g| {
+            let mut q = ClassQueues::new();
+            let mut model: [Vec<SchedRequest>; 2] = [Vec::new(), Vec::new()];
+            let mut next_id = 0usize;
+            let mut clock = 0.0_f64;
+            let n_ops = g.usize_in(1, 100);
+            for _ in 0..n_ops {
+                match g.usize_in(0, 5) {
+                    0 | 1 => {
+                        // New arrival: event time only moves forward.
+                        clock += g.f64_in(0.0, 50.0);
+                        let r = sreq(
+                            next_id,
+                            clock,
+                            *g.choice(&TokenBucket::ALL),
+                            g.f64_in(10.0, 3000.0),
+                        );
+                        next_id += 1;
+                        model[r.class().index()].push(r.clone());
+                        q.push(r);
+                    }
+                    2 => {
+                        // Deferred re-insert: the request arrived in the
+                        // past (never ahead of the event clock — the DES
+                        // contract that keeps the class lists sorted).
+                        let r = sreq(
+                            next_id,
+                            g.f64_in(0.0, clock),
+                            *g.choice(&TokenBucket::ALL),
+                            g.f64_in(10.0, 3000.0),
+                        );
+                        next_id += 1;
+                        let m = &mut model[r.class().index()];
+                        // After every element with arrival <= (the old
+                        // partition_point semantics on a sorted queue).
+                        let pos = m
+                            .iter()
+                            .position(|x| x.arrival_ms > r.arrival_ms)
+                            .unwrap_or(m.len());
+                        m.insert(pos, r.clone());
+                        q.push_ordered(r);
+                    }
+                    3 => {
+                        let (ci, class) = *g.choice(&[
+                            (0usize, Class::Interactive),
+                            (1usize, Class::Heavy),
+                        ]);
+                        if !model[ci].is_empty() {
+                            let idx = g.usize_in(0, model[ci].len());
+                            let got = q.remove_at(class, idx);
+                            let want = model[ci].remove(idx);
+                            assert_eq!(got.id, want.id);
+                        }
+                    }
+                    _ => {
+                        let id = g.usize_in(0, next_id.max(1));
+                        let got = q.remove_id(id);
+                        let found = model.iter().enumerate().find_map(|(ci, v)| {
+                            v.iter().position(|x| x.id == id).map(|p| (ci, p))
+                        });
+                        match found {
+                            Some((ci, p)) => {
+                                let want = model[ci].remove(p);
+                                assert_eq!(got.map(|r| r.id), Some(want.id));
+                            }
+                            None => assert!(got.is_none()),
+                        }
+                    }
+                }
+                // Invariants after every operation.
+                let true_sum: f64 =
+                    model.iter().flat_map(|v| v.iter()).map(|r| r.priors.p50).sum();
+                let qt = q.queued_tokens();
+                assert!(
+                    (qt - true_sum).abs() <= 1e-6 * true_sum.max(1.0),
+                    "queued_tokens drift: counter {qt} vs true sum {true_sum}"
+                );
+                for (ci, class) in [(0usize, Class::Interactive), (1usize, Class::Heavy)] {
+                    assert_eq!(q.len(class), model[ci].len());
+                    let got: Vec<ReqId> = q.iter(class).map(|r| r.id).collect();
+                    let want: Vec<ReqId> = model[ci].iter().map(|r| r.id).collect();
+                    assert_eq!(got, want, "class {ci} order diverged from model");
+                }
+                assert_eq!(q.total_len(), model[0].len() + model[1].len());
+            }
+        });
     }
 }

@@ -170,12 +170,14 @@ pub fn serve_demo(
     let mut arrived = 0usize;
     let mut done = 0usize;
 
-    let apply = |actions: Vec<Action>,
+    // Reusable action buffer: the scheduler appends, `apply` drains.
+    let mut actions: Vec<Action> = Vec::new();
+    let apply = |actions: &[Action],
                      timers: &mut Vec<(Instant, Timer, ReqId)>,
                      status: &mut Vec<RequestStatus>,
                      defer_counts: &mut Vec<u32>| {
         for a in actions {
-            match a {
+            match *a {
                 Action::Send { id } => {
                     status[id] = RequestStatus::InFlight;
                     let _ = to_provider.send(ToProvider::Submit {
@@ -212,8 +214,9 @@ pub fn serve_demo(
                     latency[id] = Some(lat);
                     done += 1;
                     let budget = requests[id].deadline_ms - requests[id].arrival_ms;
-                    let actions = scheduler.on_completion(id, lat, budget, now_ms);
-                    apply(actions, &mut timers, &mut status, &mut defer_counts);
+                    actions.clear();
+                    scheduler.on_completion(id, lat, budget, now_ms, &mut actions);
+                    apply(&actions, &mut timers, &mut status, &mut defer_counts);
                     let met = lat <= budget;
                     println!(
                         "[{:>8.0}ms] done  #{id:<4} {}  latency {:>7.0}ms  {}",
@@ -246,14 +249,16 @@ pub fn serve_demo(
                                     p.p50,
                                     p.p90
                                 );
-                                let actions = scheduler.on_arrival(&requests[id], p, route, now_ms);
-                                apply(actions, &mut timers, &mut status, &mut defer_counts);
+                                actions.clear();
+                                scheduler.on_arrival(&requests[id], p, route, now_ms, &mut actions);
+                                apply(&actions, &mut timers, &mut status, &mut defer_counts);
                             }
                             Timer::Retry => {
                                 if status[id] == RequestStatus::Deferred {
                                     status[id] = RequestStatus::Queued;
-                                    let actions = scheduler.on_retry_due(id, now_ms);
-                                    apply(actions, &mut timers, &mut status, &mut defer_counts);
+                                    actions.clear();
+                                    scheduler.on_retry_due(id, now_ms, &mut actions);
+                                    apply(&actions, &mut timers, &mut status, &mut defer_counts);
                                 }
                             }
                             Timer::Timeout => {
@@ -263,10 +268,11 @@ pub fn serve_demo(
                                         | RequestStatus::Deferred
                                         | RequestStatus::InFlight
                                 ) {
-                                    let actions = scheduler.cancel(id, now_ms);
+                                    actions.clear();
+                                    scheduler.cancel(id, now_ms, &mut actions);
                                     status[id] = RequestStatus::TimedOut;
                                     println!("[{:>8.0}ms] TIMEOUT #{id}", now_ms);
-                                    apply(actions, &mut timers, &mut status, &mut defer_counts);
+                                    apply(&actions, &mut timers, &mut status, &mut defer_counts);
                                 }
                             }
                         }

@@ -5,17 +5,40 @@
 //! every paper table depends on. The engine is generic over the event
 //! payload; the experiment driver (`experiments::driver`) owns the handler
 //! loop.
+//!
+//! Entries come in two flavors: plain events ([`EventQueue::push`]) and
+//! cancelable timers ([`EventQueue::push_cancelable`]), which return a
+//! generation-stamped [`TimerId`]. Canceling is O(1) lazy deletion: the
+//! slot's generation is bumped and the stale heap entry is discarded when
+//! it surfaces at the head, without ever invoking the handler or counting
+//! toward [`EventQueue::processed`]. At million-request scale this keeps
+//! the heap from carrying one dead `Timeout` entry per completed request.
 
 pub mod driver;
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+const NIL: u32 = u32::MAX;
+
+/// Handle to a cancelable heap entry. Generation-stamped: once the entry
+/// fires or is canceled, the slot's generation advances and this id becomes
+/// inert (a late [`EventQueue::cancel`] returns `false` instead of
+/// corrupting a reused slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimerId {
+    slot: u32,
+    gen: u32,
+}
+
 /// Heap entry: min-ordered by (time, seq).
 struct Entry<E> {
     time: f64,
     seq: u64,
     payload: E,
+    /// `Some` for cancelable timers; checked against the slot generation
+    /// table at pop time (lazy deletion).
+    timer: Option<TimerId>,
 }
 
 impl<E> PartialEq for Entry<E> {
@@ -45,37 +68,111 @@ pub struct EventQueue<E> {
     heap: BinaryHeap<Entry<E>>,
     next_seq: u64,
     popped: u64,
+    skipped: u64,
+    /// Current generation per timer slot; an entry is live iff its stamped
+    /// generation matches.
+    gens: Vec<u32>,
+    /// Retired timer slots available for reuse.
+    free: Vec<u32>,
 }
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), next_seq: 0, popped: 0 }
+        EventQueue {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            popped: 0,
+            skipped: 0,
+            gens: Vec::new(),
+            free: Vec::new(),
+        }
     }
 
     pub fn with_capacity(cap: usize) -> Self {
-        EventQueue { heap: BinaryHeap::with_capacity(cap), next_seq: 0, popped: 0 }
+        EventQueue { heap: BinaryHeap::with_capacity(cap), ..EventQueue::new() }
     }
 
     /// Schedule `payload` at absolute time `t` (ms).
     pub fn push(&mut self, t: f64, payload: E) {
         debug_assert!(t.is_finite(), "non-finite event time {t}");
-        self.heap.push(Entry { time: t, seq: self.next_seq, payload });
+        self.heap.push(Entry { time: t, seq: self.next_seq, payload, timer: None });
         self.next_seq += 1;
     }
 
-    /// Pop the earliest event: `(time, payload)`.
+    /// Schedule a cancelable event at absolute time `t`; the returned
+    /// [`TimerId`] cancels it in O(1) via [`EventQueue::cancel`].
+    pub fn push_cancelable(&mut self, t: f64, payload: E) -> TimerId {
+        debug_assert!(t.is_finite(), "non-finite event time {t}");
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                assert!(self.gens.len() < NIL as usize, "timer slot space exhausted");
+                self.gens.push(0);
+                (self.gens.len() - 1) as u32
+            }
+        };
+        let id = TimerId { slot, gen: self.gens[slot as usize] };
+        self.heap.push(Entry { time: t, seq: self.next_seq, payload, timer: Some(id) });
+        self.next_seq += 1;
+        id
+    }
+
+    /// Cancel a pending cancelable event. Returns `true` if it was still
+    /// pending (it will now be silently discarded when it reaches the heap
+    /// head); `false` if it already fired or was already canceled.
+    pub fn cancel(&mut self, id: TimerId) -> bool {
+        let g = &mut self.gens[id.slot as usize];
+        if *g == id.gen {
+            *g = g.wrapping_add(1);
+            self.free.push(id.slot);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn entry_live(gens: &[u32], e: &Entry<E>) -> bool {
+        match e.timer {
+            None => true,
+            Some(t) => gens[t.slot as usize] == t.gen,
+        }
+    }
+
+    /// Discard canceled entries sitting at the heap head.
+    fn drop_dead_head(&mut self) {
+        while let Some(e) = self.heap.peek() {
+            if Self::entry_live(&self.gens, e) {
+                break;
+            }
+            self.heap.pop();
+            self.skipped += 1;
+        }
+    }
+
+    /// Pop the earliest live event: `(time, payload)`. Canceled timers are
+    /// skipped without counting toward [`EventQueue::processed`].
     pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.drop_dead_head();
         self.heap.pop().map(|e| {
+            if let Some(t) = e.timer {
+                // The timer fired: retire the slot so its id is inert and
+                // the slot can be reused by a future push_cancelable.
+                self.gens[t.slot as usize] = self.gens[t.slot as usize].wrapping_add(1);
+                self.free.push(t.slot);
+            }
             self.popped += 1;
             (e.time, e.payload)
         })
     }
 
-    /// Earliest scheduled time without popping.
-    pub fn peek_time(&self) -> Option<f64> {
+    /// Earliest live scheduled time without popping.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        self.drop_dead_head();
         self.heap.peek().map(|e| e.time)
     }
 
+    /// Entries currently in the heap, including canceled timers that have
+    /// not yet surfaced at the head.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -84,9 +181,14 @@ impl<E> EventQueue<E> {
         self.heap.is_empty()
     }
 
-    /// Total events processed so far (engine throughput metric).
+    /// Total live events processed so far (engine throughput metric).
     pub fn processed(&self) -> u64 {
         self.popped
+    }
+
+    /// Canceled entries discarded at the head without being processed.
+    pub fn skipped(&self) -> u64 {
+        self.skipped
     }
 }
 
@@ -135,35 +237,113 @@ mod tests {
     }
 
     #[test]
-    fn interleaved_push_pop_stays_ordered() {
+    fn canceled_timers_are_skipped_silently() {
+        let mut q = EventQueue::new();
+        q.push(1.0, "a");
+        let t = q.push_cancelable(2.0, "dead");
+        q.push(3.0, "b");
+        assert!(q.cancel(t));
+        assert!(!q.cancel(t), "double cancel is a no-op");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["a", "b"]);
+        assert_eq!(q.processed(), 2, "canceled entry must not count as processed");
+        assert_eq!(q.skipped(), 1);
+    }
+
+    #[test]
+    fn uncanceled_timer_fires_and_id_goes_inert() {
+        let mut q = EventQueue::new();
+        let t = q.push_cancelable(1.0, 42);
+        assert_eq!(q.pop(), Some((1.0, 42)));
+        assert!(!q.cancel(t), "cancel after fire must be a no-op");
+    }
+
+    #[test]
+    fn timer_slots_are_reused_with_fresh_generations() {
+        let mut q = EventQueue::new();
+        let t1 = q.push_cancelable(1.0, "x");
+        assert!(q.cancel(t1));
+        // The freed slot is reused; the stale id must not cancel the new entry.
+        let t2 = q.push_cancelable(2.0, "y");
+        assert!(!q.cancel(t1));
+        assert_eq!(q.pop(), Some((2.0, "y")));
+        assert!(!q.cancel(t2));
+        assert_eq!(q.skipped(), 1);
+    }
+
+    #[test]
+    fn peek_time_skips_canceled_head() {
+        let mut q = EventQueue::new();
+        let t = q.push_cancelable(1.0, ());
+        q.push(5.0, ());
+        q.cancel(t);
+        assert_eq!(q.peek_time(), Some(5.0));
+        assert_eq!(q.pop(), Some((5.0, ())));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn interleaved_push_pop_is_globally_monotone() {
         use crate::testing::prop;
+        // The DES contract: handlers only ever schedule at or after the
+        // current simulated time, so under any interleaving of pushes and
+        // pops the popped timestamps must be globally nondecreasing.
         prop::forall(50, |g| {
             let mut q = EventQueue::new();
-            let mut last = f64::NEG_INFINITY;
+            let mut now = 0.0_f64;
             let n = g.usize_in(1, 100);
             for _ in 0..n {
                 for _ in 0..g.usize_in(1, 4) {
-                    q.push(g.f64_in(0.0, 1000.0), ());
+                    q.push(now + g.f64_in(0.0, 1000.0), ());
                 }
                 if g.bool() {
                     if let Some((t, _)) = q.pop() {
-                        // Popped times must be >= any previously popped time
-                        // only when no earlier pushes happen later — instead
-                        // assert heap property directly: pop ≤ new peek.
-                        if let Some(nt) = q.peek_time() {
-                            assert!(t <= nt);
-                        }
-                        let _ = last; // silence unused in release
-                        last = t;
+                        assert!(t >= now, "clock went backwards: popped {t} after {now}");
+                        now = t;
                     }
                 }
             }
-            // Drain: fully sorted.
-            let mut prev = f64::NEG_INFINITY;
+            // Drain: still monotone from the last observed time.
             while let Some((t, _)) = q.pop() {
-                assert!(t >= prev);
-                prev = t;
+                assert!(t >= now, "drain went backwards: popped {t} after {now}");
+                now = t;
             }
+        });
+    }
+
+    #[test]
+    fn prop_cancelation_never_reorders_live_events() {
+        use crate::testing::prop;
+        // Interleave plain events and cancelable timers, cancel a random
+        // subset, and check the surviving pop sequence equals the sorted
+        // (time, seq) order of live entries.
+        prop::forall(50, |g| {
+            let mut q = EventQueue::new();
+            let mut live: Vec<(u64, usize)> = Vec::new(); // (time in µs, tag)
+            let mut timers = Vec::new();
+            let n = g.usize_in(1, 60);
+            for tag in 0..n {
+                let t_us = g.usize_in(0, 1_000_000) as u64;
+                let t = t_us as f64 / 1000.0;
+                if g.bool() {
+                    timers.push((q.push_cancelable(t, tag), t_us, tag));
+                } else {
+                    q.push(t, tag);
+                    live.push((t_us, tag));
+                }
+            }
+            for (id, t_us, tag) in timers {
+                if g.bool() {
+                    assert!(q.cancel(id));
+                } else {
+                    live.push((t_us, tag));
+                }
+            }
+            // Expected order: by time, ties by insertion (tag) order.
+            live.sort_by_key(|&(t, tag)| (t, tag));
+            let got: Vec<usize> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+            let want: Vec<usize> = live.iter().map(|&(_, tag)| tag).collect();
+            assert_eq!(got, want);
         });
     }
 }

@@ -9,16 +9,7 @@ use blackbox_sched::sim::driver::{run, RunOutput};
 use blackbox_sched::util::rng::Rng;
 use blackbox_sched::workload::{Mix, WorkloadSpec};
 
-const ALL_STRATEGIES: [StrategyKind; 8] = [
-    StrategyKind::DirectNaive,
-    StrategyKind::PacedFifo,
-    StrategyKind::QuotaTiered,
-    StrategyKind::AdaptiveDrr,
-    StrategyKind::FinalAdrrOlc,
-    StrategyKind::FairQueuing,
-    StrategyKind::ShortPriority,
-    StrategyKind::PlainDrr,
-];
+const ALL_STRATEGIES: [StrategyKind; 8] = StrategyKind::ALL;
 
 fn run_one(strategy: StrategyKind, mix: Mix, rate: f64, n: usize, seed: u64) -> RunOutput {
     let requests = WorkloadSpec::new(mix, n, rate).generate(seed);

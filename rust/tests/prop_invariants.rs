@@ -12,16 +12,7 @@ use blackbox_sched::testing::prop;
 use blackbox_sched::util::rng::Rng;
 use blackbox_sched::workload::{Mix, WorkloadSpec};
 
-const STRATEGIES: [StrategyKind; 8] = [
-    StrategyKind::DirectNaive,
-    StrategyKind::PacedFifo,
-    StrategyKind::QuotaTiered,
-    StrategyKind::AdaptiveDrr,
-    StrategyKind::FinalAdrrOlc,
-    StrategyKind::FairQueuing,
-    StrategyKind::ShortPriority,
-    StrategyKind::PlainDrr,
-];
+const STRATEGIES: [StrategyKind; 8] = StrategyKind::ALL;
 const MIXES: [Mix; 4] = [Mix::Balanced, Mix::Heavy, Mix::ShareGpt, Mix::FairnessHeavy];
 
 #[test]
