@@ -10,13 +10,18 @@
 //! goodput, short/global P95, and the number of PJRT predictor calls made
 //! on the request path. Recorded in EXPERIMENTS.md §End-to-end.
 
+use blackbox_sched::provider::pool::PoolCfg;
+use blackbox_sched::provider::ProviderCfg;
 use blackbox_sched::runtime::default_artifacts_dir;
-use blackbox_sched::scheduler::StrategyKind;
+use blackbox_sched::scheduler::{ShardPolicy, StrategyKind};
 
 fn main() -> anyhow::Result<()> {
     let rate = 20.0; // model-time req/s
     let n = 60;
     let scale = 0.05; // 20× faster than model time
+    // A 2-shard heterogeneous fleet with weighted selection: the E2E
+    // example now exercises the sharded dispatch path end to end.
+    let pool = PoolCfg::heterogeneous(ProviderCfg::default(), 2, 0.5);
     println!("live serve: {n} requests at {rate}/s (model time), time scale {scale}");
     blackbox_sched::serve::serve_demo(
         StrategyKind::FinalAdrrOlc,
@@ -24,5 +29,7 @@ fn main() -> anyhow::Result<()> {
         n,
         scale,
         &default_artifacts_dir(),
+        pool,
+        ShardPolicy::Weighted,
     )
 }

@@ -6,6 +6,7 @@ use blackbox_sched::bench::Suite;
 use blackbox_sched::core::{Class, Priors, TokenBucket};
 use blackbox_sched::predictor::features::batch_features;
 use blackbox_sched::predictor::{InfoLevel, LadderSource, PriorSource, Route};
+use blackbox_sched::provider::pool::{PoolCfg, ProviderPool};
 use blackbox_sched::provider::{MockProvider, ProviderCfg};
 use blackbox_sched::runtime::{artifacts_available, default_artifacts_dir, Predictor};
 use blackbox_sched::scheduler::ordering::{FeasibleSet, Ordering, OrderingCfg};
@@ -108,6 +109,27 @@ fn main() {
         i += 1;
     });
 
+    // ---- provider pool (sharded dispatch path) ----
+    let mut pool = ProviderPool::new(&PoolCfg::split(ProviderCfg::default(), 4), Rng::new(3));
+    let mut pi = 0usize;
+    let mut batch: Vec<(usize, f64, usize)> = Vec::new();
+    let mut started = Vec::new();
+    suite.bench("pool: 8-submit batch + finishes (4 shards)", || {
+        batch.clear();
+        for k in 0..8usize {
+            batch.push((pi + k, 500.0, k % 4));
+        }
+        started.clear();
+        pool.submit_batch(&batch, pi as f64, &mut started);
+        for s in &started {
+            std::hint::black_box(s.finish_ms);
+        }
+        for k in 0..8usize {
+            pool.on_finish(pi + k, pi as f64 + 1.0);
+        }
+        pi += 8;
+    });
+
     // ---- prior sources ----
     let reqs = WorkloadSpec::new(Mix::Balanced, 4096, 50.0).generate(5);
     let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(9));
@@ -130,7 +152,7 @@ fn main() {
         sched.on_arrival(r, p, route, j as f64, &mut actions);
         // Drain sends so in-flight doesn't saturate: fake completions.
         for a in &actions {
-            if let Action::Send { id } = *a {
+            if let Action::Send { id, .. } = *a {
                 drain.clear();
                 sched.on_completion(id, 200.0, 2500.0, j as f64 + 1.0, &mut drain);
             }

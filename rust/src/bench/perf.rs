@@ -8,18 +8,24 @@
 //! (`ln(t_hi/t_lo) / ln(n_hi/n_lo)`) makes O(n²) regressions visible at a
 //! glance: healthy hot paths stay near 1.0.
 //!
-//! Numbers are informational, not gating — CI runs `bbsched bench --smoke`
-//! and fails only on panic, uploading BENCH.json as an artifact.
+//! Wall-time numbers are informational; the per-strategy scaling exponent
+//! is gateable — `--gate-exponent X` fails the run if any strategy scales
+//! worse than `n^X` between the smallest and largest size (CI pins 1.3,
+//! loose enough for timer noise, tight enough to catch a quadratic
+//! regression). `--shards N` adds a second leg running every strategy
+//! against an N-shard heterogeneous pool with weighted selection, so the
+//! sharded dispatch path accumulates its own perf trajectory.
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::bench::peak_rss_kb;
 use crate::metrics::report::TextTable;
 use crate::predictor::{InfoLevel, LadderSource};
+use crate::provider::pool::PoolCfg;
 use crate::provider::ProviderCfg;
-use crate::scheduler::{SchedulerCfg, StrategyKind};
+use crate::scheduler::{SchedulerCfg, ShardPolicy, StrategyKind};
 use crate::sim::driver;
 use crate::util::jsonio::Json;
 use crate::util::rng::Rng;
@@ -38,6 +44,10 @@ pub struct ScaleBenchOpts {
     pub seed: u64,
     /// Where to write BENCH.json.
     pub out_path: String,
+    /// Fleet size for the multi-shard leg (1 = single-endpoint legs only).
+    pub shards: usize,
+    /// Fail if any (strategy, shards) scaling exponent exceeds this.
+    pub gate_exponent: Option<f64>,
 }
 
 impl Default for ScaleBenchOpts {
@@ -48,12 +58,15 @@ impl Default for ScaleBenchOpts {
             mix: Mix::Balanced,
             seed: 0,
             out_path: "BENCH.json".to_string(),
+            shards: 1,
+            gate_exponent: None,
         }
     }
 }
 
 struct RunRecord {
     strategy: &'static str,
+    shards: usize,
     requests: usize,
     wall_ms: f64,
     events_processed: u64,
@@ -76,6 +89,7 @@ impl RunRecord {
     fn to_json(&self) -> Json {
         Json::obj()
             .set("strategy", self.strategy)
+            .set("shards", self.shards)
             .set("requests", self.requests)
             .set("wall_ms", self.wall_ms)
             .set("events_processed", self.events_processed)
@@ -91,11 +105,30 @@ impl RunRecord {
     }
 }
 
-/// Run the scale bench: every strategy × every size, one shared workload
-/// per size (the paired-comparison guarantee), BENCH.json at the end.
+/// Run the scale bench: every strategy × every size × every fleet leg, one
+/// shared workload per size (the paired-comparison guarantee), BENCH.json
+/// at the end.
 pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
     anyhow::ensure!(!opts.sizes.is_empty(), "bench needs at least one size");
+    anyhow::ensure!(opts.shards >= 1, "bench needs at least one shard");
+    // An armed gate that never evaluates an exponent would pass silently;
+    // make that misuse loud instead.
+    anyhow::ensure!(
+        opts.gate_exponent.is_none()
+            || (opts.sizes.len() >= 2 && opts.sizes.first() != opts.sizes.last()),
+        "--gate-exponent needs at least two distinct sizes to compute a scaling exponent"
+    );
     let mut records: Vec<RunRecord> = Vec::new();
+    // Fleet legs: the classic single endpoint, plus (when asked) an
+    // N-shard heterogeneous pool driven with weighted selection — the
+    // sharded dispatch path under the same workloads.
+    let shard_legs: Vec<usize> = if opts.shards > 1 { vec![1, opts.shards] } else { vec![1] };
+    // With the exponent gate armed, each leg runs three times and the
+    // *minimum* wall time is recorded — the standard noise-robust wall
+    // estimator, which matters on shared CI runners where smoke-size legs
+    // finish in single-digit milliseconds. Runs are deterministic, so the
+    // repeats differ only in scheduler interference.
+    let repeats = if opts.gate_exponent.is_some() { 3 } else { 1 };
 
     for &n in &opts.sizes {
         println!(
@@ -104,87 +137,121 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             opts.mix.name()
         );
         let requests = WorkloadSpec::new(opts.mix, n, opts.rate_rps).generate(opts.seed);
-        for strategy in StrategyKind::ALL {
-            let mut src = LadderSource::new(
-                InfoLevel::Coarse,
-                Rng::new(opts.seed ^ 0x5EED_50_u64).derive("priors"),
-            );
-            let rss_before = peak_rss_kb();
-            let t0 = Instant::now();
-            let out = driver::run(
-                &requests,
-                &mut src,
-                SchedulerCfg::for_strategy(strategy),
-                ProviderCfg::default(),
-                opts.seed,
-            );
-            let wall_s = t0.elapsed().as_secs_f64();
-            let rss_after = peak_rss_kb();
-            let d = &out.diagnostics;
-            let rec = RunRecord {
-                strategy: strategy.name(),
-                requests: n,
-                wall_ms: wall_s * 1e3,
-                events_processed: d.events_processed,
-                events_skipped: d.events_skipped,
-                timers_canceled: d.timers_canceled,
-                events_per_sec: if wall_s > 0.0 { d.events_processed as f64 / wall_s } else { 0.0 },
-                sends: d.sends,
-                completed: out.metrics.n_completed,
-                rejected: out.metrics.n_rejected,
-                timed_out: out.metrics.n_timed_out,
-                peak_rss_kb: rss_after,
-                peak_rss_growth_kb: rss_after.saturating_sub(rss_before),
+        for &n_shards in &shard_legs {
+            let pool = if n_shards == 1 {
+                PoolCfg::single(ProviderCfg::default())
+            } else {
+                PoolCfg::heterogeneous(ProviderCfg::default(), n_shards, 0.5)
             };
-            println!(
-                "  {:<16} {:>9.1} ms  {:>10.0} ev/s  {:>8} events  {:>6} canceled  CR {:.3}",
-                rec.strategy,
-                rec.wall_ms,
-                rec.events_per_sec,
-                rec.events_processed,
-                rec.timers_canceled,
-                out.metrics.completion_rate,
-            );
-            records.push(rec);
+            for strategy in StrategyKind::ALL {
+                let rss_before = peak_rss_kb();
+                let mut wall_s = f64::INFINITY;
+                let mut last_out = None;
+                for _ in 0..repeats {
+                    let mut src = LadderSource::new(
+                        InfoLevel::Coarse,
+                        Rng::new(opts.seed ^ 0x5EED_50_u64).derive("priors"),
+                    );
+                    let mut sched = SchedulerCfg::for_strategy(strategy);
+                    if n_shards > 1 {
+                        sched.shards.policy = ShardPolicy::Weighted;
+                    }
+                    let t0 = Instant::now();
+                    let o = driver::run_pool(&requests, &mut src, sched, &pool, opts.seed);
+                    wall_s = wall_s.min(t0.elapsed().as_secs_f64());
+                    last_out = Some(o);
+                }
+                let out = last_out.expect("repeats >= 1");
+                let rss_after = peak_rss_kb();
+                let d = &out.diagnostics;
+                let rec = RunRecord {
+                    strategy: strategy.name(),
+                    shards: n_shards,
+                    requests: n,
+                    wall_ms: wall_s * 1e3,
+                    events_processed: d.events_processed,
+                    events_skipped: d.events_skipped,
+                    timers_canceled: d.timers_canceled,
+                    events_per_sec: if wall_s > 0.0 {
+                        d.events_processed as f64 / wall_s
+                    } else {
+                        0.0
+                    },
+                    sends: d.sends,
+                    completed: out.metrics.n_completed,
+                    rejected: out.metrics.n_rejected,
+                    timed_out: out.metrics.n_timed_out,
+                    peak_rss_kb: rss_after,
+                    peak_rss_growth_kb: rss_after.saturating_sub(rss_before),
+                };
+                println!(
+                    "  {:<16} x{:<2} {:>9.1} ms  {:>10.0} ev/s  {:>8} events  {:>6} canceled  CR {:.3}",
+                    rec.strategy,
+                    rec.shards,
+                    rec.wall_ms,
+                    rec.events_per_sec,
+                    rec.events_processed,
+                    rec.timers_canceled,
+                    out.metrics.completion_rate,
+                );
+                records.push(rec);
+            }
         }
     }
 
-    // Scaling exponents: first vs last size per strategy. Near 1.0 means
-    // the hot path is linear in offered load; 2.0 would be the old O(n²).
+    // Scaling exponents: first vs last size per (strategy, fleet). Near
+    // 1.0 means the hot path is linear in offered load; 2.0 would be the
+    // old O(n²).
     let mut scaling: Vec<Json> = Vec::new();
+    let mut violations: Vec<String> = Vec::new();
     if opts.sizes.len() >= 2 {
         let n_lo = opts.sizes[0];
         let n_hi = *opts.sizes.last().unwrap();
         println!("\n-- scaling {n_lo} → {n_hi} (exponent ≈ 1.0 is linear) --");
-        let mut t = TextTable::new(["strategy", "wall lo (ms)", "wall hi (ms)", "exponent"]);
-        for strategy in StrategyKind::ALL {
-            let find = |n: usize| {
-                records
-                    .iter()
-                    .find(|r| r.strategy == strategy.name() && r.requests == n)
-                    .map(|r| r.wall_ms)
-            };
-            if let (Some(lo), Some(hi)) = (find(n_lo), find(n_hi)) {
-                let exponent = if lo > 0.0 && hi > 0.0 {
-                    (hi / lo).ln() / (n_hi as f64 / n_lo as f64).ln()
-                } else {
-                    f64::NAN
+        let mut t =
+            TextTable::new(["strategy", "shards", "wall lo (ms)", "wall hi (ms)", "exponent"]);
+        for &n_shards in &shard_legs {
+            for strategy in StrategyKind::ALL {
+                let find = |n: usize| {
+                    records
+                        .iter()
+                        .find(|r| {
+                            r.strategy == strategy.name() && r.shards == n_shards && r.requests == n
+                        })
+                        .map(|r| r.wall_ms)
                 };
-                t.row([
-                    strategy.name().to_string(),
-                    format!("{lo:.1}"),
-                    format!("{hi:.1}"),
-                    format!("{exponent:.2}"),
-                ]);
-                scaling.push(
-                    Json::obj()
-                        .set("strategy", strategy.name())
-                        .set("n_lo", n_lo)
-                        .set("n_hi", n_hi)
-                        .set("wall_lo_ms", lo)
-                        .set("wall_hi_ms", hi)
-                        .set("exponent", exponent),
-                );
+                if let (Some(lo), Some(hi)) = (find(n_lo), find(n_hi)) {
+                    let exponent = if lo > 0.0 && hi > 0.0 {
+                        (hi / lo).ln() / (n_hi as f64 / n_lo as f64).ln()
+                    } else {
+                        f64::NAN
+                    };
+                    t.row([
+                        strategy.name().to_string(),
+                        n_shards.to_string(),
+                        format!("{lo:.1}"),
+                        format!("{hi:.1}"),
+                        format!("{exponent:.2}"),
+                    ]);
+                    scaling.push(
+                        Json::obj()
+                            .set("strategy", strategy.name())
+                            .set("shards", n_shards)
+                            .set("n_lo", n_lo)
+                            .set("n_hi", n_hi)
+                            .set("wall_lo_ms", lo)
+                            .set("wall_hi_ms", hi)
+                            .set("exponent", exponent),
+                    );
+                    if let Some(max_e) = opts.gate_exponent {
+                        if exponent.is_finite() && exponent > max_e {
+                            violations.push(format!(
+                                "{} x{n_shards}: exponent {exponent:.2} > {max_e}",
+                                strategy.name()
+                            ));
+                        }
+                    }
+                }
             }
         }
         println!("{}", t.render());
@@ -195,11 +262,15 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
         .set("mix", opts.mix.name())
         .set("rate_rps", opts.rate_rps)
         .set("seed", opts.seed)
+        .set("shards", opts.shards)
         .set("sizes", opts.sizes.clone())
         .set("runs", Json::Arr(records.iter().map(RunRecord::to_json).collect()))
         .set("scaling", Json::Arr(scaling));
     doc.write_file(&opts.out_path)?;
     println!("wrote {}", opts.out_path);
+    if !violations.is_empty() {
+        bail!("scaling gate failed: {}", violations.join("; "));
+    }
     Ok(())
 }
 
@@ -231,6 +302,60 @@ mod tests {
             assert_eq!(done, n, "conservation in bench records");
         }
         let _ = std::fs::remove_file(&opts.out_path);
+    }
+
+    #[test]
+    fn multi_shard_leg_doubles_the_record_count() {
+        let out_path = std::env::temp_dir().join("bbsched_bench_shard_test.json");
+        let opts = ScaleBenchOpts {
+            sizes: vec![40, 80],
+            rate_rps: 12.0,
+            shards: 2,
+            gate_exponent: Some(50.0), // far above any real exponent
+            out_path: out_path.to_string_lossy().into_owned(),
+            ..ScaleBenchOpts::default()
+        };
+        run_scale_bench(&opts).expect("bench runs");
+        let doc = Json::read_file(&opts.out_path).expect("BENCH.json parses");
+        let runs = doc.get("runs").and_then(Json::as_arr).expect("runs array");
+        assert_eq!(runs.len(), 2 * 2 * StrategyKind::ALL.len(), "sizes × fleets × strategies");
+        let scaling = doc.get("scaling").and_then(Json::as_arr).expect("scaling array");
+        assert_eq!(scaling.len(), 2 * StrategyKind::ALL.len(), "one exponent per fleet");
+        for s in scaling {
+            let n = s.get("shards").and_then(Json::as_usize).unwrap();
+            assert!(n == 1 || n == 2);
+        }
+        let _ = std::fs::remove_file(&opts.out_path);
+    }
+
+    #[test]
+    fn impossible_exponent_gate_fails_the_bench() {
+        let out_path = std::env::temp_dir().join("bbsched_bench_gate_test.json");
+        let opts = ScaleBenchOpts {
+            sizes: vec![40, 160],
+            rate_rps: 12.0,
+            // Any finite exponent exceeds this ceiling, so the gate must
+            // trip — this is the CI failure path.
+            gate_exponent: Some(-100.0),
+            out_path: out_path.to_string_lossy().into_owned(),
+            ..ScaleBenchOpts::default()
+        };
+        assert!(run_scale_bench(&opts).is_err(), "gate must fail on exceeded exponent");
+        let _ = std::fs::remove_file(&opts.out_path);
+    }
+
+    #[test]
+    fn armed_gate_needs_two_distinct_sizes() {
+        for sizes in [vec![100_000], vec![5_000, 5_000]] {
+            let opts = ScaleBenchOpts {
+                sizes,
+                gate_exponent: Some(1.3),
+                out_path: "/tmp/bbsched_bench_inert_gate.json".to_string(),
+                ..ScaleBenchOpts::default()
+            };
+            let err = run_scale_bench(&opts).expect_err("gate with no evaluable exponent");
+            assert!(err.to_string().contains("two distinct sizes"), "{err}");
+        }
     }
 
     #[test]

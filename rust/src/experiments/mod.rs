@@ -13,6 +13,7 @@ pub mod noise_sweep;
 pub mod overload_policy;
 pub mod runner;
 pub mod sensitivity;
+pub mod sharded;
 pub mod sharegpt;
 
 pub use runner::{run_cell, run_seed, CellSpec, Congestion, ParallelSweep, Regime};
@@ -54,8 +55,8 @@ impl ExpOpts {
     }
 }
 
-/// All experiment names, in paper order.
-pub const ALL_EXPERIMENTS: [&str; 11] = [
+/// All experiment names, in paper order (repo extensions at the end).
+pub const ALL_EXPERIMENTS: [&str; 12] = [
     "calibration",
     "ladder",
     "main",
@@ -67,6 +68,7 @@ pub const ALL_EXPERIMENTS: [&str; 11] = [
     "noise",
     "ablation",
     "burst",
+    "sharded",
 ];
 
 /// Dispatch one experiment by name ("all" runs the full battery).
@@ -83,6 +85,7 @@ pub fn run_experiment(name: &str, opts: &ExpOpts) -> Result<()> {
         "noise" => noise_sweep::run(opts),
         "ablation" => ablation::run(opts),
         "burst" => burst::run(opts),
+        "sharded" => sharded::run(opts),
         "all" => {
             for n in ALL_EXPERIMENTS {
                 println!("\n########## experiment: {n} ##########");

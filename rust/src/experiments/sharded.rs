@@ -1,0 +1,222 @@
+//! Sharded-fleet experiment: shard count × heterogeneity × congestion ×
+//! selection policy, on the full scheduler stack.
+//!
+//! The single-provider experiments hold the fleet fixed at one endpoint;
+//! this grid asks the scale-out question instead: with the same total
+//! capacity split across N black-box endpoints (optionally heterogeneous —
+//! a ±skew speed spread), how much does the client-side shard-selection
+//! policy matter, and what does sharding itself cost? The 1-shard cells
+//! are the control group: they run the exact single-provider physics every
+//! other table uses.
+//!
+//! Fanned out on [`ParallelSweep`], so the CSV is byte-identical for any
+//! `--jobs` value (the CI determinism gate covers it).
+
+use anyhow::Result;
+
+use crate::experiments::runner::{Congestion, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
+use crate::metrics::{Aggregate, RunMetrics};
+use crate::predictor::{InfoLevel, LadderSource};
+use crate::provider::pool::PoolCfg;
+use crate::provider::ProviderCfg;
+use crate::scheduler::{SchedulerCfg, ShardPolicy, StrategyKind};
+use crate::sim::driver;
+use crate::util::csvio::CsvTable;
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::workload::{Mix, WorkloadSpec};
+
+/// Speed skew for the heterogeneous cells: shard speeds spread ±50%.
+const SKEW: f64 = 0.5;
+
+/// One grid cell.
+#[derive(Debug, Clone)]
+struct ShardCell {
+    congestion: Congestion,
+    rate_rps: f64,
+    shards: usize,
+    skew: f64,
+    policy: ShardPolicy,
+}
+
+impl ShardCell {
+    fn pool(&self) -> PoolCfg {
+        if self.skew > 0.0 {
+            PoolCfg::heterogeneous(ProviderCfg::default(), self.shards, self.skew)
+        } else {
+            PoolCfg::split(ProviderCfg::default(), self.shards)
+        }
+    }
+
+    fn hetero_name(&self) -> &'static str {
+        if self.skew > 0.0 {
+            "skewed"
+        } else {
+            "uniform"
+        }
+    }
+}
+
+/// Per-seed result: run metrics + fleet balance (max shard share over the
+/// fair share; 1.0 = perfectly balanced).
+fn run_cell_seed(cell: &ShardCell, n_requests: usize, seed: u64) -> (RunMetrics, f64) {
+    let workload = WorkloadSpec::new(Mix::Balanced, n_requests, cell.rate_rps);
+    let requests = workload.generate(seed);
+    let root = Rng::new(seed ^ 0x5EED_50_u64);
+    let mut src = LadderSource::new(InfoLevel::Coarse, root.derive("priors"));
+    let mut sched = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+    sched.shards.policy = cell.policy;
+    let out = driver::run_pool(&requests, &mut src, sched, &cell.pool(), seed);
+    let by_shard = &out.diagnostics.started_by_shard;
+    let total: u64 = by_shard.iter().sum();
+    let imbalance = if total == 0 {
+        1.0
+    } else {
+        let fair = total as f64 / by_shard.len() as f64;
+        by_shard.iter().copied().max().unwrap_or(0) as f64 / fair
+    };
+    (out.metrics, imbalance)
+}
+
+/// The grid: 1-shard control cells (policy-invariant by construction) plus
+/// the full shards × heterogeneity × policy product.
+fn grid() -> Vec<ShardCell> {
+    let mut cells = Vec::new();
+    for congestion in [Congestion::Medium, Congestion::High] {
+        let rate_rps = Regime { mix: Mix::Balanced, congestion }.rate_rps();
+        cells.push(ShardCell {
+            congestion,
+            rate_rps,
+            shards: 1,
+            skew: 0.0,
+            policy: ShardPolicy::LeastInflight,
+        });
+        for shards in [2usize, 4] {
+            for skew in [0.0, SKEW] {
+                for policy in ShardPolicy::ALL {
+                    cells.push(ShardCell { congestion, rate_rps, shards, skew, policy });
+                }
+            }
+        }
+    }
+    cells
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let cells = grid();
+    let all: Vec<Vec<(RunMetrics, f64)>> = opts
+        .sweep()
+        .map_cells(cells.len(), opts.seeds, |c, s| run_cell_seed(&cells[c], opts.n_requests, s));
+
+    let mut table = TextTable::new([
+        "Congestion",
+        "Shards",
+        "Fleet",
+        "Policy",
+        "Short P95",
+        "Global P95",
+        "CR",
+        "Goodput",
+        "Imbalance",
+    ]);
+    let mut csv = CsvTable::new([
+        "congestion",
+        "shards",
+        "fleet",
+        "policy",
+        "short_p95_mean",
+        "short_p95_std",
+        "global_p95_mean",
+        "global_p95_std",
+        "cr_mean",
+        "cr_std",
+        "satisfaction_mean",
+        "satisfaction_std",
+        "goodput_mean",
+        "goodput_std",
+        "rejects_mean",
+        "defers_mean",
+        "imbalance_mean",
+    ]);
+    for (cell, runs) in cells.iter().zip(&all) {
+        let metrics: Vec<RunMetrics> = runs.iter().map(|(m, _)| m.clone()).collect();
+        let imbalances: Vec<f64> = runs.iter().map(|(_, b)| *b).collect();
+        let agg = Aggregate::new(&metrics);
+        let short = agg.mean_std(|m| m.short_p95_ms);
+        let global = agg.mean_std(|m| m.global_p95_ms);
+        let cr = agg.mean_std(|m| m.completion_rate);
+        let sat = agg.mean_std(|m| m.satisfaction);
+        let good = agg.mean_std(|m| m.goodput_rps);
+        let rejects = agg.mean_std(|m| m.rejects_total as f64);
+        let defers = agg.mean_std(|m| m.defers_total as f64);
+        let imb = mean(&imbalances);
+        table.row([
+            cell.congestion.name().to_string(),
+            cell.shards.to_string(),
+            cell.hetero_name().to_string(),
+            cell.policy.name().to_string(),
+            fmt_pm(short),
+            fmt_pm(global),
+            fmt_rate(cr),
+            format!("{:.1}±{:.1}", good.0, good.1),
+            format!("{imb:.2}"),
+        ]);
+        csv.row([
+            cell.congestion.name().to_string(),
+            cell.shards.to_string(),
+            cell.hetero_name().to_string(),
+            cell.policy.name().to_string(),
+            format!("{:.1}", short.0),
+            format!("{:.1}", short.1),
+            format!("{:.1}", global.0),
+            format!("{:.1}", global.1),
+            format!("{:.4}", cr.0),
+            format!("{:.4}", cr.1),
+            format!("{:.4}", sat.0),
+            format!("{:.4}", sat.1),
+            format!("{:.3}", good.0),
+            format!("{:.3}", good.1),
+            format!("{:.1}", rejects.0),
+            format!("{:.1}", defers.0),
+            format!("{imb:.3}"),
+        ]);
+    }
+    println!("\nSharded fleet — shard count × heterogeneity × policy (mean±std over seeds)");
+    println!("{}", table.render());
+    let path = format!("{}/sharded_summary.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shape_is_stable() {
+        let cells = grid();
+        // Per congestion level: 1 control + 2 shard counts × 2 fleets × 3
+        // policies = 13; two congestion levels.
+        assert_eq!(cells.len(), 26);
+        assert!(cells.iter().all(|c| c.shards == 1 || c.shards == 2 || c.shards == 4));
+    }
+
+    #[test]
+    fn cell_runner_is_deterministic_and_balanced_sanely() {
+        let cell = ShardCell {
+            congestion: Congestion::Medium,
+            rate_rps: 12.0,
+            shards: 2,
+            skew: SKEW,
+            policy: ShardPolicy::Weighted,
+        };
+        let (a, imb_a) = run_cell_seed(&cell, 30, 1);
+        let (b, imb_b) = run_cell_seed(&cell, 30, 1);
+        assert_eq!(a.n_completed, b.n_completed);
+        assert_eq!(imb_a.to_bits(), imb_b.to_bits());
+        assert!(imb_a >= 1.0, "imbalance is max/fair-share, so ≥ 1: {imb_a}");
+    }
+}

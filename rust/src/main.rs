@@ -16,9 +16,10 @@ use blackbox_sched::experiments::{self, ExpOpts};
 use blackbox_sched::metrics::report::TextTable;
 use blackbox_sched::predictor::features::batch_features;
 use blackbox_sched::predictor::{InfoLevel, LadderSource};
+use blackbox_sched::provider::pool::PoolCfg;
 use blackbox_sched::provider::ProviderCfg;
 use blackbox_sched::runtime;
-use blackbox_sched::scheduler::{SchedulerCfg, StrategyKind};
+use blackbox_sched::scheduler::{SchedulerCfg, ShardPolicy, StrategyKind};
 use blackbox_sched::sim::driver;
 use blackbox_sched::util::cli::Cmd;
 use blackbox_sched::util::rng::Rng;
@@ -179,22 +180,29 @@ fn cmd_run(args: &[String]) -> Result<()> {
 
 fn cmd_bench(args: &[String]) -> Result<()> {
     let cmd = Cmd::new("bench", "scale/perf harness: every strategy at large request counts")
-        .opt("sizes", "10000,100000", "comma-separated request counts per run")
+        .opt("sizes", "", "comma-separated request counts per run (default 10000,100000)")
         .opt("rate", "20.0", "arrival rate (req/s)")
         .opt("mix", "balanced", "balanced|heavy|sharegpt|fairness_heavy")
         .opt("seed", "0", "random seed (one shared workload per size)")
         .opt("out", "BENCH.json", "output JSON path")
-        .flag("smoke", "CI smoke sizes (1000,5000); numbers informational, fails only on panic");
+        .opt("shards", "1", "add a multi-shard leg with this fleet size (1 = single endpoint)")
+        .opt("gate-exponent", "0", "fail if any scaling exponent exceeds this (0 = off)")
+        .flag("smoke", "CI smoke sizes (1000,5000)");
     let a = cmd.parse(args)?;
     if a.help {
         print!("{}", cmd.help_text());
         return Ok(());
     }
+    // An empty --sizes means "not given" (the declared default), so an
+    // explicit --sizes — even one spelling out the default — always either
+    // takes effect or conflicts loudly with --smoke.
     let sizes: Vec<usize> = if a.flag("smoke") {
-        if a.str("sizes") != "10000,100000" {
+        if !a.str("sizes").is_empty() {
             bail!("--smoke picks its own sizes (1000,5000); pass either --smoke or --sizes");
         }
         vec![1_000, 5_000]
+    } else if a.str("sizes").is_empty() {
+        vec![10_000, 100_000]
     } else {
         let mut sizes = Vec::new();
         for s in a.list("sizes") {
@@ -202,12 +210,15 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         }
         sizes
     };
+    let gate = a.f64("gate-exponent")?;
     let opts = ScaleBenchOpts {
         sizes,
         rate_rps: a.f64("rate")?,
         mix: Mix::parse(a.str("mix")).with_context(|| format!("bad mix {:?}", a.str("mix")))?,
         seed: a.u64("seed")?,
         out_path: a.str("out").to_string(),
+        shards: a.usize("shards")?,
+        gate_exponent: if gate > 0.0 { Some(gate) } else { None },
     };
     run_scale_bench(&opts)
 }
@@ -318,6 +329,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("requests", "60", "request count")
         .opt("scale", "0.05", "wall-clock ms per model ms (0.05 = 20× faster)")
         .opt("strategy", "final_adrr_olc", "strategy")
+        .opt("shards", "1", "provider fleet size (N>1 = heterogeneous N-shard pool)")
+        .opt("shard-policy", "least_inflight", "least_inflight|weighted|hash_affinity")
         .opt("artifacts", &runtime::default_artifacts_dir(), "artifacts dir ('' = analytic priors)");
     let a = cmd.parse(args)?;
     if a.help {
@@ -325,11 +338,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         return Ok(());
     }
     let strategy = StrategyKind::parse(a.str("strategy")).context("bad strategy")?;
+    let shards = a.usize("shards")?;
+    let policy = ShardPolicy::parse(a.str("shard-policy"))
+        .with_context(|| format!("bad shard policy {:?}", a.str("shard-policy")))?;
+    let pool = if shards <= 1 {
+        PoolCfg::single(ProviderCfg::default())
+    } else {
+        PoolCfg::heterogeneous(ProviderCfg::default(), shards, 0.5)
+    };
     blackbox_sched::serve::serve_demo(
         strategy,
         a.f64("rate")?,
         a.usize("requests")?,
         a.f64("scale")?,
         a.str("artifacts"),
+        pool,
+        policy,
     )
 }

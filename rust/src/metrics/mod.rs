@@ -99,16 +99,12 @@ pub fn compute(
         .collect();
     // One sort per latency vector per run; every percentile below reads the
     // sorted slice directly instead of clone-and-selecting per call.
+    // `percentile_sorted` itself yields NaN on empty input (all-rejected
+    // runs produce empty latency vectors).
     completed_lat.sort_unstable_by(f64::total_cmp);
     short_lat.sort_unstable_by(f64::total_cmp);
     heavy_lat.sort_unstable_by(f64::total_cmp);
-    let pct = |xs: &[f64], p: f64| {
-        if xs.is_empty() {
-            f64::NAN
-        } else {
-            percentile_sorted(xs, p)
-        }
-    };
+    let pct = percentile_sorted;
 
     let first_arrival =
         outcomes.iter().map(|o| o.arrival_ms).fold(f64::INFINITY, f64::min);

@@ -13,6 +13,7 @@
 //! handing the client `(request id, completion time)`.
 
 pub mod calibration;
+pub mod pool;
 
 use std::collections::VecDeque;
 
@@ -82,14 +83,29 @@ impl ProviderCfg {
         (self.base_ms + self.per_token_ms * output_tokens) * self.slowdown(running)
     }
 
+    /// [`ProviderCfg::service_ms`] at a fractional concurrency level (the
+    /// slowdown curve is continuous; capacity math evaluates it at
+    /// `slowdown_ref`, which need not be an integer).
+    pub fn service_ms_at(&self, output_tokens: f64, n: f64) -> f64 {
+        (self.base_ms + self.per_token_ms * output_tokens) * self.slowdown_at(n)
+    }
+
     /// Multiplicative slowdown when `running` requests (including the new
     /// one) occupy the engine. Uncapped: flooding the provider stretches
     /// everyone's generation time.
     pub fn slowdown(&self, running: usize) -> f64 {
-        if running <= 1 {
+        self.slowdown_at(running as f64)
+    }
+
+    /// Slowdown at a fractional concurrency level. All capacity math is
+    /// computed on f64 throughout: truncating `slowdown_ref` to an integer
+    /// would silently evaluate the curve at the wrong concurrency for
+    /// non-integer refs (e.g. 8.5).
+    pub fn slowdown_at(&self, n: f64) -> f64 {
+        if n <= 1.0 {
             return 1.0;
         }
-        let frac = (running - 1) as f64 / self.slowdown_ref.max(1.0);
+        let frac = (n - 1.0) / self.slowdown_ref.max(1.0);
         1.0 + self.slowdown_gamma * frac.powf(self.slowdown_exp)
     }
 
@@ -97,7 +113,7 @@ impl ProviderCfg {
     /// reference concurrency — used to express offered load as a ratio.
     pub fn capacity_rps(&self, mean_tokens: f64) -> f64 {
         let n = self.slowdown_ref.max(1.0);
-        let mean_service_s = self.service_ms(mean_tokens, n as usize) / 1000.0;
+        let mean_service_s = self.service_ms_at(mean_tokens, n) / 1000.0;
         n / mean_service_s
     }
 }
@@ -173,8 +189,13 @@ impl MockProvider {
 
     /// A running request finished; promote queued work. Returns newly
     /// started requests (the DES schedules their completions).
+    ///
+    /// A finish with nothing running is a **hard invariant violation** in
+    /// every build profile: a `debug_assert!` here once let release builds
+    /// wrap `running` to `usize::MAX`, silently disabling the concurrency
+    /// gate forever.
     pub fn on_finish(&mut self, now: f64) -> Vec<Started> {
-        debug_assert!(self.running > 0, "finish with nothing running");
+        assert!(self.running > 0, "provider finish with nothing running");
         self.running -= 1;
         let mut started = Vec::new();
         while self.running < self.cfg.max_concurrency {
@@ -241,11 +262,56 @@ mod tests {
         let s40 = cfg.slowdown(40);
         assert_eq!(s1, 1.0);
         assert!(s2 > s1 && s8 > s2 && s40 > s8);
-        // At ref+1 running, the slowdown equals 1 + gamma by construction.
-        let at_ref = cfg.slowdown(cfg.slowdown_ref as usize + 1);
-        assert!((at_ref - (1.0 + cfg.slowdown_gamma)).abs() < 1e-9);
+        // At ref+1 running, the slowdown equals 1 + gamma by construction —
+        // including for non-integer refs, which the old `as usize`
+        // truncation evaluated at the wrong concurrency.
+        for r in [8.0, 8.5, 3.25] {
+            let c = ProviderCfg { slowdown_ref: r, ..ProviderCfg::default() };
+            let at_ref = c.slowdown_at(c.slowdown_ref + 1.0);
+            assert!((at_ref - (1.0 + c.slowdown_gamma)).abs() < 1e-9, "ref={r}");
+        }
         // Flooding is punished superlinearly (the naive pathology).
         assert!(s40 > 5.0, "s40={s40}");
+    }
+
+    #[test]
+    fn capacity_rps_respects_fractional_ref() {
+        // Capacity at ref 8.5 must lie strictly between the integer
+        // neighbours' capacities evaluated on the continuous curve; the old
+        // truncating implementation pinned it to the ref-8 service time.
+        let mk = |r: f64| ProviderCfg { slowdown_ref: r, ..ProviderCfg::default() };
+        let c8 = mk(8.0).capacity_rps(352.0);
+        let c85 = mk(8.5).capacity_rps(352.0);
+        let c9 = mk(9.0).capacity_rps(352.0);
+        assert!(c8 < c85 && c85 < c9, "c8={c8} c85={c85} c9={c9}");
+        // And the exact value matches the f64 formula end-to-end.
+        let cfg = mk(8.5);
+        let want = 8.5 / (cfg.service_ms_at(352.0, 8.5) / 1000.0);
+        assert_eq!(c85.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "finish with nothing running")]
+    fn spurious_finish_is_a_hard_panic_in_every_profile() {
+        // Regression: this was a debug_assert!, so release builds wrapped
+        // `running` to usize::MAX and disabled the concurrency gate forever.
+        // `assert!` fires in release too; this test guards the invariant in
+        // whichever profile the suite runs under.
+        let mut p = provider(2);
+        p.on_finish(1.0);
+    }
+
+    #[test]
+    fn spurious_finish_cannot_disable_the_gate() {
+        // The release-profile failure mode: running wraps to usize::MAX and
+        // every later submit bypasses the FIFO. With the hard invariant the
+        // wrap is unreachable; catch_unwind keeps the suite profile-agnostic.
+        let result = std::panic::catch_unwind(|| {
+            let mut p = provider(1);
+            p.on_finish(0.0);
+            p
+        });
+        assert!(result.is_err(), "spurious finish must not return a provider with running=MAX");
     }
 
     #[test]

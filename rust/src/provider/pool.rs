@@ -1,0 +1,318 @@
+//! Sharded provider pool: N independent [`MockProvider`] endpoints behind
+//! one submit/finish surface.
+//!
+//! Real deployments schedule across multiple black-box endpoints with
+//! heterogeneous capacity (several API keys, regional deployments, mixed
+//! hardware tiers). Each shard keeps the single-provider physics — hidden
+//! FIFO, load-dependent slowdown, its own jitter stream — and the pool adds
+//! only *routing*: a submission names a shard, and a finish is routed back
+//! to the shard that served it. Which shard a request should go to is a
+//! **client-side** decision (see `scheduler::shard`); the pool itself never
+//! second-guesses the routing, exactly like a real endpoint never steals
+//! traffic addressed to a different one.
+//!
+//! Bit-compat contract: a 1-shard pool is **byte-identical** to a bare
+//! [`MockProvider`] — same RNG stream, same state transitions, same
+//! `Started` events — so every pre-pool experiment CSV stays valid. This is
+//! property-tested in `tests/pool_equivalence.rs`.
+
+use std::collections::HashMap;
+
+use crate::core::ReqId;
+use crate::provider::{MockProvider, ProviderCfg, Started};
+use crate::util::rng::Rng;
+use crate::workload::Mix;
+
+/// Pool shape: one `ProviderCfg` per shard. Policy lives client-side
+/// (`scheduler::shard::ShardCfg`) — the pool is pure provider physics.
+#[derive(Debug, Clone)]
+pub struct PoolCfg {
+    pub shards: Vec<ProviderCfg>,
+}
+
+impl PoolCfg {
+    /// The degenerate pool every pre-pool experiment runs on.
+    pub fn single(cfg: ProviderCfg) -> PoolCfg {
+        PoolCfg { shards: vec![cfg] }
+    }
+
+    /// `n` identical shards, each carrying `1/n` of the base capacity
+    /// (`max_concurrency` and `slowdown_ref` split), so total fleet
+    /// capacity stays comparable across shard counts.
+    pub fn split(cfg: ProviderCfg, n: usize) -> PoolCfg {
+        assert!(n >= 1, "pool needs at least one shard");
+        let per = ProviderCfg {
+            max_concurrency: (cfg.max_concurrency / n).max(1),
+            slowdown_ref: (cfg.slowdown_ref / n as f64).max(1.0),
+            ..cfg
+        };
+        PoolCfg { shards: vec![per; n] }
+    }
+
+    /// Like [`PoolCfg::split`], but shard `i`'s service speed is scaled by
+    /// a linear spread of ±`skew` around 1 (shard 0 fastest): the
+    /// heterogeneous-fleet regime where weighted selection matters.
+    pub fn heterogeneous(cfg: ProviderCfg, n: usize, skew: f64) -> PoolCfg {
+        assert!((0.0..1.0).contains(&skew), "skew must be in [0,1)");
+        let mut pool = PoolCfg::split(cfg, n);
+        if n > 1 {
+            for (i, shard) in pool.shards.iter_mut().enumerate() {
+                let t = i as f64 / (n - 1) as f64; // 0..=1 across shards
+                let factor = 1.0 + skew * (2.0 * t - 1.0); // 1-skew ..= 1+skew
+                shard.base_ms *= factor;
+                shard.per_token_ms *= factor;
+            }
+        }
+        pool
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Advertised relative capacity per shard, for the client's weighted
+    /// selection policy. A real operator knows this about its own
+    /// provisioned endpoints (tier, region, rate limit) even though the
+    /// per-request physics stay opaque. Evaluated at the balanced mix's
+    /// mean token count; for shards built by [`PoolCfg::heterogeneous`]
+    /// (speed factor scales `base_ms` and `per_token_ms` together) the
+    /// weight *ratios* are independent of that reference anyway.
+    pub fn client_weights(&self) -> Vec<f64> {
+        let ref_tokens = Mix::Balanced.mean_tokens();
+        self.shards.iter().map(|c| c.capacity_rps(ref_tokens)).collect()
+    }
+}
+
+/// N mock endpoints behind one routing surface. All state here is invisible
+/// to the scheduler; the driver only ever crosses the boundary with
+/// `(id, shard)` on submit and `(id, completion time)` on finish.
+pub struct ProviderPool {
+    shards: Vec<MockProvider>,
+    /// id → shard routing for requests currently inside the provider
+    /// (running or hidden-queued). Unused for 1-shard pools.
+    assigned: HashMap<ReqId, u32>,
+    /// Total hidden-queue depth across shards, tracked incrementally.
+    waiting_total: usize,
+    peak_waiting_total: usize,
+}
+
+impl ProviderPool {
+    /// `rng` is the base provider stream (`Rng::new(seed).derive("provider")`).
+    /// A 1-shard pool consumes it verbatim — the bit-compat contract with
+    /// the bare `MockProvider`; multi-shard pools derive one independent
+    /// stream per shard.
+    pub fn new(cfg: &PoolCfg, rng: Rng) -> ProviderPool {
+        assert!(!cfg.shards.is_empty(), "pool needs at least one shard");
+        let shards: Vec<MockProvider> = if cfg.shards.len() == 1 {
+            vec![MockProvider::new(cfg.shards[0].clone(), rng)]
+        } else {
+            cfg.shards
+                .iter()
+                .enumerate()
+                .map(|(i, c)| MockProvider::new(c.clone(), rng.derive(&format!("shard{i}"))))
+                .collect()
+        };
+        ProviderPool { shards, assigned: HashMap::new(), waiting_total: 0, peak_waiting_total: 0 }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard introspection (tests/experiments only).
+    pub fn shard(&self, i: usize) -> &MockProvider {
+        &self.shards[i]
+    }
+
+    /// Submit `id` to `shard`. Routing is the client's choice; a full shard
+    /// queues the request in *that shard's* hidden FIFO even if another
+    /// shard has free slots — the cost of imperfect client-side information.
+    pub fn submit(
+        &mut self,
+        id: ReqId,
+        output_tokens: f64,
+        shard: usize,
+        now: f64,
+    ) -> Option<Started> {
+        if self.shards.len() > 1 {
+            let prev = self.assigned.insert(id, shard as u32);
+            debug_assert!(prev.is_none(), "double submit for {id}");
+        }
+        let started = self.shards[shard].submit(id, output_tokens, now);
+        if started.is_none() {
+            self.waiting_total += 1;
+            self.peak_waiting_total = self.peak_waiting_total.max(self.waiting_total);
+        }
+        started
+    }
+
+    /// Batched dispatch: submit every `(id, tokens, shard)` in order,
+    /// appending the immediately-started ones to `out`. State transitions
+    /// are identical to the equivalent sequence of [`ProviderPool::submit`]
+    /// calls — batching is a call-count optimization, not a semantic change.
+    pub fn submit_batch(
+        &mut self,
+        batch: &[(ReqId, f64, usize)],
+        now: f64,
+        out: &mut Vec<Started>,
+    ) {
+        for &(id, tokens, shard) in batch {
+            if let Some(s) = self.submit(id, tokens, shard, now) {
+                out.push(s);
+            }
+        }
+    }
+
+    /// Request `id` finished: route the finish to its shard and promote that
+    /// shard's queued work. Panics on an unknown id — a spurious finish is
+    /// the same hard invariant violation as `MockProvider::on_finish` with
+    /// nothing running.
+    pub fn on_finish(&mut self, id: ReqId, now: f64) -> Vec<Started> {
+        let shard = if self.shards.len() == 1 {
+            0
+        } else {
+            self.assigned.remove(&id).expect("finish for a request the pool never started") as usize
+        };
+        let started = self.shards[shard].on_finish(now);
+        self.waiting_total -= started.len();
+        started
+    }
+
+    // ---- aggregate introspection (tests/experiments) ----
+
+    pub fn total_running(&self) -> usize {
+        self.shards.iter().map(MockProvider::running).sum()
+    }
+
+    pub fn hidden_queue_len(&self) -> usize {
+        self.waiting_total
+    }
+
+    /// Peak total hidden-queue depth. For a 1-shard pool this equals the
+    /// bare provider's peak (same update points), preserving diagnostics
+    /// byte-compat.
+    pub fn peak_hidden_queue(&self) -> usize {
+        if self.shards.len() == 1 {
+            self.shards[0].peak_hidden_queue()
+        } else {
+            self.peak_waiting_total
+        }
+    }
+
+    pub fn total_started(&self) -> u64 {
+        self.shards.iter().map(MockProvider::total_started).sum()
+    }
+
+    /// Requests started per shard — the balance signal the sharded
+    /// experiment reports.
+    pub fn started_by_shard(&self) -> Vec<u64> {
+        self.shards.iter().map(MockProvider::total_started).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(cap: usize) -> ProviderCfg {
+        ProviderCfg {
+            base_ms: 100.0,
+            per_token_ms: 1.0,
+            max_concurrency: cap,
+            slowdown_gamma: 1.0,
+            slowdown_exp: 1.0,
+            slowdown_ref: 3.0,
+            jitter_sigma: 0.0,
+        }
+    }
+
+    #[test]
+    fn split_divides_capacity() {
+        let pool = PoolCfg::split(ProviderCfg::default(), 4);
+        assert_eq!(pool.n_shards(), 4);
+        for s in &pool.shards {
+            assert_eq!(s.max_concurrency, 16);
+            assert!((s.slowdown_ref - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_spread_is_symmetric() {
+        let pool = PoolCfg::heterogeneous(ProviderCfg::default(), 3, 0.4);
+        let base = ProviderCfg::default().per_token_ms;
+        let per: Vec<f64> = pool.shards.iter().map(|s| s.per_token_ms).collect();
+        assert!((per[0] - base * 0.6).abs() < 1e-12);
+        assert!((per[1] - base).abs() < 1e-12);
+        assert!((per[2] - base * 1.4).abs() < 1e-12);
+        // Faster shards advertise larger weights.
+        let w = pool.client_weights();
+        assert!(w[0] > w[1] && w[1] > w[2], "weights {w:?}");
+    }
+
+    #[test]
+    fn routing_is_respected_even_when_unbalanced() {
+        // Everything addressed to shard 0: shard 1 stays idle and shard 0
+        // queues — the pool must not steal traffic across shards.
+        let pool_cfg = PoolCfg { shards: vec![cfg(1), cfg(1)] };
+        let mut pool = ProviderPool::new(&pool_cfg, Rng::new(7));
+        assert!(pool.submit(0, 10.0, 0, 0.0).is_some());
+        assert!(pool.submit(1, 10.0, 0, 0.0).is_none());
+        assert!(pool.submit(2, 10.0, 0, 0.0).is_none());
+        assert_eq!(pool.shard(0).hidden_queue_len(), 2);
+        assert_eq!(pool.shard(1).running(), 0);
+        assert_eq!(pool.hidden_queue_len(), 2);
+        assert_eq!(pool.peak_hidden_queue(), 2);
+        // Finishing on shard 0 promotes shard 0's queue, FIFO.
+        let started = pool.on_finish(0, 50.0);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].id, 1);
+        assert_eq!(pool.hidden_queue_len(), 1);
+    }
+
+    #[test]
+    fn finishes_route_back_to_the_serving_shard() {
+        let pool_cfg = PoolCfg { shards: vec![cfg(2), cfg(2)] };
+        let mut pool = ProviderPool::new(&pool_cfg, Rng::new(9));
+        pool.submit(10, 10.0, 0, 0.0);
+        pool.submit(11, 10.0, 1, 0.0);
+        pool.submit(12, 10.0, 1, 0.0);
+        pool.submit(13, 10.0, 1, 0.0); // queues on shard 1
+        assert_eq!(pool.shard(1).hidden_queue_len(), 1);
+        // Finishing the shard-0 request must not promote shard 1's queue.
+        assert!(pool.on_finish(10, 5.0).is_empty());
+        assert_eq!(pool.shard(1).hidden_queue_len(), 1);
+        // Finishing a shard-1 request promotes id 13 on shard 1.
+        let started = pool.on_finish(11, 6.0);
+        assert_eq!(started.len(), 1);
+        assert_eq!(started[0].id, 13);
+        assert_eq!(pool.total_running(), 2);
+        assert_eq!(pool.started_by_shard(), vec![1, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "never started")]
+    fn unknown_finish_panics() {
+        let pool_cfg = PoolCfg { shards: vec![cfg(2), cfg(2)] };
+        let mut pool = ProviderPool::new(&pool_cfg, Rng::new(1));
+        pool.on_finish(99, 1.0);
+    }
+
+    #[test]
+    fn multi_shard_streams_are_independent_and_deterministic() {
+        let jcfg = ProviderCfg { jitter_sigma: 0.1, ..ProviderCfg::default() };
+        let pool_cfg = PoolCfg { shards: vec![jcfg.clone(), jcfg] };
+        let mut a = ProviderPool::new(&pool_cfg, Rng::new(3));
+        let mut b = ProviderPool::new(&pool_cfg, Rng::new(3));
+        let mut finishes = Vec::new();
+        for i in 0..8 {
+            let sa = a.submit(i, 400.0, i % 2, 0.0);
+            let sb = b.submit(i, 400.0, i % 2, 0.0);
+            assert_eq!(sa, sb, "same seed, same pool, same events");
+            finishes.push(sa.unwrap().finish_ms);
+        }
+        // Shards draw from distinct streams: the first request on shard 0
+        // and the first on shard 1 see the same mean service (running=1 on
+        // each) but different jitter draws.
+        assert_ne!(finishes[0].to_bits(), finishes[1].to_bits());
+    }
+}

@@ -16,7 +16,10 @@ pub mod allocation;
 pub mod ordering;
 pub mod overload;
 pub mod queues;
+pub mod shard;
 pub mod state;
+
+pub use shard::{ShardCfg, ShardPolicy};
 
 use crate::core::{Class, Priors, ReqId, Request};
 use crate::predictor::Route;
@@ -26,6 +29,7 @@ use allocation::{
 use ordering::{Edf, FeasibleSet, Fifo, Ordering, OrderingCfg, Sjf};
 use overload::{OverloadCfg, OverloadController, OverloadDecision, SeveritySignals};
 use queues::{ClassQueues, SchedRequest};
+use shard::ShardSelector;
 use state::ApiState;
 use std::collections::HashMap;
 
@@ -142,6 +146,10 @@ pub struct SchedulerCfg {
     /// Heavy-class ordering (interactive is always FIFO, matching §3.1:
     /// the feasible-set rule is specified "for the heavy class").
     pub heavy_ordering: OrderingKind,
+    /// Endpoint fleet view: shard count, selection policy, advertised
+    /// weights. Defaults to the classic single-provider setup; the sim
+    /// driver reconciles `n`/weights with the actual `PoolCfg` it runs.
+    pub shards: ShardCfg,
 }
 
 impl SchedulerCfg {
@@ -163,6 +171,7 @@ impl SchedulerCfg {
             quota_interactive: 4,
             quota_heavy: 4,
             heavy_ordering: OrderingKind::FeasibleSet,
+            shards: ShardCfg::single(),
         }
     }
 }
@@ -170,8 +179,8 @@ impl SchedulerCfg {
 /// Scheduler output the driver must act on.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Action {
-    /// Submit to the provider now.
-    Send { id: ReqId },
+    /// Submit to provider endpoint `shard` now (0 for single-provider).
+    Send { id: ReqId, shard: usize },
     /// Re-offer to the scheduler at `at_ms` (deferred).
     Retry { id: ReqId, at_ms: f64 },
     /// Shed explicitly.
@@ -196,6 +205,7 @@ pub struct ClientScheduler {
     queues: ClassQueues,
     deferred: HashMap<ReqId, SchedRequest>,
     state: ApiState,
+    selector: ShardSelector,
     feasibility_violations_base: u64,
 }
 
@@ -230,6 +240,7 @@ impl ClientScheduler {
             queues: ClassQueues::new(),
             deferred: HashMap::new(),
             state: ApiState::new(),
+            selector: ShardSelector::new(cfg.shards.clone()),
             feasibility_violations_base: 0,
             cfg,
         }
@@ -291,7 +302,8 @@ impl ClientScheduler {
         if self.cfg.strategy == StrategyKind::DirectNaive {
             // Uncontrolled: straight to the provider, unbounded in-flight.
             self.state.on_send(sreq.id, route.class, priors.p50, now);
-            out.push(Action::Send { id: sreq.id });
+            let shard = self.selector.pick(sreq.id);
+            out.push(Action::Send { id: sreq.id, shard });
             return;
         }
         self.queues.push(sreq);
@@ -316,6 +328,7 @@ impl ClientScheduler {
         out: &mut Vec<Action>,
     ) {
         self.state.on_completion(id, latency_ms, deadline_budget_ms);
+        self.selector.on_done(id);
         if self.cfg.strategy == StrategyKind::DirectNaive {
             return;
         }
@@ -326,6 +339,9 @@ impl ClientScheduler {
     /// client-side holding area; frees the slot if it was in flight.
     pub fn cancel(&mut self, id: ReqId, now: f64, out: &mut Vec<Action>) {
         let was_inflight = self.state.on_abandon(id).is_some();
+        if was_inflight {
+            self.selector.on_done(id);
+        }
         let _ = self.queues.remove_id(id);
         let _ = self.deferred.remove(&id);
         if was_inflight && self.cfg.strategy != StrategyKind::DirectNaive {
@@ -406,7 +422,8 @@ impl ClientScheduler {
                 OverloadDecision::Admit => {
                     self.allocator.as_mut().unwrap().on_send(class, sreq.priors.p50);
                     self.state.on_send(sreq.id, class, sreq.priors.p50, now);
-                    out.push(Action::Send { id: sreq.id });
+                    let shard = self.selector.pick(sreq.id);
+                    out.push(Action::Send { id: sreq.id, shard });
                 }
                 OverloadDecision::Defer { delay_ms } => {
                     sreq.defer_attempts += 1;
@@ -471,6 +488,23 @@ mod tests {
     }
 
     #[test]
+    fn sends_spread_across_shards_with_least_inflight() {
+        let mut cfg = SchedulerCfg::for_strategy(StrategyKind::DirectNaive);
+        cfg.shards = ShardCfg::new(3, ShardPolicy::LeastInflight, Vec::new());
+        let mut sched = ClientScheduler::new(cfg);
+        let reqs = requests(9, Mix::Balanced);
+        let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(1));
+        let actions = arrive_all(&mut sched, &reqs, &mut src);
+        let mut counts = [0usize; 3];
+        for a in &actions {
+            if let Action::Send { shard, .. } = a {
+                counts[*shard] += 1;
+            }
+        }
+        assert_eq!(counts, [3, 3, 3], "no completions → least-inflight round-robins the fleet");
+    }
+
+    #[test]
     fn budget_caps_sends_and_queues_the_rest() {
         let mut cfg = SchedulerCfg::for_strategy(StrategyKind::AdaptiveDrr);
         cfg.max_inflight = 4;
@@ -496,7 +530,7 @@ mod tests {
         let actions = arrive_all(&mut sched, &reqs, &mut src);
         let first: Vec<ReqId> = actions
             .iter()
-            .filter_map(|a| if let Action::Send { id } = a { Some(*id) } else { None })
+            .filter_map(|a| if let Action::Send { id, .. } = a { Some(*id) } else { None })
             .collect();
         assert_eq!(first.len(), 2);
         let mut next = Vec::new();
@@ -533,7 +567,7 @@ mod tests {
         let mut actions = Vec::new();
         sched.on_arrival(&short, p, route, 500.0, &mut actions);
         assert!(
-            actions.iter().any(|a| matches!(a, Action::Send { id } if *id == short.id)),
+            actions.iter().any(|a| matches!(a, Action::Send { id, .. } if *id == short.id)),
             "short must bypass the saturated budget: {actions:?}"
         );
     }
@@ -549,7 +583,7 @@ mod tests {
         let actions = arrive_all(&mut sched, &reqs, &mut src);
         let sent: ReqId = actions
             .iter()
-            .find_map(|a| if let Action::Send { id } = a { Some(*id) } else { None })
+            .find_map(|a| if let Action::Send { id, .. } = a { Some(*id) } else { None })
             .unwrap();
         assert_eq!(sched.queued(), 2);
         // Cancel a queued request: queue shrinks, no new send (slot busy).
@@ -585,7 +619,7 @@ mod tests {
         let actions = arrive_all(&mut sched, &reqs, &mut src);
         let sent: ReqId = actions
             .iter()
-            .find_map(|a| if let Action::Send { id } = a { Some(*id) } else { None })
+            .find_map(|a| if let Action::Send { id, .. } = a { Some(*id) } else { None })
             .expect("first request sends");
         // Releases are evaluated when a slot frees: completing the in-flight
         // request while queue pressure is saturated must defer/reject the

@@ -1,0 +1,256 @@
+//! Client-side shard selection: which of N provider endpoints a release
+//! goes to.
+//!
+//! Selection conditions only on client-observable state — the client's own
+//! submitted-not-yet-completed count per shard plus statically advertised
+//! capacity weights (an operator knows the tier/region/rate-limit of its
+//! own endpoints even though per-request behavior stays opaque). It never
+//! sees a shard's hidden queue or running count: a full shard still
+//! *accepts* the submission and queues it invisibly, so a bad pick costs
+//! real latency. That asymmetry is why the policy choice matters.
+//!
+//! Policies:
+//! * [`ShardPolicy::LeastInflight`] — argmin of the client's own in-flight
+//!   count; the classic "join the shortest (observable) queue".
+//! * [`ShardPolicy::Weighted`] — argmin of `(inflight+1)/weight`; sends
+//!   proportionally more to advertised-faster shards, the right call for
+//!   heterogeneous fleets.
+//! * [`ShardPolicy::HashAffinity`] — deterministic hash of the request id;
+//!   stateless and cache/session-friendly, blind to load.
+//!
+//! All ties break toward the lowest shard index, keeping every run
+//! bit-reproducible.
+
+use std::collections::HashMap;
+
+use crate::core::ReqId;
+
+/// Shard-selection policy (client-side).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    LeastInflight,
+    Weighted,
+    HashAffinity,
+}
+
+impl ShardPolicy {
+    pub const ALL: [ShardPolicy; 3] =
+        [ShardPolicy::LeastInflight, ShardPolicy::Weighted, ShardPolicy::HashAffinity];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardPolicy::LeastInflight => "least_inflight",
+            ShardPolicy::Weighted => "weighted",
+            ShardPolicy::HashAffinity => "hash_affinity",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ShardPolicy> {
+        match s {
+            "least_inflight" | "lif" => Some(ShardPolicy::LeastInflight),
+            "weighted" | "wlif" => Some(ShardPolicy::Weighted),
+            "hash_affinity" | "hash" => Some(ShardPolicy::HashAffinity),
+            _ => None,
+        }
+    }
+}
+
+/// Client-side view of the endpoint fleet.
+#[derive(Debug, Clone)]
+pub struct ShardCfg {
+    /// Endpoint count. 1 = the classic single-provider setup.
+    pub n: usize,
+    pub policy: ShardPolicy,
+    /// Advertised relative capacity per shard (used by `Weighted`); empty
+    /// means uniform. Length must be `n` when non-empty.
+    pub weights: Vec<f64>,
+}
+
+impl ShardCfg {
+    pub fn single() -> ShardCfg {
+        ShardCfg { n: 1, policy: ShardPolicy::LeastInflight, weights: Vec::new() }
+    }
+
+    pub fn new(n: usize, policy: ShardPolicy, weights: Vec<f64>) -> ShardCfg {
+        assert!(n >= 1, "need at least one shard");
+        assert!(weights.is_empty() || weights.len() == n, "weights must match shard count");
+        ShardCfg { n, policy, weights }
+    }
+}
+
+impl Default for ShardCfg {
+    fn default() -> Self {
+        ShardCfg::single()
+    }
+}
+
+/// SplitMix64 finalizer — the affinity hash. Deterministic, dependency-free,
+/// and well-mixed over sequential ids.
+#[inline]
+fn hash_id(id: ReqId) -> u64 {
+    let mut z = (id as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Stateful selector owned by the scheduler: picks a shard per release and
+/// tracks the client's per-shard in-flight counts.
+pub struct ShardSelector {
+    cfg: ShardCfg,
+    inflight: Vec<usize>,
+    /// id → shard for in-flight requests (multi-shard only).
+    assigned: HashMap<ReqId, u32>,
+}
+
+impl ShardSelector {
+    pub fn new(cfg: ShardCfg) -> ShardSelector {
+        assert!(cfg.n >= 1, "need at least one shard");
+        assert!(
+            cfg.weights.is_empty() || cfg.weights.len() == cfg.n,
+            "weights must match shard count"
+        );
+        ShardSelector { inflight: vec![0; cfg.n], assigned: HashMap::new(), cfg }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.cfg.n
+    }
+
+    pub fn inflight(&self, shard: usize) -> usize {
+        self.inflight[shard]
+    }
+
+    fn weight(&self, i: usize) -> f64 {
+        if self.cfg.weights.is_empty() {
+            1.0
+        } else {
+            self.cfg.weights[i]
+        }
+    }
+
+    /// Choose the shard for `id`, record the assignment, and bump the
+    /// client-side in-flight count. O(n_shards); the 1-shard fast path is
+    /// branch-and-return (no map traffic), keeping the classic setup free.
+    pub fn pick(&mut self, id: ReqId) -> usize {
+        if self.cfg.n == 1 {
+            return 0;
+        }
+        let shard = match self.cfg.policy {
+            ShardPolicy::LeastInflight => {
+                let mut best = 0usize;
+                for (i, &f) in self.inflight.iter().enumerate().skip(1) {
+                    if f < self.inflight[best] {
+                        best = i;
+                    }
+                }
+                best
+            }
+            ShardPolicy::Weighted => {
+                let mut best = 0usize;
+                let mut best_score = (self.inflight[0] as f64 + 1.0) / self.weight(0);
+                for i in 1..self.cfg.n {
+                    let score = (self.inflight[i] as f64 + 1.0) / self.weight(i);
+                    if score < best_score {
+                        best = i;
+                        best_score = score;
+                    }
+                }
+                best
+            }
+            ShardPolicy::HashAffinity => (hash_id(id) % self.cfg.n as u64) as usize,
+        };
+        self.inflight[shard] += 1;
+        let prev = self.assigned.insert(id, shard as u32);
+        debug_assert!(prev.is_none(), "shard pick for already-assigned {id}");
+        shard
+    }
+
+    /// The request left the provider (completion or client abandon): free
+    /// its shard's client-side slot. Unknown ids are ignored (e.g. a
+    /// completion observed after abandon).
+    pub fn on_done(&mut self, id: ReqId) {
+        if self.cfg.n == 1 {
+            return;
+        }
+        if let Some(s) = self.assigned.remove(&id) {
+            self.inflight[s as usize] -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn selector(n: usize, policy: ShardPolicy, weights: Vec<f64>) -> ShardSelector {
+        ShardSelector::new(ShardCfg::new(n, policy, weights))
+    }
+
+    #[test]
+    fn least_inflight_round_robins_under_symmetry() {
+        let mut s = selector(3, ShardPolicy::LeastInflight, vec![]);
+        // Ties break to the lowest index, so fresh picks walk 0,1,2.
+        assert_eq!(s.pick(10), 0);
+        assert_eq!(s.pick(11), 1);
+        assert_eq!(s.pick(12), 2);
+        // Completing on shard 1 makes it least-loaded again.
+        s.on_done(11);
+        assert_eq!(s.pick(13), 1);
+        assert_eq!(s.inflight(0), 1);
+        assert_eq!(s.inflight(1), 1);
+    }
+
+    #[test]
+    fn weighted_prefers_advertised_capacity() {
+        // Shard 1 advertises 3× capacity: it should absorb ~3 of every 4.
+        let mut s = selector(2, ShardPolicy::Weighted, vec![1.0, 3.0]);
+        let mut counts = [0usize; 2];
+        for id in 0..8 {
+            counts[s.pick(id)] += 1;
+        }
+        assert_eq!(counts, [2, 6], "weighted split at 1:3");
+    }
+
+    #[test]
+    fn hash_affinity_is_sticky_and_spread() {
+        let mut a = selector(4, ShardPolicy::HashAffinity, vec![]);
+        let mut b = selector(4, ShardPolicy::HashAffinity, vec![]);
+        let mut counts = [0usize; 4];
+        for id in 0..64 {
+            let sa = a.pick(id);
+            assert_eq!(sa, b.pick(id), "same id, same shard, always");
+            counts[sa] += 1;
+        }
+        // The finalizer spreads sequential ids: no shard starves or hogs.
+        for (i, c) in counts.iter().enumerate() {
+            assert!((4..=28).contains(c), "shard {i} got {c}/64");
+        }
+    }
+
+    #[test]
+    fn single_shard_fast_path_is_free() {
+        let mut s = selector(1, ShardPolicy::HashAffinity, vec![]);
+        for id in 0..10 {
+            assert_eq!(s.pick(id), 0);
+        }
+        s.on_done(3);
+        assert_eq!(s.inflight(0), 0, "1-shard selector tracks nothing");
+    }
+
+    #[test]
+    fn unknown_done_is_ignored() {
+        let mut s = selector(2, ShardPolicy::LeastInflight, vec![]);
+        s.pick(1);
+        s.on_done(99);
+        assert_eq!(s.inflight(0), 1);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in ShardPolicy::ALL {
+            assert_eq!(ShardPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(ShardPolicy::parse("bogus"), None);
+    }
+}

@@ -3,19 +3,21 @@
 //! image has no tokio; std threads + mpsc fill the role).
 //!
 //! Architecture:
-//! * a **provider thread** owns the mock black-box API: it receives
-//!   submissions over a channel, enforces the hidden concurrency limit +
-//!   FIFO, and emits completions back at the right wall-clock instants;
+//! * a **provider thread** owns the mock black-box fleet: it receives
+//!   batched submissions over a channel, enforces each shard's hidden
+//!   concurrency limit + FIFO, and emits completions back at the right
+//!   wall-clock instants;
 //! * the **client thread** (caller) runs the scheduler loop: waits for the
 //!   earliest of {next arrival, next retry, next timeout, a completion},
-//!   feeds the scheduler, and submits its Send actions.
+//!   feeds the scheduler, and submits each tick's Send actions as one
+//!   batch message.
 //!
 //! Model time is scaled by `scale` (wall ms per model ms) so demos finish
 //! in seconds while preserving the physics ratios. If AOT artifacts are
 //! present, per-request priors come from the PJRT predictor at admission
 //! time — the full L3→runtime→L1/L2 path on the live request path.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -24,87 +26,138 @@ use anyhow::Result;
 use crate::core::{ReqId, RequestStatus};
 use crate::metrics::{compute, RequestOutcome};
 use crate::predictor::{InfoLevel, LadderSource, PriorSource};
+use crate::provider::pool::PoolCfg;
 use crate::provider::ProviderCfg;
 use crate::runtime::{artifacts_available, NnPriorSource, Predictor};
-use crate::scheduler::{Action, ClientScheduler, SchedulerCfg, StrategyKind};
+use crate::scheduler::{
+    Action, ClientScheduler, SchedulerCfg, ShardCfg, ShardPolicy, StrategyKind,
+};
 use crate::util::rng::Rng;
 use crate::workload::{Mix, WorkloadSpec};
 
+/// One submission inside a batch message to the provider thread.
+struct SubmitItem {
+    id: ReqId,
+    output_tokens: f64,
+    shard: usize,
+}
+
 /// Message into the provider thread.
 enum ToProvider {
-    Submit { id: ReqId, output_tokens: f64 },
+    /// One client tick's Send batch, in release order.
+    Submit(Vec<SubmitItem>),
     Shutdown,
 }
 
-/// Provider thread: hidden concurrency + FIFO + load-dependent service, on
-/// wall-clock time. Completions are sent as (id, completion_wall_instant).
-fn provider_thread(
+/// Pending completion in the provider thread's finish heap. Min-ordered by
+/// `(at, id)`: the `ReqId` tiebreak mirrors the DES `EventQueue`'s
+/// (time, seq) ordering. Ordering on `at` alone left simultaneous
+/// completions popping in unspecified order, breaking run-to-run
+/// reproducibility of the wall-clock demo.
+struct Finish {
+    at: Instant,
+    id: ReqId,
+    shard: usize,
+}
+
+impl PartialEq for Finish {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.id == other.id
+    }
+}
+impl Eq for Finish {}
+impl PartialOrd for Finish {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Finish {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reverse both keys for a min-heap on (at, id).
+        other.at.cmp(&self.at).then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+/// One endpoint's wall-clock state: the DES mock's physics (hidden
+/// concurrency gate, invisible FIFO, load-dependent service + jitter).
+struct ShardState {
     cfg: ProviderCfg,
+    rng: Rng,
+    running: usize,
+    waiting: VecDeque<(ReqId, f64)>,
+}
+
+/// Start `id` on shard `shard_ix`: sample service at the post-admission
+/// running count and schedule the completion instant.
+fn start_on(
+    shard_ix: usize,
+    shard: &mut ShardState,
+    heap: &mut BinaryHeap<Finish>,
+    id: ReqId,
+    tokens: f64,
+    scale: f64,
+) {
+    shard.running += 1;
+    let mean = shard.cfg.service_ms(tokens, shard.running);
+    let ms = if shard.cfg.jitter_sigma > 0.0 {
+        mean * shard.rng.lognormal(0.0, shard.cfg.jitter_sigma)
+    } else {
+        mean
+    };
+    let d = Duration::from_secs_f64(ms * scale / 1000.0);
+    heap.push(Finish { at: Instant::now() + d, id, shard: shard_ix });
+}
+
+/// Provider thread: the sharded fleet on wall-clock time. Completions are
+/// sent back as request ids at their completion instants.
+fn provider_thread(
+    pool: PoolCfg,
     scale: f64,
     rx: mpsc::Receiver<ToProvider>,
     tx: mpsc::Sender<ReqId>,
     seed: u64,
 ) {
-    struct Finish {
-        at: Instant,
-        id: ReqId,
-    }
-    impl PartialEq for Finish {
-        fn eq(&self, other: &Self) -> bool {
-            self.at == other.at
-        }
-    }
-    impl Eq for Finish {}
-    impl PartialOrd for Finish {
-        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-            Some(self.cmp(other))
-        }
-    }
-    impl Ord for Finish {
-        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-            other.at.cmp(&self.at) // min-heap
-        }
-    }
-
-    let mut rng = Rng::new(seed).derive("provider");
-    let mut running: BinaryHeap<Finish> = BinaryHeap::new();
-    let mut waiting: std::collections::VecDeque<(ReqId, f64)> = Default::default();
-    let service =
-        |cfg: &ProviderCfg, rng: &mut Rng, tokens: f64, n_running: usize| -> Duration {
-            let mean = cfg.service_ms(tokens, n_running);
-            let ms = if cfg.jitter_sigma > 0.0 {
-                mean * rng.lognormal(0.0, cfg.jitter_sigma)
-            } else {
-                mean
-            };
-            Duration::from_secs_f64(ms * scale / 1000.0)
-        };
+    let base = Rng::new(seed).derive("provider");
+    let n = pool.n_shards();
+    let mut shards: Vec<ShardState> = pool
+        .shards
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| ShardState {
+            cfg: cfg.clone(),
+            rng: if n == 1 { base.clone() } else { base.derive(&format!("shard{i}")) },
+            running: 0,
+            waiting: VecDeque::new(),
+        })
+        .collect();
+    let mut heap: BinaryHeap<Finish> = BinaryHeap::new();
     loop {
-        // Drain due completions.
+        // Drain due completions (instant ties pop in ReqId order).
         let now = Instant::now();
-        while running.peek().map(|f| f.at <= now).unwrap_or(false) {
-            let f = running.pop().unwrap();
+        while heap.peek().map(|f| f.at <= now).unwrap_or(false) {
+            let f = heap.pop().unwrap();
+            let s = &mut shards[f.shard];
+            s.running -= 1;
             let _ = tx.send(f.id);
-            // Promote hidden queue.
-            if let Some((id, tokens)) = waiting.pop_front() {
-                let n = running.len() + 1;
-                let d = service(&cfg, &mut rng, tokens, n);
-                running.push(Finish { at: Instant::now() + d, id });
+            // Promote that shard's hidden queue.
+            if let Some((id, tokens)) = s.waiting.pop_front() {
+                start_on(f.shard, s, &mut heap, id, tokens, scale);
             }
         }
-        // Wait for the next submission or the next finish.
-        let timeout = running
+        // Wait for the next submission batch or the next finish.
+        let timeout = heap
             .peek()
             .map(|f| f.at.saturating_duration_since(Instant::now()))
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok(ToProvider::Submit { id, output_tokens }) => {
-                if running.len() < cfg.max_concurrency {
-                    let n = running.len() + 1;
-                    let d = service(&cfg, &mut rng, output_tokens, n);
-                    running.push(Finish { at: Instant::now() + d, id });
-                } else {
-                    waiting.push_back((id, output_tokens));
+            Ok(ToProvider::Submit(batch)) => {
+                for item in batch {
+                    let s = &mut shards[item.shard];
+                    if s.running < s.cfg.max_concurrency {
+                        start_on(item.shard, s, &mut heap, item.id, item.output_tokens, scale);
+                    } else {
+                        s.waiting.push_back((item.id, item.output_tokens));
+                    }
                 }
             }
             Ok(ToProvider::Shutdown) => break,
@@ -115,12 +168,17 @@ fn provider_thread(
 }
 
 /// Run the real-time demo; prints live progress and a final metrics table.
+///
+/// `pool_cfg` shapes the provider fleet (one shard = the classic demo);
+/// `shard_policy` is the client-side selection policy across it.
 pub fn serve_demo(
     strategy: StrategyKind,
     rate_rps: f64,
     n_requests: usize,
     scale: f64,
     artifacts_dir: &str,
+    pool_cfg: PoolCfg,
+    shard_policy: ShardPolicy,
 ) -> Result<()> {
     let seed = 0u64;
     let spec = WorkloadSpec::new(Mix::Balanced, n_requests, rate_rps);
@@ -143,12 +201,19 @@ pub fn serve_demo(
 
     let (to_provider, provider_rx) = mpsc::channel::<ToProvider>();
     let (completion_tx, completion_rx) = mpsc::channel::<ReqId>();
-    let provider_cfg = ProviderCfg::default();
-    let pcfg = provider_cfg.clone();
+    let n_shards = pool_cfg.n_shards();
+    println!("provider fleet: {n_shards} shard(s), policy {}", shard_policy.name());
+    let pcfg = pool_cfg.clone();
     let handle =
         std::thread::spawn(move || provider_thread(pcfg, scale, provider_rx, completion_tx, seed));
 
-    let mut scheduler = ClientScheduler::new(SchedulerCfg::for_strategy(strategy));
+    let mut sched_cfg = SchedulerCfg::for_strategy(strategy);
+    sched_cfg.shards = ShardCfg::new(
+        n_shards,
+        shard_policy,
+        if n_shards == 1 { Vec::new() } else { pool_cfg.client_weights() },
+    );
+    let mut scheduler = ClientScheduler::new(sched_cfg);
     let epoch = Instant::now();
     let to_model_ms = |i: Instant| i.duration_since(epoch).as_secs_f64() * 1000.0 / scale;
     let to_wall = |model_ms: f64| epoch + Duration::from_secs_f64(model_ms * scale / 1000.0);
@@ -170,19 +235,23 @@ pub fn serve_demo(
     let mut arrived = 0usize;
     let mut done = 0usize;
 
-    // Reusable action buffer: the scheduler appends, `apply` drains.
+    // Reusable action buffer: the scheduler appends, `apply` drains. Each
+    // tick's Sends travel to the provider thread as ONE batch message in
+    // release order — one channel send per tick instead of one per request.
     let mut actions: Vec<Action> = Vec::new();
     let apply = |actions: &[Action],
                      timers: &mut Vec<(Instant, Timer, ReqId)>,
                      status: &mut Vec<RequestStatus>,
                      defer_counts: &mut Vec<u32>| {
+        let mut batch: Vec<SubmitItem> = Vec::new();
         for a in actions {
             match *a {
-                Action::Send { id } => {
+                Action::Send { id, shard } => {
                     status[id] = RequestStatus::InFlight;
-                    let _ = to_provider.send(ToProvider::Submit {
+                    batch.push(SubmitItem {
                         id,
                         output_tokens: requests[id].true_output_tokens as f64,
+                        shard,
                     });
                 }
                 Action::Retry { id, at_ms } => {
@@ -194,6 +263,9 @@ pub fn serve_demo(
                     status[id] = RequestStatus::Rejected;
                 }
             }
+        }
+        if !batch.is_empty() {
+            let _ = to_provider.send(ToProvider::Submit(batch));
         }
     };
 
@@ -332,4 +404,32 @@ pub fn serve_demo(
         println!("PJRT predictor calls on the live path: {}", nn.calls());
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_heap_breaks_instant_ties_by_req_id() {
+        // Regression: ordering on `at` alone popped simultaneous
+        // completions in unspecified (heap-internal) order.
+        let t = Instant::now();
+        let mut h: BinaryHeap<Finish> = BinaryHeap::new();
+        h.push(Finish { at: t, id: 7, shard: 0 });
+        h.push(Finish { at: t, id: 3, shard: 1 });
+        h.push(Finish { at: t, id: 5, shard: 0 });
+        let order: Vec<ReqId> = std::iter::from_fn(|| h.pop().map(|f| f.id)).collect();
+        assert_eq!(order, vec![3, 5, 7], "simultaneous completions pop in ReqId order");
+    }
+
+    #[test]
+    fn finish_heap_orders_by_time_before_id() {
+        let t = Instant::now();
+        let mut h: BinaryHeap<Finish> = BinaryHeap::new();
+        h.push(Finish { at: t + Duration::from_millis(5), id: 1, shard: 0 });
+        h.push(Finish { at: t, id: 9, shard: 0 });
+        assert_eq!(h.pop().unwrap().id, 9, "earlier instant wins regardless of id");
+        assert_eq!(h.pop().unwrap().id, 1);
+    }
 }

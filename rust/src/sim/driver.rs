@@ -16,7 +16,8 @@
 use crate::core::{ReqId, Request, RequestStatus};
 use crate::metrics::{compute, RequestOutcome, RunMetrics};
 use crate::predictor::PriorSource;
-use crate::provider::{MockProvider, ProviderCfg};
+use crate::provider::pool::{PoolCfg, ProviderPool};
+use crate::provider::{ProviderCfg, Started};
 use crate::scheduler::{Action, ClientScheduler, SchedulerCfg};
 use crate::sim::{EventQueue, TimerId};
 use crate::util::rng::Rng;
@@ -42,6 +43,9 @@ pub struct RunDiagnostics {
     pub sends: u64,
     pub peak_provider_queue: usize,
     pub peak_inflight: usize,
+    /// Requests started per provider shard (`vec![n_started]` for the
+    /// classic single-endpoint runs) — the fleet balance signal.
+    pub started_by_shard: Vec<u64>,
 }
 
 /// Outcome bundle of one simulated run.
@@ -51,12 +55,11 @@ pub struct RunOutput {
     pub diagnostics: RunDiagnostics,
 }
 
-/// Simulate one run to completion.
+/// Simulate one run to completion against a single provider endpoint.
 ///
-/// `prior_source` is consulted once per request, in arrival order, before
-/// the run starts — priors are a pure function of the request, so
-/// precomputing preserves semantics while letting the PJRT-backed source
-/// batch its kernel invocations.
+/// Runs on a degenerate 1-shard [`ProviderPool`], which is bit-identical to
+/// the bare `MockProvider` path this driver used before sharding (same RNG
+/// stream, same event order) — every pre-pool experiment CSV is preserved.
 pub fn run(
     requests: &[Request],
     prior_source: &mut dyn PriorSource,
@@ -64,8 +67,57 @@ pub fn run(
     provider_cfg: ProviderCfg,
     seed: u64,
 ) -> RunOutput {
+    run_pool(requests, prior_source, sched_cfg, &PoolCfg::single(provider_cfg), seed)
+}
+
+/// Submit every batched Send in action order and schedule the completions.
+///
+/// Called at Send-run boundaries (and at end of tick) so that event-queue
+/// push order — and therefore heap tie-breaking — is exactly what
+/// per-action submission produced: a `ProviderDone` scheduled by Send #k is
+/// pushed before any event a later action pushes.
+fn flush_sends(
+    provider: &mut ProviderPool,
+    batch: &mut Vec<(ReqId, f64, usize)>,
+    started: &mut Vec<Started>,
+    q: &mut EventQueue<Ev>,
+    now: f64,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    started.clear();
+    provider.submit_batch(batch, now, started);
+    for s in started.iter() {
+        q.push(s.finish_ms, Ev::ProviderDone(s.id));
+    }
+    batch.clear();
+}
+
+/// Simulate one run to completion against a sharded provider pool.
+///
+/// `prior_source` is consulted once per request, in arrival order, before
+/// the run starts — priors are a pure function of the request, so
+/// precomputing preserves semantics while letting the PJRT-backed source
+/// batch its kernel invocations.
+///
+/// The scheduler's fleet view is reconciled with the pool actually running:
+/// shard count and (when not explicitly set) advertised weights come from
+/// `pool_cfg`; the selection policy stays the client's choice.
+pub fn run_pool(
+    requests: &[Request],
+    prior_source: &mut dyn PriorSource,
+    mut sched_cfg: SchedulerCfg,
+    pool_cfg: &PoolCfg,
+    seed: u64,
+) -> RunOutput {
+    sched_cfg.shards.n = pool_cfg.n_shards();
+    if sched_cfg.shards.weights.len() != pool_cfg.n_shards() {
+        sched_cfg.shards.weights =
+            if pool_cfg.n_shards() == 1 { Vec::new() } else { pool_cfg.client_weights() };
+    }
     let mut scheduler = ClientScheduler::new(sched_cfg);
-    let mut provider = MockProvider::new(provider_cfg, Rng::new(seed).derive("provider"));
+    let mut provider = ProviderPool::new(pool_cfg, Rng::new(seed).derive("provider"));
 
     let n = requests.len();
     let priors: Vec<_> = requests.iter().map(|r| prior_source.priors(r)).collect();
@@ -86,8 +138,12 @@ pub fn run(
     let mut retry_timer: Vec<Option<TimerId>> = vec![None; n];
 
     // One action buffer for the whole run: the scheduler appends, the
-    // apply loop below drains, and `clear` keeps the capacity.
+    // apply loop below drains, and `clear` keeps the capacity. Sends are
+    // dispatched to the pool in batches (one `submit_batch` per contiguous
+    // run of Sends), reusing the same two buffers for the whole run.
     let mut actions: Vec<Action> = Vec::new();
+    let mut send_batch: Vec<(ReqId, f64, usize)> = Vec::new();
+    let mut started_buf: Vec<Started> = Vec::new();
 
     while let Some((now, ev)) = q.pop() {
         actions.clear();
@@ -98,7 +154,7 @@ pub fn run(
             }
             Ev::ProviderDone(id) => {
                 // Promote hidden-queue work first (provider-internal).
-                for started in provider.on_finish(now) {
+                for started in provider.on_finish(id, now) {
                     q.push(started.finish_ms, Ev::ProviderDone(started.id));
                 }
                 if status[id] == RequestStatus::InFlight {
@@ -138,21 +194,20 @@ pub fn run(
             }
         }
         // Apply scheduler actions; sending can cascade (a Send fills a slot;
-        // the provider may queue it internally).
+        // the provider may queue it internally). Contiguous Sends are
+        // dispatched as one batch; the batch flushes before any action that
+        // pushes an event, preserving per-action event order exactly.
         for a in &actions {
             match *a {
-                Action::Send { id } => {
+                Action::Send { id, shard } => {
                     debug_assert_eq!(status[id], RequestStatus::Queued, "send of non-queued {id}");
                     status[id] = RequestStatus::InFlight;
                     sends += 1;
                     peak_inflight = peak_inflight.max(scheduler.state().inflight());
-                    if let Some(started) =
-                        provider.submit(id, requests[id].true_output_tokens as f64, now)
-                    {
-                        q.push(started.finish_ms, Ev::ProviderDone(started.id));
-                    }
+                    send_batch.push((id, requests[id].true_output_tokens as f64, shard));
                 }
                 Action::Retry { id, at_ms } => {
+                    flush_sends(&mut provider, &mut send_batch, &mut started_buf, &mut q, now);
                     status[id] = RequestStatus::Deferred;
                     defer_counts[id] += 1;
                     retry_timer[id] = Some(q.push_cancelable(at_ms, Ev::Retry(id)));
@@ -167,6 +222,7 @@ pub fn run(
                 }
             }
         }
+        flush_sends(&mut provider, &mut send_batch, &mut started_buf, &mut q, now);
     }
 
     let outcomes: Vec<RequestOutcome> = requests
@@ -199,6 +255,7 @@ pub fn run(
             sends,
             peak_provider_queue: provider.peak_hidden_queue(),
             peak_inflight,
+            started_by_shard: provider.started_by_shard(),
         },
     }
 }
@@ -208,7 +265,7 @@ mod tests {
     use super::*;
     use crate::core::RequestStatus;
     use crate::predictor::{InfoLevel, LadderSource};
-    use crate::scheduler::StrategyKind;
+    use crate::scheduler::{ShardPolicy, StrategyKind};
     use crate::workload::{Mix, WorkloadSpec};
 
     fn run_strategy(strategy: StrategyKind, mix: Mix, rate: f64, seed: u64) -> RunOutput {
@@ -316,6 +373,82 @@ mod tests {
         let adrr = run_strategy(StrategyKind::AdaptiveDrr, Mix::Heavy, 10.0, 13);
         assert_eq!(adrr.metrics.rejects_total, 0, "no OLC → no rejects");
         assert_eq!(adrr.metrics.defers_total, 0);
+    }
+
+    fn run_sharded(policy: ShardPolicy, n_shards: usize, skew: f64, seed: u64) -> RunOutput {
+        let spec = WorkloadSpec::new(Mix::Balanced, 80, 12.0);
+        let requests = spec.generate(seed);
+        let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(seed).derive("priors"));
+        let mut cfg = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+        cfg.shards.policy = policy;
+        let pool = PoolCfg::heterogeneous(ProviderCfg::default(), n_shards, skew);
+        run_pool(&requests, &mut src, cfg, &pool, seed)
+    }
+
+    #[test]
+    fn sharded_runs_terminate_and_are_deterministic() {
+        for policy in ShardPolicy::ALL {
+            let a = run_sharded(policy, 4, 0.4, 2);
+            let b = run_sharded(policy, 4, 0.4, 2);
+            for (x, y) in a.outcomes.iter().zip(b.outcomes.iter()) {
+                assert_eq!(x.status, y.status, "{policy:?}");
+                assert_eq!(x.latency_ms, y.latency_ms, "{policy:?}");
+            }
+            assert_eq!(a.metrics.n_offered, 80, "{policy:?}");
+            for o in &a.outcomes {
+                assert!(
+                    matches!(
+                        o.status,
+                        RequestStatus::Completed | RequestStatus::Rejected | RequestStatus::TimedOut
+                    ),
+                    "{policy:?}: request {} stuck in {:?}",
+                    o.id,
+                    o.status
+                );
+            }
+            // Every submitted request eventually starts (hidden queues
+            // drain through promotions), and every shard sees traffic
+            // under load-aware policies.
+            let by_shard = &a.diagnostics.started_by_shard;
+            assert_eq!(by_shard.len(), 4, "{policy:?}");
+            assert_eq!(by_shard.iter().sum::<u64>(), a.diagnostics.sends, "{policy:?}");
+            if policy != ShardPolicy::HashAffinity {
+                assert!(by_shard.iter().all(|&c| c > 0), "{policy:?}: starved shard {by_shard:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_shard_pool_matches_bare_run_exactly() {
+        // `run` is the 1-shard pool path; an explicitly-built single-shard
+        // PoolCfg through `run_pool` must be indistinguishable from it,
+        // whatever the configured policy (the selector fast-path).
+        let spec = WorkloadSpec::new(Mix::Heavy, 60, 10.0);
+        let requests = spec.generate(4);
+        let mk_src = || LadderSource::new(InfoLevel::Coarse, Rng::new(4).derive("priors"));
+        let base = run(
+            &requests,
+            &mut mk_src(),
+            SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+            ProviderCfg::default(),
+            4,
+        );
+        for policy in ShardPolicy::ALL {
+            let mut cfg = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+            cfg.shards.policy = policy;
+            let pool = PoolCfg::single(ProviderCfg::default());
+            let pooled = run_pool(&requests, &mut mk_src(), cfg, &pool, 4);
+            assert_eq!(base.metrics.n_completed, pooled.metrics.n_completed);
+            assert_eq!(base.diagnostics.events_processed, pooled.diagnostics.events_processed);
+            for (x, y) in base.outcomes.iter().zip(pooled.outcomes.iter()) {
+                assert_eq!(x.status, y.status);
+                assert_eq!(
+                    x.latency_ms.map(f64::to_bits),
+                    y.latency_ms.map(f64::to_bits),
+                    "latency bits must match"
+                );
+            }
+        }
     }
 
     #[test]

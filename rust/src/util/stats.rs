@@ -33,9 +33,13 @@ pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
     Some(lo_val * (1.0 - frac) + hi_val * frac)
 }
 
-/// Percentile over an already-sorted slice.
+/// Percentile over an already-sorted slice. Empty input returns NaN —
+/// all-rejected runs legitimately produce empty latency vectors, and an
+/// unguarded `(n - 1)` here underflowed in release builds before indexing.
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    debug_assert!(!sorted.is_empty());
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
     let n = sorted.len();
     if n == 1 {
         return sorted[0];
@@ -240,6 +244,26 @@ mod tests {
     fn percentile_unsorted_input() {
         let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
         assert_eq!(percentile(&xs, 50.0), Some(3.0));
+    }
+
+    #[test]
+    fn percentile_sorted_empty_input_is_nan_not_ub() {
+        // All-rejected runs produce empty latency vectors; the guard must
+        // hold in release builds too (the old debug_assert! did not).
+        for p in [0.0, 50.0, 95.0, 100.0] {
+            assert!(percentile_sorted(&[], p).is_nan(), "p={p}");
+        }
+        assert_eq!(percentile_sorted(&[7.0], 95.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_percentile() {
+        let mut xs = vec![5.0, 1.0, 3.0, 2.0, 4.0, 9.5, 0.25];
+        let unsorted = xs.clone();
+        xs.sort_unstable_by(f64::total_cmp);
+        for p in [0.0, 10.0, 37.5, 50.0, 90.0, 95.0, 100.0] {
+            assert_eq!(Some(percentile_sorted(&xs, p)), percentile(&unsorted, p), "p={p}");
+        }
     }
 
     #[test]

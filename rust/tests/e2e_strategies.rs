@@ -145,6 +145,34 @@ fn realtime_serve_driver_matches_policy_semantics() {
     // The wall-clock driver (threads + channels) must run the same stack to
     // completion with the analytic prior source; 40 requests at 100× time
     // compression keeps this under a couple of wall seconds.
-    blackbox_sched::serve::serve_demo(StrategyKind::FinalAdrrOlc, 20.0, 40, 0.01, "")
-        .expect("serve demo failed");
+    use blackbox_sched::provider::pool::PoolCfg;
+    use blackbox_sched::scheduler::ShardPolicy;
+    blackbox_sched::serve::serve_demo(
+        StrategyKind::FinalAdrrOlc,
+        20.0,
+        40,
+        0.01,
+        "",
+        PoolCfg::single(ProviderCfg::default()),
+        ShardPolicy::LeastInflight,
+    )
+    .expect("serve demo failed");
+}
+
+#[test]
+fn realtime_serve_driver_runs_a_sharded_fleet() {
+    // Same wall-clock stack against a 2-shard heterogeneous pool with
+    // weighted selection: the batched multi-endpoint path end to end.
+    use blackbox_sched::provider::pool::PoolCfg;
+    use blackbox_sched::scheduler::ShardPolicy;
+    blackbox_sched::serve::serve_demo(
+        StrategyKind::FinalAdrrOlc,
+        20.0,
+        40,
+        0.01,
+        "",
+        PoolCfg::heterogeneous(ProviderCfg::default(), 2, 0.5),
+        ShardPolicy::Weighted,
+    )
+    .expect("sharded serve demo failed");
 }

@@ -1,0 +1,102 @@
+//! Property tests for the sharded provider pool.
+//!
+//! The load-bearing contract: a 1-shard [`ProviderPool`] is **bit-identical**
+//! to a bare [`MockProvider`] on arbitrary submit/finish sequences — same
+//! `Started` events (jitter bits included), same promotions, same
+//! introspection counters. Every pre-pool experiment CSV rests on this.
+
+use blackbox_sched::provider::pool::{PoolCfg, ProviderPool};
+use blackbox_sched::provider::{MockProvider, ProviderCfg};
+use blackbox_sched::testing::prop;
+use blackbox_sched::util::rng::Rng;
+
+#[test]
+fn one_shard_pool_is_bit_identical_to_bare_provider() {
+    prop::forall(60, |g| {
+        let cfg = ProviderCfg {
+            base_ms: g.f64_in(50.0, 500.0),
+            per_token_ms: g.f64_in(0.1, 5.0),
+            max_concurrency: g.usize_in(1, 8),
+            slowdown_gamma: g.f64_in(0.0, 2.0),
+            slowdown_exp: g.f64_in(0.5, 2.0),
+            slowdown_ref: g.f64_in(1.0, 10.0),
+            jitter_sigma: if g.bool() { g.f64_in(0.01, 0.3) } else { 0.0 },
+        };
+        let seed = g.u64();
+        let rng = Rng::new(seed).derive("provider");
+        let mut bare = MockProvider::new(cfg.clone(), rng.clone());
+        let mut pool = ProviderPool::new(&PoolCfg::single(cfg), rng);
+
+        // Requests currently *running* (finish is only legal for these —
+        // the DES only ever fires ProviderDone for started requests).
+        let mut started_ids: Vec<usize> = Vec::new();
+        let mut next_id = 0usize;
+        let mut now = 0.0f64;
+        let n_ops = g.usize_in(1, 120);
+        for _ in 0..n_ops {
+            now += g.f64_in(0.0, 50.0);
+            if started_ids.is_empty() || g.bool() {
+                let tokens = g.f64_in(1.0, 2000.0);
+                let a = bare.submit(next_id, tokens, now);
+                let b = pool.submit(next_id, tokens, 0, now);
+                assert_eq!(a, b, "submit diverged at id {next_id}");
+                if let Some(s) = a {
+                    assert_eq!(s.id, next_id);
+                    started_ids.push(s.id);
+                }
+                next_id += 1;
+            } else {
+                let pick = g.usize_in(0, started_ids.len());
+                let id = started_ids.swap_remove(pick);
+                let a = bare.on_finish(now);
+                let b = pool.on_finish(id, now);
+                assert_eq!(a, b, "promotions diverged finishing {id}");
+                for s in &a {
+                    started_ids.push(s.id);
+                }
+            }
+            assert_eq!(bare.running(), pool.total_running());
+            assert_eq!(bare.hidden_queue_len(), pool.hidden_queue_len());
+        }
+        assert_eq!(bare.peak_hidden_queue(), pool.peak_hidden_queue());
+        assert_eq!(bare.total_started(), pool.total_started());
+    });
+}
+
+#[test]
+fn multi_shard_pool_conserves_every_request() {
+    prop::forall(40, |g| {
+        let n_shards = g.usize_in(2, 5);
+        let cfg = ProviderCfg {
+            max_concurrency: g.usize_in(1, 4),
+            jitter_sigma: 0.05,
+            ..ProviderCfg::default()
+        };
+        let pool_cfg = PoolCfg { shards: vec![cfg; n_shards] };
+        let mut pool = ProviderPool::new(&pool_cfg, Rng::new(g.u64()));
+
+        let n = g.usize_in(1, 60);
+        let mut started_ids: Vec<usize> = Vec::new();
+        for id in 0..n {
+            let shard = g.usize_in(0, n_shards);
+            if let Some(s) = pool.submit(id, g.f64_in(10.0, 3000.0), shard, 0.0) {
+                started_ids.push(s.id);
+            }
+        }
+        // Finish everything in arbitrary order; promotions keep the fleet
+        // flowing until every submitted request has run.
+        let mut finished = 0usize;
+        while let Some(pos) = (!started_ids.is_empty()).then(|| g.usize_in(0, started_ids.len())) {
+            let id = started_ids.swap_remove(pos);
+            finished += 1;
+            for s in pool.on_finish(id, finished as f64) {
+                started_ids.push(s.id);
+            }
+        }
+        assert_eq!(finished, n, "every submitted request eventually runs and finishes");
+        assert_eq!(pool.total_started(), n as u64);
+        assert_eq!(pool.total_running(), 0);
+        assert_eq!(pool.hidden_queue_len(), 0);
+        assert_eq!(pool.started_by_shard().iter().sum::<u64>(), n as u64);
+    });
+}
