@@ -31,5 +31,6 @@ fn main() -> anyhow::Result<()> {
         &default_artifacts_dir(),
         pool,
         ShardPolicy::Weighted,
+        1,
     )
 }

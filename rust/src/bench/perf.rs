@@ -14,7 +14,10 @@
 //! loose enough for timer noise, tight enough to catch a quadratic
 //! regression). `--shards N` adds a second leg running every strategy
 //! against an N-shard heterogeneous pool with weighted selection, so the
-//! sharded dispatch path accumulates its own perf trajectory.
+//! sharded dispatch path accumulates its own perf trajectory; `--tenants M`
+//! adds a third leg splitting the same offered load across M independent
+//! client schedulers on the shared fleet (`run_tenants`), so tenant
+//! scaling is recorded — and gated — alongside.
 
 use std::time::Instant;
 
@@ -26,7 +29,7 @@ use crate::predictor::{InfoLevel, LadderSource};
 use crate::provider::pool::PoolCfg;
 use crate::provider::ProviderCfg;
 use crate::scheduler::{SchedulerCfg, ShardPolicy, StrategyKind};
-use crate::sim::driver;
+use crate::sim::driver::{self, RunDiagnostics, TenantSpec};
 use crate::util::jsonio::Json;
 use crate::util::rng::Rng;
 use crate::workload::{Mix, WorkloadSpec};
@@ -46,7 +49,10 @@ pub struct ScaleBenchOpts {
     pub out_path: String,
     /// Fleet size for the multi-shard leg (1 = single-endpoint legs only).
     pub shards: usize,
-    /// Fail if any (strategy, shards) scaling exponent exceeds this.
+    /// Tenant count for the multi-tenant leg (1 = no extra leg): the same
+    /// offered load split across M independent schedulers on the fleet.
+    pub tenants: usize,
+    /// Fail if any (strategy, shards, tenants) scaling exponent exceeds this.
     pub gate_exponent: Option<f64>,
 }
 
@@ -59,6 +65,7 @@ impl Default for ScaleBenchOpts {
             seed: 0,
             out_path: "BENCH.json".to_string(),
             shards: 1,
+            tenants: 1,
             gate_exponent: None,
         }
     }
@@ -67,6 +74,7 @@ impl Default for ScaleBenchOpts {
 struct RunRecord {
     strategy: &'static str,
     shards: usize,
+    tenants: usize,
     requests: usize,
     wall_ms: f64,
     events_processed: u64,
@@ -90,6 +98,7 @@ impl RunRecord {
         Json::obj()
             .set("strategy", self.strategy)
             .set("shards", self.shards)
+            .set("tenants", self.tenants)
             .set("requests", self.requests)
             .set("wall_ms", self.wall_ms)
             .set("events_processed", self.events_processed)
@@ -111,6 +120,7 @@ impl RunRecord {
 pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
     anyhow::ensure!(!opts.sizes.is_empty(), "bench needs at least one size");
     anyhow::ensure!(opts.shards >= 1, "bench needs at least one shard");
+    anyhow::ensure!(opts.tenants >= 1, "bench needs at least one tenant");
     // An armed gate that never evaluates an exponent would pass silently;
     // make that misuse loud instead.
     anyhow::ensure!(
@@ -119,10 +129,17 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
         "--gate-exponent needs at least two distinct sizes to compute a scaling exponent"
     );
     let mut records: Vec<RunRecord> = Vec::new();
-    // Fleet legs: the classic single endpoint, plus (when asked) an
-    // N-shard heterogeneous pool driven with weighted selection — the
-    // sharded dispatch path under the same workloads.
-    let shard_legs: Vec<usize> = if opts.shards > 1 { vec![1, opts.shards] } else { vec![1] };
+    // Legs as (shards, tenants): the classic single endpoint, plus (when
+    // asked) an N-shard heterogeneous pool driven with weighted selection —
+    // the sharded dispatch path under the same workloads — plus (when
+    // asked) the same load split across M tenant schedulers on that fleet.
+    let mut legs: Vec<(usize, usize)> = vec![(1, 1)];
+    if opts.shards > 1 {
+        legs.push((opts.shards, 1));
+    }
+    if opts.tenants > 1 {
+        legs.push((opts.shards.max(1), opts.tenants));
+    }
     // With the exponent gate armed, each leg runs three times and the
     // *minimum* wall time is recorded — the standard noise-robust wall
     // estimator, which matters on shared CI runners where smoke-size legs
@@ -137,7 +154,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             opts.mix.name()
         );
         let requests = WorkloadSpec::new(opts.mix, n, opts.rate_rps).generate(opts.seed);
-        for &n_shards in &shard_legs {
+        for &(n_shards, n_tenants) in &legs {
             let pool = if n_shards == 1 {
                 PoolCfg::single(ProviderCfg::default())
             } else {
@@ -146,27 +163,74 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             for strategy in StrategyKind::ALL {
                 let rss_before = peak_rss_kb();
                 let mut wall_s = f64::INFINITY;
-                let mut last_out = None;
+                let mut last_out: Option<(RunDiagnostics, usize, usize, usize)> = None;
                 for _ in 0..repeats {
-                    let mut src = LadderSource::new(
-                        InfoLevel::Coarse,
-                        Rng::new(opts.seed ^ 0x5EED_50_u64).derive("priors"),
-                    );
-                    let mut sched = SchedulerCfg::for_strategy(strategy);
-                    if n_shards > 1 {
-                        sched.shards.policy = ShardPolicy::Weighted;
+                    let make_sched = || {
+                        let mut sched = SchedulerCfg::for_strategy(strategy);
+                        if n_shards > 1 {
+                            sched.shards.policy = ShardPolicy::Weighted;
+                        }
+                        sched
+                    };
+                    if n_tenants == 1 {
+                        let mut src = LadderSource::new(
+                            InfoLevel::Coarse,
+                            Rng::new(opts.seed ^ 0x5EED_50_u64).derive("priors"),
+                        );
+                        let t0 = Instant::now();
+                        let o =
+                            driver::run_pool(&requests, &mut src, make_sched(), &pool, opts.seed);
+                        wall_s = wall_s.min(t0.elapsed().as_secs_f64());
+                        last_out = Some((
+                            o.diagnostics,
+                            o.metrics.n_completed,
+                            o.metrics.n_rejected,
+                            o.metrics.n_timed_out,
+                        ));
+                    } else {
+                        // The tenant leg's wall time includes each tenant's
+                        // O(n) workload/prior generation (run_tenants owns
+                        // its streams); exponents compare within the leg,
+                        // so the accounting is consistent. The split
+                        // conserves the total: this leg offers exactly `n`.
+                        let specs: Vec<TenantSpec> = driver::split_requests(n, n_tenants)
+                            .into_iter()
+                            .map(|per_n| TenantSpec {
+                                workload: WorkloadSpec::new(
+                                    opts.mix,
+                                    per_n,
+                                    opts.rate_rps / n_tenants as f64,
+                                ),
+                                sched: make_sched(),
+                                info: InfoLevel::Coarse,
+                            })
+                            .collect();
+                        let t0 = Instant::now();
+                        let o = driver::run_tenants(&specs, &pool, opts.seed);
+                        wall_s = wall_s.min(t0.elapsed().as_secs_f64());
+                        let mut completed = 0usize;
+                        let mut rejected = 0usize;
+                        let mut timed_out = 0usize;
+                        for t in &o.tenants {
+                            completed += t.metrics.n_completed;
+                            rejected += t.metrics.n_rejected;
+                            timed_out += t.metrics.n_timed_out;
+                        }
+                        last_out = Some((o.diagnostics, completed, rejected, timed_out));
                     }
-                    let t0 = Instant::now();
-                    let o = driver::run_pool(&requests, &mut src, sched, &pool, opts.seed);
-                    wall_s = wall_s.min(t0.elapsed().as_secs_f64());
-                    last_out = Some(o);
                 }
-                let out = last_out.expect("repeats >= 1");
+                let (d, completed, rejected, timed_out) = last_out.expect("repeats >= 1");
                 let rss_after = peak_rss_kb();
-                let d = &out.diagnostics;
+                let offered = completed + rejected + timed_out;
+                let cr = if offered > rejected {
+                    completed as f64 / (offered - rejected) as f64
+                } else {
+                    0.0
+                };
                 let rec = RunRecord {
                     strategy: strategy.name(),
                     shards: n_shards,
+                    tenants: n_tenants,
                     requests: n,
                     wall_ms: wall_s * 1e3,
                     events_processed: d.events_processed,
@@ -178,21 +242,22 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                         0.0
                     },
                     sends: d.sends,
-                    completed: out.metrics.n_completed,
-                    rejected: out.metrics.n_rejected,
-                    timed_out: out.metrics.n_timed_out,
+                    completed,
+                    rejected,
+                    timed_out,
                     peak_rss_kb: rss_after,
                     peak_rss_growth_kb: rss_after.saturating_sub(rss_before),
                 };
                 println!(
-                    "  {:<16} x{:<2} {:>9.1} ms  {:>10.0} ev/s  {:>8} events  {:>6} canceled  CR {:.3}",
+                    "  {:<16} x{:<2}t{:<2} {:>9.1} ms  {:>10.0} ev/s  {:>8} events  {:>6} canceled  CR {:.3}",
                     rec.strategy,
                     rec.shards,
+                    rec.tenants,
                     rec.wall_ms,
                     rec.events_per_sec,
                     rec.events_processed,
                     rec.timers_canceled,
-                    out.metrics.completion_rate,
+                    cr,
                 );
                 records.push(rec);
             }
@@ -208,15 +273,24 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
         let n_lo = opts.sizes[0];
         let n_hi = *opts.sizes.last().unwrap();
         println!("\n-- scaling {n_lo} → {n_hi} (exponent ≈ 1.0 is linear) --");
-        let mut t =
-            TextTable::new(["strategy", "shards", "wall lo (ms)", "wall hi (ms)", "exponent"]);
-        for &n_shards in &shard_legs {
+        let mut t = TextTable::new([
+            "strategy",
+            "shards",
+            "tenants",
+            "wall lo (ms)",
+            "wall hi (ms)",
+            "exponent",
+        ]);
+        for &(n_shards, n_tenants) in &legs {
             for strategy in StrategyKind::ALL {
                 let find = |n: usize| {
                     records
                         .iter()
                         .find(|r| {
-                            r.strategy == strategy.name() && r.shards == n_shards && r.requests == n
+                            r.strategy == strategy.name()
+                                && r.shards == n_shards
+                                && r.tenants == n_tenants
+                                && r.requests == n
                         })
                         .map(|r| r.wall_ms)
                 };
@@ -229,6 +303,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                     t.row([
                         strategy.name().to_string(),
                         n_shards.to_string(),
+                        n_tenants.to_string(),
                         format!("{lo:.1}"),
                         format!("{hi:.1}"),
                         format!("{exponent:.2}"),
@@ -237,6 +312,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                         Json::obj()
                             .set("strategy", strategy.name())
                             .set("shards", n_shards)
+                            .set("tenants", n_tenants)
                             .set("n_lo", n_lo)
                             .set("n_hi", n_hi)
                             .set("wall_lo_ms", lo)
@@ -246,7 +322,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                     if let Some(max_e) = opts.gate_exponent {
                         if exponent.is_finite() && exponent > max_e {
                             violations.push(format!(
-                                "{} x{n_shards}: exponent {exponent:.2} > {max_e}",
+                                "{} x{n_shards}t{n_tenants}: exponent {exponent:.2} > {max_e}",
                                 strategy.name()
                             ));
                         }
@@ -263,6 +339,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
         .set("rate_rps", opts.rate_rps)
         .set("seed", opts.seed)
         .set("shards", opts.shards)
+        .set("tenants", opts.tenants)
         .set("sizes", opts.sizes.clone())
         .set("runs", Json::Arr(records.iter().map(RunRecord::to_json).collect()))
         .set("scaling", Json::Arr(scaling));
@@ -325,6 +402,42 @@ mod tests {
             let n = s.get("shards").and_then(Json::as_usize).unwrap();
             assert!(n == 1 || n == 2);
         }
+        let _ = std::fs::remove_file(&opts.out_path);
+    }
+
+    #[test]
+    fn tenant_leg_adds_records_and_exponents() {
+        let out_path = std::env::temp_dir().join("bbsched_bench_tenant_test.json");
+        let opts = ScaleBenchOpts {
+            sizes: vec![40, 80],
+            rate_rps: 12.0,
+            tenants: 2,
+            gate_exponent: Some(50.0), // far above any real exponent
+            out_path: out_path.to_string_lossy().into_owned(),
+            ..ScaleBenchOpts::default()
+        };
+        run_scale_bench(&opts).expect("bench runs");
+        let doc = Json::read_file(&opts.out_path).expect("BENCH.json parses");
+        let runs = doc.get("runs").and_then(Json::as_arr).expect("runs array");
+        assert_eq!(runs.len(), 2 * 2 * StrategyKind::ALL.len(), "sizes × legs × strategies");
+        let tenant_runs: Vec<_> = runs
+            .iter()
+            .filter(|r| r.get("tenants").and_then(Json::as_usize) == Some(2))
+            .collect();
+        assert_eq!(tenant_runs.len(), 2 * StrategyKind::ALL.len());
+        for r in &tenant_runs {
+            let n = r.get("requests").and_then(Json::as_usize).unwrap();
+            let done = r.get("completed").and_then(Json::as_usize).unwrap()
+                + r.get("rejected").and_then(Json::as_usize).unwrap()
+                + r.get("timed_out").and_then(Json::as_usize).unwrap();
+            // split_requests conserves the fleet-wide total exactly.
+            assert_eq!(done, n, "conservation across tenants");
+        }
+        let scaling = doc.get("scaling").and_then(Json::as_arr).expect("scaling array");
+        assert_eq!(scaling.len(), 2 * StrategyKind::ALL.len(), "one exponent per leg");
+        assert!(scaling
+            .iter()
+            .any(|s| s.get("tenants").and_then(Json::as_usize) == Some(2)));
         let _ = std::fs::remove_file(&opts.out_path);
     }
 

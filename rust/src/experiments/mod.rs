@@ -15,6 +15,7 @@ pub mod runner;
 pub mod sensitivity;
 pub mod sharded;
 pub mod sharegpt;
+pub mod tenants;
 
 pub use runner::{run_cell, run_seed, CellSpec, Congestion, ParallelSweep, Regime};
 
@@ -56,7 +57,7 @@ impl ExpOpts {
 }
 
 /// All experiment names, in paper order (repo extensions at the end).
-pub const ALL_EXPERIMENTS: [&str; 12] = [
+pub const ALL_EXPERIMENTS: [&str; 13] = [
     "calibration",
     "ladder",
     "main",
@@ -69,6 +70,7 @@ pub const ALL_EXPERIMENTS: [&str; 12] = [
     "ablation",
     "burst",
     "sharded",
+    "tenants",
 ];
 
 /// Dispatch one experiment by name ("all" runs the full battery).
@@ -86,6 +88,7 @@ pub fn run_experiment(name: &str, opts: &ExpOpts) -> Result<()> {
         "ablation" => ablation::run(opts),
         "burst" => burst::run(opts),
         "sharded" => sharded::run(opts),
+        "tenants" => tenants::run(opts),
         "all" => {
             for n in ALL_EXPERIMENTS {
                 println!("\n########## experiment: {n} ##########");

@@ -1,0 +1,243 @@
+//! Multi-tenant fleet-sharing experiment: tenant count × tenant mix ×
+//! shard count × congestion, on the full scheduler stack.
+//!
+//! Every other table runs ONE client scheduler against the fleet; this grid
+//! asks the fleet-sharing question instead: with the same total offered
+//! load split across M independent client schedulers — each seeing only its
+//! own slice of the black box — how well does per-tenant SLO isolation
+//! hold, and what does a single heavy tenant cost its neighbors? The
+//! 1-tenant cells are the control group: they run the exact single-client
+//! physics every other table uses (and are byte-identical to `run_pool`
+//! by the driver's bit-compat contract).
+//!
+//! Tenant mixes:
+//! * `symmetric` — M identical tenants (balanced mix, rate/M each);
+//! * `one_heavy` — tenant 0 switches to the heavy mix at the same rate
+//!   share: the noisy-neighbor regime.
+//!
+//! The CSV reports one row per (cell, tenant) with per-tenant P95,
+//! deadline satisfaction, and goodput columns — the isolation metrics.
+//! Fanned out on [`ParallelSweep`], so the CSV is byte-identical for any
+//! `--jobs` value (the CI determinism gate covers it).
+
+use anyhow::Result;
+
+use crate::experiments::runner::{Congestion, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_rate, TextTable};
+use crate::metrics::{Aggregate, RunMetrics};
+use crate::predictor::InfoLevel;
+use crate::provider::pool::PoolCfg;
+use crate::provider::ProviderCfg;
+use crate::scheduler::{SchedulerCfg, StrategyKind};
+use crate::sim::driver::{self, TenantSpec};
+use crate::util::csvio::CsvTable;
+use crate::workload::{Mix, WorkloadSpec};
+
+/// One grid cell.
+#[derive(Debug, Clone)]
+struct TenantCell {
+    congestion: Congestion,
+    rate_rps: f64,
+    shards: usize,
+    tenants: usize,
+    /// `one_heavy` mix when true (tenant 0 runs the heavy mix).
+    one_heavy: bool,
+}
+
+impl TenantCell {
+    fn mix_name(&self) -> &'static str {
+        if self.one_heavy {
+            "one_heavy"
+        } else {
+            "symmetric"
+        }
+    }
+
+    /// Per-tenant specs: total offered load split across tenants with the
+    /// fleet-wide total conserved (`driver::split_requests`).
+    fn specs(&self, n_requests: usize) -> Vec<TenantSpec> {
+        let per_rate = self.rate_rps / self.tenants as f64;
+        driver::split_requests(n_requests, self.tenants)
+            .into_iter()
+            .enumerate()
+            .map(|(t, per_n)| {
+                let mix = if self.one_heavy && t == 0 { Mix::Heavy } else { Mix::Balanced };
+                TenantSpec {
+                    workload: WorkloadSpec::new(mix, per_n, per_rate),
+                    sched: SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+                    info: InfoLevel::Coarse,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Per-seed result: one `RunMetrics` per tenant.
+fn run_cell_seed(cell: &TenantCell, n_requests: usize, seed: u64) -> Vec<RunMetrics> {
+    let pool = PoolCfg::split(ProviderCfg::default(), cell.shards);
+    let out = driver::run_tenants(&cell.specs(n_requests), &pool, seed);
+    out.tenants.into_iter().map(|t| t.metrics).collect()
+}
+
+/// The grid: per (congestion, shard count), a 1-tenant control cell plus
+/// tenant counts {2, 8} × mixes {symmetric, one_heavy}.
+fn grid() -> Vec<TenantCell> {
+    let mut cells = Vec::new();
+    for congestion in [Congestion::Medium, Congestion::High] {
+        let rate_rps = Regime { mix: Mix::Balanced, congestion }.rate_rps();
+        for shards in [1usize, 4] {
+            cells.push(TenantCell { congestion, rate_rps, shards, tenants: 1, one_heavy: false });
+            for tenants in [2usize, 8] {
+                for one_heavy in [false, true] {
+                    cells.push(TenantCell { congestion, rate_rps, shards, tenants, one_heavy });
+                }
+            }
+        }
+    }
+    cells
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let cells = grid();
+    // all[cell][seed] = one RunMetrics per tenant.
+    let all: Vec<Vec<Vec<RunMetrics>>> = opts
+        .sweep()
+        .map_cells(cells.len(), opts.seeds, |c, s| run_cell_seed(&cells[c], opts.n_requests, s));
+
+    let mut table = TextTable::new([
+        "Congestion",
+        "Shards",
+        "Tenants",
+        "Mix",
+        "Worst short P95",
+        "Worst satisfaction",
+        "Fleet goodput",
+        "T0 goodput",
+    ]);
+    let mut csv = CsvTable::new([
+        "congestion",
+        "shards",
+        "tenants",
+        "mix",
+        "tenant",
+        "role",
+        "short_p95_mean",
+        "short_p95_std",
+        "global_p95_mean",
+        "global_p95_std",
+        "cr_mean",
+        "satisfaction_mean",
+        "satisfaction_std",
+        "goodput_mean",
+        "goodput_std",
+        "rejects_mean",
+        "defers_mean",
+    ]);
+    for (cell, runs) in cells.iter().zip(&all) {
+        // Regroup seed-major → tenant-major: per_tenant[t][seed].
+        let per_tenant: Vec<Vec<RunMetrics>> = (0..cell.tenants)
+            .map(|t| runs.iter().map(|seed_run| seed_run[t].clone()).collect())
+            .collect();
+        // NaN until some tenant has a finite short tail (a tenant that
+        // completes no shorts yields NaN percentiles): a cell where every
+        // tenant's short tail is unobserved must print NaN, not a
+        // best-possible-looking 0.0.
+        let mut worst_short: f64 = f64::NAN;
+        let mut worst_sat: f64 = f64::INFINITY;
+        let mut fleet_goodput: f64 = 0.0;
+        let mut t0_goodput: f64 = 0.0;
+        for (t, tenant_runs) in per_tenant.iter().enumerate() {
+            let agg = Aggregate::new(tenant_runs);
+            let short = agg.mean_std(|m| m.short_p95_ms);
+            let global = agg.mean_std(|m| m.global_p95_ms);
+            let cr = agg.mean_std(|m| m.completion_rate);
+            let sat = agg.mean_std(|m| m.satisfaction);
+            let good = agg.mean_std(|m| m.goodput_rps);
+            let rejects = agg.mean_std(|m| m.rejects_total as f64);
+            let defers = agg.mean_std(|m| m.defers_total as f64);
+            if short.0.is_finite() {
+                // f64::max ignores a NaN accumulator, so the first finite
+                // sample replaces the NaN sentinel.
+                worst_short = worst_short.max(short.0);
+            }
+            worst_sat = worst_sat.min(sat.0);
+            fleet_goodput += good.0;
+            if t == 0 {
+                t0_goodput = good.0;
+            }
+            let role = if cell.one_heavy && t == 0 { "heavy" } else { "standard" };
+            csv.row([
+                cell.congestion.name().to_string(),
+                cell.shards.to_string(),
+                cell.tenants.to_string(),
+                cell.mix_name().to_string(),
+                t.to_string(),
+                role.to_string(),
+                format!("{:.1}", short.0),
+                format!("{:.1}", short.1),
+                format!("{:.1}", global.0),
+                format!("{:.1}", global.1),
+                format!("{:.4}", cr.0),
+                format!("{:.4}", sat.0),
+                format!("{:.4}", sat.1),
+                format!("{:.3}", good.0),
+                format!("{:.3}", good.1),
+                format!("{:.1}", rejects.0),
+                format!("{:.1}", defers.0),
+            ]);
+        }
+        // Worst-tenant summary line: the isolation story at a glance.
+        table.row([
+            cell.congestion.name().to_string(),
+            cell.shards.to_string(),
+            cell.tenants.to_string(),
+            cell.mix_name().to_string(),
+            format!("{worst_short:.1}"),
+            fmt_rate((worst_sat, 0.0)),
+            format!("{fleet_goodput:.2}"),
+            format!("{t0_goodput:.2}"),
+        ]);
+    }
+    println!("\nMulti-tenant fleet sharing — tenants × mix × shards (mean over seeds)");
+    println!("{}", table.render());
+    let path = format!("{}/tenants_summary.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shape_is_stable() {
+        let cells = grid();
+        // Per (congestion, shards): 1 control + 2 tenant counts × 2 mixes
+        // = 5; two congestion levels × two shard counts.
+        assert_eq!(cells.len(), 20);
+        assert!(cells.iter().all(|c| c.tenants == 1 || c.tenants == 2 || c.tenants == 8));
+        assert!(cells.iter().filter(|c| c.tenants == 1).all(|c| !c.one_heavy));
+    }
+
+    #[test]
+    fn cell_runner_is_deterministic_per_tenant() {
+        let cell = TenantCell {
+            congestion: Congestion::Medium,
+            rate_rps: 12.0,
+            shards: 4,
+            tenants: 2,
+            one_heavy: true,
+        };
+        let a = run_cell_seed(&cell, 40, 1);
+        let b = run_cell_seed(&cell, 40, 1);
+        assert_eq!(a.len(), 2, "one metrics per tenant");
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.n_completed, y.n_completed);
+            assert_eq!(x.global_p95_ms.to_bits(), y.global_p95_ms.to_bits());
+        }
+        // Both tenants offered their split share.
+        assert!(a.iter().all(|m| m.n_offered == 20));
+    }
+}

@@ -4,10 +4,10 @@
 //! Usage:
 //!   bbsched exp <name|all> [--seeds N] [--requests N] [--jobs N] [--out DIR]
 //!   bbsched run [--strategy S] [--mix M] [--rate R] [--seed N] ...
-//!   bbsched bench [--sizes N,N] [--rate R] [--out BENCH.json] [--smoke]
+//!   bbsched bench [--sizes N,N] [--shards N] [--tenants M] [--out BENCH.json] [--smoke]
 //!   bbsched trace gen|show [--out PATH] ...
 //!   bbsched predict [--artifacts DIR] [--n N]        (PJRT smoke + goldens)
-//!   bbsched serve [--rate R] [--requests N] [--scale S] (real-time demo)
+//!   bbsched serve [--rate R] [--requests N] [--scale S] [--tenants M] (real-time demo)
 
 use anyhow::{bail, Context, Result};
 
@@ -186,6 +186,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         .opt("seed", "0", "random seed (one shared workload per size)")
         .opt("out", "BENCH.json", "output JSON path")
         .opt("shards", "1", "add a multi-shard leg with this fleet size (1 = single endpoint)")
+        .opt("tenants", "1", "add a multi-tenant leg splitting load across M schedulers")
         .opt("gate-exponent", "0", "fail if any scaling exponent exceeds this (0 = off)")
         .flag("smoke", "CI smoke sizes (1000,5000)");
     let a = cmd.parse(args)?;
@@ -218,6 +219,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         seed: a.u64("seed")?,
         out_path: a.str("out").to_string(),
         shards: a.usize("shards")?,
+        tenants: a.usize("tenants")?,
         gate_exponent: if gate > 0.0 { Some(gate) } else { None },
     };
     run_scale_bench(&opts)
@@ -331,6 +333,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("strategy", "final_adrr_olc", "strategy")
         .opt("shards", "1", "provider fleet size (N>1 = heterogeneous N-shard pool)")
         .opt("shard-policy", "least_inflight", "least_inflight|weighted|hash_affinity")
+        .opt("tenants", "1", "independent client schedulers sharing the fleet (load split evenly)")
         .opt("artifacts", &runtime::default_artifacts_dir(), "artifacts dir ('' = analytic priors)");
     let a = cmd.parse(args)?;
     if a.help {
@@ -341,6 +344,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let shards = a.usize("shards")?;
     let policy = ShardPolicy::parse(a.str("shard-policy"))
         .with_context(|| format!("bad shard policy {:?}", a.str("shard-policy")))?;
+    let tenants = a.usize("tenants")?;
     let pool = if shards <= 1 {
         PoolCfg::single(ProviderCfg::default())
     } else {
@@ -354,5 +358,6 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         a.str("artifacts"),
         pool,
         policy,
+        tenants,
     )
 }

@@ -328,7 +328,7 @@ impl ClientScheduler {
         out: &mut Vec<Action>,
     ) {
         self.state.on_completion(id, latency_ms, deadline_budget_ms);
-        self.selector.on_done(id);
+        self.selector.on_completion(id, latency_ms, deadline_budget_ms);
         if self.cfg.strategy == StrategyKind::DirectNaive {
             return;
         }
@@ -336,11 +336,12 @@ impl ClientScheduler {
     }
 
     /// Client gives up on a request (hard timeout). Removes it from any
-    /// client-side holding area; frees the slot if it was in flight.
+    /// client-side holding area; frees the slot if it was in flight (and
+    /// records the censored tail evidence against its shard).
     pub fn cancel(&mut self, id: ReqId, now: f64, out: &mut Vec<Action>) {
         let was_inflight = self.state.on_abandon(id).is_some();
         if was_inflight {
-            self.selector.on_done(id);
+            self.selector.on_abandon(id);
         }
         let _ = self.queues.remove_id(id);
         let _ = self.deferred.remove(&id);
@@ -413,16 +414,34 @@ impl ClientScheduler {
                 break;
             };
             let id = head_id[class.index()].expect("allocator picked a backlogged class");
+            // Route first, then gate: the shard the selector would use is
+            // the shard whose severity the cost ladder evaluates, so
+            // routing and shedding condition on the same per-shard state.
+            // The 1-shard path keeps the global signal bit-for-bit (the
+            // degenerate selector tracks nothing, and per-shard severity
+            // would be the same quantity anyway).
+            let shard = self.selector.preview(id);
             let decision = {
                 let candidate = self.queues.get(id).expect("candidate still queued");
-                self.controller.decide(candidate, severity)
+                let gate_severity = if self.selector.n_shards() == 1 {
+                    severity
+                } else {
+                    let sh = SeveritySignals::gather_shard(
+                        &self.selector,
+                        &self.queues,
+                        self.cfg.max_inflight,
+                        shard,
+                    );
+                    self.controller.severity_value(&sh)
+                };
+                self.controller.decide(candidate, gate_severity)
             };
             let mut sreq = self.queues.remove_id(id).expect("candidate still queued");
             match decision {
                 OverloadDecision::Admit => {
                     self.allocator.as_mut().unwrap().on_send(class, sreq.priors.p50);
                     self.state.on_send(sreq.id, class, sreq.priors.p50, now);
-                    let shard = self.selector.pick(sreq.id);
+                    self.selector.commit(sreq.id, shard);
                     out.push(Action::Send { id: sreq.id, shard });
                 }
                 OverloadDecision::Defer { delay_ms } => {

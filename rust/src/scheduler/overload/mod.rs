@@ -97,14 +97,22 @@ impl OverloadController {
     /// Severity in [0, 1]: w_load·provider_load + w_queue·queue_pressure +
     /// w_tail·tail_latency_ratio (each input normalized to [0, 1]).
     pub fn severity(&mut self, s: &SeveritySignals) -> f64 {
+        let sev = self.severity_value(s);
+        self.last_severity = sev;
+        sev
+    }
+
+    /// The same severity computation without updating `last_severity` —
+    /// shard-aware overload control evaluates one severity per endpoint
+    /// from per-shard signals while the global value (used for DRR
+    /// congestion adaptation and diagnostics) stays the recorded one.
+    pub fn severity_value(&self, s: &SeveritySignals) -> f64 {
         let c = &self.cfg;
         let load = s.provider_load.clamp(0.0, 1.0);
         let queue = (s.queued_tokens / c.queue_budget_tokens).clamp(0.0, 1.0);
         let tail = (s.tail_latency_ratio / c.tail_ratio_cap).clamp(0.0, 1.0);
-        let sev = (c.w_load * load + c.w_queue * queue + c.w_tail * tail)
-            / (c.w_load + c.w_queue + c.w_tail);
-        self.last_severity = sev;
-        sev
+        (c.w_load * load + c.w_queue * queue + c.w_tail * tail)
+            / (c.w_load + c.w_queue + c.w_tail)
     }
 
     pub fn last_severity(&self) -> f64 {

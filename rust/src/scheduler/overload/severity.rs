@@ -2,8 +2,18 @@
 //! provider load (in-flight vs the client's budget), queue pressure
 //! (estimated queued tokens), and tail behavior (latency/deadline ratio of
 //! recent completions).
+//!
+//! Two gathering modes share the same signal shape:
+//! * [`SeveritySignals::gather`] — the classic global view (one provider,
+//!   or the fleet as a whole);
+//! * [`SeveritySignals::gather_shard`] — one endpoint's view on a
+//!   multi-shard fleet: the client's own in-flight on that shard against
+//!   its 1/N share of the pacing budget, and that shard's client-measured
+//!   tail ratio. Queue pressure stays fleet-wide (the backlog is one queue
+//!   regardless of where releases are routed).
 
 use crate::scheduler::queues::ClassQueues;
+use crate::scheduler::shard::ShardSelector;
 use crate::scheduler::state::ApiState;
 
 /// Raw (pre-normalization) severity inputs.
@@ -24,6 +34,26 @@ impl SeveritySignals {
             provider_load: state.inflight() as f64 / max_inflight.max(1) as f64,
             queued_tokens: queues.queued_tokens(),
             tail_latency_ratio: state.tail_ratio.get_or(0.0),
+        }
+    }
+
+    /// Gather one shard's severity inputs on a multi-shard fleet: the
+    /// client's own in-flight on `shard` against its 1/N share of the
+    /// pacing budget, the fleet-wide queue pressure, and the shard's own
+    /// client-measured tail ratio. Only meaningful for `n_shards > 1` —
+    /// the 1-shard selector tracks nothing, and the scheduler keeps the
+    /// global [`SeveritySignals::gather`] path there bit-for-bit.
+    pub fn gather_shard(
+        selector: &ShardSelector,
+        queues: &ClassQueues,
+        max_inflight: usize,
+        shard: usize,
+    ) -> SeveritySignals {
+        let budget_share = max_inflight.max(1) as f64 / selector.n_shards() as f64;
+        SeveritySignals {
+            provider_load: selector.inflight(shard) as f64 / budget_share,
+            queued_tokens: queues.queued_tokens(),
+            tail_latency_ratio: selector.tail_ratio(shard),
         }
     }
 }
@@ -57,5 +87,29 @@ mod tests {
         state.on_completion(1, 2500.0, 2500.0);
         let s = SeveritySignals::gather(&state, &queues, 8);
         assert!((s.tail_latency_ratio - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gather_shard_reads_per_shard_state() {
+        use crate::scheduler::shard::{ShardCfg, ShardPolicy};
+        let mut sel = ShardSelector::new(ShardCfg::new(2, ShardPolicy::LeastInflight, Vec::new()));
+        let queues = ClassQueues::new();
+        // Load shard 0 with two releases, shard 1 with one.
+        sel.commit(1, 0);
+        sel.commit(2, 0);
+        sel.commit(3, 1);
+        // Budget 8 across 2 shards → per-shard share 4.
+        let s0 = SeveritySignals::gather_shard(&sel, &queues, 8, 0);
+        let s1 = SeveritySignals::gather_shard(&sel, &queues, 8, 1);
+        assert_eq!(s0.provider_load, 2.0 / 4.0);
+        assert_eq!(s1.provider_load, 1.0 / 4.0);
+        assert_eq!(s0.queued_tokens, 0.0);
+        assert_eq!(s0.tail_latency_ratio, 0.0, "no completions yet");
+        // A slow completion on shard 0 raises only shard 0's tail input.
+        sel.on_completion(1, 5_000.0, 2_500.0);
+        let s0 = SeveritySignals::gather_shard(&sel, &queues, 8, 0);
+        let s1 = SeveritySignals::gather_shard(&sel, &queues, 8, 1);
+        assert!((s0.tail_latency_ratio - 2.0).abs() < 1e-9);
+        assert_eq!(s1.tail_latency_ratio, 0.0);
     }
 }

@@ -24,6 +24,20 @@
 use std::collections::HashMap;
 
 use crate::core::ReqId;
+use crate::util::stats::Ewma;
+
+/// EWMA smoothing for the per-shard tail signal — the same constant
+/// `ApiState::tail_ratio` uses, so per-shard and global severity read the
+/// same kind of quantity at the same timescale.
+const TAIL_ALPHA: f64 = 0.15;
+
+/// Censored tail sample recorded when the client abandons an in-flight
+/// request (timeout): the request consumed its entire timeout window, well
+/// past its deadline, so the true ratio is > 1 but unobserved. 2.0 sits
+/// above the overload controller's default `tail_ratio_cap` (1.5), so a
+/// timeout saturates that shard's tail term — a shard must not look
+/// *calmer* because it times requests out instead of completing them.
+const ABANDON_TAIL_RATIO: f64 = 2.0;
 
 /// Shard-selection policy (client-side).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,10 +109,17 @@ fn hash_id(id: ReqId) -> u64 {
 }
 
 /// Stateful selector owned by the scheduler: picks a shard per release and
-/// tracks the client's per-shard in-flight counts.
+/// tracks the client's per-shard in-flight counts plus a per-shard
+/// client-measured tail signal (EWMA of latency/deadline-budget among
+/// completions routed there). Routing *and* shard-aware overload shedding
+/// both condition on this one state — the shard the router would use is the
+/// shard whose severity gates the release.
 pub struct ShardSelector {
     cfg: ShardCfg,
     inflight: Vec<usize>,
+    /// Per-shard EWMA of completion latency / deadline budget — the
+    /// per-shard analogue of `ApiState::tail_ratio`.
+    tail: Vec<Ewma>,
     /// id → shard for in-flight requests (multi-shard only).
     assigned: HashMap<ReqId, u32>,
 }
@@ -110,7 +131,12 @@ impl ShardSelector {
             cfg.weights.is_empty() || cfg.weights.len() == cfg.n,
             "weights must match shard count"
         );
-        ShardSelector { inflight: vec![0; cfg.n], assigned: HashMap::new(), cfg }
+        ShardSelector {
+            inflight: vec![0; cfg.n],
+            tail: (0..cfg.n).map(|_| Ewma::new(TAIL_ALPHA)).collect(),
+            assigned: HashMap::new(),
+            cfg,
+        }
     }
 
     pub fn n_shards(&self) -> usize {
@@ -119,6 +145,12 @@ impl ShardSelector {
 
     pub fn inflight(&self, shard: usize) -> usize {
         self.inflight[shard]
+    }
+
+    /// Per-shard client-measured tail ratio (0 until the shard has a
+    /// completion) — the tail input to that shard's severity.
+    pub fn tail_ratio(&self, shard: usize) -> f64 {
+        self.tail[shard].get_or(0.0)
     }
 
     fn weight(&self, i: usize) -> f64 {
@@ -133,10 +165,22 @@ impl ShardSelector {
     /// client-side in-flight count. O(n_shards); the 1-shard fast path is
     /// branch-and-return (no map traffic), keeping the classic setup free.
     pub fn pick(&mut self, id: ReqId) -> usize {
+        let shard = self.preview(id);
+        self.commit(id, shard);
+        shard
+    }
+
+    /// Choose the shard `id` *would* be routed to, without committing.
+    ///
+    /// Shard-aware overload control routes first and gates second: the
+    /// scheduler previews the routing decision, evaluates that shard's
+    /// severity, and only commits if the release is admitted — a deferred
+    /// or rejected candidate never perturbs the in-flight bookkeeping.
+    pub fn preview(&self, id: ReqId) -> usize {
         if self.cfg.n == 1 {
             return 0;
         }
-        let shard = match self.cfg.policy {
+        match self.cfg.policy {
             ShardPolicy::LeastInflight => {
                 let mut best = 0usize;
                 for (i, &f) in self.inflight.iter().enumerate().skip(1) {
@@ -159,22 +203,54 @@ impl ShardSelector {
                 best
             }
             ShardPolicy::HashAffinity => (hash_id(id) % self.cfg.n as u64) as usize,
-        };
+        }
+    }
+
+    /// Record a routing decision from a prior [`ShardSelector::preview`]:
+    /// bump the shard's client-side in-flight count and remember the
+    /// assignment so the completion can be routed back.
+    pub fn commit(&mut self, id: ReqId, shard: usize) {
+        if self.cfg.n == 1 {
+            return;
+        }
         self.inflight[shard] += 1;
         let prev = self.assigned.insert(id, shard as u32);
         debug_assert!(prev.is_none(), "shard pick for already-assigned {id}");
-        shard
     }
 
-    /// The request left the provider (completion or client abandon): free
-    /// its shard's client-side slot. Unknown ids are ignored (e.g. a
-    /// completion observed after abandon).
-    pub fn on_done(&mut self, id: ReqId) {
+    /// Completion observed for `id`: update its shard's tail signal with
+    /// the client-measured latency/deadline ratio (the same quantity the
+    /// global severity tracks) and free the shard's client-side slot.
+    pub fn on_completion(&mut self, id: ReqId, latency_ms: f64, deadline_budget_ms: f64) {
         if self.cfg.n == 1 {
             return;
         }
         if let Some(s) = self.assigned.remove(&id) {
             self.inflight[s as usize] -= 1;
+            if deadline_budget_ms > 0.0 {
+                self.tail[s as usize].push(latency_ms / deadline_budget_ms);
+            }
+        }
+    }
+
+    /// Client abandoned an in-flight request (hard timeout): free its
+    /// shard's slot and record a censored pessimistic tail observation
+    /// ([`ABANDON_TAIL_RATIO`]). Without this, a shard slow enough to time
+    /// requests out would keep an empty tail signal and a perpetually-reset
+    /// in-flight count — reading as *calm* to both routing and the
+    /// shard-aware cost ladder, the exact blind spot the per-shard signal
+    /// exists to close. (The *global* `ApiState::tail_ratio` deliberately
+    /// keeps its completion-only semantics: feeding it on abandon would
+    /// shift severity in every single-endpoint run and invalidate the
+    /// existing tables — per-shard state is new, so it can be right from
+    /// the start. See the ROADMAP open item on censored global tail.)
+    pub fn on_abandon(&mut self, id: ReqId) {
+        if self.cfg.n == 1 {
+            return;
+        }
+        if let Some(s) = self.assigned.remove(&id) {
+            self.inflight[s as usize] -= 1;
+            self.tail[s as usize].push(ABANDON_TAIL_RATIO);
         }
     }
 }
@@ -195,7 +271,7 @@ mod tests {
         assert_eq!(s.pick(11), 1);
         assert_eq!(s.pick(12), 2);
         // Completing on shard 1 makes it least-loaded again.
-        s.on_done(11);
+        s.on_completion(11, 100.0, 1_000.0);
         assert_eq!(s.pick(13), 1);
         assert_eq!(s.inflight(0), 1);
         assert_eq!(s.inflight(1), 1);
@@ -234,16 +310,65 @@ mod tests {
         for id in 0..10 {
             assert_eq!(s.pick(id), 0);
         }
-        s.on_done(3);
+        s.on_completion(3, 10.0, 100.0);
         assert_eq!(s.inflight(0), 0, "1-shard selector tracks nothing");
+        assert_eq!(s.tail_ratio(0), 0.0);
     }
 
     #[test]
-    fn unknown_done_is_ignored() {
+    fn unknown_completion_is_ignored() {
         let mut s = selector(2, ShardPolicy::LeastInflight, vec![]);
         s.pick(1);
-        s.on_done(99);
+        s.on_completion(99, 10.0, 100.0);
         assert_eq!(s.inflight(0), 1);
+        assert_eq!(s.tail_ratio(0), 0.0, "unknown id must not feed any shard's tail");
+    }
+
+    #[test]
+    fn preview_does_not_commit() {
+        let mut s = selector(2, ShardPolicy::LeastInflight, vec![]);
+        // Previewing repeatedly is idempotent: no in-flight bookkeeping.
+        assert_eq!(s.preview(1), 0);
+        assert_eq!(s.preview(2), 0);
+        assert_eq!(s.inflight(0), 0);
+        // Commit applies it; the next preview sees the new load.
+        s.commit(1, 0);
+        assert_eq!(s.inflight(0), 1);
+        assert_eq!(s.preview(2), 1);
+        // pick == preview + commit.
+        assert_eq!(s.pick(2), 1);
+        assert_eq!(s.inflight(1), 1);
+    }
+
+    #[test]
+    fn completion_feeds_the_shard_tail_signal() {
+        let mut s = selector(2, ShardPolicy::LeastInflight, vec![]);
+        assert_eq!(s.tail_ratio(0), 0.0, "no completions yet");
+        s.pick(1); // shard 0
+        s.pick(2); // shard 1
+        // Shard 0 completes 2× over budget; shard 1 well within.
+        s.on_completion(1, 5_000.0, 2_500.0);
+        s.on_completion(2, 500.0, 2_500.0);
+        assert!(s.tail_ratio(0) > s.tail_ratio(1), "hot shard carries the larger tail signal");
+        assert!((s.tail_ratio(0) - 2.0).abs() < 1e-9, "first EWMA sample is the ratio itself");
+        assert_eq!(s.inflight(0), 0);
+        assert_eq!(s.inflight(1), 0);
+    }
+
+    #[test]
+    fn timeout_abandon_pressures_the_shard_tail() {
+        // A shard that times requests out must not read as calm: abandons
+        // free the slot AND push a censored pessimistic tail sample.
+        let mut s = selector(2, ShardPolicy::LeastInflight, vec![]);
+        s.pick(1); // shard 0
+        s.pick(2); // shard 1
+        s.on_abandon(1);
+        assert_eq!(s.inflight(0), 0, "slot freed");
+        assert!(s.tail_ratio(0) >= 1.5, "abandon saturates the tail term: {}", s.tail_ratio(0));
+        assert_eq!(s.tail_ratio(1), 0.0, "neighbor shard untouched");
+        // Unknown/duplicate abandons stay inert.
+        s.on_abandon(1);
+        assert_eq!(s.inflight(0), 0);
     }
 
     #[test]

@@ -4,18 +4,21 @@
 //!
 //! Architecture:
 //! * a **provider thread** owns the mock black-box fleet: it receives
-//!   batched submissions over a channel, enforces each shard's hidden
-//!   concurrency limit + FIFO, and emits completions back at the right
+//!   batched submissions over one channel — multiplexed from every tenant —
+//!   enforces each shard's hidden concurrency limit + FIFO, and emits
+//!   completions back to the *owning tenant's* channel at the right
 //!   wall-clock instants;
-//! * the **client thread** (caller) runs the scheduler loop: waits for the
-//!   earliest of {next arrival, next retry, next timeout, a completion},
-//!   feeds the scheduler, and submits each tick's Send actions as one
-//!   batch message.
+//! * one **client thread per tenant** runs that tenant's scheduler loop:
+//!   waits for the earliest of {next arrival, next retry, next timeout, a
+//!   completion}, feeds the scheduler, and submits each tick's Send actions
+//!   as one batch message. Tenant 0 runs on the caller thread, so the
+//!   single-tenant demo is exactly the classic one.
 //!
 //! Model time is scaled by `scale` (wall ms per model ms) so demos finish
 //! in seconds while preserving the physics ratios. If AOT artifacts are
-//! present, per-request priors come from the PJRT predictor at admission
-//! time — the full L3→runtime→L1/L2 path on the live request path.
+//! present (single-tenant runs only), per-request priors come from the PJRT
+//! predictor at admission time — the full L3→runtime→L1/L2 path on the live
+//! request path.
 
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::mpsc;
@@ -23,20 +26,22 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::core::{ReqId, RequestStatus};
-use crate::metrics::{compute, RequestOutcome};
-use crate::predictor::{InfoLevel, LadderSource, PriorSource};
+use crate::core::{Priors, ReqId, Request, RequestStatus};
+use crate::metrics::{compute, RequestOutcome, RunMetrics};
+use crate::predictor::{InfoLevel, LadderSource, PriorSource, Route};
 use crate::provider::pool::PoolCfg;
 use crate::provider::ProviderCfg;
 use crate::runtime::{artifacts_available, NnPriorSource, Predictor};
 use crate::scheduler::{
     Action, ClientScheduler, SchedulerCfg, ShardCfg, ShardPolicy, StrategyKind,
 };
+use crate::sim::driver::{split_requests, tenant_seed};
 use crate::util::rng::Rng;
 use crate::workload::{Mix, WorkloadSpec};
 
 /// One submission inside a batch message to the provider thread.
 struct SubmitItem {
+    tenant: usize,
     id: ReqId,
     output_tokens: f64,
     shard: usize,
@@ -50,19 +55,20 @@ enum ToProvider {
 }
 
 /// Pending completion in the provider thread's finish heap. Min-ordered by
-/// `(at, id)`: the `ReqId` tiebreak mirrors the DES `EventQueue`'s
-/// (time, seq) ordering. Ordering on `at` alone left simultaneous
-/// completions popping in unspecified order, breaking run-to-run
-/// reproducibility of the wall-clock demo.
+/// `(at, tenant, id)`: the tiebreak mirrors the DES `EventQueue`'s
+/// (time, seq) ordering, where setup seqs are tenant-major. Ordering on
+/// `at` alone left simultaneous completions popping in unspecified order,
+/// breaking run-to-run reproducibility of the wall-clock demo.
 struct Finish {
     at: Instant,
+    tenant: usize,
     id: ReqId,
     shard: usize,
 }
 
 impl PartialEq for Finish {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.id == other.id
+        self.at == other.at && self.tenant == other.tenant && self.id == other.id
     }
 }
 impl Eq for Finish {}
@@ -73,18 +79,21 @@ impl PartialOrd for Finish {
 }
 impl Ord for Finish {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reverse both keys for a min-heap on (at, id).
-        other.at.cmp(&self.at).then_with(|| other.id.cmp(&self.id))
+        // Reverse all keys for a min-heap on (at, tenant, id).
+        let ord = other.at.cmp(&self.at).then_with(|| other.tenant.cmp(&self.tenant));
+        ord.then_with(|| other.id.cmp(&self.id))
     }
 }
 
 /// One endpoint's wall-clock state: the DES mock's physics (hidden
-/// concurrency gate, invisible FIFO, load-dependent service + jitter).
+/// concurrency gate, invisible FIFO, load-dependent service + jitter). The
+/// fleet is shared by every tenant; the hidden queue remembers each
+/// request's owner so its completion routes home.
 struct ShardState {
     cfg: ProviderCfg,
     rng: Rng,
     running: usize,
-    waiting: VecDeque<(ReqId, f64)>,
+    waiting: VecDeque<(usize, ReqId, f64)>,
 }
 
 /// Start `id` on shard `shard_ix`: sample service at the post-admission
@@ -93,6 +102,7 @@ fn start_on(
     shard_ix: usize,
     shard: &mut ShardState,
     heap: &mut BinaryHeap<Finish>,
+    tenant: usize,
     id: ReqId,
     tokens: f64,
     scale: f64,
@@ -105,16 +115,17 @@ fn start_on(
         mean
     };
     let d = Duration::from_secs_f64(ms * scale / 1000.0);
-    heap.push(Finish { at: Instant::now() + d, id, shard: shard_ix });
+    heap.push(Finish { at: Instant::now() + d, tenant, id, shard: shard_ix });
 }
 
-/// Provider thread: the sharded fleet on wall-clock time. Completions are
-/// sent back as request ids at their completion instants.
+/// Provider thread: the sharded fleet on wall-clock time, multiplexing
+/// submissions from every tenant. Completions are sent back to the owning
+/// tenant's channel at their completion instants.
 fn provider_thread(
     pool: PoolCfg,
     scale: f64,
     rx: mpsc::Receiver<ToProvider>,
-    tx: mpsc::Sender<ReqId>,
+    txs: Vec<mpsc::Sender<ReqId>>,
     seed: u64,
 ) {
     let base = Rng::new(seed).derive("provider");
@@ -132,16 +143,16 @@ fn provider_thread(
         .collect();
     let mut heap: BinaryHeap<Finish> = BinaryHeap::new();
     loop {
-        // Drain due completions (instant ties pop in ReqId order).
+        // Drain due completions (instant ties pop in (tenant, id) order).
         let now = Instant::now();
         while heap.peek().map(|f| f.at <= now).unwrap_or(false) {
             let f = heap.pop().unwrap();
             let s = &mut shards[f.shard];
             s.running -= 1;
-            let _ = tx.send(f.id);
+            let _ = txs[f.tenant].send(f.id);
             // Promote that shard's hidden queue.
-            if let Some((id, tokens)) = s.waiting.pop_front() {
-                start_on(f.shard, s, &mut heap, id, tokens, scale);
+            if let Some((tenant, id, tokens)) = s.waiting.pop_front() {
+                start_on(f.shard, s, &mut heap, tenant, id, tokens, scale);
             }
         }
         // Wait for the next submission batch or the next finish.
@@ -154,9 +165,17 @@ fn provider_thread(
                 for item in batch {
                     let s = &mut shards[item.shard];
                     if s.running < s.cfg.max_concurrency {
-                        start_on(item.shard, s, &mut heap, item.id, item.output_tokens, scale);
+                        start_on(
+                            item.shard,
+                            s,
+                            &mut heap,
+                            item.tenant,
+                            item.id,
+                            item.output_tokens,
+                            scale,
+                        );
                     } else {
-                        s.waiting.push_back((item.id, item.output_tokens));
+                        s.waiting.push_back((item.tenant, item.id, item.output_tokens));
                     }
                 }
             }
@@ -167,54 +186,22 @@ fn provider_thread(
     }
 }
 
-/// Run the real-time demo; prints live progress and a final metrics table.
-///
-/// `pool_cfg` shapes the provider fleet (one shard = the classic demo);
-/// `shard_policy` is the client-side selection policy across it.
-pub fn serve_demo(
-    strategy: StrategyKind,
-    rate_rps: f64,
-    n_requests: usize,
+/// One tenant's client loop on wall-clock time: the scheduler tick cycle
+/// against shared channels. Returns the tenant's metrics once every one of
+/// its requests reaches a terminal state.
+#[allow(clippy::too_many_arguments)]
+fn client_loop(
+    tenant: usize,
+    label: &str,
+    requests: &[Request],
+    mut scheduler: ClientScheduler,
+    mut priors_of: impl FnMut(&Request) -> (Priors, Route),
     scale: f64,
-    artifacts_dir: &str,
-    pool_cfg: PoolCfg,
-    shard_policy: ShardPolicy,
-) -> Result<()> {
-    let seed = 0u64;
-    let spec = WorkloadSpec::new(Mix::Balanced, n_requests, rate_rps);
-    let requests = spec.generate(seed);
-
-    // Priors: PJRT predictor when the runtime is compiled in and artifacts
-    // exist, analytic ladder otherwise (the default build ships a stub
-    // runtime, so artifacts on disk must not turn into a hard failure).
-    let mut nn_source: Option<NnPriorSource> = if cfg!(feature = "pjrt")
-        && !artifacts_dir.is_empty()
-        && artifacts_available(artifacts_dir)
-    {
-        println!("using PJRT predictor from {artifacts_dir}");
-        Some(NnPriorSource::new(Predictor::load(artifacts_dir)?))
-    } else {
-        println!("artifacts not found or PJRT disabled — using analytic coarse priors");
-        None
-    };
-    let mut analytic = LadderSource::new(InfoLevel::Coarse, Rng::new(seed).derive("priors"));
-
-    let (to_provider, provider_rx) = mpsc::channel::<ToProvider>();
-    let (completion_tx, completion_rx) = mpsc::channel::<ReqId>();
-    let n_shards = pool_cfg.n_shards();
-    println!("provider fleet: {n_shards} shard(s), policy {}", shard_policy.name());
-    let pcfg = pool_cfg.clone();
-    let handle =
-        std::thread::spawn(move || provider_thread(pcfg, scale, provider_rx, completion_tx, seed));
-
-    let mut sched_cfg = SchedulerCfg::for_strategy(strategy);
-    sched_cfg.shards = ShardCfg::new(
-        n_shards,
-        shard_policy,
-        if n_shards == 1 { Vec::new() } else { pool_cfg.client_weights() },
-    );
-    let mut scheduler = ClientScheduler::new(sched_cfg);
-    let epoch = Instant::now();
+    epoch: Instant,
+    to_provider: &mpsc::Sender<ToProvider>,
+    completion_rx: &mpsc::Receiver<ReqId>,
+) -> RunMetrics {
+    let n_requests = requests.len();
     let to_model_ms = |i: Instant| i.duration_since(epoch).as_secs_f64() * 1000.0 / scale;
     let to_wall = |model_ms: f64| epoch + Duration::from_secs_f64(model_ms * scale / 1000.0);
 
@@ -228,7 +215,7 @@ pub fn serve_demo(
         Timeout,
     }
     let mut timers: Vec<(Instant, Timer, ReqId)> = Vec::new();
-    for r in &requests {
+    for r in requests {
         timers.push((to_wall(r.arrival_ms), Timer::Arrival, r.id));
         timers.push((to_wall(r.timeout_ms), Timer::Timeout, r.id));
     }
@@ -240,15 +227,16 @@ pub fn serve_demo(
     // release order — one channel send per tick instead of one per request.
     let mut actions: Vec<Action> = Vec::new();
     let apply = |actions: &[Action],
-                     timers: &mut Vec<(Instant, Timer, ReqId)>,
-                     status: &mut Vec<RequestStatus>,
-                     defer_counts: &mut Vec<u32>| {
+                 timers: &mut Vec<(Instant, Timer, ReqId)>,
+                 status: &mut Vec<RequestStatus>,
+                 defer_counts: &mut Vec<u32>| {
         let mut batch: Vec<SubmitItem> = Vec::new();
         for a in actions {
             match *a {
                 Action::Send { id, shard } => {
                     status[id] = RequestStatus::InFlight;
                     batch.push(SubmitItem {
+                        tenant,
                         id,
                         output_tokens: requests[id].true_output_tokens as f64,
                         shard,
@@ -291,7 +279,7 @@ pub fn serve_demo(
                     apply(&actions, &mut timers, &mut status, &mut defer_counts);
                     let met = lat <= budget;
                     println!(
-                        "[{:>8.0}ms] done  #{id:<4} {}  latency {:>7.0}ms  {}",
+                        "{label}[{:>8.0}ms] done  #{id:<4} {}  latency {:>7.0}ms  {}",
                         now_ms,
                         requests[id].true_bucket.name(),
                         lat,
@@ -310,12 +298,9 @@ pub fn serve_demo(
                         match kind {
                             Timer::Arrival => {
                                 arrived += 1;
-                                let (p, route) = match nn_source.as_mut() {
-                                    Some(nn) => nn.priors(&requests[id]),
-                                    None => analytic.priors(&requests[id]),
-                                };
+                                let (p, route) = priors_of(&requests[id]);
                                 println!(
-                                    "[{:>8.0}ms] admit #{id:<4} {}  prior p50={:.0} p90={:.0}",
+                                    "{label}[{:>8.0}ms] admit #{id:<4} {}  prior p50={:.0} p90={:.0}",
                                     now_ms,
                                     requests[id].true_bucket.name(),
                                     p.p50,
@@ -343,7 +328,7 @@ pub fn serve_demo(
                                     actions.clear();
                                     scheduler.cancel(id, now_ms, &mut actions);
                                     status[id] = RequestStatus::TimedOut;
-                                    println!("[{:>8.0}ms] TIMEOUT #{id}", now_ms);
+                                    println!("{label}[{:>8.0}ms] TIMEOUT #{id}", now_ms);
                                     apply(&actions, &mut timers, &mut status, &mut defer_counts);
                                 }
                             }
@@ -372,8 +357,6 @@ pub fn serve_demo(
             Err(mpsc::RecvTimeoutError::Disconnected) => break,
         }
     }
-    let _ = to_provider.send(ToProvider::Shutdown);
-    let _ = handle.join();
 
     let outcomes: Vec<RequestOutcome> = requests
         .iter()
@@ -388,18 +371,176 @@ pub fn serve_demo(
             defer_count: defer_counts[r.id],
         })
         .collect();
-    let m = compute(
+    compute(
         &outcomes,
         scheduler.controller().defers_by_bucket,
         scheduler.controller().rejects_by_bucket,
         scheduler.feasibility_violations(),
-    );
-    println!("\n== serve summary ({}) ==", strategy.name());
-    println!("offered {}  completed {}  rejected {}  timed-out {}", m.n_offered, m.n_completed, m.n_rejected, m.n_timed_out);
+    )
+}
+
+fn print_summary(prefix: &str, m: &RunMetrics) {
     println!(
-        "completion {:.3}  satisfaction {:.3}  goodput {:.2} req/s  short P95 {:.0} ms  global P95 {:.0} ms",
+        "{prefix}offered {}  completed {}  rejected {}  timed-out {}",
+        m.n_offered, m.n_completed, m.n_rejected, m.n_timed_out
+    );
+    println!(
+        "{prefix}completion {:.3}  satisfaction {:.3}  goodput {:.2} req/s  short P95 {:.0} ms  global P95 {:.0} ms",
         m.completion_rate, m.satisfaction, m.goodput_rps, m.short_p95_ms, m.global_p95_ms
     );
+}
+
+/// Run the real-time demo; prints live progress and a final metrics table.
+///
+/// `pool_cfg` shapes the provider fleet (one shard = the classic demo);
+/// `shard_policy` is the client-side selection policy across it; `tenants`
+/// is the number of independent client schedulers sharing the fleet. With
+/// `tenants > 1` the offered load is split evenly (rate and request count),
+/// each tenant runs its own scheduler thread on its own derived workload
+/// stream, and the provider thread multiplexes all of their batches.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_demo(
+    strategy: StrategyKind,
+    rate_rps: f64,
+    n_requests: usize,
+    scale: f64,
+    artifacts_dir: &str,
+    pool_cfg: PoolCfg,
+    shard_policy: ShardPolicy,
+    tenants: usize,
+) -> Result<()> {
+    anyhow::ensure!(tenants >= 1, "serve needs at least one tenant");
+    let seed = 0u64;
+
+    // Priors: PJRT predictor when the runtime is compiled in and artifacts
+    // exist, analytic ladder otherwise (the default build ships a stub
+    // runtime, so artifacts on disk must not turn into a hard failure).
+    // Multi-tenant demos always use the analytic source: the predictor
+    // handle is not shared across client threads.
+    let mut nn_source: Option<NnPriorSource> = if tenants == 1
+        && cfg!(feature = "pjrt")
+        && !artifacts_dir.is_empty()
+        && artifacts_available(artifacts_dir)
+    {
+        match Predictor::load(artifacts_dir) {
+            Ok(p) => {
+                println!("using PJRT predictor from {artifacts_dir}");
+                Some(NnPriorSource::new(p))
+            }
+            Err(e) => {
+                println!("PJRT predictor unavailable ({e}) — using analytic coarse priors");
+                None
+            }
+        }
+    } else {
+        println!("PJRT disabled, artifacts missing, or multi-tenant — using analytic priors");
+        None
+    };
+
+    let (to_provider, provider_rx) = mpsc::channel::<ToProvider>();
+    let n_shards = pool_cfg.n_shards();
+    println!(
+        "provider fleet: {n_shards} shard(s), policy {}, {tenants} tenant(s)",
+        shard_policy.name()
+    );
+    let mut completion_txs: Vec<mpsc::Sender<ReqId>> = Vec::with_capacity(tenants);
+    let mut completion_rxs: Vec<mpsc::Receiver<ReqId>> = Vec::with_capacity(tenants);
+    for _ in 0..tenants {
+        let (tx, rx) = mpsc::channel::<ReqId>();
+        completion_txs.push(tx);
+        completion_rxs.push(rx);
+    }
+    let pcfg = pool_cfg.clone();
+    let provider_handle = std::thread::spawn(move || {
+        provider_thread(pcfg, scale, provider_rx, completion_txs, seed);
+    });
+
+    let shard_cfg = ShardCfg::new(
+        n_shards,
+        shard_policy,
+        if n_shards == 1 { Vec::new() } else { pool_cfg.client_weights() },
+    );
+    // Total-conserving split: the fleet is offered exactly `n_requests`.
+    let per_counts = split_requests(n_requests, tenants);
+    let per_rate = rate_rps / tenants as f64;
+    let epoch = Instant::now();
+
+    // Tenants 1.. run on their own threads; tenant 0 runs on the caller
+    // thread (so the single-tenant demo is exactly the classic one, and the
+    // optional PJRT source never has to cross a thread boundary). Receivers
+    // are handed out in tenant order, pairing with the provider's
+    // `txs[tenant]` routing.
+    let mut rx_iter = completion_rxs.into_iter();
+    let rx0 = rx_iter.next().expect("tenant 0 receiver");
+    let mut handles = Vec::new();
+    for (t, rx) in rx_iter.enumerate().map(|(i, rx)| (i + 1, rx)) {
+        let spec = WorkloadSpec::new(Mix::Balanced, per_counts[t], per_rate);
+        let tseed = tenant_seed(seed, t);
+        let mut cfg = SchedulerCfg::for_strategy(strategy);
+        cfg.shards = shard_cfg.clone();
+        let tx = to_provider.clone();
+        handles.push(std::thread::spawn(move || {
+            let requests = spec.generate(tseed);
+            let scheduler = ClientScheduler::new(cfg);
+            // Same prior-stream convention as the DES `run_tenants`, so a
+            // wall-clock tenant and its simulated twin draw identical
+            // priors for the same tseed. (Tenant 0 keeps the historic
+            // serve stream below, preserving the classic 1-tenant demo.)
+            let prior_rng = Rng::new(tseed ^ 0x5EED_50_u64).derive("priors");
+            let mut src = LadderSource::new(InfoLevel::Coarse, prior_rng);
+            let priors = |r: &Request| src.priors(r);
+            let label = format!("t{t} ");
+            client_loop(t, &label, &requests, scheduler, priors, scale, epoch, &tx, &rx)
+        }));
+    }
+
+    let spec0 = WorkloadSpec::new(Mix::Balanced, per_counts[0], per_rate);
+    let requests0 = spec0.generate(tenant_seed(seed, 0));
+    let mut cfg0 = SchedulerCfg::for_strategy(strategy);
+    cfg0.shards = shard_cfg.clone();
+    let scheduler0 = ClientScheduler::new(cfg0);
+    let mut analytic = LadderSource::new(InfoLevel::Coarse, Rng::new(seed).derive("priors"));
+    let label0 = if tenants == 1 { String::new() } else { "t0 ".to_string() };
+    let m0 = client_loop(
+        0,
+        &label0,
+        &requests0,
+        scheduler0,
+        |r| match nn_source.as_mut() {
+            Some(nn) => nn.priors(r),
+            None => analytic.priors(r),
+        },
+        scale,
+        epoch,
+        &to_provider,
+        &rx0,
+    );
+
+    let mut per_tenant: Vec<RunMetrics> = vec![m0];
+    for h in handles {
+        per_tenant.push(h.join().expect("tenant thread panicked"));
+    }
+    let _ = to_provider.send(ToProvider::Shutdown);
+    let _ = provider_handle.join();
+
+    println!("\n== serve summary ({}, {tenants} tenant(s)) ==", strategy.name());
+    if tenants == 1 {
+        print_summary("", &per_tenant[0]);
+    } else {
+        for (t, m) in per_tenant.iter().enumerate() {
+            println!("-- tenant {t} --");
+            print_summary("  ", m);
+        }
+        let offered: usize = per_tenant.iter().map(|m| m.n_offered).sum();
+        let completed: usize = per_tenant.iter().map(|m| m.n_completed).sum();
+        let goodput: f64 = per_tenant.iter().map(|m| m.goodput_rps).sum();
+        let worst_sat = per_tenant.iter().map(|m| m.satisfaction).fold(f64::INFINITY, f64::min);
+        println!("-- fleet --");
+        println!(
+            "  offered {offered}  completed {completed}  total goodput {goodput:.2} req/s  \
+             worst-tenant satisfaction {worst_sat:.3}"
+        );
+    }
     if let Some(nn) = &nn_source {
         println!("PJRT predictor calls on the live path: {}", nn.calls());
     }
@@ -411,25 +552,33 @@ mod tests {
     use super::*;
 
     #[test]
-    fn finish_heap_breaks_instant_ties_by_req_id() {
+    fn finish_heap_breaks_instant_ties_by_tenant_then_req_id() {
         // Regression: ordering on `at` alone popped simultaneous
         // completions in unspecified (heap-internal) order.
         let t = Instant::now();
         let mut h: BinaryHeap<Finish> = BinaryHeap::new();
-        h.push(Finish { at: t, id: 7, shard: 0 });
-        h.push(Finish { at: t, id: 3, shard: 1 });
-        h.push(Finish { at: t, id: 5, shard: 0 });
+        h.push(Finish { at: t, tenant: 0, id: 7, shard: 0 });
+        h.push(Finish { at: t, tenant: 0, id: 3, shard: 1 });
+        h.push(Finish { at: t, tenant: 0, id: 5, shard: 0 });
         let order: Vec<ReqId> = std::iter::from_fn(|| h.pop().map(|f| f.id)).collect();
         assert_eq!(order, vec![3, 5, 7], "simultaneous completions pop in ReqId order");
+        // Across tenants, tenant index breaks the tie first (mirroring the
+        // DES's tenant-major seq assignment).
+        let mut h: BinaryHeap<Finish> = BinaryHeap::new();
+        h.push(Finish { at: t, tenant: 1, id: 1, shard: 0 });
+        h.push(Finish { at: t, tenant: 0, id: 9, shard: 0 });
+        let order: Vec<(usize, ReqId)> =
+            std::iter::from_fn(|| h.pop().map(|f| (f.tenant, f.id))).collect();
+        assert_eq!(order, vec![(0, 9), (1, 1)]);
     }
 
     #[test]
     fn finish_heap_orders_by_time_before_id() {
         let t = Instant::now();
         let mut h: BinaryHeap<Finish> = BinaryHeap::new();
-        h.push(Finish { at: t + Duration::from_millis(5), id: 1, shard: 0 });
-        h.push(Finish { at: t, id: 9, shard: 0 });
-        assert_eq!(h.pop().unwrap().id, 9, "earlier instant wins regardless of id");
+        h.push(Finish { at: t + Duration::from_millis(5), tenant: 0, id: 1, shard: 0 });
+        h.push(Finish { at: t, tenant: 1, id: 9, shard: 0 });
+        assert_eq!(h.pop().unwrap().id, 9, "earlier instant wins regardless of id/tenant");
         assert_eq!(h.pop().unwrap().id, 1);
     }
 }

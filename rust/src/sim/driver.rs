@@ -6,6 +6,19 @@
 //! and hands the provider nothing but submissions. All experiment tables
 //! are produced by running this driver across seeds/policies/regimes.
 //!
+//! Two entry points share one event loop (`run_core`):
+//! * [`run_pool`] — one client scheduler against a (possibly sharded)
+//!   provider pool: every classic experiment;
+//! * [`run_tenants`] — M independent client schedulers, each with its own
+//!   `SchedulerCfg`, workload stream, and shard selector, sharing one
+//!   [`ProviderPool`]. Tenant ticks interleave deterministically: events
+//!   order by `(time, seq)` with seqs assigned tenant-major at setup, so
+//!   simultaneous cross-tenant events resolve by tenant index, then
+//!   arrival order. Tenant 0 consumes the base RNG streams verbatim, so a
+//!   1-tenant run is **byte-identical** to [`run_pool`] (property-tested
+//!   in `tests/tenant_equivalence.rs`); tenants ≥ 1 derive independent
+//!   streams, so adding a tenant never perturbs existing ones' workloads.
+//!
 //! Hot-path notes: one `Action` buffer is reused for the entire run (the
 //! scheduler appends, the driver drains), and every `Timeout`/`Retry`
 //! event is a cancelable timer — when a request reaches a terminal state
@@ -13,14 +26,15 @@
 //! carries no dead entry per completed request and `events_processed`
 //! counts only real work.
 
-use crate::core::{ReqId, Request, RequestStatus};
+use crate::core::{Priors, ReqId, Request, RequestStatus};
 use crate::metrics::{compute, RequestOutcome, RunMetrics};
-use crate::predictor::PriorSource;
+use crate::predictor::{InfoLevel, LadderSource, PriorSource, Route};
 use crate::provider::pool::{PoolCfg, ProviderPool};
 use crate::provider::{ProviderCfg, Started};
 use crate::scheduler::{Action, ClientScheduler, SchedulerCfg};
 use crate::sim::{EventQueue, TimerId};
 use crate::util::rng::Rng;
+use crate::workload::WorkloadSpec;
 
 /// DES event payloads.
 #[derive(Debug, Clone, Copy)]
@@ -94,41 +108,45 @@ fn flush_sends(
     batch.clear();
 }
 
-/// Simulate one run to completion against a sharded provider pool.
+/// Mutable event-loop results shared by the single- and multi-tenant entry
+/// points. Indexed by global request id.
+struct CoreRun {
+    status: Vec<RequestStatus>,
+    latency: Vec<Option<f64>>,
+    defer_counts: Vec<u32>,
+    sends: u64,
+    sends_by_tenant: Vec<u64>,
+    peak_inflight: usize,
+    timers_canceled: u64,
+    events_processed: u64,
+    events_skipped: u64,
+}
+
+/// The shared DES loop: pop events, feed the owning tenant's scheduler,
+/// apply its actions against the one shared provider pool.
 ///
-/// `prior_source` is consulted once per request, in arrival order, before
-/// the run starts — priors are a pure function of the request, so
-/// precomputing preserves semantics while letting the PJRT-backed source
-/// batch its kernel invocations.
-///
-/// The scheduler's fleet view is reconciled with the pool actually running:
-/// shard count and (when not explicitly set) advertised weights come from
-/// `pool_cfg`; the selection policy stays the client's choice.
-pub fn run_pool(
+/// `owner[id]` names the tenant (scheduler index) each request belongs to;
+/// the single-tenant entry point passes all-zeros, so this is *literally*
+/// the same code path for both — the 1-tenant bit-compat contract is
+/// structural, not re-implemented.
+fn run_core(
     requests: &[Request],
-    prior_source: &mut dyn PriorSource,
-    mut sched_cfg: SchedulerCfg,
-    pool_cfg: &PoolCfg,
-    seed: u64,
-) -> RunOutput {
-    sched_cfg.shards.n = pool_cfg.n_shards();
-    if sched_cfg.shards.weights.len() != pool_cfg.n_shards() {
-        sched_cfg.shards.weights =
-            if pool_cfg.n_shards() == 1 { Vec::new() } else { pool_cfg.client_weights() };
-    }
-    let mut scheduler = ClientScheduler::new(sched_cfg);
-    let mut provider = ProviderPool::new(pool_cfg, Rng::new(seed).derive("provider"));
-
+    priors: &[(Priors, Route)],
+    owner: &[u32],
+    schedulers: &mut [ClientScheduler],
+    provider: &mut ProviderPool,
+) -> CoreRun {
     let n = requests.len();
-    let priors: Vec<_> = requests.iter().map(|r| prior_source.priors(r)).collect();
-
     let mut status = vec![RequestStatus::Queued; n];
     let mut latency: Vec<Option<f64>> = vec![None; n];
     let mut defer_counts = vec![0u32; n];
     let mut sends = 0u64;
+    let mut sends_by_tenant = vec![0u64; schedulers.len()];
     let mut peak_inflight = 0usize;
     let mut timers_canceled = 0u64;
 
+    // Setup pushes are tenant-major (requests are concatenated per tenant),
+    // so heap ties — (time, seq) — resolve by (tenant, arrival order).
     let mut q: EventQueue<Ev> = EventQueue::with_capacity(n * 4);
     let mut timeout_timer: Vec<Option<TimerId>> = Vec::with_capacity(n);
     for r in requests {
@@ -147,13 +165,23 @@ pub fn run_pool(
 
     while let Some((now, ev)) = q.pop() {
         actions.clear();
+        // Every event belongs to exactly one tenant; all actions this tick
+        // come from that tenant's scheduler.
+        let tenant = match ev {
+            Ev::Arrival(id) | Ev::ProviderDone(id) | Ev::Retry(id) | Ev::Timeout(id) => {
+                owner[id] as usize
+            }
+        };
+        let scheduler = &mut schedulers[tenant];
         match ev {
             Ev::Arrival(id) => {
                 let (p, route) = priors[id];
                 scheduler.on_arrival(&requests[id], p, route, now, &mut actions);
             }
             Ev::ProviderDone(id) => {
-                // Promote hidden-queue work first (provider-internal).
+                // Promote hidden-queue work first (provider-internal). The
+                // promoted requests may belong to any tenant — their
+                // completions are routed by ownership when they pop.
                 for started in provider.on_finish(id, now) {
                     q.push(started.finish_ms, Ev::ProviderDone(started.id));
                 }
@@ -203,11 +231,12 @@ pub fn run_pool(
                     debug_assert_eq!(status[id], RequestStatus::Queued, "send of non-queued {id}");
                     status[id] = RequestStatus::InFlight;
                     sends += 1;
-                    peak_inflight = peak_inflight.max(scheduler.state().inflight());
+                    sends_by_tenant[tenant] += 1;
+                    peak_inflight = peak_inflight.max(schedulers[tenant].state().inflight());
                     send_batch.push((id, requests[id].true_output_tokens as f64, shard));
                 }
                 Action::Retry { id, at_ms } => {
-                    flush_sends(&mut provider, &mut send_batch, &mut started_buf, &mut q, now);
+                    flush_sends(provider, &mut send_batch, &mut started_buf, &mut q, now);
                     status[id] = RequestStatus::Deferred;
                     defer_counts[id] += 1;
                     retry_timer[id] = Some(q.push_cancelable(at_ms, Ev::Retry(id)));
@@ -222,10 +251,27 @@ pub fn run_pool(
                 }
             }
         }
-        flush_sends(&mut provider, &mut send_batch, &mut started_buf, &mut q, now);
+        flush_sends(provider, &mut send_batch, &mut started_buf, &mut q, now);
     }
 
-    let outcomes: Vec<RequestOutcome> = requests
+    CoreRun {
+        status,
+        latency,
+        defer_counts,
+        sends,
+        sends_by_tenant,
+        peak_inflight,
+        timers_canceled,
+        events_processed: q.processed(),
+        events_skipped: q.skipped(),
+    }
+}
+
+/// Build per-request outcome records for a (slice of a) request table.
+/// Request ids are global indices into the core arrays, so tenant slices
+/// work unchanged.
+fn build_outcomes(requests: &[Request], core: &CoreRun) -> Vec<RequestOutcome> {
+    requests
         .iter()
         .map(|r| RequestOutcome {
             id: r.id,
@@ -233,12 +279,47 @@ pub fn run_pool(
             class: r.true_bucket.class(),
             arrival_ms: r.arrival_ms,
             deadline_ms: r.deadline_ms,
-            status: status[r.id],
-            latency_ms: latency[r.id],
-            defer_count: defer_counts[r.id],
+            status: core.status[r.id],
+            latency_ms: core.latency[r.id],
+            defer_count: core.defer_counts[r.id],
         })
-        .collect();
+        .collect()
+}
 
+/// Reconcile a scheduler's fleet view with the pool actually running: shard
+/// count and (when not explicitly set) advertised weights come from
+/// `pool_cfg`; the selection policy stays the client's choice.
+fn reconcile_shards(sched_cfg: &mut SchedulerCfg, pool_cfg: &PoolCfg) {
+    sched_cfg.shards.n = pool_cfg.n_shards();
+    if sched_cfg.shards.weights.len() != pool_cfg.n_shards() {
+        sched_cfg.shards.weights =
+            if pool_cfg.n_shards() == 1 { Vec::new() } else { pool_cfg.client_weights() };
+    }
+}
+
+/// Simulate one run to completion against a sharded provider pool.
+///
+/// `prior_source` is consulted once per request, in arrival order, before
+/// the run starts — priors are a pure function of the request, so
+/// precomputing preserves semantics while letting the PJRT-backed source
+/// batch its kernel invocations.
+pub fn run_pool(
+    requests: &[Request],
+    prior_source: &mut dyn PriorSource,
+    mut sched_cfg: SchedulerCfg,
+    pool_cfg: &PoolCfg,
+    seed: u64,
+) -> RunOutput {
+    reconcile_shards(&mut sched_cfg, pool_cfg);
+    let mut schedulers = vec![ClientScheduler::new(sched_cfg)];
+    let mut provider = ProviderPool::new(pool_cfg, Rng::new(seed).derive("provider"));
+    let priors: Vec<(Priors, Route)> = requests.iter().map(|r| prior_source.priors(r)).collect();
+    let owner = vec![0u32; requests.len()];
+
+    let core = run_core(requests, &priors, &owner, &mut schedulers, &mut provider);
+
+    let outcomes = build_outcomes(requests, &core);
+    let scheduler = &schedulers[0];
     let metrics = compute(
         &outcomes,
         scheduler.controller().defers_by_bucket,
@@ -249,12 +330,135 @@ pub fn run_pool(
         metrics,
         outcomes,
         diagnostics: RunDiagnostics {
-            events_processed: q.processed(),
-            events_skipped: q.skipped(),
-            timers_canceled,
-            sends,
+            events_processed: core.events_processed,
+            events_skipped: core.events_skipped,
+            timers_canceled: core.timers_canceled,
+            sends: core.sends,
             peak_provider_queue: provider.peak_hidden_queue(),
-            peak_inflight,
+            peak_inflight: core.peak_inflight,
+            started_by_shard: provider.started_by_shard(),
+        },
+    }
+}
+
+/// One tenant of a multi-tenant run: its own workload stream, scheduler
+/// configuration (including the shard-selection policy), and information
+/// condition. The driver derives the tenant's RNG streams and builds its
+/// analytic prior source internally.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub workload: WorkloadSpec,
+    pub sched: SchedulerCfg,
+    pub info: InfoLevel,
+}
+
+/// One tenant's slice of a multi-tenant run.
+pub struct TenantOutput {
+    pub metrics: RunMetrics,
+    /// Outcome ids are *global* (offset by the preceding tenants' counts).
+    pub outcomes: Vec<RequestOutcome>,
+    pub sends: u64,
+}
+
+/// Outcome bundle of one multi-tenant run.
+pub struct MultiRunOutput {
+    pub tenants: Vec<TenantOutput>,
+    /// Engine-level diagnostics for the whole run. `peak_inflight` is the
+    /// max over tenants of a tenant's own in-flight count (each client
+    /// paces only itself); `sends`/`started_by_shard` are fleet-wide.
+    pub diagnostics: RunDiagnostics,
+}
+
+/// Workload/prior seed for tenant `t` of a run. Tenant 0 uses the run seed
+/// verbatim — the bit-compat contract: a 1-tenant [`run_tenants`] consumes
+/// exactly the RNG streams [`run_pool`] consumes. Later tenants derive
+/// independent streams, so adding a tenant never perturbs existing ones.
+pub fn tenant_seed(seed: u64, t: usize) -> u64 {
+    if t == 0 {
+        seed
+    } else {
+        Rng::new(seed).derive(&format!("tenant{t}")).next_u64()
+    }
+}
+
+/// Split `total` offered requests across `tenants` with the fleet-wide
+/// total conserved exactly: the first `total % tenants` tenants carry one
+/// extra request. (A plain `total / tenants` silently drops the remainder —
+/// and a `.max(1)` rounds *up* when `tenants > total` — so recorded request
+/// counts would misstate the actual offered load.) Shared by the bench
+/// tenant leg, the `tenants` experiment, and the serve demo so all three
+/// mean the same thing by "the same total load split across M tenants".
+pub fn split_requests(total: usize, tenants: usize) -> Vec<usize> {
+    assert!(tenants >= 1, "need at least one tenant");
+    let base = total / tenants;
+    let rem = total % tenants;
+    (0..tenants).map(|t| base + usize::from(t < rem)).collect()
+}
+
+/// Simulate M independent client schedulers sharing one provider pool.
+///
+/// Each tenant generates its own request table on its own derived stream
+/// (ids are remapped into one global space, tenant-major), consults its own
+/// analytic prior source in arrival order, and runs its own scheduler; the
+/// pool — and therefore all cross-tenant interference — is shared. The
+/// provider stream is the same `derive("provider")` stream `run_pool`
+/// uses, so the fleet physics are identical across tenant counts.
+pub fn run_tenants(tenants: &[TenantSpec], pool_cfg: &PoolCfg, seed: u64) -> MultiRunOutput {
+    assert!(!tenants.is_empty(), "need at least one tenant");
+    let mut all_requests: Vec<Request> = Vec::new();
+    let mut priors: Vec<(Priors, Route)> = Vec::new();
+    let mut owner: Vec<u32> = Vec::new();
+    let mut ranges: Vec<(usize, usize)> = Vec::new();
+    let mut schedulers: Vec<ClientScheduler> = Vec::new();
+    for (t, spec) in tenants.iter().enumerate() {
+        let tseed = tenant_seed(seed, t);
+        let offset = all_requests.len();
+        let mut reqs = spec.workload.generate(tseed);
+        // Same prior-stream convention every experiment runner uses, on the
+        // tenant's own seed.
+        let prior_rng = Rng::new(tseed ^ 0x5EED_50_u64).derive("priors");
+        let mut src = LadderSource::new(spec.info, prior_rng);
+        for r in reqs.iter_mut() {
+            r.id += offset;
+        }
+        for r in &reqs {
+            priors.push(src.priors(r));
+            owner.push(t as u32);
+        }
+        ranges.push((offset, offset + reqs.len()));
+        all_requests.extend(reqs);
+        let mut cfg = spec.sched.clone();
+        reconcile_shards(&mut cfg, pool_cfg);
+        schedulers.push(ClientScheduler::new(cfg));
+    }
+    let mut provider = ProviderPool::new(pool_cfg, Rng::new(seed).derive("provider"));
+
+    let core = run_core(&all_requests, &priors, &owner, &mut schedulers, &mut provider);
+
+    let tenants_out: Vec<TenantOutput> = ranges
+        .iter()
+        .zip(schedulers.iter())
+        .enumerate()
+        .map(|(t, (&(lo, hi), sched))| {
+            let outcomes = build_outcomes(&all_requests[lo..hi], &core);
+            let metrics = compute(
+                &outcomes,
+                sched.controller().defers_by_bucket,
+                sched.controller().rejects_by_bucket,
+                sched.feasibility_violations(),
+            );
+            TenantOutput { metrics, outcomes, sends: core.sends_by_tenant[t] }
+        })
+        .collect();
+    MultiRunOutput {
+        tenants: tenants_out,
+        diagnostics: RunDiagnostics {
+            events_processed: core.events_processed,
+            events_skipped: core.events_skipped,
+            timers_canceled: core.timers_canceled,
+            sends: core.sends,
+            peak_provider_queue: provider.peak_hidden_queue(),
+            peak_inflight: core.peak_inflight,
             started_by_shard: provider.started_by_shard(),
         },
     }
@@ -449,6 +653,117 @@ mod tests {
                 );
             }
         }
+    }
+
+    fn tenant_spec(mix: Mix, n: usize, rate: f64, strategy: StrategyKind) -> TenantSpec {
+        TenantSpec {
+            workload: WorkloadSpec::new(mix, n, rate),
+            sched: SchedulerCfg::for_strategy(strategy),
+            info: InfoLevel::Coarse,
+        }
+    }
+
+    #[test]
+    fn one_tenant_run_matches_run_pool_bitwise() {
+        // The structural contract: a 1-tenant run consumes the base RNG
+        // streams verbatim and shares run_pool's event loop, so outputs are
+        // byte-identical (the full sweep lives in tests/tenant_equivalence).
+        let seed = 6u64;
+        let spec = WorkloadSpec::new(Mix::Balanced, 60, 12.0);
+        let requests = spec.generate(seed);
+        let mut src =
+            LadderSource::new(InfoLevel::Coarse, Rng::new(seed ^ 0x5EED_50_u64).derive("priors"));
+        let pool = PoolCfg::split(ProviderCfg::default(), 2);
+        let base = run_pool(
+            &requests,
+            &mut src,
+            SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+            &pool,
+            seed,
+        );
+        let multi = run_tenants(
+            &[tenant_spec(Mix::Balanced, 60, 12.0, StrategyKind::FinalAdrrOlc)],
+            &pool,
+            seed,
+        );
+        assert_eq!(multi.tenants.len(), 1);
+        let t0 = &multi.tenants[0];
+        assert_eq!(t0.metrics.n_completed, base.metrics.n_completed);
+        assert_eq!(t0.metrics.rejects_total, base.metrics.rejects_total);
+        assert_eq!(t0.metrics.global_p95_ms.to_bits(), base.metrics.global_p95_ms.to_bits());
+        for (x, y) in t0.outcomes.iter().zip(base.outcomes.iter()) {
+            assert_eq!(x.status, y.status);
+            assert_eq!(x.latency_ms.map(f64::to_bits), y.latency_ms.map(f64::to_bits));
+        }
+        assert_eq!(multi.diagnostics.events_processed, base.diagnostics.events_processed);
+        assert_eq!(multi.diagnostics.sends, base.diagnostics.sends);
+        assert_eq!(t0.sends, base.diagnostics.sends);
+    }
+
+    #[test]
+    fn multi_tenant_run_is_deterministic_and_conserving() {
+        let specs = vec![
+            tenant_spec(Mix::Balanced, 40, 8.0, StrategyKind::FinalAdrrOlc),
+            tenant_spec(Mix::Heavy, 30, 5.0, StrategyKind::QuotaTiered),
+            tenant_spec(Mix::Balanced, 20, 4.0, StrategyKind::DirectNaive),
+        ];
+        let pool = PoolCfg::split(ProviderCfg::default(), 4);
+        let a = run_tenants(&specs, &pool, 3);
+        let b = run_tenants(&specs, &pool, 3);
+        assert_eq!(a.tenants.len(), 3);
+        let mut gid = 0usize;
+        for (ta, tb) in a.tenants.iter().zip(b.tenants.iter()) {
+            assert_eq!(ta.metrics.n_completed, tb.metrics.n_completed);
+            for (x, y) in ta.outcomes.iter().zip(tb.outcomes.iter()) {
+                assert_eq!(x.status, y.status);
+                assert_eq!(x.latency_ms.map(f64::to_bits), y.latency_ms.map(f64::to_bits));
+                assert_eq!(x.id, gid, "outcome ids are global and contiguous");
+                gid += 1;
+                assert!(
+                    matches!(
+                        x.status,
+                        RequestStatus::Completed | RequestStatus::Rejected | RequestStatus::TimedOut
+                    ),
+                    "request {} stuck in {:?}",
+                    x.id,
+                    x.status
+                );
+            }
+        }
+        assert_eq!(a.tenants.iter().map(|t| t.metrics.n_offered).sum::<usize>(), 90);
+        assert_eq!(a.tenants.iter().map(|t| t.sends).sum::<u64>(), a.diagnostics.sends);
+        assert_eq!(
+            a.diagnostics.started_by_shard.iter().sum::<u64>(),
+            a.diagnostics.sends,
+            "every send eventually starts on some shard"
+        );
+    }
+
+    #[test]
+    fn split_requests_conserves_totals() {
+        for (total, tenants) in [(40, 2), (41, 2), (10, 16), (0, 3), (7, 7), (100, 8)] {
+            let counts = split_requests(total, tenants);
+            assert_eq!(counts.len(), tenants);
+            assert_eq!(counts.iter().sum::<usize>(), total, "{total}/{tenants}");
+            // Max spread of 1: "even" means even.
+            let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+            assert!(max - min <= 1, "{total}/{tenants}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn tenant_streams_are_independent() {
+        // Adding a tenant must not perturb tenant 0's workload: its request
+        // table is a pure function of the run seed.
+        let w1 = tenant_seed(9, 1);
+        let w2 = tenant_seed(9, 2);
+        assert_eq!(tenant_seed(9, 0), 9, "tenant 0 is the base stream");
+        assert_ne!(w1, w2);
+        assert_ne!(w1, 9);
+        let spec = WorkloadSpec::new(Mix::Balanced, 20, 6.0);
+        let a = spec.generate(tenant_seed(9, 1));
+        let b = spec.generate(tenant_seed(9, 2));
+        assert!(a.iter().zip(b.iter()).any(|(x, y)| x.true_output_tokens != y.true_output_tokens));
     }
 
     #[test]

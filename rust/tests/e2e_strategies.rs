@@ -155,6 +155,7 @@ fn realtime_serve_driver_matches_policy_semantics() {
         "",
         PoolCfg::single(ProviderCfg::default()),
         ShardPolicy::LeastInflight,
+        1,
     )
     .expect("serve demo failed");
 }
@@ -173,6 +174,27 @@ fn realtime_serve_driver_runs_a_sharded_fleet() {
         "",
         PoolCfg::heterogeneous(ProviderCfg::default(), 2, 0.5),
         ShardPolicy::Weighted,
+        1,
     )
     .expect("sharded serve demo failed");
+}
+
+#[test]
+fn realtime_serve_driver_multiplexes_tenants() {
+    // Two independent client schedulers sharing a 2-shard fleet through one
+    // provider thread: every tenant's requests must reach terminal states
+    // and the demo must drain cleanly (no hung channels).
+    use blackbox_sched::provider::pool::PoolCfg;
+    use blackbox_sched::scheduler::ShardPolicy;
+    blackbox_sched::serve::serve_demo(
+        StrategyKind::FinalAdrrOlc,
+        20.0,
+        40,
+        0.01,
+        "",
+        PoolCfg::split(ProviderCfg::default(), 2),
+        ShardPolicy::LeastInflight,
+        2,
+    )
+    .expect("multi-tenant serve demo failed");
 }

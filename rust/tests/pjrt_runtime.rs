@@ -1,10 +1,12 @@
 //! Integration: the PJRT runtime path — artifact load, golden numerics,
 //! batched prediction, and a full simulated run with the neural prior
-//! source on the admission path. Quarantined behind the `pjrt` feature
-//! (the default build ships a stub runtime without the xla bindings);
-//! within that, tests skip (with a notice) when artifacts have not been
-//! built: `make artifacts && cargo test --features pjrt` exercises
-//! everything.
+//! source on the admission path. Compiled under the `pjrt` feature (the
+//! default build ships a stub runtime without the xla bindings); CI's
+//! `--features pjrt` matrix leg builds this file against the vendored xla
+//! API stub (vendor/xla). Within that, tests skip (with a notice) when
+//! artifacts have not been built or when only the API stub is linked:
+//! `make artifacts && cargo test --features pjrt` against the real
+//! bindings exercises everything.
 
 #![cfg(feature = "pjrt")]
 
@@ -23,7 +25,22 @@ fn predictor() -> Option<Predictor> {
         eprintln!("SKIP: artifacts not built (run `make artifacts`)");
         return None;
     }
-    Some(Predictor::load(&dir).expect("artifacts present but unloadable"))
+    match Predictor::load(&dir) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            // The vendored xla API stub type-checks this whole path but
+            // cannot execute HLO — that (and only that) failure is a skip.
+            // With real bindings linked, a load failure with artifacts
+            // present is a genuine artifact problem and must stay fatal.
+            let chain = format!("{e:#}");
+            assert!(
+                chain.contains("vendored xla stub"),
+                "artifacts present but unloadable: {chain}"
+            );
+            eprintln!("SKIP: PJRT runtime is the vendored API stub ({chain})");
+            None
+        }
+    }
 }
 
 #[test]

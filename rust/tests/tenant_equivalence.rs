@@ -1,0 +1,209 @@
+//! The multi-tenant driver's bit-compat contract: a 1-tenant
+//! [`run_tenants`] run consumes the base RNG streams verbatim and shares
+//! `run_pool`'s event loop, so its output is **byte-identical** — same
+//! metrics bits, same per-request outcomes, same engine diagnostics —
+//! across strategies, fleet shapes, and seeds. Multi-tenant runs must stay
+//! deterministic and conserving, and tenant workload streams must be
+//! independent of tenant count.
+//!
+//! (The `tenants` experiment's `--jobs` invariance is covered by the CI
+//! determinism diff, which re-runs the whole `exp all` battery at two
+//! worker counts.)
+
+use blackbox_sched::metrics::RunMetrics;
+use blackbox_sched::predictor::{InfoLevel, LadderSource};
+use blackbox_sched::provider::pool::PoolCfg;
+use blackbox_sched::provider::ProviderCfg;
+use blackbox_sched::scheduler::{SchedulerCfg, ShardPolicy, StrategyKind};
+use blackbox_sched::sim::driver::{run_pool, run_tenants, tenant_seed, RunOutput, TenantSpec};
+use blackbox_sched::util::rng::Rng;
+use blackbox_sched::workload::{Mix, WorkloadSpec};
+
+fn metrics_bitwise_equal(a: &RunMetrics, b: &RunMetrics, ctx: &str) {
+    assert_eq!(a.n_offered, b.n_offered, "{ctx}");
+    assert_eq!(a.n_completed, b.n_completed, "{ctx}");
+    assert_eq!(a.n_rejected, b.n_rejected, "{ctx}");
+    assert_eq!(a.n_timed_out, b.n_timed_out, "{ctx}");
+    assert_eq!(a.defers_total, b.defers_total, "{ctx}");
+    assert_eq!(a.rejects_total, b.rejects_total, "{ctx}");
+    assert_eq!(a.defers_by_bucket, b.defers_by_bucket, "{ctx}");
+    assert_eq!(a.rejects_by_bucket, b.rejects_by_bucket, "{ctx}");
+    assert_eq!(a.feasibility_violations, b.feasibility_violations, "{ctx}");
+    for (x, y) in [
+        (a.short_p95_ms, b.short_p95_ms),
+        (a.short_p90_ms, b.short_p90_ms),
+        (a.global_p95_ms, b.global_p95_ms),
+        (a.global_std_ms, b.global_std_ms),
+        (a.heavy_p90_ms, b.heavy_p90_ms),
+        (a.completion_rate, b.completion_rate),
+        (a.satisfaction, b.satisfaction),
+        (a.goodput_rps, b.goodput_rps),
+        (a.makespan_ms, b.makespan_ms),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: float drift {x} vs {y}");
+    }
+}
+
+/// The reference side: `run_pool` with the exact stream conventions
+/// `run_tenants` applies to tenant 0.
+fn reference_run(
+    spec: &WorkloadSpec,
+    strategy: StrategyKind,
+    policy: ShardPolicy,
+    pool: &PoolCfg,
+    seed: u64,
+) -> RunOutput {
+    let requests = spec.generate(seed);
+    let mut src =
+        LadderSource::new(InfoLevel::Coarse, Rng::new(seed ^ 0x5EED_50_u64).derive("priors"));
+    let mut cfg = SchedulerCfg::for_strategy(strategy);
+    cfg.shards.policy = policy;
+    run_pool(&requests, &mut src, cfg, pool, seed)
+}
+
+#[test]
+fn one_tenant_matches_run_pool_byte_for_byte() {
+    let pools = [
+        ("single", PoolCfg::single(ProviderCfg::default())),
+        ("split4", PoolCfg::split(ProviderCfg::default(), 4)),
+        ("hetero3", PoolCfg::heterogeneous(ProviderCfg::default(), 3, 0.4)),
+    ];
+    let strategies =
+        [StrategyKind::FinalAdrrOlc, StrategyKind::DirectNaive, StrategyKind::AdaptiveDrr];
+    for seed in 0..3u64 {
+        for (pool_name, pool) in &pools {
+            for &strategy in &strategies {
+                for policy in ShardPolicy::ALL {
+                    let ctx = format!("seed {seed}, {pool_name}, {strategy:?}, {policy:?}");
+                    let spec = WorkloadSpec::new(Mix::Balanced, 60, 14.0);
+                    let base = reference_run(&spec, strategy, policy, pool, seed);
+                    let mut sched = SchedulerCfg::for_strategy(strategy);
+                    sched.shards.policy = policy;
+                    let multi = run_tenants(
+                        &[TenantSpec { workload: spec.clone(), sched, info: InfoLevel::Coarse }],
+                        pool,
+                        seed,
+                    );
+                    assert_eq!(multi.tenants.len(), 1, "{ctx}");
+                    let t0 = &multi.tenants[0];
+                    metrics_bitwise_equal(&t0.metrics, &base.metrics, &ctx);
+                    assert_eq!(t0.outcomes.len(), base.outcomes.len(), "{ctx}");
+                    for (x, y) in t0.outcomes.iter().zip(base.outcomes.iter()) {
+                        assert_eq!(x.id, y.id, "{ctx}");
+                        assert_eq!(x.status, y.status, "{ctx}");
+                        assert_eq!(
+                            x.latency_ms.map(f64::to_bits),
+                            y.latency_ms.map(f64::to_bits),
+                            "{ctx}: latency bits must match"
+                        );
+                        assert_eq!(x.defer_count, y.defer_count, "{ctx}");
+                    }
+                    let da = &multi.diagnostics;
+                    let db = &base.diagnostics;
+                    assert_eq!(da.events_processed, db.events_processed, "{ctx}");
+                    assert_eq!(da.events_skipped, db.events_skipped, "{ctx}");
+                    assert_eq!(da.timers_canceled, db.timers_canceled, "{ctx}");
+                    assert_eq!(da.sends, db.sends, "{ctx}");
+                    assert_eq!(da.peak_provider_queue, db.peak_provider_queue, "{ctx}");
+                    assert_eq!(da.peak_inflight, db.peak_inflight, "{ctx}");
+                    assert_eq!(da.started_by_shard, db.started_by_shard, "{ctx}");
+                    assert_eq!(t0.sends, db.sends, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_tenant_runs_are_bitwise_reproducible() {
+    let specs: Vec<TenantSpec> = vec![
+        TenantSpec {
+            workload: WorkloadSpec::new(Mix::Balanced, 50, 8.0),
+            sched: SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+            info: InfoLevel::Coarse,
+        },
+        TenantSpec {
+            workload: WorkloadSpec::new(Mix::Heavy, 40, 6.0),
+            sched: SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+            info: InfoLevel::Oracle,
+        },
+        TenantSpec {
+            workload: WorkloadSpec::new(Mix::Balanced, 30, 4.0),
+            sched: SchedulerCfg::for_strategy(StrategyKind::QuotaTiered),
+            info: InfoLevel::Coarse,
+        },
+    ];
+    for pool in [
+        PoolCfg::single(ProviderCfg::default()),
+        PoolCfg::heterogeneous(ProviderCfg::default(), 4, 0.5),
+    ] {
+        let a = run_tenants(&specs, &pool, 11);
+        let b = run_tenants(&specs, &pool, 11);
+        for (t, (ta, tb)) in a.tenants.iter().zip(b.tenants.iter()).enumerate() {
+            metrics_bitwise_equal(&ta.metrics, &tb.metrics, &format!("tenant {t}"));
+            for (x, y) in ta.outcomes.iter().zip(tb.outcomes.iter()) {
+                assert_eq!(x.status, y.status);
+                assert_eq!(x.latency_ms.map(f64::to_bits), y.latency_ms.map(f64::to_bits));
+            }
+        }
+        assert_eq!(a.diagnostics.events_processed, b.diagnostics.events_processed);
+        // Conservation across the fleet.
+        assert_eq!(a.tenants.iter().map(|t| t.sends).sum::<u64>(), a.diagnostics.sends);
+        assert_eq!(
+            a.diagnostics.started_by_shard.iter().sum::<u64>(),
+            a.diagnostics.sends,
+            "every send eventually starts on some shard"
+        );
+    }
+}
+
+#[test]
+fn adding_a_tenant_does_not_perturb_tenant_workload_streams() {
+    // Tenant t's request table depends only on (run seed, t) — never on how
+    // many neighbors share the fleet. (Outcomes DO change — interference
+    // through the shared pool is the phenomenon under study — but offered
+    // work must not.)
+    for t in 0..4usize {
+        let spec = WorkloadSpec::new(Mix::Balanced, 25, 5.0);
+        let a = spec.generate(tenant_seed(7, t));
+        let b = spec.generate(tenant_seed(7, t));
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.arrival_ms, y.arrival_ms);
+            assert_eq!(x.true_output_tokens, y.true_output_tokens);
+        }
+    }
+    // Distinct tenants draw distinct streams.
+    let seeds: Vec<u64> = (0..4).map(|t| tenant_seed(7, t)).collect();
+    for i in 0..seeds.len() {
+        for j in (i + 1)..seeds.len() {
+            assert_ne!(seeds[i], seeds[j], "tenants {i} and {j} share a stream");
+        }
+    }
+}
+
+#[test]
+fn heavy_tenant_interferes_through_the_shared_pool() {
+    // Physics sanity: a heavy neighbor at the same rate share must not
+    // *improve* the standard tenant's tail vs a balanced neighbor, and the
+    // run must stay conserving. (Direction-only check: exact magnitudes are
+    // seed-dependent.)
+    let mk = |mix: Mix| TenantSpec {
+        workload: WorkloadSpec::new(mix, 60, 8.0),
+        sched: SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+        info: InfoLevel::Coarse,
+    };
+    let pool = PoolCfg::single(ProviderCfg::default());
+    let calm = run_tenants(&[mk(Mix::Balanced), mk(Mix::Balanced)], &pool, 2);
+    let noisy = run_tenants(&[mk(Mix::Balanced), mk(Mix::Heavy)], &pool, 2);
+    // Tenant 0's own workload stream is identical in both runs (same seed,
+    // same spec); only the neighbor changed.
+    let calm_t0 = &calm.tenants[0].metrics;
+    let noisy_t0 = &noisy.tenants[0].metrics;
+    assert_eq!(calm_t0.n_offered, noisy_t0.n_offered);
+    assert!(
+        noisy_t0.global_p95_ms >= calm_t0.global_p95_ms * 0.5,
+        "heavy neighbor should not magically improve the tail: {} vs {}",
+        noisy_t0.global_p95_ms,
+        calm_t0.global_p95_ms
+    );
+}
