@@ -88,15 +88,25 @@ fn main() {
         std::hint::black_box(cq.remove_id(oldest));
         oldest += 1;
     });
+    // Ordering selection: the incremental index vs the retained reference
+    // scan, same 1k-deep queue. Pushes drive the lifecycle hooks exactly as
+    // the scheduler's slab mutations do.
     let mut fq = ClassQueues::new();
-    for id in 0..1_000 {
-        fq.push(heavy_sreq(id, id as f64, 100.0 + (id % 29) as f64 * 100.0));
-    }
     let mut fsel = FeasibleSet::new(OrderingCfg::default());
+    for id in 0..1_000 {
+        let r = heavy_sreq(id, id as f64, 100.0 + (id % 29) as f64 * 100.0);
+        fsel.on_push(&r, id as f64);
+        fq.push(r);
+    }
     let mut sel_now = 1_000.0;
-    suite.bench("ordering: feasible-set select (1k deep)", || {
+    suite.bench("ordering: feasible-set select (1k deep, indexed)", || {
         sel_now += 1.0;
         std::hint::black_box(fsel.select(fq.view(Class::Heavy), sel_now));
+    });
+    let mut ref_now = 1_000.0;
+    suite.bench("ordering: feasible-set reference scan (1k deep)", || {
+        ref_now += 1.0;
+        std::hint::black_box(fsel.reference_select(fq.view(Class::Heavy), ref_now));
     });
 
     // ---- provider ----

@@ -19,6 +19,15 @@
 //! client schedulers on the shared fleet (`run_tenants`), so tenant
 //! scaling is recorded — and gated — alongside.
 
+//! `--depth` adds a deep-queue leg: the same model-time horizon offered at
+//! 4× and 16× rate under `AdaptiveDrr` (no overload shedding), so
+//! steady-state queue depth scales ~4× between the two points, and the
+//! per-release ordering work (`Ordering::select_work`, a deterministic
+//! count of entries examined + index migrations) is fit against that depth
+//! ratio — `--depth-gate-exponent X` fails the run if any heavy-class
+//! ordering's work still scales like depth^X or worse (the incremental
+//! ordering indexes keep it near 0; the old full scans sat near 1).
+
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -28,11 +37,18 @@ use crate::metrics::report::TextTable;
 use crate::predictor::{InfoLevel, LadderSource};
 use crate::provider::pool::PoolCfg;
 use crate::provider::ProviderCfg;
-use crate::scheduler::{SchedulerCfg, ShardPolicy, StrategyKind};
+use crate::scheduler::{OrderingKind, SchedulerCfg, ShardPolicy, StrategyKind};
 use crate::sim::driver::{self, RunDiagnostics, TenantSpec};
 use crate::util::jsonio::Json;
 use crate::util::rng::Rng;
 use crate::workload::{Mix, WorkloadSpec};
+
+/// Rate multipliers for the `--depth` deep-queue leg. The low point already
+/// sits past the congestion knee; the high point is the 16×-rate regime.
+/// Request counts scale with the rate so both points cover the same
+/// model-time horizon.
+const DEPTH_MULT_LO: f64 = 4.0;
+const DEPTH_MULT_HI: f64 = 16.0;
 
 /// Scale-bench configuration (CLI-settable via `bbsched bench`).
 #[derive(Debug, Clone)]
@@ -54,6 +70,12 @@ pub struct ScaleBenchOpts {
     pub tenants: usize,
     /// Fail if any (strategy, shards, tenants) scaling exponent exceeds this.
     pub gate_exponent: Option<f64>,
+    /// Run the deep-queue leg: per-release cost vs steady-state queue depth
+    /// across the 4×/16×-rate points, one run per heavy-class ordering.
+    pub depth: bool,
+    /// Fail if any ordering's per-release cost scales worse than
+    /// depth^this between the depth leg's two points (needs `depth`).
+    pub depth_gate_exponent: Option<f64>,
 }
 
 impl Default for ScaleBenchOpts {
@@ -67,6 +89,8 @@ impl Default for ScaleBenchOpts {
             shards: 1,
             tenants: 1,
             gate_exponent: None,
+            depth: false,
+            depth_gate_exponent: None,
         }
     }
 }
@@ -127,6 +151,10 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
         opts.gate_exponent.is_none()
             || (opts.sizes.len() >= 2 && opts.sizes.first() != opts.sizes.last()),
         "--gate-exponent needs at least two distinct sizes to compute a scaling exponent"
+    );
+    anyhow::ensure!(
+        opts.depth || opts.depth_gate_exponent.is_none(),
+        "--depth-gate-exponent needs --depth (the deep-queue leg it gates)"
     );
     let mut records: Vec<RunRecord> = Vec::new();
     // Legs as (shards, tenants): the classic single endpoint, plus (when
@@ -333,7 +361,122 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
         println!("{}", t.render());
     }
 
-    let doc = Json::obj()
+    // ---- deep-queue leg: per-release cost vs steady-state queue depth ----
+    //
+    // `AdaptiveDrr` (ordering exercised, no overload shedding) at 4× and
+    // 16× the base rate over one model-time horizon: queue depth scales
+    // with the rate. The gated cost is `ordering_select_work / sends` —
+    // entries examined (plus index migrations) per release, a *counted*
+    // quantity, so the exponent `ln(cost_hi/cost_lo)/ln(depth_hi/depth_lo)`
+    // is deterministic and immune to runner noise. The reference scans sat
+    // at ~1 (every release walked the live queue); the incremental indexes
+    // keep it near 0. Wall time rides along informationally.
+    let mut depth_runs: Vec<Json> = Vec::new();
+    let mut depth_scaling: Vec<Json> = Vec::new();
+    if opts.depth {
+        let n_hi = *opts.sizes.last().unwrap();
+        println!(
+            "\n== depth leg: {DEPTH_MULT_LO}x / {DEPTH_MULT_HI}x rate, one horizon, \
+             select work per release =="
+        );
+        struct DepthPoint {
+            wall_ms: f64,
+            sends: u64,
+            select_work: u64,
+            mean_depth: f64,
+            peak_depth: usize,
+        }
+        let mut t = TextTable::new([
+            "ordering",
+            "depth lo",
+            "depth hi",
+            "work/release lo",
+            "work/release hi",
+            "exponent",
+        ]);
+        for ordering in OrderingKind::ALL {
+            let mut points: Vec<DepthPoint> = Vec::new();
+            for mult in [DEPTH_MULT_LO, DEPTH_MULT_HI] {
+                let n = ((n_hi as f64) * mult / DEPTH_MULT_HI).round() as usize;
+                let rate = opts.rate_rps * mult;
+                let requests = WorkloadSpec::new(opts.mix, n, rate).generate(opts.seed);
+                let mut src = LadderSource::new(
+                    InfoLevel::Coarse,
+                    Rng::new(opts.seed ^ 0x5EED_50_u64).derive("priors"),
+                );
+                let mut sched = SchedulerCfg::for_strategy(StrategyKind::AdaptiveDrr);
+                sched.heavy_ordering = ordering;
+                let pool = PoolCfg::single(ProviderCfg::default());
+                let t0 = Instant::now();
+                let o = driver::run_pool(&requests, &mut src, sched, &pool, opts.seed);
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let p = DepthPoint {
+                    wall_ms,
+                    sends: o.diagnostics.sends,
+                    select_work: o.diagnostics.ordering_select_work,
+                    mean_depth: o.diagnostics.mean_queue_depth,
+                    peak_depth: o.diagnostics.peak_queue_depth,
+                };
+                let wpr = if p.sends > 0 { p.select_work as f64 / p.sends as f64 } else { 0.0 };
+                depth_runs.push(
+                    Json::obj()
+                        .set("ordering", ordering.name())
+                        .set("rate_mult", mult)
+                        .set("rate_rps", rate)
+                        .set("requests", n)
+                        .set("wall_ms", p.wall_ms)
+                        .set("sends", p.sends)
+                        .set("select_work", p.select_work)
+                        .set("work_per_release", wpr)
+                        .set("mean_queue_depth", p.mean_depth)
+                        .set("peak_queue_depth", p.peak_depth),
+                );
+                points.push(p);
+            }
+            let (lo, hi) = (&points[0], &points[1]);
+            let wpr_lo = if lo.sends > 0 { lo.select_work as f64 / lo.sends as f64 } else { 0.0 };
+            let wpr_hi = if hi.sends > 0 { hi.select_work as f64 / hi.sends as f64 } else { 0.0 };
+            let depth_ratio = hi.mean_depth / lo.mean_depth;
+            let exponent = if wpr_lo > 0.0 && wpr_hi > 0.0 && depth_ratio > 0.0 {
+                (wpr_hi / wpr_lo).ln() / depth_ratio.ln()
+            } else {
+                f64::NAN
+            };
+            t.row([
+                ordering.name().to_string(),
+                format!("{:.1}", lo.mean_depth),
+                format!("{:.1}", hi.mean_depth),
+                format!("{wpr_lo:.2}"),
+                format!("{wpr_hi:.2}"),
+                format!("{exponent:.2}"),
+            ]);
+            depth_scaling.push(
+                Json::obj()
+                    .set("ordering", ordering.name())
+                    .set("depth_lo", lo.mean_depth)
+                    .set("depth_hi", hi.mean_depth)
+                    .set("work_per_release_lo", wpr_lo)
+                    .set("work_per_release_hi", wpr_hi)
+                    .set("exponent", exponent),
+            );
+            if let Some(max_e) = opts.depth_gate_exponent {
+                // Gate only when the two points actually built materially
+                // different depths — otherwise the log-ratio fit is noise.
+                if depth_ratio >= 2.0 && exponent.is_finite() && exponent > max_e {
+                    violations.push(format!(
+                        "depth {}: per-release work exponent {exponent:.2} > {max_e} \
+                         (depth {:.0} -> {:.0})",
+                        ordering.name(),
+                        lo.mean_depth,
+                        hi.mean_depth,
+                    ));
+                }
+            }
+        }
+        println!("{}", t.render());
+    }
+
+    let mut doc = Json::obj()
         .set("bench", "scale")
         .set("mix", opts.mix.name())
         .set("rate_rps", opts.rate_rps)
@@ -343,6 +486,11 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
         .set("sizes", opts.sizes.clone())
         .set("runs", Json::Arr(records.iter().map(RunRecord::to_json).collect()))
         .set("scaling", Json::Arr(scaling));
+    if opts.depth {
+        doc = doc
+            .set("depth_runs", Json::Arr(depth_runs))
+            .set("depth_scaling", Json::Arr(depth_scaling));
+    }
     doc.write_file(&opts.out_path)?;
     println!("wrote {}", opts.out_path);
     if !violations.is_empty() {
@@ -439,6 +587,60 @@ mod tests {
             .iter()
             .any(|s| s.get("tenants").and_then(Json::as_usize) == Some(2)));
         let _ = std::fs::remove_file(&opts.out_path);
+    }
+
+    #[test]
+    fn depth_leg_records_runs_and_exponents() {
+        let out_path = std::env::temp_dir().join("bbsched_bench_depth_test.json");
+        let opts = ScaleBenchOpts {
+            sizes: vec![40, 80],
+            rate_rps: 12.0,
+            depth: true,
+            out_path: out_path.to_string_lossy().into_owned(),
+            ..ScaleBenchOpts::default()
+        };
+        run_scale_bench(&opts).expect("bench runs");
+        let doc = Json::read_file(&opts.out_path).expect("BENCH.json parses");
+        let runs = doc.get("depth_runs").and_then(Json::as_arr).expect("depth_runs array");
+        assert_eq!(runs.len(), 2 * OrderingKind::ALL.len(), "two rate points per ordering");
+        for r in runs {
+            assert!(r.get("mean_queue_depth").and_then(Json::as_f64).unwrap() >= 0.0);
+            assert!(r.get("sends").and_then(Json::as_u64).unwrap() > 0, "releases happened");
+        }
+        let scaling = doc.get("depth_scaling").and_then(Json::as_arr).expect("depth_scaling");
+        assert_eq!(scaling.len(), OrderingKind::ALL.len(), "one exponent per ordering");
+        let _ = std::fs::remove_file(&opts.out_path);
+    }
+
+    #[test]
+    fn depth_gate_requires_depth_leg() {
+        let opts = ScaleBenchOpts {
+            sizes: vec![40, 80],
+            depth: false,
+            depth_gate_exponent: Some(0.8),
+            out_path: "/tmp/bbsched_bench_depth_gate.json".to_string(),
+            ..ScaleBenchOpts::default()
+        };
+        let err = run_scale_bench(&opts).expect_err("gate without the leg it gates");
+        assert!(err.to_string().contains("--depth"), "{err}");
+    }
+
+    #[test]
+    fn impossible_depth_gate_fails_when_queues_deepen() {
+        let out_path = std::env::temp_dir().join("bbsched_bench_depth_gate_fail.json");
+        let opts = ScaleBenchOpts {
+            sizes: vec![40, 160],
+            rate_rps: 12.0,
+            depth: true,
+            // Any finite exponent exceeds this ceiling; the gate only arms
+            // when the two points build materially different depths, which
+            // a 4x rate gap at these rates does.
+            depth_gate_exponent: Some(-100.0),
+            out_path: out_path.to_string_lossy().into_owned(),
+            ..ScaleBenchOpts::default()
+        };
+        assert!(run_scale_bench(&opts).is_err(), "depth gate must trip");
+        let _ = std::fs::remove_file(&out_path.to_string_lossy().into_owned());
     }
 
     #[test]

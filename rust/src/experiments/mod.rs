@@ -12,6 +12,7 @@ pub mod main_benchmark;
 pub mod noise_sweep;
 pub mod overload_policy;
 pub mod runner;
+pub mod scale;
 pub mod sensitivity;
 pub mod sharded;
 pub mod sharegpt;
@@ -57,7 +58,7 @@ impl ExpOpts {
 }
 
 /// All experiment names, in paper order (repo extensions at the end).
-pub const ALL_EXPERIMENTS: [&str; 13] = [
+pub const ALL_EXPERIMENTS: [&str; 14] = [
     "calibration",
     "ladder",
     "main",
@@ -71,6 +72,7 @@ pub const ALL_EXPERIMENTS: [&str; 13] = [
     "burst",
     "sharded",
     "tenants",
+    "scale",
 ];
 
 /// Dispatch one experiment by name ("all" runs the full battery).
@@ -89,6 +91,7 @@ pub fn run_experiment(name: &str, opts: &ExpOpts) -> Result<()> {
         "burst" => burst::run(opts),
         "sharded" => sharded::run(opts),
         "tenants" => tenants::run(opts),
+        "scale" => scale::run(opts),
         "all" => {
             for n in ALL_EXPERIMENTS {
                 println!("\n########## experiment: {n} ##########");

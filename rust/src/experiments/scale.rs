@@ -1,0 +1,198 @@
+//! Rate-scaling experiment: offered-rate multiplier × heavy-class ordering
+//! × congestion regime, with steady-state queue depth as a first-class
+//! column.
+//!
+//! The classic tables hold the arrival rate in the paper's bands, where
+//! live queue depth stays modest and a per-release O(depth) scan is cheap.
+//! This grid asks the *rate*-scaling question instead: multiply the offered
+//! rate (and the request count, so the model-time horizon is constant) by
+//! {1×, 4×, 16×} and watch what deep steady-state queues do to each
+//! ordering policy. The strategy is `AdaptiveDrr` (full allocation +
+//! ordering stack, no overload shedding), so queues are free to deepen with
+//! rate — the regime PR 5's incremental ordering indexes exist for; the
+//! per-release *cost* side of the story is gated by `bbsched bench --depth`.
+//!
+//! Congestion axes: `balanced/high` (the paper's high band) and
+//! `heavy/high` (heavy-dominated traffic, the class whose ordering is
+//! scored).
+//!
+//! Fanned out on [`ParallelSweep`], so `scale.csv` is byte-identical for
+//! any `--jobs` value (the CI determinism gate covers it via `exp all`).
+
+use anyhow::Result;
+
+use crate::experiments::runner::{Congestion, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
+use crate::metrics::{Aggregate, RunMetrics};
+use crate::predictor::{InfoLevel, LadderSource};
+use crate::provider::ProviderCfg;
+use crate::scheduler::{OrderingKind, SchedulerCfg, StrategyKind};
+use crate::sim::driver;
+use crate::util::csvio::CsvTable;
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::workload::{Mix, WorkloadSpec};
+
+/// Offered-rate multipliers on the regime's base rate.
+const MULTS: [f64; 3] = [1.0, 4.0, 16.0];
+
+/// One grid cell.
+#[derive(Debug, Clone)]
+struct ScaleCell {
+    regime: Regime,
+    mult: f64,
+    ordering: OrderingKind,
+}
+
+/// Per-seed result: run metrics + (mean, peak) scheduler queue depth.
+fn run_cell_seed(cell: &ScaleCell, n_base: usize, seed: u64) -> (RunMetrics, f64, usize) {
+    // Requests scale with the rate so every cell covers the same
+    // model-time horizon — depth differences are rate effects, not
+    // run-length effects.
+    let n = (n_base as f64 * cell.mult) as usize;
+    let rate = cell.regime.rate_rps() * cell.mult;
+    let requests = WorkloadSpec::new(cell.regime.mix, n, rate).generate(seed);
+    let root = Rng::new(seed ^ 0x5EED_50_u64);
+    let mut src = LadderSource::new(InfoLevel::Coarse, root.derive("priors"));
+    let mut sched = SchedulerCfg::for_strategy(StrategyKind::AdaptiveDrr);
+    sched.heavy_ordering = cell.ordering;
+    let out = driver::run(&requests, &mut src, sched, ProviderCfg::default(), seed);
+    (out.metrics, out.diagnostics.mean_queue_depth, out.diagnostics.peak_queue_depth)
+}
+
+/// The grid: regime × rate multiplier × heavy-class ordering.
+fn grid() -> Vec<ScaleCell> {
+    let mut cells = Vec::new();
+    for regime in [
+        Regime { mix: Mix::Balanced, congestion: Congestion::High },
+        Regime { mix: Mix::Heavy, congestion: Congestion::High },
+    ] {
+        for mult in MULTS {
+            for ordering in OrderingKind::ALL {
+                cells.push(ScaleCell { regime, mult, ordering });
+            }
+        }
+    }
+    cells
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let cells = grid();
+    let all: Vec<Vec<(RunMetrics, f64, usize)>> = opts
+        .sweep()
+        .map_cells(cells.len(), opts.seeds, |c, s| run_cell_seed(&cells[c], opts.n_requests, s));
+
+    let mut table = TextTable::new([
+        "Regime",
+        "Rate",
+        "Ordering",
+        "Depth (mean)",
+        "Depth (peak)",
+        "CR",
+        "Short P95",
+        "Global P95",
+        "Goodput",
+    ]);
+    let mut csv = CsvTable::new([
+        "regime",
+        "rate_mult",
+        "ordering",
+        "rate_rps",
+        "requests",
+        "depth_mean",
+        "depth_peak_mean",
+        "cr_mean",
+        "cr_std",
+        "short_p95_mean",
+        "short_p95_std",
+        "global_p95_mean",
+        "global_p95_std",
+        "goodput_mean",
+        "goodput_std",
+        "timeouts_mean",
+    ]);
+    for (cell, runs) in cells.iter().zip(&all) {
+        let metrics: Vec<RunMetrics> = runs.iter().map(|(m, _, _)| m.clone()).collect();
+        let depths: Vec<f64> = runs.iter().map(|(_, d, _)| *d).collect();
+        let peaks: Vec<f64> = runs.iter().map(|(_, _, p)| *p as f64).collect();
+        let agg = Aggregate::new(&metrics);
+        let cr = agg.mean_std(|m| m.completion_rate);
+        let short = agg.mean_std(|m| m.short_p95_ms);
+        let global = agg.mean_std(|m| m.global_p95_ms);
+        let good = agg.mean_std(|m| m.goodput_rps);
+        let timeouts = agg.mean_std(|m| m.n_timed_out as f64);
+        let depth = mean(&depths);
+        let peak = mean(&peaks);
+        let rate = cell.regime.rate_rps() * cell.mult;
+        let n = (opts.n_requests as f64 * cell.mult) as usize;
+        table.row([
+            cell.regime.name(),
+            format!("{:.0}x", cell.mult),
+            cell.ordering.name().to_string(),
+            format!("{depth:.1}"),
+            format!("{peak:.0}"),
+            fmt_rate(cr),
+            fmt_pm(short),
+            fmt_pm(global),
+            format!("{:.1}±{:.1}", good.0, good.1),
+        ]);
+        csv.row([
+            cell.regime.name(),
+            format!("{:.0}", cell.mult),
+            cell.ordering.name().to_string(),
+            format!("{rate:.1}"),
+            n.to_string(),
+            format!("{depth:.2}"),
+            format!("{peak:.1}"),
+            format!("{:.4}", cr.0),
+            format!("{:.4}", cr.1),
+            format!("{:.1}", short.0),
+            format!("{:.1}", short.1),
+            format!("{:.1}", global.0),
+            format!("{:.1}", global.1),
+            format!("{:.3}", good.0),
+            format!("{:.3}", good.1),
+            format!("{:.1}", timeouts.0),
+        ]);
+    }
+    println!("\nRate scaling — offered-rate multiplier × heavy ordering (mean±std over seeds)");
+    println!("{}", table.render());
+    let path = format!("{}/scale.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shape_is_stable() {
+        let cells = grid();
+        // 2 regimes × 3 multipliers × 4 orderings.
+        assert_eq!(cells.len(), 24);
+        assert!(cells.iter().all(|c| MULTS.contains(&c.mult)));
+    }
+
+    #[test]
+    fn cell_runner_is_deterministic_and_depth_scales_with_rate() {
+        let cell = |mult: f64| ScaleCell {
+            regime: Regime { mix: Mix::Heavy, congestion: Congestion::High },
+            mult,
+            ordering: OrderingKind::FeasibleSet,
+        };
+        let (a, depth_a, peak_a) = run_cell_seed(&cell(4.0), 30, 1);
+        let (b, depth_b, peak_b) = run_cell_seed(&cell(4.0), 30, 1);
+        assert_eq!(a.n_completed, b.n_completed);
+        assert_eq!(depth_a.to_bits(), depth_b.to_bits());
+        assert_eq!(peak_a, peak_b);
+        // Higher offered rate builds deeper steady-state queues.
+        let (_, depth_lo, _) = run_cell_seed(&cell(1.0), 30, 1);
+        assert!(
+            depth_a > depth_lo,
+            "4x rate must deepen the queue: {depth_a:.2} vs {depth_lo:.2}"
+        );
+    }
+}

@@ -4,7 +4,7 @@
 //! Usage:
 //!   bbsched exp <name|all> [--seeds N] [--requests N] [--jobs N] [--out DIR]
 //!   bbsched run [--strategy S] [--mix M] [--rate R] [--seed N] ...
-//!   bbsched bench [--sizes N,N] [--shards N] [--tenants M] [--out BENCH.json] [--smoke]
+//!   bbsched bench [--sizes N,N] [--shards N] [--tenants M] [--depth] [--out BENCH.json] [--smoke]
 //!   bbsched trace gen|show [--out PATH] ...
 //!   bbsched predict [--artifacts DIR] [--n N]        (PJRT smoke + goldens)
 //!   bbsched serve [--rate R] [--requests N] [--scale S] [--tenants M] (real-time demo)
@@ -188,6 +188,12 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         .opt("shards", "1", "add a multi-shard leg with this fleet size (1 = single endpoint)")
         .opt("tenants", "1", "add a multi-tenant leg splitting load across M schedulers")
         .opt("gate-exponent", "0", "fail if any scaling exponent exceeds this (0 = off)")
+        .opt(
+            "depth-gate-exponent",
+            "0",
+            "fail if a depth-leg per-release cost exponent exceeds this (0 = off; needs --depth)",
+        )
+        .flag("depth", "add the deep-queue leg: per-release cost vs queue depth at 4x/16x rate")
         .flag("smoke", "CI smoke sizes (1000,5000)");
     let a = cmd.parse(args)?;
     if a.help {
@@ -212,6 +218,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         sizes
     };
     let gate = a.f64("gate-exponent")?;
+    let depth_gate = a.f64("depth-gate-exponent")?;
     let opts = ScaleBenchOpts {
         sizes,
         rate_rps: a.f64("rate")?,
@@ -221,6 +228,8 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         shards: a.usize("shards")?,
         tenants: a.usize("tenants")?,
         gate_exponent: if gate > 0.0 { Some(gate) } else { None },
+        depth: a.flag("depth"),
+        depth_gate_exponent: if depth_gate > 0.0 { Some(depth_gate) } else { None },
     };
     run_scale_bench(&opts)
 }

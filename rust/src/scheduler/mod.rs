@@ -105,12 +105,26 @@ pub enum OrderingKind {
 }
 
 impl OrderingKind {
+    /// Every ordering, paper design first (the `scale` experiment and the
+    /// bench `--depth` leg sweep these).
+    pub const ALL: [OrderingKind; 4] =
+        [OrderingKind::FeasibleSet, OrderingKind::Sjf, OrderingKind::Edf, OrderingKind::Fifo];
+
     fn build(self, cfg: &OrderingCfg) -> Box<dyn Ordering> {
         match self {
             OrderingKind::FeasibleSet => Box::new(FeasibleSet::new(cfg.clone())),
             OrderingKind::Fifo => Box::new(Fifo),
-            OrderingKind::Sjf => Box::new(Sjf),
-            OrderingKind::Edf => Box::new(Edf),
+            OrderingKind::Sjf => Box::new(Sjf::new()),
+            OrderingKind::Edf => Box::new(Edf::new()),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OrderingKind::FeasibleSet => "feasible_set",
+            OrderingKind::Fifo => "fifo",
+            OrderingKind::Sjf => "sjf",
+            OrderingKind::Edf => "edf",
         }
     }
 
@@ -271,6 +285,13 @@ impl ClientScheduler {
         self.ordering_violations() + self.feasibility_violations_base
     }
 
+    /// Cumulative ordering-index work done by releases (entries examined +
+    /// migrations processed across both classes) — the deterministic
+    /// per-release cost signal the bench `--depth` leg gates.
+    pub fn ordering_work(&self) -> u64 {
+        self.ordering[0].select_work() + self.ordering[1].select_work()
+    }
+
     fn ordering_violations(&self) -> u64 {
         // Only FeasibleSet tracks violations; the trait default is 0.
         self.ordering[1].feasibility_violations()
@@ -306,14 +327,14 @@ impl ClientScheduler {
             out.push(Action::Send { id: sreq.id, shard });
             return;
         }
-        self.queues.push(sreq);
+        self.queues.push_with(sreq, &mut self.ordering, now);
         self.pump(now, out);
     }
 
     /// A deferral backoff expired: the request re-enters its queue.
     pub fn on_retry_due(&mut self, id: ReqId, now: f64, out: &mut Vec<Action>) {
         if let Some(sreq) = self.deferred.remove(&id) {
-            self.queues.push_ordered(sreq);
+            self.queues.push_ordered_with(sreq, &mut self.ordering, now);
         }
         self.pump(now, out);
     }
@@ -343,7 +364,7 @@ impl ClientScheduler {
         if was_inflight {
             self.selector.on_abandon(id);
         }
-        let _ = self.queues.remove_id(id);
+        let _ = self.queues.remove_id_with(id, &mut self.ordering);
         let _ = self.deferred.remove(&id);
         if was_inflight && self.cfg.strategy != StrategyKind::DirectNaive {
             self.pump(now, out);
@@ -380,11 +401,11 @@ impl ClientScheduler {
 
             // Ordered head per class (classes at their cap are masked out).
             // Selection names the winner by id; the slab resolves it O(1).
-            // Score-based orderings scan the class queue (scores are
-            // time-varying, so no static index applies), but the live
-            // queue depth is bounded by the SLO timeout window × arrival
-            // rate — timed-out requests leave — so per-release cost does
-            // not grow with total run size.
+            // Score-based orderings answer from incremental indexes kept
+            // consistent by the lifecycle hooks every queue mutation below
+            // drives — per-release cost is O(log depth + touched), not
+            // O(live depth), so deep steady-state queues (rate scaling)
+            // no longer make releases linear. See ordering/mod.rs.
             let mut head_id: [Option<ReqId>; 2] = [None, None];
             let mut head_cost = [None, None];
             let mut head_arrival = [None, None];
@@ -436,7 +457,8 @@ impl ClientScheduler {
                 };
                 self.controller.decide(candidate, gate_severity)
             };
-            let mut sreq = self.queues.remove_id(id).expect("candidate still queued");
+            let removed = self.queues.remove_id_with(id, &mut self.ordering);
+            let mut sreq = removed.expect("candidate still queued");
             match decision {
                 OverloadDecision::Admit => {
                     self.allocator.as_mut().unwrap().on_send(class, sreq.priors.p50);
@@ -616,6 +638,40 @@ mod tests {
         actions.clear();
         sched.cancel(sent, 200.0, &mut actions);
         assert_eq!(actions.iter().filter(|a| matches!(a, Action::Send { .. })).count(), 1);
+    }
+
+    #[test]
+    fn timeout_abandons_escalate_global_severity() {
+        // Regression for the ROADMAP "censored global tail" item: a dead
+        // provider that never completes anything used to keep the global
+        // tail signal at 0 — severity read calm while every in-flight
+        // request timed out. Each in-flight abandon now records the same
+        // censored pessimistic sample the per-shard signal gets, so global
+        // severity escalates even with zero completions.
+        let mut cfg = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+        cfg.max_inflight = 2;
+        cfg.interactive_bypass = 0;
+        let mut sched = ClientScheduler::new(cfg);
+        let reqs: Vec<Request> = requests(8, Mix::Heavy);
+        let mut src = LadderSource::new(InfoLevel::Oracle, Rng::new(1));
+        let _ = arrive_all(&mut sched, &reqs, &mut src);
+        assert!(sched.state().inflight() > 0, "some requests must have been released");
+        // The dead-provider pattern: client timeouts fire for everything,
+        // completions never arrive. Cancels of queued requests record no
+        // sample (nothing was observed); in-flight abandons record 2.0.
+        let mut actions = Vec::new();
+        for r in &reqs {
+            sched.cancel(r.id, 10_000.0, &mut actions);
+        }
+        assert_eq!(sched.state().inflight(), 0);
+        assert!(
+            sched.state().tail_ratio.get_or(0.0) >= 1.5,
+            "abandons must saturate the global tail signal: {}",
+            sched.state().tail_ratio.get_or(0.0)
+        );
+        let signals = SeveritySignals::gather(&sched.state, &sched.queues, sched.cfg.max_inflight);
+        let sev = sched.controller.severity_value(&signals);
+        assert!(sev > 0.25, "dead endpoint must escalate severity, got {sev}");
     }
 
     #[test]

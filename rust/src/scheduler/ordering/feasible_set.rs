@@ -11,14 +11,46 @@
 //! counts a feasibility violation (the paper reports zero across all runs —
 //! our integration tests assert the counter stays 0 in the main benchmark).
 //!
-//! Selection is one pass over the queue view with no intermediate index
-//! vectors: the best feasible and best overall candidates are tracked
-//! simultaneously (the previous implementation allocated two `Vec<usize>`
-//! per pump iteration, which dominated allocator traffic at scale).
+//! ## Incremental candidate index
+//!
+//! The score is time-varying, so no single static key orders candidates.
+//! But its structure is narrow:
+//!
+//! * Entries sharing the *same prior bits* `(p50, p90)` share the same
+//!   cost, size term, feasibility window, and urgency window — and ladder
+//!   priors are discrete, so live entries collapse into a **handful of
+//!   groups**. (Continuous priors degrade gracefully: one group per entry
+//!   makes selection a scan again, never worse than the reference.)
+//! * Within a group, an entry passes through three **urgency phases**:
+//!   pre-urgent (clamped to 0), the ramp, and saturated (clamped to 1).
+//!   In the clamped phases the score differs across the group only through
+//!   the wait term, which is weakly decreasing in arrival for every `now` —
+//!   so the group order is *static* (by arrival) and the exact maximum is a
+//!   tie-prefix walk from the front. In the ramp phase the *real* score is
+//!   `Φ_group(now) − κ` for the static per-entry key
+//!   `κ = w_wait·arrival/cost + w_urg·deadline/(2·window)`, so the order is
+//!   static up to f64 rounding wobble — the walk takes every entry whose κ
+//!   is within a conservative ε of the minimum (ε is many orders above the
+//!   rounding bound and many below real κ gaps) and scores those exactly.
+//! * Phase boundaries and the feasible→infeasible flip happen **once per
+//!   entry**, at instants found by binary search over the f64 bit space of
+//!   the *actual* predicates (the same arithmetic `select` evaluates), so
+//!   migrations are bit-exact and cost O(1) amortized per entry lifetime —
+//!   not per bucket crossing, not per release.
+//!
+//! Selection therefore reads O(groups · (log + prefix)) entries plus the
+//! due migrations, instead of rescanning O(live depth); `select_work()`
+//! counts every entry examined so the bench `--depth` leg can gate the
+//! scaling deterministically.
+//!
+//! The retained reference scan ([`FeasibleSet::reference_select`]) is the
+//! spec; debug builds assert index == reference on every call and
+//! `tests/ordering_index.rs` property-tests the equivalence in release.
 
 use super::Ordering;
 use crate::core::ReqId;
 use crate::scheduler::queues::{QueueView, SchedRequest};
+use std::collections::{BTreeSet, HashMap};
 
 #[derive(Debug, Clone)]
 pub struct OrderingCfg {
@@ -50,14 +82,91 @@ impl Default for OrderingCfg {
     }
 }
 
+/// Index sides: feasible entries first, the fallback pool second.
+const FEASIBLE: usize = 0;
+const INFEASIBLE: usize = 1;
+
+/// One list entry: `(primary key bits, arrival bits, seq, id)`. The primary
+/// key is the arrival again for the clamped phases (static order by age)
+/// and κ for the ramp phase; `(arrival, seq)` is exact queue position (the
+/// class lists stay arrival-sorted), which the keep-later tie rule needs.
+type ListKey = (u64, u64, u64, ReqId);
+
+/// Per-entry index metadata (a copy of the score inputs — hooks see the
+/// request only at push/remove, but scoring needs them at arbitrary times).
+struct Entry {
+    seq: u64,
+    arrival_ms: f64,
+    deadline_ms: f64,
+    p50: f64,
+    p90: f64,
+    /// Static ramp-phase order key (see module docs).
+    kappa: f64,
+    /// 0 = pre-urgent, 1 = ramp, 2 = saturated.
+    phase: usize,
+    feasible: bool,
+    /// First instant the urgency term computes > 0 (f64 bits).
+    t_ramp_bits: u64,
+    /// First instant the urgency term computes == 1 (f64 bits).
+    t_sat_bits: u64,
+    /// First instant the feasibility predicate computes false (f64 bits).
+    expire_bits: u64,
+}
+
+/// Entries sharing one `(p50 bits, p90 bits)` prior: per side, per phase,
+/// a statically-ordered list.
+#[derive(Default)]
+struct Group {
+    lists: [[BTreeSet<ListKey>; 3]; 2],
+    len: [usize; 2],
+}
+
 pub struct FeasibleSet {
     cfg: OrderingCfg,
     violations: u64,
+    groups: HashMap<(u64, u64), Group>,
+    entries: HashMap<ReqId, Entry>,
+    /// (t_ramp bits, id) for phase-0 entries.
+    ramp_due: BTreeSet<(u64, ReqId)>,
+    /// (t_sat bits, id) for phase-0/1 entries.
+    sat_due: BTreeSet<(u64, ReqId)>,
+    /// (first-infeasible bits, id) for feasible entries.
+    expiries: BTreeSet<(u64, ReqId)>,
+    /// Live entry counts per side.
+    live: [usize; 2],
+    next_seq: u64,
+    /// Largest arrival ever pushed. The ramp κ order encodes the score only
+    /// where the wait term is unclamped (`now ≥ arrival`); the production
+    /// scheduler always pushes at `now == arrival`, but the hook API does
+    /// not forbid future arrivals, so κ-pruning stays off until `now` has
+    /// passed every pushed arrival.
+    max_arrival: f64,
+    /// Cumulative entries examined + migrations processed by `select` —
+    /// the deterministic per-release cost the bench `--depth` leg gates.
+    work: u64,
 }
 
 impl FeasibleSet {
     pub fn new(cfg: OrderingCfg) -> Self {
-        FeasibleSet { cfg, violations: 0 }
+        // The index leans on score monotonicity in `now`; negative wait or
+        // urgency weights would break it (and were never meaningful).
+        assert!(
+            cfg.w_wait >= 0.0 && cfg.w_urgency >= 0.0,
+            "feasible-set wait/urgency weights must be non-negative"
+        );
+        FeasibleSet {
+            cfg,
+            violations: 0,
+            groups: HashMap::new(),
+            entries: HashMap::new(),
+            ramp_due: BTreeSet::new(),
+            sat_due: BTreeSet::new(),
+            expiries: BTreeSet::new(),
+            live: [0, 0],
+            next_seq: 0,
+            max_arrival: f64::NEG_INFINITY,
+            work: 0,
+        }
     }
 
     /// Times the full set had no feasible candidate (fallback taken).
@@ -70,42 +179,274 @@ impl FeasibleSet {
         (self.cfg.est_base_ms + self.cfg.est_per_token_ms * p90_tokens) * self.cfg.est_slack_factor
     }
 
+    fn feasible_at(&self, deadline_ms: f64, p90: f64, now: f64) -> bool {
+        now + self.est_service_ms(p90) <= deadline_ms
+    }
+
     fn feasible(&self, r: &SchedRequest, now: f64) -> bool {
-        now + self.est_service_ms(r.priors.p90) <= r.deadline_ms
+        self.feasible_at(r.deadline_ms, r.priors.p90, now)
+    }
+
+    /// The urgency term exactly as the score computes it.
+    fn urgency_at(&self, p90: f64, deadline_ms: f64, now: f64) -> f64 {
+        let window = self.est_service_ms(p90).max(1.0);
+        let slack = deadline_ms - now;
+        (1.0 - slack / (2.0 * window)).clamp(0.0, 1.0)
     }
 
     /// The paper's score; higher = release sooner.
     pub fn score(&self, r: &SchedRequest, now: f64) -> f64 {
+        self.score_parts(r.arrival_ms, r.priors.p50, r.priors.p90, r.deadline_ms, now)
+    }
+
+    /// Score from cached inputs — bit-identical arithmetic to [`Self::score`].
+    fn score_parts(&self, arrival_ms: f64, p50: f64, p90: f64, deadline_ms: f64, now: f64) -> f64 {
         let c = &self.cfg;
-        let wait_s = r.wait_ms(now) / 1000.0;
-        let cost = r.priors.p50.max(1.0);
+        let wait_s = (now - arrival_ms).max(0.0) / 1000.0;
+        let cost = p50.max(1.0);
         // wait/cost in seconds-per-kilotoken so magnitudes are O(1).
         let wait_term = wait_s / (cost / 1000.0);
-        let size_term = r.priors.p50 / c.ref_tokens;
+        let size_term = p50 / c.ref_tokens;
         // Urgency ramps 0→1 as slack shrinks below the urgency window
         // (one estimated service time).
-        let window = self.est_service_ms(r.priors.p90).max(1.0);
-        let slack = r.deadline_ms - now;
-        let urgency = (1.0 - slack / (2.0 * window)).clamp(0.0, 1.0);
+        let urgency = self.urgency_at(p90, deadline_ms, now);
         c.w_wait * wait_term - c.w_size * size_term + c.w_urgency * urgency
     }
-}
 
-trait WaitExt {
-    fn wait_ms(&self, now: f64) -> f64;
-}
+    /// Upper bound on d(score)/d(now) — used only to scale the ramp ε.
+    fn max_rate(&self, p50: f64, p90: f64) -> f64 {
+        let cost = p50.max(1.0);
+        let window = self.est_service_ms(p90).max(1.0);
+        self.cfg.w_wait / cost + self.cfg.w_urgency / (2.0 * window)
+    }
 
-impl WaitExt for SchedRequest {
-    fn wait_ms(&self, now: f64) -> f64 {
-        (now - self.arrival_ms).max(0.0)
+    /// Smallest f64 instant at which an upward-closed predicate over `now`
+    /// becomes true, by binary search over the bit space of non-negative
+    /// f64s (bit order == numeric order there). Every phase/feasibility
+    /// predicate is monotone in `now` (f64 arithmetic is weakly monotone),
+    /// so the flip point this finds is *exactly* where the scan's own
+    /// arithmetic flips — no `deadline − est` style rounding drift.
+    fn first_instant(pred: impl Fn(f64) -> bool) -> f64 {
+        if pred(0.0) {
+            return 0.0;
+        }
+        if !pred(f64::INFINITY) {
+            return f64::INFINITY;
+        }
+        let mut lo = 0f64.to_bits(); // pred false
+        let mut hi = f64::INFINITY.to_bits(); // pred true
+        while hi - lo > 1 {
+            let mid = lo + (hi - lo) / 2;
+            if pred(f64::from_bits(mid)) {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        f64::from_bits(hi)
+    }
+
+    /// Smallest instant at which the entry's feasibility predicate is false.
+    fn first_infeasible_ms(&self, deadline_ms: f64, p90: f64) -> f64 {
+        Self::first_instant(|t| !self.feasible_at(deadline_ms, p90, t))
+    }
+
+    fn list_key(e: &Entry, id: ReqId) -> ListKey {
+        let primary = if e.phase == 1 { e.kappa.to_bits() } else { e.arrival_ms.to_bits() };
+        (primary, e.arrival_ms.to_bits(), e.seq, id)
+    }
+
+    fn side_of(e: &Entry) -> usize {
+        if e.feasible {
+            FEASIBLE
+        } else {
+            INFEASIBLE
+        }
+    }
+
+    /// Insert `id` into its group list per its current (side, phase).
+    fn list_insert(&mut self, id: ReqId) {
+        let e = &self.entries[&id];
+        let gk = (e.p50.to_bits(), e.p90.to_bits());
+        let (sd, ph) = (Self::side_of(e), e.phase);
+        let key = Self::list_key(e, id);
+        let g = self.groups.entry(gk).or_default();
+        let inserted = g.lists[sd][ph].insert(key);
+        debug_assert!(inserted, "duplicate index entry for {id}");
+        g.len[sd] += 1;
+        self.live[sd] += 1;
+    }
+
+    /// Remove `id` from its group list (entry metadata stays).
+    fn list_remove(&mut self, id: ReqId) {
+        let e = &self.entries[&id];
+        let gk = (e.p50.to_bits(), e.p90.to_bits());
+        let (sd, ph) = (Self::side_of(e), e.phase);
+        let key = Self::list_key(e, id);
+        let empty = {
+            let g = self.groups.get_mut(&gk).expect("entry group present");
+            let removed = g.lists[sd][ph].remove(&key);
+            debug_assert!(removed, "index entry missing for {id}");
+            g.len[sd] -= 1;
+            g.len[0] == 0 && g.len[1] == 0
+        };
+        self.live[sd] -= 1;
+        if empty {
+            self.groups.remove(&gk);
+        }
+    }
+
+    /// Bring the index current at `now`: each migration fires once per
+    /// entry lifetime (phase boundaries and the feasibility flip), so the
+    /// amortized cost per release is O(1) per touched entry.
+    fn refresh(&mut self, now: f64) {
+        // Pre-urgent → ramp. t_ramp ≤ t_sat always, so running this loop
+        // first means the saturation loop only ever sees phase-1 entries.
+        while let Some(&(bits, id)) = self.ramp_due.first() {
+            if f64::from_bits(bits) > now {
+                break;
+            }
+            self.ramp_due.pop_first();
+            self.work += 1;
+            self.list_remove(id);
+            self.entries.get_mut(&id).expect("ramp entry known").phase = 1;
+            self.list_insert(id);
+        }
+        // Ramp → saturated.
+        while let Some(&(bits, id)) = self.sat_due.first() {
+            if f64::from_bits(bits) > now {
+                break;
+            }
+            self.sat_due.pop_first();
+            self.work += 1;
+            self.list_remove(id);
+            {
+                let e = self.entries.get_mut(&id).expect("sat entry known");
+                debug_assert_eq!(e.phase, 1, "saturation fires after the ramp transition");
+                e.phase = 2;
+            }
+            self.list_insert(id);
+        }
+        // Feasible → infeasible (same phase, sibling side).
+        while let Some(&(bits, id)) = self.expiries.first() {
+            if f64::from_bits(bits) > now {
+                break;
+            }
+            self.expiries.pop_first();
+            self.work += 1;
+            self.list_remove(id);
+            self.entries.get_mut(&id).expect("expiring entry known").feasible = false;
+            self.list_insert(id);
+        }
+    }
+
+    fn consider(best: &mut Option<(f64, (u64, u64), ReqId)>, s: f64, q: (u64, u64), id: ReqId) {
+        // Exact reference semantics: max score, ties keep the later queue
+        // position (the scan's `>=` update in queue order).
+        let better = match best {
+            None => true,
+            Some((bs, bq, _)) => s > *bs || (s == *bs && q > *bq),
+        };
+        if better {
+            *best = Some((s, q, id));
+        }
+    }
+
+    /// Exact argmax over one side. Clamped phases: the group order is
+    /// static by arrival, so the maximum lives in the exact-score tie
+    /// prefix. Ramp phase: the order is static by κ up to rounding wobble,
+    /// so every entry within ε of the minimum κ is scored exactly (ε sits
+    /// ~9 decimal orders above the f64 error bound of the score evaluation
+    /// and far below real κ gaps, so nothing outside the prefix can win).
+    fn select_side(&self, sd: usize, now: f64) -> (Option<ReqId>, u64) {
+        let mut best: Option<(f64, (u64, u64), ReqId)> = None;
+        let mut examined = 0u64;
+        for g in self.groups.values() {
+            if g.len[sd] == 0 {
+                continue;
+            }
+            for phase in [0usize, 2] {
+                let mut first_score: Option<f64> = None;
+                for &(_, arr_bits, seq, id) in &g.lists[sd][phase] {
+                    let e = &self.entries[&id];
+                    let s = self.score_parts(e.arrival_ms, e.p50, e.p90, e.deadline_ms, now);
+                    examined += 1;
+                    match first_score {
+                        None => first_score = Some(s),
+                        // Scores are weakly decreasing along the list, so
+                        // the first drop ends the tie prefix.
+                        Some(f0) => {
+                            if s != f0 {
+                                break;
+                            }
+                        }
+                    }
+                    Self::consider(&mut best, s, (arr_bits, seq), id);
+                }
+            }
+            // κ encodes the ramp score only where the wait term is
+            // unclamped: with any live entry possibly arriving after `now`
+            // (test harnesses; never the DES scheduler, which pushes at
+            // `now == arrival`), prune nothing and score the whole list.
+            let prune = now >= self.max_arrival;
+            let mut kmin: Option<(f64, f64)> = None;
+            for &(kbits, arr_bits, seq, id) in &g.lists[sd][1] {
+                let kappa = f64::from_bits(kbits);
+                let e = &self.entries[&id];
+                match kmin {
+                    None => {
+                        let size = self.cfg.w_size * (e.p50 / self.cfg.ref_tokens).abs();
+                        let drift = now * self.max_rate(e.p50, e.p90);
+                        let eps = 1e-7 * (1.0 + kappa.abs()) + 1e-10 * (1.0 + drift + size);
+                        kmin = Some((kappa, eps));
+                    }
+                    Some((k0, eps)) => {
+                        if prune && kappa > k0 + eps {
+                            break;
+                        }
+                    }
+                }
+                let s = self.score_parts(e.arrival_ms, e.p50, e.p90, e.deadline_ms, now);
+                examined += 1;
+                Self::consider(&mut best, s, (arr_bits, seq), id);
+            }
+        }
+        (best.map(|(_, _, id)| id), examined)
     }
 }
 
 impl Ordering for FeasibleSet {
     fn select(&mut self, queue: QueueView<'_>, now: f64) -> Option<ReqId> {
+        debug_assert_eq!(
+            self.live[0] + self.live[1],
+            queue.len(),
+            "feasible-set index out of sync with the queue (missed lifecycle hook?)"
+        );
+        self.refresh(now);
+        let winner = if self.live[FEASIBLE] > 0 {
+            let (w, examined) = self.select_side(FEASIBLE, now);
+            self.work += examined;
+            w
+        } else if self.live[INFEASIBLE] > 0 {
+            self.violations += 1;
+            let (w, examined) = self.select_side(INFEASIBLE, now);
+            self.work += examined;
+            w
+        } else {
+            None
+        };
+        debug_assert_eq!(
+            winner,
+            self.reference_select(queue, now),
+            "feasible-set index winner diverged from the reference scan at now={now}"
+        );
+        winner
+    }
+
+    fn reference_select(&self, queue: QueueView<'_>, now: f64) -> Option<ReqId> {
         // `>=` keeps the later candidate on score ties, matching the
-        // previous max_by-based selection (max_by returns the last maximum)
-        // so this refactor changes no run output.
+        // historical max_by-based selection (max_by returns the last
+        // maximum) — the tie rule the index must reproduce.
         let mut best_feasible: Option<(ReqId, f64)> = None;
         let mut best_any: Option<(ReqId, f64)> = None;
         for r in queue.iter() {
@@ -117,13 +458,72 @@ impl Ordering for FeasibleSet {
                 best_feasible = Some((r.id, s));
             }
         }
-        match (best_feasible, best_any) {
-            (Some((id, _)), _) => Some(id),
-            (None, Some((id, _))) => {
-                self.violations += 1;
-                Some(id)
-            }
-            (None, None) => None,
+        best_feasible.or(best_any).map(|(id, _)| id)
+    }
+
+    fn on_push(&mut self, req: &SchedRequest, now: f64) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.max_arrival = self.max_arrival.max(req.arrival_ms);
+        let (arrival_ms, deadline_ms) = (req.arrival_ms, req.deadline_ms);
+        let (p50, p90) = (req.priors.p50, req.priors.p90);
+        let cost = p50.max(1.0);
+        let window = self.est_service_ms(p90).max(1.0);
+        let wait_key = self.cfg.w_wait * (arrival_ms / cost);
+        let urgency_key = self.cfg.w_urgency * (deadline_ms / (2.0 * window));
+        let kappa = wait_key + urgency_key;
+        let t_ramp = Self::first_instant(|t| self.urgency_at(p90, deadline_ms, t) > 0.0);
+        let t_sat = Self::first_instant(|t| self.urgency_at(p90, deadline_ms, t) >= 1.0);
+        let t_star = self.first_infeasible_ms(deadline_ms, p90);
+        let phase = if now < t_ramp {
+            0
+        } else if now < t_sat {
+            1
+        } else {
+            2
+        };
+        let feasible = now < t_star;
+        let entry = Entry {
+            seq,
+            arrival_ms,
+            deadline_ms,
+            p50,
+            p90,
+            kappa,
+            phase,
+            feasible,
+            t_ramp_bits: t_ramp.to_bits(),
+            t_sat_bits: t_sat.to_bits(),
+            expire_bits: t_star.to_bits(),
+        };
+        if phase == 0 {
+            self.ramp_due.insert((entry.t_ramp_bits, req.id));
+        }
+        if phase <= 1 {
+            self.sat_due.insert((entry.t_sat_bits, req.id));
+        }
+        if feasible {
+            self.expiries.insert((entry.expire_bits, req.id));
+        }
+        let prev = self.entries.insert(req.id, entry);
+        debug_assert!(prev.is_none(), "request {} indexed twice (double on_push?)", req.id);
+        self.list_insert(req.id);
+    }
+
+    fn on_remove(&mut self, req: &SchedRequest) {
+        self.list_remove(req.id);
+        let e = self
+            .entries
+            .remove(&req.id)
+            .unwrap_or_else(|| panic!("on_remove for unindexed request {}", req.id));
+        if e.phase == 0 {
+            self.ramp_due.remove(&(e.t_ramp_bits, req.id));
+        }
+        if e.phase <= 1 {
+            self.sat_due.remove(&(e.t_sat_bits, req.id));
+        }
+        if e.feasible {
+            self.expiries.remove(&(e.expire_bits, req.id));
         }
     }
 
@@ -134,11 +534,15 @@ impl Ordering for FeasibleSet {
     fn feasibility_violations(&self) -> u64 {
         self.violations
     }
+
+    fn select_work(&self) -> u64 {
+        self.work
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::test_util::{queues_of, sreq, HEAVY};
+    use super::super::test_util::{queues_into, sreq, HEAVY};
     use super::*;
 
     fn fs() -> FeasibleSet {
@@ -149,14 +553,14 @@ mod tests {
     fn favors_older_jobs() {
         let mut f = fs();
         // Same size/deadline-slack; the older one (id 2) wins.
-        let q = queues_of(vec![sreq(1, 1000.0, 500.0, 1e6), sreq(2, 0.0, 500.0, 1e6)]);
+        let q = queues_into(vec![sreq(1, 1000.0, 500.0, 1e6), sreq(2, 0.0, 500.0, 1e6)], &mut f);
         assert_eq!(f.select(q.view(HEAVY), 2000.0), Some(2));
     }
 
     #[test]
     fn favors_smaller_jobs() {
         let mut f = fs();
-        let q = queues_of(vec![sreq(1, 0.0, 3000.0, 1e6), sreq(2, 0.0, 300.0, 1e6)]);
+        let q = queues_into(vec![sreq(1, 0.0, 3000.0, 1e6), sreq(2, 0.0, 300.0, 1e6)], &mut f);
         assert_eq!(f.select(q.view(HEAVY), 100.0), Some(2));
     }
 
@@ -176,7 +580,7 @@ mod tests {
     fn infeasible_candidates_excluded() {
         let mut f = fs();
         // Request 1's deadline already passed; request 2 comfortably feasible.
-        let q = queues_of(vec![sreq(1, 0.0, 100.0, 50.0), sreq(2, 0.0, 4000.0, 1e7)]);
+        let q = queues_into(vec![sreq(1, 0.0, 100.0, 50.0), sreq(2, 0.0, 4000.0, 1e7)], &mut f);
         assert_eq!(
             f.select(q.view(HEAVY), 100.0),
             Some(2),
@@ -188,16 +592,30 @@ mod tests {
     #[test]
     fn all_infeasible_falls_back_and_counts() {
         let mut f = fs();
-        let q = queues_of(vec![sreq(1, 0.0, 100.0, 10.0), sreq(2, 0.0, 200.0, 20.0)]);
+        let q = queues_into(vec![sreq(1, 0.0, 100.0, 10.0), sreq(2, 0.0, 200.0, 20.0)], &mut f);
         let sel = f.select(q.view(HEAVY), 100.0);
         assert!(sel.is_some());
         assert_eq!(f.violations(), 1);
     }
 
     #[test]
+    fn feasibility_expiry_migrates_entries() {
+        let mut f = fs();
+        // Feasible at push (deadline far beyond the service estimate), but
+        // the window closes long before the second select.
+        let q = queues_into(vec![sreq(1, 0.0, 100.0, 2_000.0), sreq(2, 0.0, 100.0, 1e7)], &mut f);
+        assert!(f.select(q.view(HEAVY), 0.0).is_some());
+        assert_eq!(f.violations(), 0);
+        // At now = 1e6 request 1 is far past its deadline: only request 2
+        // remains feasible and must win regardless of score details.
+        assert_eq!(f.select(q.view(HEAVY), 1e6), Some(2));
+        assert_eq!(f.violations(), 0);
+    }
+
+    #[test]
     fn empty_queue() {
         let mut f = fs();
-        let q = queues_of(vec![]);
+        let q = queues_into(vec![], &mut f);
         assert_eq!(f.select(q.view(HEAVY), 0.0), None);
         assert_eq!(f.violations(), 0);
     }
@@ -207,6 +625,63 @@ mod tests {
         let f = fs();
         let r = sreq(1, 0.0, 500.0, 1e6);
         assert!(f.score(&r, 5000.0) > f.score(&r, 1000.0));
+    }
+
+    #[test]
+    fn first_infeasible_is_the_exact_predicate_boundary() {
+        let f = fs();
+        for (deadline, p90) in [(2_000.0, 150.0), (50.0, 150.0), (1e6, 4000.0), (427.5, 150.0)] {
+            let t = f.first_infeasible_ms(deadline, p90);
+            assert!(!f.feasible_at(deadline, p90, t), "t* itself must be infeasible");
+            if t > 0.0 {
+                let below = f64::from_bits(t.to_bits() - 1);
+                assert!(f.feasible_at(deadline, p90, below), "one ulp below t* is feasible");
+            }
+        }
+    }
+
+    #[test]
+    fn phase_boundaries_bracket_the_urgency_ramp() {
+        let f = fs();
+        let (deadline, p90) = (20_000.0, 1_000.0);
+        let t_ramp = FeasibleSet::first_instant(|t| f.urgency_at(p90, deadline, t) > 0.0);
+        let t_sat = FeasibleSet::first_instant(|t| f.urgency_at(p90, deadline, t) >= 1.0);
+        assert!(t_ramp < t_sat, "ramp opens before it saturates");
+        assert_eq!(f.urgency_at(p90, deadline, f64::from_bits(t_ramp.to_bits() - 1)), 0.0);
+        assert!(f.urgency_at(p90, deadline, t_ramp) > 0.0);
+        assert!(f.urgency_at(p90, deadline, f64::from_bits(t_sat.to_bits() - 1)) < 1.0);
+        assert_eq!(f.urgency_at(p90, deadline, t_sat), 1.0);
+    }
+
+    #[test]
+    fn future_arrival_ramp_entries_disable_kappa_pruning() {
+        // The hook API allows pushing entries whose arrival lies after the
+        // current `now` (test harnesses do; the DES scheduler never does).
+        // A clamped-wait entry's score is not `Φ − κ`, so κ-pruning must
+        // stay off until `now` passes every pushed arrival: here both
+        // entries share one (p50, p90) group and sit in the urgency ramp,
+        // and the future-arrival entry 2 (κ larger by ≫ ε) is the true
+        // winner on urgency alone.
+        let mut f = fs();
+        let q = queues_into(
+            vec![sreq(1, 0.0, 1000.0, 4000.0), sreq(2, 1000.0, 1000.0, 2400.0)],
+            &mut f,
+        );
+        assert_eq!(f.select(q.view(HEAVY), 100.0), Some(2), "clamped-wait urgent entry wins");
+    }
+
+    #[test]
+    fn select_work_stays_sublinear_on_shared_priors() {
+        // 400 entries with identical priors and distinct arrivals collapse
+        // into one group ordered statically by age: a release must examine
+        // a handful of entries, not the whole queue.
+        let mut f = fs();
+        let reqs: Vec<_> = (0..400).map(|i| sreq(i, i as f64, 700.0, 1e9)).collect();
+        let q = queues_into(reqs, &mut f);
+        let before = f.select_work();
+        assert_eq!(f.select(q.view(HEAVY), 500.0), Some(0), "oldest wins pre-urgency");
+        let examined = f.select_work() - before;
+        assert!(examined <= 10, "deep shared-prior queue examined {examined} entries");
     }
 
     #[test]
@@ -225,7 +700,7 @@ mod tests {
                     )
                 })
                 .collect();
-            let q = queues_of(reqs);
+            let q = queues_into(reqs, &mut f);
             let now = g.f64_in(0.0, 5000.0);
             let sel = f.select(q.view(HEAVY), now).unwrap();
             assert!(sel < n, "selected id {sel} not in 0..{n}");
@@ -236,7 +711,7 @@ mod tests {
     #[test]
     fn single_pass_matches_two_phase_reference() {
         use crate::testing::prop;
-        // The fused selection must agree with the spec's two-phase rule:
+        // The indexed selection must agree with the spec's two-phase rule:
         // argmax score over the feasible set, else argmax over everything.
         prop::forall(100, |g| {
             let mut f = fs();
@@ -265,7 +740,7 @@ mod tests {
                     .max_by(|(_, a), (_, b)| a.partial_cmp(b).unwrap())
                     .map(|(id, _)| id)
             };
-            let q = queues_of(reqs);
+            let q = queues_into(reqs, &mut f);
             assert_eq!(f.select(q.view(HEAVY), now), reference);
         });
     }

@@ -3,15 +3,48 @@
 //! FIFO/SJF/EDF are baselines and ablations.
 //!
 //! Policies select over a borrowed [`QueueView`] and name the winner by
-//! request id — a single pass with no intermediate allocations, and the
-//! scheduler removes the winner in O(1) through the slab's id index.
+//! request id — the scheduler removes the winner in O(1) through the slab's
+//! id index.
+//!
+//! ## Incremental indexes (lifecycle hooks)
+//!
+//! Scored orderings used to rescan the whole class queue on every release —
+//! O(live depth), which grows linearly with offered *rate* (steady-state
+//! depth ≈ rate × SLO-timeout window). The trait now carries lifecycle
+//! hooks, [`Ordering::on_push`] / [`Ordering::on_remove`], that the slab
+//! ([`ClassQueues`](crate::scheduler::queues::ClassQueues) `*_with`
+//! variants) and the pump drive on every queue mutation, so each policy can
+//! maintain a keyed index and answer `select` sublinearly:
+//!
+//! * [`Sjf`] keeps a predicted-tokens-keyed index (the magnitude bucket is
+//!   the float's exponent field — the leading bits of the sort key), so
+//!   selection is the first entry of a BTree: O(log depth).
+//! * [`Edf`] does the same keyed by deadline.
+//! * [`FeasibleSet`] keeps a group/phase index (its score is time-varying,
+//!   but statically ordered within a prior group per urgency phase) with
+//!   lazily-fired once-per-entry migrations; see `feasible_set.rs`.
+//!
+//! **Bit-compat contract:** every index must reproduce the retained O(n)
+//! reference scan ([`Ordering::reference_select`]) *exactly*, including the
+//! documented tie rules, so no experiment table moves. Debug builds assert
+//! the equivalence on every call; `tests/ordering_index.rs` property-tests
+//! it on production-shaped op sequences.
+//!
+//! Hook contract (the DES invariants the indexes lean on): plain pushes
+//! arrive in nondecreasing event time, re-pushes go through `push_ordered`
+//! (which keeps the class lists arrival-sorted), `now` never decreases
+//! across calls, and every queue mutation fires exactly one hook.
 
 pub mod feasible_set;
 
 pub use feasible_set::{FeasibleSet, OrderingCfg};
 
 use crate::core::ReqId;
-use crate::scheduler::queues::QueueView;
+use crate::scheduler::queues::{QueueView, SchedRequest};
+use std::collections::BTreeSet;
+
+/// Sentinel for "not indexed" in the dense id→seq tables.
+const NO_SEQ: u64 = u64::MAX;
 
 /// Intra-class sequencing policy: pick the id of the next request to
 /// release from `queue` (None iff empty).
@@ -19,18 +52,86 @@ pub trait Ordering {
     fn select(&mut self, queue: QueueView<'_>, now: f64) -> Option<ReqId>;
     fn name(&self) -> &'static str;
 
+    /// The retained O(depth) reference scan — the semantic spec that
+    /// `select` must reproduce bit-for-bit (same winner, same tie rules).
+    /// Pure; used by debug assertions and the index-vs-reference property
+    /// tests.
+    fn reference_select(&self, queue: QueueView<'_>, now: f64) -> Option<ReqId>;
+
+    /// Lifecycle hook: `req` entered the class queue (plain push or ordered
+    /// re-push) at event time `now`. Default no-op — FIFO needs no index.
+    fn on_push(&mut self, _req: &SchedRequest, _now: f64) {}
+
+    /// Lifecycle hook: `req` left the class queue (dispatch, timeout
+    /// cancel, or deferral). Default no-op.
+    fn on_remove(&mut self, _req: &SchedRequest) {}
+
     /// Feasibility violations recorded so far (only `FeasibleSet` tracks
     /// these; everything else reports 0).
     fn feasibility_violations(&self) -> u64 {
         0
     }
+
+    /// Cumulative index work done by `select` calls: entries examined plus
+    /// migrations processed. Deterministic (no wall clock), so the bench
+    /// `--depth` leg can gate per-release scaling on it exactly. The FIFO
+    /// default reports 0 — its selection reads one pointer.
+    fn select_work(&self) -> u64 {
+        0
+    }
+}
+
+/// Dense id → insertion-sequence table shared by the keyed indexes. The
+/// sequence number is the entry's queue-position tie-breaker: the class
+/// lists stay arrival-sorted, so queue iteration order is exactly
+/// `(arrival_ms, seq)` and every index can reproduce position-based tie
+/// rules without walking the list.
+#[derive(Default)]
+struct SeqTable {
+    next: u64,
+    of: Vec<u64>,
+}
+
+impl SeqTable {
+    fn assign(&mut self, id: ReqId) -> u64 {
+        let s = self.next;
+        self.next += 1;
+        if id >= self.of.len() {
+            self.of.resize(id + 1, NO_SEQ);
+        }
+        debug_assert_eq!(self.of[id], NO_SEQ, "request {id} indexed twice (double on_push?)");
+        self.of[id] = s;
+        s
+    }
+
+    /// Retire and return the id's sequence number. Panics on an id that was
+    /// never pushed — a missed lifecycle hook, which must be loud.
+    fn take(&mut self, id: ReqId) -> u64 {
+        let s = self.of[id];
+        assert_ne!(s, NO_SEQ, "on_remove for unindexed request {id} (missed on_push?)");
+        self.of[id] = NO_SEQ;
+        s
+    }
+}
+
+/// Sortable bit pattern of a non-negative f64 (IEEE order == numeric order
+/// for non-negative values; all event times, priors, and deadlines are
+/// non-negative by construction).
+#[inline]
+fn key_bits(v: f64) -> u64 {
+    debug_assert!(v >= 0.0, "sort key {v} must be non-negative");
+    v.to_bits()
 }
 
 /// First-in-first-out (queues are arrival-ordered, so the head). O(1).
 pub struct Fifo;
 
 impl Ordering for Fifo {
-    fn select(&mut self, queue: QueueView<'_>, _now: f64) -> Option<ReqId> {
+    fn select(&mut self, queue: QueueView<'_>, now: f64) -> Option<ReqId> {
+        self.reference_select(queue, now)
+    }
+
+    fn reference_select(&self, queue: QueueView<'_>, _now: f64) -> Option<ReqId> {
         queue.head().map(|r| r.id)
     }
 
@@ -40,11 +141,43 @@ impl Ordering for Fifo {
 }
 
 /// Shortest job first by p50 prior (ties → older first).
-pub struct Sjf;
+///
+/// Incremental: a BTree keyed `(p50, arrival, seq)` — the leading bits of
+/// the p50 key are its magnitude bucket, so the structure is the
+/// "predicted-tokens buckets" index with exact within-bucket order fused
+/// into one comparison. Selection is `first()`: O(log depth).
+#[derive(Default)]
+pub struct Sjf {
+    index: BTreeSet<(u64, u64, u64, ReqId)>,
+    seqs: SeqTable,
+    work: u64,
+}
+
+impl Sjf {
+    pub fn new() -> Sjf {
+        Sjf::default()
+    }
+
+    fn key(req: &SchedRequest, seq: u64) -> (u64, u64, u64, ReqId) {
+        (key_bits(req.priors.p50), key_bits(req.arrival_ms), seq, req.id)
+    }
+}
 
 impl Ordering for Sjf {
-    fn select(&mut self, queue: QueueView<'_>, _now: f64) -> Option<ReqId> {
-        let mut best: Option<&crate::scheduler::queues::SchedRequest> = None;
+    fn select(&mut self, queue: QueueView<'_>, now: f64) -> Option<ReqId> {
+        debug_assert_eq!(self.index.len(), queue.len(), "sjf index out of sync (missed hook?)");
+        let winner = self.index.first().map(|&(_, _, _, id)| id);
+        self.work += u64::from(winner.is_some());
+        debug_assert_eq!(winner, self.reference_select(queue, now), "sjf index vs reference");
+        winner
+    }
+
+    fn select_work(&self) -> u64 {
+        self.work
+    }
+
+    fn reference_select(&self, queue: QueueView<'_>, _now: f64) -> Option<ReqId> {
+        let mut best: Option<&SchedRequest> = None;
         for r in queue.iter() {
             let better = match best {
                 None => true,
@@ -60,23 +193,77 @@ impl Ordering for Sjf {
         best.map(|r| r.id)
     }
 
+    fn on_push(&mut self, req: &SchedRequest, _now: f64) {
+        let seq = self.seqs.assign(req.id);
+        self.index.insert(Self::key(req, seq));
+    }
+
+    fn on_remove(&mut self, req: &SchedRequest) {
+        let seq = self.seqs.take(req.id);
+        let removed = self.index.remove(&Self::key(req, seq));
+        debug_assert!(removed, "sjf index missing request {}", req.id);
+    }
+
     fn name(&self) -> &'static str {
         "sjf"
     }
 }
 
 /// Earliest deadline first (ties → FIFO position, i.e. first seen).
-pub struct Edf;
+///
+/// Incremental: a BTree keyed `(deadline, arrival, seq)` — deadline buckets
+/// with exact within-bucket queue order, selection O(log depth). The
+/// `(arrival, seq)` suffix *is* queue position (lists stay arrival-sorted),
+/// so the first entry reproduces the scan's first-seen tie rule.
+#[derive(Default)]
+pub struct Edf {
+    index: BTreeSet<(u64, u64, u64, ReqId)>,
+    seqs: SeqTable,
+    work: u64,
+}
+
+impl Edf {
+    pub fn new() -> Edf {
+        Edf::default()
+    }
+
+    fn key(req: &SchedRequest, seq: u64) -> (u64, u64, u64, ReqId) {
+        (key_bits(req.deadline_ms), key_bits(req.arrival_ms), seq, req.id)
+    }
+}
 
 impl Ordering for Edf {
-    fn select(&mut self, queue: QueueView<'_>, _now: f64) -> Option<ReqId> {
-        let mut best: Option<&crate::scheduler::queues::SchedRequest> = None;
+    fn select(&mut self, queue: QueueView<'_>, now: f64) -> Option<ReqId> {
+        debug_assert_eq!(self.index.len(), queue.len(), "edf index out of sync (missed hook?)");
+        let winner = self.index.first().map(|&(_, _, _, id)| id);
+        self.work += u64::from(winner.is_some());
+        debug_assert_eq!(winner, self.reference_select(queue, now), "edf index vs reference");
+        winner
+    }
+
+    fn select_work(&self) -> u64 {
+        self.work
+    }
+
+    fn reference_select(&self, queue: QueueView<'_>, _now: f64) -> Option<ReqId> {
+        let mut best: Option<&SchedRequest> = None;
         for r in queue.iter() {
             if best.map_or(true, |b| r.deadline_ms < b.deadline_ms) {
                 best = Some(r);
             }
         }
         best.map(|r| r.id)
+    }
+
+    fn on_push(&mut self, req: &SchedRequest, _now: f64) {
+        let seq = self.seqs.assign(req.id);
+        self.index.insert(Self::key(req, seq));
+    }
+
+    fn on_remove(&mut self, req: &SchedRequest) {
+        let seq = self.seqs.take(req.id);
+        let removed = self.index.remove(&Self::key(req, seq));
+        debug_assert!(removed, "edf index missing request {}", req.id);
     }
 
     fn name(&self) -> &'static str {
@@ -86,6 +273,7 @@ impl Ordering for Edf {
 
 #[cfg(test)]
 pub(crate) mod test_util {
+    use super::Ordering;
     use crate::core::{Class, Priors, TokenBucket};
     use crate::predictor::Route;
     use crate::scheduler::queues::{ClassQueues, SchedRequest};
@@ -103,10 +291,13 @@ pub(crate) mod test_util {
         }
     }
 
-    /// Build slab queues holding `reqs` in order (all heavy-class).
-    pub fn queues_of(reqs: Vec<SchedRequest>) -> ClassQueues {
+    /// Build slab queues holding `reqs` in order (all heavy-class),
+    /// driving the ordering's lifecycle hooks at push time `now = 0` (so
+    /// any later select time is valid under the monotone-now contract).
+    pub fn queues_into(reqs: Vec<SchedRequest>, ord: &mut dyn Ordering) -> ClassQueues {
         let mut q = ClassQueues::new();
         for r in reqs {
+            ord.on_push(&r, 0.0);
             q.push(r);
         }
         q
@@ -117,36 +308,67 @@ pub(crate) mod test_util {
 
 #[cfg(test)]
 mod tests {
-    use super::test_util::{queues_of, sreq, HEAVY};
+    use super::test_util::{queues_into, sreq, HEAVY};
     use super::*;
 
     #[test]
     fn fifo_picks_head() {
-        let q = queues_of(vec![sreq(1, 0.0, 500.0, 1e5), sreq(2, 1.0, 10.0, 1e5)]);
-        assert_eq!(Fifo.select(q.view(HEAVY), 10.0), Some(1));
-        let empty = queues_of(vec![]);
-        assert_eq!(Fifo.select(empty.view(HEAVY), 10.0), None);
+        let mut f = Fifo;
+        let q = queues_into(vec![sreq(1, 0.0, 500.0, 1e5), sreq(2, 1.0, 10.0, 1e5)], &mut f);
+        assert_eq!(f.select(q.view(HEAVY), 10.0), Some(1));
+        let empty = queues_into(vec![], &mut f);
+        assert_eq!(f.select(empty.view(HEAVY), 10.0), None);
     }
 
     #[test]
     fn sjf_picks_smallest() {
-        let q = queues_of(vec![
-            sreq(1, 0.0, 500.0, 1e5),
-            sreq(2, 1.0, 10.0, 1e5),
-            sreq(3, 2.0, 100.0, 1e5),
-        ]);
-        assert_eq!(Sjf.select(q.view(HEAVY), 10.0), Some(2));
+        let mut s = Sjf::new();
+        let q = queues_into(
+            vec![sreq(1, 0.0, 500.0, 1e5), sreq(2, 1.0, 10.0, 1e5), sreq(3, 2.0, 100.0, 1e5)],
+            &mut s,
+        );
+        assert_eq!(s.select(q.view(HEAVY), 10.0), Some(2));
     }
 
     #[test]
     fn sjf_ties_break_by_age() {
-        let q = queues_of(vec![sreq(1, 5.0, 100.0, 1e5), sreq(2, 1.0, 100.0, 1e5)]);
-        assert_eq!(Sjf.select(q.view(HEAVY), 10.0), Some(2));
+        let mut s = Sjf::new();
+        let q = queues_into(vec![sreq(1, 5.0, 100.0, 1e5), sreq(2, 1.0, 100.0, 1e5)], &mut s);
+        assert_eq!(s.select(q.view(HEAVY), 10.0), Some(2));
+    }
+
+    #[test]
+    fn sjf_index_tracks_removals() {
+        let mut s = Sjf::new();
+        let mut q = queues_into(
+            vec![sreq(1, 0.0, 50.0, 1e5), sreq(2, 1.0, 20.0, 1e5), sreq(3, 2.0, 90.0, 1e5)],
+            &mut s,
+        );
+        assert_eq!(s.select(q.view(HEAVY), 5.0), Some(2));
+        let r = q.remove_id(2).unwrap();
+        s.on_remove(&r);
+        assert_eq!(s.select(q.view(HEAVY), 6.0), Some(1));
+        let r = q.remove_id(1).unwrap();
+        s.on_remove(&r);
+        assert_eq!(s.select(q.view(HEAVY), 7.0), Some(3));
+        let r = q.remove_id(3).unwrap();
+        s.on_remove(&r);
+        assert_eq!(s.select(q.view(HEAVY), 8.0), None);
     }
 
     #[test]
     fn edf_picks_earliest_deadline() {
-        let q = queues_of(vec![sreq(1, 0.0, 10.0, 9000.0), sreq(2, 1.0, 10.0, 4000.0)]);
-        assert_eq!(Edf.select(q.view(HEAVY), 10.0), Some(2));
+        let mut e = Edf::new();
+        let q = queues_into(vec![sreq(1, 0.0, 10.0, 9000.0), sreq(2, 1.0, 10.0, 4000.0)], &mut e);
+        assert_eq!(e.select(q.view(HEAVY), 10.0), Some(2));
+    }
+
+    #[test]
+    fn edf_deadline_ties_keep_queue_order() {
+        let mut e = Edf::new();
+        let q = queues_into(vec![sreq(1, 0.0, 10.0, 4000.0), sreq(2, 1.0, 10.0, 4000.0)], &mut e);
+        // Equal deadlines: the reference scan keeps the first-seen (queue
+        // head); the index must agree.
+        assert_eq!(e.select(q.view(HEAVY), 10.0), Some(1));
     }
 }

@@ -12,6 +12,7 @@
 
 use crate::core::{Class, Priors, ReqId};
 use crate::predictor::Route;
+use crate::scheduler::ordering::Ordering;
 
 const NIL: u32 = u32::MAX;
 
@@ -270,6 +271,47 @@ impl ClassQueues {
     /// O(1): maintained incrementally by push/remove.
     pub fn queued_tokens(&self) -> f64 {
         self.queued_tokens
+    }
+
+    // ---- hook-driving variants ----
+    //
+    // Every slab mutation on the scheduler's hot path notifies the mutated
+    // class's ordering policy (see [`Ordering::on_push`]/[`on_remove`]), so
+    // incremental ordering indexes stay consistent with the queue without
+    // the pump re-deriving which class moved. `ordering` is the scheduler's
+    // per-class pair `[interactive, heavy]`.
+
+    /// [`ClassQueues::push`] + ordering lifecycle hook. O(1) + hook cost.
+    pub fn push_with(
+        &mut self,
+        req: SchedRequest,
+        ordering: &mut [Box<dyn Ordering>; 2],
+        now: f64,
+    ) {
+        ordering[req.class().index()].on_push(&req, now);
+        self.push(req);
+    }
+
+    /// [`ClassQueues::push_ordered`] + ordering lifecycle hook.
+    pub fn push_ordered_with(
+        &mut self,
+        req: SchedRequest,
+        ordering: &mut [Box<dyn Ordering>; 2],
+        now: f64,
+    ) {
+        ordering[req.class().index()].on_push(&req, now);
+        self.push_ordered(req);
+    }
+
+    /// [`ClassQueues::remove_id`] + ordering lifecycle hook. O(1) + hook.
+    pub fn remove_id_with(
+        &mut self,
+        id: ReqId,
+        ordering: &mut [Box<dyn Ordering>; 2],
+    ) -> Option<SchedRequest> {
+        let req = self.remove_id(id)?;
+        ordering[req.class().index()].on_remove(&req);
+        Some(req)
     }
 }
 

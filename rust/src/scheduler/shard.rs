@@ -24,20 +24,13 @@
 use std::collections::HashMap;
 
 use crate::core::ReqId;
+use crate::scheduler::state::ABANDON_TAIL_RATIO;
 use crate::util::stats::Ewma;
 
 /// EWMA smoothing for the per-shard tail signal — the same constant
 /// `ApiState::tail_ratio` uses, so per-shard and global severity read the
 /// same kind of quantity at the same timescale.
 const TAIL_ALPHA: f64 = 0.15;
-
-/// Censored tail sample recorded when the client abandons an in-flight
-/// request (timeout): the request consumed its entire timeout window, well
-/// past its deadline, so the true ratio is > 1 but unobserved. 2.0 sits
-/// above the overload controller's default `tail_ratio_cap` (1.5), so a
-/// timeout saturates that shard's tail term — a shard must not look
-/// *calmer* because it times requests out instead of completing them.
-const ABANDON_TAIL_RATIO: f64 = 2.0;
 
 /// Shard-selection policy (client-side).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -239,11 +232,10 @@ impl ShardSelector {
     /// requests out would keep an empty tail signal and a perpetually-reset
     /// in-flight count — reading as *calm* to both routing and the
     /// shard-aware cost ladder, the exact blind spot the per-shard signal
-    /// exists to close. (The *global* `ApiState::tail_ratio` deliberately
-    /// keeps its completion-only semantics: feeding it on abandon would
-    /// shift severity in every single-endpoint run and invalidate the
-    /// existing tables — per-shard state is new, so it can be right from
-    /// the start. See the ROADMAP open item on censored global tail.)
+    /// exists to close. The *global* `ApiState::tail_ratio` records the
+    /// same sample per abandon (PR 5 closed the ROADMAP "censored global
+    /// tail" item), so single- and multi-endpoint severity agree on what a
+    /// timeout means.
     pub fn on_abandon(&mut self, id: ReqId) {
         if self.cfg.n == 1 {
             return;

@@ -9,6 +9,16 @@ use crate::core::{Class, ReqId};
 use crate::util::stats::{Ewma, RecentWindow};
 use std::collections::HashMap;
 
+/// Censored tail sample recorded when the client abandons an in-flight
+/// request (hard timeout): the request consumed its entire timeout window,
+/// well past its deadline, so the true latency/deadline ratio is > 1 but
+/// unobserved. 2.0 sits above the overload controller's default
+/// `tail_ratio_cap` (1.5), so a timeout saturates the tail term — an
+/// endpoint must not look *calmer* because it times requests out instead of
+/// completing them. Shared by the global signal here and the per-shard
+/// signal in [`crate::scheduler::shard::ShardSelector`].
+pub const ABANDON_TAIL_RATIO: f64 = 2.0;
+
 /// Observable client-side state.
 pub struct ApiState {
     /// Requests submitted and not yet completed/abandoned.
@@ -67,11 +77,18 @@ impl ApiState {
     }
 
     /// Client gave up on an in-flight request (timeout): frees the client's
-    /// slot without a latency sample.
+    /// slot. No latency sample exists (the completion was never observed),
+    /// but the abandonment itself is tail *evidence* — the censored
+    /// pessimistic sample [`ABANDON_TAIL_RATIO`] feeds the global tail
+    /// EWMA, exactly as [`crate::scheduler::shard::ShardSelector::on_abandon`]
+    /// feeds the per-shard one. Without it a dead endpoint kept global
+    /// severity calm while timing everything out (ROADMAP "censored global
+    /// tail" item; regenerates every table with in-flight timeouts).
     pub fn on_abandon(&mut self, id: ReqId) -> Option<Class> {
         let entry = self.inflight.remove(&id)?;
         self.inflight_by_class[entry.class.index()] -= 1;
         self.inflight_tokens -= entry.est_tokens;
+        self.tail_ratio.push(ABANDON_TAIL_RATIO);
         Some(entry.class)
     }
 
@@ -138,6 +155,20 @@ mod tests {
         assert_eq!(s.recent_latency.len(), 0);
         assert_eq!(s.on_abandon(1), None, "idempotent");
         assert_eq!(s.on_completion(1, 10.0, 10.0), None, "late completion ignored");
+    }
+
+    #[test]
+    fn abandon_records_censored_tail_evidence() {
+        // A dead provider (no completions, all timeouts) must escalate the
+        // global tail signal instead of reading calm.
+        let mut s = ApiState::new();
+        s.on_send(1, Class::Heavy, 2000.0, 0.0);
+        assert_eq!(s.tail_ratio.get(), None, "no evidence before the abandon");
+        s.on_abandon(1);
+        assert_eq!(s.tail_ratio.get(), Some(ABANDON_TAIL_RATIO), "first sample is the ratio");
+        // Unknown ids stay inert — only real in-flight abandons are evidence.
+        s.on_abandon(42);
+        assert_eq!(s.tail_ratio.get(), Some(ABANDON_TAIL_RATIO));
     }
 
     #[test]

@@ -60,6 +60,19 @@ pub struct RunDiagnostics {
     /// Requests started per provider shard (`vec![n_started]` for the
     /// classic single-endpoint runs) — the fleet balance signal.
     pub started_by_shard: Vec<u64>,
+    /// Time-weighted mean of the schedulers' total queued depth (deferred
+    /// requests excluded — this is the population the ordering layer
+    /// selects over), taken across the event-time span of the run. The
+    /// steady-state depth signal the `scale` experiment and the bench
+    /// `--depth` leg report.
+    pub mean_queue_depth: f64,
+    /// Largest total scheduler queue depth observed after any event.
+    pub peak_queue_depth: usize,
+    /// Cumulative ordering-index work across all schedulers: entries
+    /// examined + migrations processed by `Ordering::select`. Deterministic
+    /// (counted, not timed) — the numerator of the bench `--depth` leg's
+    /// per-release cost.
+    pub ordering_select_work: u64,
 }
 
 /// Outcome bundle of one simulated run.
@@ -120,6 +133,9 @@ struct CoreRun {
     timers_canceled: u64,
     events_processed: u64,
     events_skipped: u64,
+    mean_queue_depth: f64,
+    peak_queue_depth: usize,
+    ordering_select_work: u64,
 }
 
 /// The shared DES loop: pop events, feed the owning tenant's scheduler,
@@ -163,7 +179,20 @@ fn run_core(
     let mut send_batch: Vec<(ReqId, f64, usize)> = Vec::new();
     let mut started_buf: Vec<Started> = Vec::new();
 
+    // Time-weighted queue-depth accounting: the depth after each event
+    // holds until the next event pops, so ∫depth·dt accumulates per event.
+    let mut depth_area = 0.0f64;
+    let mut span_start: Option<f64> = None;
+    let mut last_now = 0.0f64;
+    let mut last_depth = 0usize;
+    let mut peak_queue_depth = 0usize;
+
     while let Some((now, ev)) = q.pop() {
+        if span_start.is_none() {
+            span_start = Some(now);
+        } else {
+            depth_area += last_depth as f64 * (now - last_now);
+        }
         actions.clear();
         // Every event belongs to exactly one tenant; all actions this tick
         // come from that tenant's scheduler.
@@ -252,7 +281,14 @@ fn run_core(
             }
         }
         flush_sends(provider, &mut send_batch, &mut started_buf, &mut q, now);
+        last_now = now;
+        last_depth = schedulers.iter().map(|s| s.queued()).sum();
+        peak_queue_depth = peak_queue_depth.max(last_depth);
     }
+
+    let span = last_now - span_start.unwrap_or(0.0);
+    let mean_queue_depth = if span > 0.0 { depth_area / span } else { 0.0 };
+    let ordering_select_work = schedulers.iter().map(|s| s.ordering_work()).sum();
 
     CoreRun {
         status,
@@ -264,6 +300,9 @@ fn run_core(
         timers_canceled,
         events_processed: q.processed(),
         events_skipped: q.skipped(),
+        mean_queue_depth,
+        peak_queue_depth,
+        ordering_select_work,
     }
 }
 
@@ -337,6 +376,9 @@ pub fn run_pool(
             peak_provider_queue: provider.peak_hidden_queue(),
             peak_inflight: core.peak_inflight,
             started_by_shard: provider.started_by_shard(),
+            mean_queue_depth: core.mean_queue_depth,
+            peak_queue_depth: core.peak_queue_depth,
+            ordering_select_work: core.ordering_select_work,
         },
     }
 }
@@ -460,6 +502,9 @@ pub fn run_tenants(tenants: &[TenantSpec], pool_cfg: &PoolCfg, seed: u64) -> Mul
             peak_provider_queue: provider.peak_hidden_queue(),
             peak_inflight: core.peak_inflight,
             started_by_shard: provider.started_by_shard(),
+            mean_queue_depth: core.mean_queue_depth,
+            peak_queue_depth: core.peak_queue_depth,
+            ordering_select_work: core.ordering_select_work,
         },
     }
 }
@@ -544,6 +589,23 @@ mod tests {
         // The canceled timers surface at the heap head eventually and are
         // discarded there, not handled.
         assert_eq!(out.diagnostics.events_skipped, 80);
+    }
+
+    #[test]
+    fn queue_depth_diagnostics_are_sane() {
+        let shaped = run_strategy(StrategyKind::AdaptiveDrr, Mix::Heavy, 12.0, 3);
+        assert!(shaped.diagnostics.peak_queue_depth > 0, "stressed run must queue");
+        assert!(shaped.diagnostics.mean_queue_depth > 0.0);
+        assert!(
+            shaped.diagnostics.mean_queue_depth <= shaped.diagnostics.peak_queue_depth as f64,
+            "mean {} vs peak {}",
+            shaped.diagnostics.mean_queue_depth,
+            shaped.diagnostics.peak_queue_depth
+        );
+        // Naive dispatch never queues client-side.
+        let naive = run_strategy(StrategyKind::DirectNaive, Mix::Heavy, 12.0, 3);
+        assert_eq!(naive.diagnostics.peak_queue_depth, 0);
+        assert_eq!(naive.diagnostics.mean_queue_depth, 0.0);
     }
 
     #[test]

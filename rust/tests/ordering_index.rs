@@ -1,0 +1,136 @@
+//! Property: every incremental ordering index (SJF / EDF / FeasibleSet)
+//! must reproduce the retained O(n) reference scan **bit-for-bit** —
+//! same winner, same tie rules — on production-shaped op sequences:
+//! monotone event-time pushes, interleaved removes (dispatch and timeout
+//! cancels), and deferred re-pushes with past arrivals through
+//! `push_ordered` (the DES contract that keeps the class lists
+//! arrival-sorted). In the style of the slab-vs-model queue test.
+//!
+//! This is the release-mode gate for the PR-5 bit-compat contract: debug
+//! builds additionally assert the same equivalence inside every
+//! `Ordering::select`, but `cargo test --release` disables those, so the
+//! explicit comparison here is what keeps the contract enforced where the
+//! benchmarks run.
+
+use blackbox_sched::core::{Class, Priors, TokenBucket};
+use blackbox_sched::predictor::Route;
+use blackbox_sched::scheduler::ordering::{Edf, FeasibleSet, Fifo, Ordering, OrderingCfg, Sjf};
+use blackbox_sched::scheduler::queues::{ClassQueues, SchedRequest};
+use blackbox_sched::testing::prop;
+
+fn sreq(id: usize, arrival: f64, p50: f64, deadline: f64) -> SchedRequest {
+    SchedRequest {
+        id,
+        arrival_ms: arrival,
+        deadline_ms: deadline,
+        // Long bucket: everything routes to the heavy class, the one whose
+        // ordering is scored.
+        priors: Priors::new(p50, p50 * 1.5),
+        route: Route::from_bucket(TokenBucket::Long),
+        defer_attempts: 0,
+    }
+}
+
+/// Run `cases` random production-shaped op sequences against a fresh
+/// ordering per case, asserting index == reference after every op.
+fn exercise(mk: impl Fn() -> Box<dyn Ordering>, cases: usize) {
+    prop::forall(cases, |g| {
+        let mut ord = mk();
+        let mut q = ClassQueues::new();
+        let mut clock = 0.0f64;
+        let mut next_id = 0usize;
+        let mut live: Vec<usize> = Vec::new();
+        let n_ops = g.usize_in(20, 120);
+        for _ in 0..n_ops {
+            match g.usize_in(0, 10) {
+                // New arrival: event time only moves forward. Discrete p50
+                // and deadline choices make exact key ties reachable, so
+                // the documented tie rules are actually exercised.
+                0..=3 => {
+                    clock += g.f64_in(0.0, 40.0);
+                    let p50 = if g.bool() {
+                        *g.choice(&[100.0, 250.0, 700.0, 1800.0])
+                    } else {
+                        g.f64_in(10.0, 3000.0)
+                    };
+                    let slack = if g.bool() {
+                        *g.choice(&[800.0, 2_500.0, 20_000.0])
+                    } else {
+                        g.f64_in(200.0, 60_000.0)
+                    };
+                    let r = sreq(next_id, clock, p50, clock + slack);
+                    next_id += 1;
+                    live.push(r.id);
+                    ord.on_push(&r, clock);
+                    q.push(r);
+                }
+                // Deferred re-push: the request arrived in the past and
+                // re-enters arrival-sorted; its deadline may already have
+                // passed (past-deadline work is legal queue content).
+                4..=5 => {
+                    clock += g.f64_in(0.0, 10.0);
+                    let arrival = g.f64_in(0.0, clock);
+                    let r = sreq(
+                        next_id,
+                        arrival,
+                        g.f64_in(10.0, 3000.0),
+                        arrival + g.f64_in(100.0, 30_000.0),
+                    );
+                    next_id += 1;
+                    live.push(r.id);
+                    ord.on_push(&r, clock);
+                    q.push_ordered(r);
+                }
+                // Remove by id: dispatch of some winner, or a timeout
+                // cancel of an arbitrary queued request.
+                6..=7 => {
+                    if !live.is_empty() {
+                        let i = g.usize_in(0, live.len());
+                        let id = live.swap_remove(i);
+                        let r = q.remove_id(id).expect("live id queued");
+                        ord.on_remove(&r);
+                    }
+                }
+                // Idle gap: let scores drift / feasibility windows close so
+                // the lazy-rescore and expiry paths are exercised.
+                _ => {
+                    clock += g.f64_in(0.0, 500.0);
+                }
+            }
+            let got = ord.select(q.view(Class::Heavy), clock);
+            let want = ord.reference_select(q.view(Class::Heavy), clock);
+            assert_eq!(
+                got,
+                want,
+                "{} index diverged from the reference scan at now={clock} depth={}",
+                ord.name(),
+                live.len()
+            );
+            if live.is_empty() {
+                assert_eq!(got, None);
+            } else {
+                assert!(got.is_some(), "non-empty queue must yield a winner");
+            }
+        }
+    });
+}
+
+#[test]
+fn sjf_index_matches_reference_scan() {
+    exercise(|| Box::new(Sjf::new()) as Box<dyn Ordering>, 80);
+}
+
+#[test]
+fn edf_index_matches_reference_scan() {
+    exercise(|| Box::new(Edf::new()) as Box<dyn Ordering>, 80);
+}
+
+#[test]
+fn feasible_set_index_matches_reference_scan() {
+    exercise(|| Box::new(FeasibleSet::new(OrderingCfg::default())) as Box<dyn Ordering>, 80);
+}
+
+#[test]
+fn fifo_select_is_its_own_reference() {
+    exercise(|| Box::new(Fifo) as Box<dyn Ordering>, 20);
+}

@@ -83,8 +83,12 @@ fn cost_ladder_beats_uniform_mild_on_goodput() {
         mean(&ladder, |m| m.goodput_rps),
         mean(&mild, |m| m.goodput_rps)
     );
-    // Mild never rejects — overload hides as mass deferral.
-    assert_eq!(mean(&mild, |m| m.rejects_total as f64), 0.0);
+    // Mild (almost) never rejects — overload hides as mass deferral. The
+    // censored global-tail fix (PR 5) lets sustained in-flight timeouts
+    // push severity past mild's lone reject threshold occasionally, so the
+    // paper's qualitative claim is "rare", not a hard zero.
+    let mild_rejects = mean(&mild, |m| m.rejects_total as f64);
+    assert!(mild_rejects < 0.02 * N as f64, "mild rejects {mild_rejects} per run is not rare");
     assert!(mean(&mild, |m| m.defers_total as f64) > 2.0 * mean(&ladder, |m| m.defers_total as f64));
 }
 
