@@ -1,6 +1,7 @@
 //! `cargo bench --bench hot_paths` — micro-benchmarks of every component on
 //! the request path, plus the PJRT predictor when artifacts are present.
-//! These are the numbers tracked in EXPERIMENTS.md §Perf.
+//! These are the hot-path numbers behind the `bbsched bench` scaling
+//! gates (see `rust/README.md` §Benchmarking).
 
 use blackbox_sched::bench::Suite;
 use blackbox_sched::core::{Class, Priors, TokenBucket};

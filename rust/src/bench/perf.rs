@@ -27,6 +27,19 @@
 //! ratio — `--depth-gate-exponent X` fails the run if any heavy-class
 //! ordering's work still scales like depth^X or worse (the incremental
 //! ordering indexes keep it near 0; the old full scans sat near 1).
+//!
+//! `--timers` adds a timer-churn leg: a schedule/cancel-heavy synthetic
+//! workload (the driver's timeout/retry pattern, distilled) run directly
+//! against the `EventQueue` at the smallest and largest `--sizes` points,
+//! recording the queue's counted structural work per operation
+//! (`EventQueue::work` — placements, cascade moves, clock jumps, due
+//! transfers; deterministic, immune to runner noise). The timer wheel's
+//! O(1)-amortized claim means the ratio stays flat as the queue count
+//! grows; `--timer-gate-exponent X` fails the run when
+//! `ln(wpo_hi/wpo_lo) / ln(n_hi/n_lo)` exceeds `X` (CI pins 0.35 — flat
+//! enough to catch any polynomial per-op regression; the old binary heap's
+//! log factor is below the gate's resolution at smoke sizes, which is why
+//! the gate is on *counted* work where the wheel sits near 0 by design).
 
 use std::time::Instant;
 
@@ -39,6 +52,9 @@ use crate::provider::pool::PoolCfg;
 use crate::provider::ProviderCfg;
 use crate::scheduler::{OrderingKind, SchedulerCfg, ShardPolicy, StrategyKind};
 use crate::sim::driver::{self, RunDiagnostics, TenantSpec};
+use crate::sim::BackendKind;
+use crate::sim::EventQueue;
+use crate::sim::TimerId;
 use crate::util::jsonio::Json;
 use crate::util::rng::Rng;
 use crate::workload::{Mix, WorkloadSpec};
@@ -76,6 +92,13 @@ pub struct ScaleBenchOpts {
     /// Fail if any ordering's per-release cost scales worse than
     /// depth^this between the depth leg's two points (needs `depth`).
     pub depth_gate_exponent: Option<f64>,
+    /// Run the timer-churn leg: a schedule/cancel-heavy workload driven
+    /// directly against the `EventQueue` at the smallest and largest sizes,
+    /// recording counted structural work per operation.
+    pub timers: bool,
+    /// Fail if the queue's counted work per operation scales worse than
+    /// n^this between the timer leg's two sizes (needs `timers`).
+    pub timer_gate_exponent: Option<f64>,
 }
 
 impl Default for ScaleBenchOpts {
@@ -91,6 +114,8 @@ impl Default for ScaleBenchOpts {
             gate_exponent: None,
             depth: false,
             depth_gate_exponent: None,
+            timers: false,
+            timer_gate_exponent: None,
         }
     }
 }
@@ -155,6 +180,15 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
     anyhow::ensure!(
         opts.depth || opts.depth_gate_exponent.is_none(),
         "--depth-gate-exponent needs --depth (the deep-queue leg it gates)"
+    );
+    anyhow::ensure!(
+        opts.timers || opts.timer_gate_exponent.is_none(),
+        "--timer-gate-exponent needs --timers (the timer-churn leg it gates)"
+    );
+    anyhow::ensure!(
+        opts.timer_gate_exponent.is_none()
+            || (opts.sizes.len() >= 2 && opts.sizes.first() != opts.sizes.last()),
+        "--timer-gate-exponent needs at least two distinct sizes to compute a scaling exponent"
     );
     let mut records: Vec<RunRecord> = Vec::new();
     // Legs as (shards, tenants): the classic single endpoint, plus (when
@@ -476,6 +510,79 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
         println!("{}", t.render());
     }
 
+    // ---- timer-churn leg: event-queue work per op vs queue population ----
+    //
+    // The driver's timer pattern distilled (see `timer_churn_point`), run
+    // directly against the `EventQueue` at the smallest and largest sizes.
+    // The gated cost is `EventQueue::work / ops` — counted placements,
+    // cascade moves, clock jumps, and due transfers per push/cancel/pop —
+    // so the exponent is deterministic and immune to runner noise. The
+    // wheel sits near 0 (O(1) amortized); a superlinear structure on the
+    // event-queue hot path would push it up.
+    let mut timer_runs: Vec<Json> = Vec::new();
+    let mut timer_scaling: Vec<Json> = Vec::new();
+    if opts.timers {
+        let n_lo = opts.sizes[0];
+        let n_hi = *opts.sizes.last().unwrap();
+        println!("\n== timer leg: schedule/cancel churn at {n_lo} / {n_hi} requests ==");
+        let churn_sizes: Vec<usize> = if n_lo == n_hi { vec![n_hi] } else { vec![n_lo, n_hi] };
+        let mut t =
+            TextTable::new(["requests", "work", "ops", "work/op", "wall (ms)", "backend"]);
+        let mut points: Vec<(usize, TimerPoint)> = Vec::new();
+        for &n in &churn_sizes {
+            let p = timer_churn_point(n, opts.seed);
+            let wpo = if p.ops > 0 { p.work as f64 / p.ops as f64 } else { 0.0 };
+            t.row([
+                n.to_string(),
+                p.work.to_string(),
+                p.ops.to_string(),
+                format!("{wpo:.2}"),
+                format!("{:.1}", p.wall_ms),
+                p.backend.to_string(),
+            ]);
+            timer_runs.push(
+                Json::obj()
+                    .set("requests", n)
+                    .set("wall_ms", p.wall_ms)
+                    .set("work", p.work)
+                    .set("ops", p.ops)
+                    .set("work_per_op", wpo)
+                    .set("events_processed", p.processed)
+                    .set("events_skipped", p.skipped)
+                    .set("backend", p.backend),
+            );
+            points.push((n, p));
+        }
+        println!("{}", t.render());
+        if let [(lo_n, lo), (hi_n, hi)] = &points[..] {
+            let wpo_lo = if lo.ops > 0 { lo.work as f64 / lo.ops as f64 } else { 0.0 };
+            let wpo_hi = if hi.ops > 0 { hi.work as f64 / hi.ops as f64 } else { 0.0 };
+            let exponent = if wpo_lo > 0.0 && wpo_hi > 0.0 {
+                (wpo_hi / wpo_lo).ln() / (*hi_n as f64 / *lo_n as f64).ln()
+            } else {
+                f64::NAN
+            };
+            println!("timer work/op exponent {lo_n} -> {hi_n}: {exponent:.3}");
+            timer_scaling.push(
+                Json::obj()
+                    .set("n_lo", *lo_n)
+                    .set("n_hi", *hi_n)
+                    .set("work_per_op_lo", wpo_lo)
+                    .set("work_per_op_hi", wpo_hi)
+                    .set("exponent", exponent)
+                    .set("backend", lo.backend),
+            );
+            if let Some(max_e) = opts.timer_gate_exponent {
+                if exponent.is_finite() && exponent > max_e {
+                    violations.push(format!(
+                        "timers: work/op exponent {exponent:.3} > {max_e} \
+                         ({wpo_lo:.2} -> {wpo_hi:.2})"
+                    ));
+                }
+            }
+        }
+    }
+
     let mut doc = Json::obj()
         .set("bench", "scale")
         .set("mix", opts.mix.name())
@@ -491,12 +598,83 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             .set("depth_runs", Json::Arr(depth_runs))
             .set("depth_scaling", Json::Arr(depth_scaling));
     }
+    if opts.timers {
+        doc = doc
+            .set("timer_runs", Json::Arr(timer_runs))
+            .set("timer_scaling", Json::Arr(timer_scaling));
+    }
     doc.write_file(&opts.out_path)?;
     println!("wrote {}", opts.out_path);
     if !violations.is_empty() {
         bail!("scaling gate failed: {}", violations.join("; "));
     }
     Ok(())
+}
+
+/// One timer-churn measurement.
+struct TimerPoint {
+    /// Wall time for the point — informational, not gated.
+    wall_ms: f64,
+    /// `EventQueue::work` at the end: counted structural work.
+    work: u64,
+    /// Operations issued against the queue (pushes + cancels + pops).
+    ops: u64,
+    /// Live entries popped (`EventQueue::processed`).
+    processed: u64,
+    /// Dead (canceled) entries discarded (`EventQueue::skipped`).
+    skipped: u64,
+    /// Which backend served the run (`wheel` unless overridden by env).
+    backend: &'static str,
+}
+
+/// One timer-churn point: `n` requests' worth of the driver's timer
+/// pattern — an arrival event plus a cancelable timeout per request, most
+/// timeouts canceled shortly after ("completions"), a quarter of those
+/// re-armed as short retry timers, and the clock drained up to each
+/// arrival — then a full drain. Work and op counts are deterministic for a
+/// given `(n, seed)`; only `wall_ms` carries runner noise.
+fn timer_churn_point(n: usize, seed: u64) -> TimerPoint {
+    let mut q: EventQueue<usize> = EventQueue::new();
+    let mut rng = Rng::new(seed).derive("timer_churn");
+    let mut live: Vec<TimerId> = Vec::new();
+    let mut ops: u64 = 0;
+    let mut now = 0.0_f64;
+    let t0 = Instant::now();
+    for i in 0..n {
+        now += rng.exp(0.02); // ~50 ms between arrivals
+        q.push(now, i);
+        live.push(q.push_cancelable(now + rng.range(5_000.0, 30_000.0), i));
+        ops += 2;
+        // Cancel a random live timeout (a "completion") and sometimes
+        // re-arm a short retry timer — the schedule/cancel churn itself.
+        if live.len() >= 8 {
+            let id = live.swap_remove(rng.index(live.len()));
+            q.cancel(id);
+            ops += 1;
+            if rng.index(4) == 0 {
+                live.push(q.push_cancelable(now + rng.range(50.0, 1_000.0), i));
+                ops += 1;
+            }
+        }
+        while q.peek_time().is_some_and(|t| t <= now) {
+            q.pop();
+            ops += 1;
+        }
+    }
+    while q.pop().is_some() {
+        ops += 1;
+    }
+    TimerPoint {
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        work: q.work(),
+        ops,
+        processed: q.processed(),
+        skipped: q.skipped(),
+        backend: match q.backend() {
+            BackendKind::Wheel => "wheel",
+            BackendKind::Heap => "heap",
+        },
+    }
 }
 
 #[cfg(test)]
@@ -641,6 +819,74 @@ mod tests {
         };
         assert!(run_scale_bench(&opts).is_err(), "depth gate must trip");
         let _ = std::fs::remove_file(&out_path.to_string_lossy().into_owned());
+    }
+
+    #[test]
+    fn timer_leg_records_runs_and_exponent() {
+        let out_path = std::env::temp_dir().join("bbsched_bench_timer_test.json");
+        let opts = ScaleBenchOpts {
+            sizes: vec![200, 1_000],
+            rate_rps: 12.0,
+            timers: true,
+            timer_gate_exponent: Some(0.35), // the CI gate value must hold here too
+            out_path: out_path.to_string_lossy().into_owned(),
+            ..ScaleBenchOpts::default()
+        };
+        run_scale_bench(&opts).expect("bench runs under the armed timer gate");
+        let doc = Json::read_file(&opts.out_path).expect("BENCH.json parses");
+        let runs = doc.get("timer_runs").and_then(Json::as_arr).expect("timer_runs array");
+        assert_eq!(runs.len(), 2, "one point per size");
+        for r in runs {
+            assert!(r.get("work").and_then(Json::as_u64).unwrap() > 0, "work counted");
+            assert!(r.get("ops").and_then(Json::as_u64).unwrap() > 0, "ops counted");
+            assert!(r.get("work_per_op").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        let scaling = doc.get("timer_scaling").and_then(Json::as_arr).expect("timer_scaling");
+        assert_eq!(scaling.len(), 1, "one work/op exponent");
+        let e = scaling[0].get("exponent").and_then(Json::as_f64).unwrap();
+        assert!(e.is_finite(), "counted work yields a finite exponent, got {e}");
+        let _ = std::fs::remove_file(&opts.out_path);
+    }
+
+    #[test]
+    fn timer_gate_requires_timer_leg() {
+        let opts = ScaleBenchOpts {
+            sizes: vec![40, 80],
+            timers: false,
+            timer_gate_exponent: Some(0.35),
+            out_path: "/tmp/bbsched_bench_timer_gate.json".to_string(),
+            ..ScaleBenchOpts::default()
+        };
+        let err = run_scale_bench(&opts).expect_err("gate without the leg it gates");
+        assert!(err.to_string().contains("--timers"), "{err}");
+    }
+
+    #[test]
+    fn impossible_timer_gate_fails_on_churn() {
+        let out_path = std::env::temp_dir().join("bbsched_bench_timer_gate_fail.json");
+        let opts = ScaleBenchOpts {
+            sizes: vec![200, 1_000],
+            rate_rps: 12.0,
+            timers: true,
+            // Any finite exponent exceeds this ceiling, so the gate must
+            // trip — this is the CI failure path for the timer leg.
+            timer_gate_exponent: Some(f64::NEG_INFINITY),
+            out_path: out_path.to_string_lossy().into_owned(),
+            ..ScaleBenchOpts::default()
+        };
+        assert!(run_scale_bench(&opts).is_err(), "timer gate must trip");
+        let _ = std::fs::remove_file(&out_path);
+    }
+
+    #[test]
+    fn timer_churn_work_is_deterministic() {
+        let a = timer_churn_point(500, 7);
+        let b = timer_churn_point(500, 7);
+        assert_eq!(a.work, b.work, "counted work must not carry runner noise");
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.processed, b.processed);
+        assert_eq!(a.skipped, b.skipped);
+        assert!(a.skipped > 0, "churn actually cancels timers");
     }
 
     #[test]

@@ -238,7 +238,7 @@ impl Default for SloPolicy {
     fn default() -> Self {
         // Interactive work gets tight deadlines; heavy work generous ones.
         // Chosen so the paper's joint-metric bands are reachable (see
-        // EXPERIMENTS.md §Calibration).
+        // `docs/EXPERIMENTS.md` §calibration).
         SloPolicy { deadline_ms: [2_500.0, 8_000.0, 20_000.0, 40_000.0], timeout_factor: 1.2 }
     }
 }

@@ -1,5 +1,5 @@
-//! Design-choice ablations (beyond the paper's tables — DESIGN.md §Perf
-//! commitments): what each knob of the full stack buys.
+//! Design-choice ablations (beyond the paper's tables — see
+//! `docs/EXPERIMENTS.md`): what each knob of the full stack buys.
 //!
 //! 1. Heavy-lane ordering: feasible-set vs FIFO vs SJF vs EDF.
 //! 2. DRR congestion adaptation: adaptive vs plain weights.

@@ -1,5 +1,5 @@
-//! Experiment harness: one module per paper table/figure (see DESIGN.md's
-//! per-experiment index), a shared multi-seed cell runner, and a registry
+//! Experiment harness: one module per paper table/figure (catalogued in
+//! `docs/EXPERIMENTS.md`), a shared multi-seed cell runner, and a registry
 //! dispatched by `bbsched exp <name>` and the `benches/` targets.
 
 pub mod ablation;

@@ -51,8 +51,9 @@ impl Regime {
     }
 
     /// Offered arrival rate (req/s). Chosen so medium ≈ 0.8× and high ≈
-    /// 1.6–1.9× the default mock capacity for the mix (see EXPERIMENTS.md
-    /// §Calibration); heavy mixes are already stressed at medium, matching
+    /// 1.6–1.9× the default mock capacity for the mix (see
+    /// `docs/EXPERIMENTS.md` §calibration); heavy mixes are already
+    /// stressed at medium, matching
     /// the paper's heavy/medium failure band.
     pub fn rate_rps(&self) -> f64 {
         match (self.mix, self.congestion) {
@@ -137,6 +138,29 @@ pub fn run_cell(spec: &CellSpec, seeds: u64) -> Vec<RunMetrics> {
 /// simulation state, which preserves the paired-comparison guarantee: the
 /// per-seed request tables are identical across policies regardless of how
 /// the workers interleave.
+///
+/// # Example
+///
+/// A two-cell sweep; the worker count never changes the numbers:
+///
+/// ```
+/// use blackbox_sched::experiments::{run_cell, CellSpec, ParallelSweep, Regime};
+/// use blackbox_sched::scheduler::{SchedulerCfg, StrategyKind};
+///
+/// let specs: Vec<CellSpec> = [StrategyKind::DirectNaive, StrategyKind::FinalAdrrOlc]
+///     .into_iter()
+///     .map(|s| CellSpec::new(Regime::GRID[0], SchedulerCfg::for_strategy(s), 20))
+///     .collect();
+/// let parallel = ParallelSweep::new(4).run_cells(&specs, 2);
+/// let serial: Vec<_> = specs.iter().map(|s| run_cell(s, 2)).collect();
+/// assert_eq!(parallel.len(), 2);
+/// for (p, s) in parallel.iter().zip(&serial) {
+///     for (a, b) in p.iter().zip(s) {
+///         assert_eq!(a.n_completed, b.n_completed);
+///         assert_eq!(a.global_p95_ms.to_bits(), b.global_p95_ms.to_bits());
+///     }
+/// }
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct ParallelSweep {
     jobs: usize,

@@ -8,7 +8,7 @@
 //! experiment harness, and the PJRT-served output-length predictor
 //! (JAX/Pallas, AOT-compiled — see `python/compile/`).
 //!
-//! Layering (see DESIGN.md):
+//! Layering (see `docs/ARCHITECTURE.md`):
 //! * L3 (this crate): coordination + simulation + experiments.
 //! * L2/L1 (build-time Python): quantile-MLP predictor with Pallas kernels,
 //!   lowered to `artifacts/*.hlo.txt`, executed via [`runtime`].

@@ -4,7 +4,7 @@
 //! Usage:
 //!   bbsched exp <name|all> [--seeds N] [--requests N] [--jobs N] [--out DIR]
 //!   bbsched run [--strategy S] [--mix M] [--rate R] [--seed N] ...
-//!   bbsched bench [--sizes N,N] [--shards N] [--tenants M] [--depth] [--out BENCH.json] [--smoke]
+//!   bbsched bench [--sizes N,N] [--shards N] [--tenants M] [--depth] [--timers] [--out BENCH.json] [--smoke]
 //!   bbsched trace gen|show [--out PATH] ...
 //!   bbsched predict [--artifacts DIR] [--n N]        (PJRT smoke + goldens)
 //!   bbsched serve [--rate R] [--requests N] [--scale S] [--tenants M] (real-time demo)
@@ -193,7 +193,13 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             "0",
             "fail if a depth-leg per-release cost exponent exceeds this (0 = off; needs --depth)",
         )
+        .opt(
+            "timer-gate-exponent",
+            "0",
+            "fail if the timer-leg work/op exponent exceeds this (0 = off; needs --timers)",
+        )
         .flag("depth", "add the deep-queue leg: per-release cost vs queue depth at 4x/16x rate")
+        .flag("timers", "add the timer-churn leg: event-queue work/op at the two size points")
         .flag("smoke", "CI smoke sizes (1000,5000)");
     let a = cmd.parse(args)?;
     if a.help {
@@ -219,6 +225,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     };
     let gate = a.f64("gate-exponent")?;
     let depth_gate = a.f64("depth-gate-exponent")?;
+    let timer_gate = a.f64("timer-gate-exponent")?;
     let opts = ScaleBenchOpts {
         sizes,
         rate_rps: a.f64("rate")?,
@@ -230,6 +237,8 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         gate_exponent: if gate > 0.0 { Some(gate) } else { None },
         depth: a.flag("depth"),
         depth_gate_exponent: if depth_gate > 0.0 { Some(depth_gate) } else { None },
+        timers: a.flag("timers"),
+        timer_gate_exponent: if timer_gate > 0.0 { Some(timer_gate) } else { None },
     };
     run_scale_bench(&opts)
 }

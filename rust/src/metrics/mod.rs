@@ -3,7 +3,7 @@
 //! makespan, and overload action counts — designed so tail improvements
 //! cannot be read in isolation from completion and SLO satisfaction.
 //!
-//! Semantics (documented in DESIGN.md):
+//! Semantics:
 //! * admitted        = offered − rejected (explicit shedding is excluded
 //!                     from CR's denominator — the paper reports CR 1.00
 //!                     alongside nonzero reject counts);

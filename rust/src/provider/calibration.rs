@@ -19,30 +19,43 @@ use crate::util::stats::{linear_fit, mean_std};
 /// One measured sample.
 #[derive(Debug, Clone)]
 pub struct CalibrationSample {
+    /// Bucket the probe was drawn from.
     pub bucket: TokenBucket,
+    /// Sampled output length of the probe.
     pub output_tokens: f64,
+    /// Measured end-to-end latency.
     pub latency_ms: f64,
 }
 
 /// Per-bucket summary row (Table 3 layout).
 #[derive(Debug, Clone)]
 pub struct BucketRow {
+    /// The bucket summarized.
     pub bucket: TokenBucket,
+    /// Probes in this bucket.
     pub count: usize,
+    /// Mean sampled output tokens.
     pub mean_tokens: f64,
+    /// Std dev of sampled output tokens.
     pub std_tokens: f64,
+    /// Mean measured latency.
     pub mean_latency_ms: f64,
+    /// Std dev of measured latency.
     pub std_latency_ms: f64,
 }
 
 /// Full calibration result.
 #[derive(Debug, Clone)]
 pub struct CalibrationResult {
+    /// Every probe, in measurement order.
     pub samples: Vec<CalibrationSample>,
+    /// Per-bucket summaries (Table 3 layout).
     pub rows: Vec<BucketRow>,
     /// Fit `latency_ms = intercept + slope · output_tokens`.
     pub intercept: f64,
+    /// Per-token slope of the fit (ms/token).
     pub slope: f64,
+    /// Coefficient of determination of the fit.
     pub r2: f64,
 }
 

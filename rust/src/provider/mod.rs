@@ -12,6 +12,8 @@
 //! timing: the black-box boundary is enforced by the driver only ever
 //! handing the client `(request id, completion time)`.
 
+#![warn(missing_docs)]
+
 pub mod calibration;
 pub mod pool;
 
@@ -49,8 +51,8 @@ pub struct ProviderCfg {
 impl Default for ProviderCfg {
     fn default() -> Self {
         // Defaults put the joint metrics in the paper's bands (short P95
-        // ≈ 320 ms under structured policies); see EXPERIMENTS.md
-        // §Calibration for the sweep that chose them.
+        // ≈ 320 ms under structured policies); see `docs/EXPERIMENTS.md`
+        // §calibration for the harness that checks them.
         ProviderCfg {
             base_ms: 150.0,
             per_token_ms: 0.9,
@@ -122,7 +124,9 @@ impl ProviderCfg {
 /// at absolute time `finish_ms`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Started {
+    /// The request that just began generating.
     pub id: ReqId,
+    /// Absolute completion time the DES should schedule.
     pub finish_ms: f64,
 }
 
@@ -141,6 +145,7 @@ pub struct MockProvider {
 }
 
 impl MockProvider {
+    /// An idle provider with `cfg` physics and its own service-jitter RNG.
     pub fn new(cfg: ProviderCfg, rng: Rng) -> Self {
         MockProvider {
             cfg,
@@ -153,6 +158,7 @@ impl MockProvider {
         }
     }
 
+    /// The physics parameters this provider runs with.
     pub fn cfg(&self) -> &ProviderCfg {
         &self.cfg
     }
@@ -208,22 +214,28 @@ impl MockProvider {
     }
 
     // ---- test/experiment introspection ----
+
+    /// Requests currently generating.
     pub fn running(&self) -> usize {
         self.running
     }
 
+    /// Requests queued invisibly behind the concurrency gate.
     pub fn hidden_queue_len(&self) -> usize {
         self.waiting.len()
     }
 
+    /// Highest concurrent running count observed.
     pub fn peak_running(&self) -> usize {
         self.peak_running
     }
 
+    /// Longest hidden queue observed.
     pub fn peak_hidden_queue(&self) -> usize {
         self.peak_waiting
     }
 
+    /// Requests that have started generating (lifetime total).
     pub fn total_started(&self) -> u64 {
         self.total_started
     }

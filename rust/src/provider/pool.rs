@@ -27,6 +27,7 @@ use crate::workload::Mix;
 /// (`scheduler::shard::ShardCfg`) — the pool is pure provider physics.
 #[derive(Debug, Clone)]
 pub struct PoolCfg {
+    /// One physics config per endpoint.
     pub shards: Vec<ProviderCfg>,
 }
 
@@ -66,6 +67,7 @@ impl PoolCfg {
         pool
     }
 
+    /// Number of shards in the pool.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
@@ -115,6 +117,7 @@ impl ProviderPool {
         ProviderPool { shards, assigned: HashMap::new(), waiting_total: 0, peak_waiting_total: 0 }
     }
 
+    /// Number of endpoints behind the pool.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
@@ -180,10 +183,12 @@ impl ProviderPool {
 
     // ---- aggregate introspection (tests/experiments) ----
 
+    /// Requests currently generating, summed across shards.
     pub fn total_running(&self) -> usize {
         self.shards.iter().map(MockProvider::running).sum()
     }
 
+    /// Hidden-queue depth summed across shards.
     pub fn hidden_queue_len(&self) -> usize {
         self.waiting_total
     }
@@ -199,6 +204,7 @@ impl ProviderPool {
         }
     }
 
+    /// Lifetime started count summed across shards.
     pub fn total_started(&self) -> u64 {
         self.shards.iter().map(MockProvider::total_started).sum()
     }

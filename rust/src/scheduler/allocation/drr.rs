@@ -12,12 +12,14 @@
 use super::{AllocCtx, Allocator};
 use crate::core::Class;
 
+/// DRR parameters (quantum, class weights, congestion gain).
 #[derive(Debug, Clone)]
 pub struct DrrCfg {
     /// Tokens granted per visit (before weighting).
     pub quantum_tokens: f64,
-    /// Base weights (interactive, heavy).
+    /// Base weight of the interactive class.
     pub w_interactive: f64,
+    /// Base weight of the heavy class.
     pub w_heavy: f64,
     /// Interactive weight multiplier grows to (1 + gain) at severity 1.
     pub adaptive_gain: f64,
@@ -29,6 +31,7 @@ impl Default for DrrCfg {
     }
 }
 
+/// Deficit round-robin allocator, optionally congestion-adaptive.
 pub struct AdaptiveDrr {
     cfg: DrrCfg,
     deficit: [f64; 2],
@@ -44,6 +47,7 @@ pub struct AdaptiveDrr {
 }
 
 impl AdaptiveDrr {
+    /// Congestion-adaptive DRR (the paper's design).
     pub fn new(cfg: DrrCfg) -> Self {
         AdaptiveDrr {
             cfg,
@@ -70,6 +74,7 @@ impl AdaptiveDrr {
         }
     }
 
+    /// Current deficit counter of `class`, in estimated-token units.
     pub fn deficit(&self, class: Class) -> f64 {
         self.deficit[class.index()]
     }

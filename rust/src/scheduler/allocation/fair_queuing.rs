@@ -6,12 +6,14 @@
 use super::{AllocCtx, Allocator};
 use crate::core::Class;
 
+/// Round-robin class alternation, size-blind and work-conserving.
 pub struct FairQueuing {
     /// Class that gets the next opportunity.
     ptr: usize,
 }
 
 impl FairQueuing {
+    /// Start with the interactive class holding the first turn.
     pub fn new() -> Self {
         FairQueuing { ptr: 0 }
     }

@@ -32,10 +32,12 @@ pub struct AllocCtx {
 }
 
 impl AllocCtx {
+    /// Estimated cost of `class`'s ordered head (`None` = empty queue).
     pub fn head(&self, class: Class) -> Option<f64> {
         self.head_cost[class.index()]
     }
 
+    /// Whether any class has queued work.
     pub fn any_backlog(&self) -> bool {
         self.head_cost.iter().any(Option::is_some)
     }
@@ -50,6 +52,7 @@ pub trait Allocator {
     /// Account a completed send of `cost` estimated tokens.
     fn on_send(&mut self, class: Class, cost: f64);
 
+    /// Stable policy name (CSV/report label).
     fn name(&self) -> &'static str;
 
     /// Quota-style allocators constrain per-class concurrency; DRR-style

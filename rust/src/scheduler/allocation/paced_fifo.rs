@@ -13,6 +13,7 @@ use crate::core::Class;
 pub struct PacedFifo;
 
 impl PacedFifo {
+    /// Construct the (stateless) policy.
     pub fn new() -> Self {
         PacedFifo
     }

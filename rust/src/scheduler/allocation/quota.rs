@@ -6,6 +6,7 @@
 use super::{AllocCtx, Allocator};
 use crate::core::Class;
 
+/// Fixed per-class in-flight quota allocator (no borrowing).
 pub struct QuotaTiered {
     quota: [usize; 2],
 }

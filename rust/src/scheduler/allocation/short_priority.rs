@@ -6,9 +6,11 @@
 use super::{AllocCtx, Allocator};
 use crate::core::Class;
 
+/// Strict interactive-first allocator (stateless).
 pub struct ShortPriority;
 
 impl ShortPriority {
+    /// Construct the (stateless) policy.
     pub fn new() -> Self {
         ShortPriority
     }

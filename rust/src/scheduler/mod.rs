@@ -12,6 +12,8 @@
 //! no per-event allocations (queues are slab-backed, ordering selection is
 //! a single pass, and removal is O(1) by id).
 
+#![warn(missing_docs)]
+
 pub mod allocation;
 pub mod ordering;
 pub mod overload;
@@ -67,6 +69,7 @@ impl StrategyKind {
         StrategyKind::PlainDrr,
     ];
 
+    /// Stable CLI/CSV name (`bbsched run --strategy <name>`).
     pub fn name(self) -> &'static str {
         match self {
             StrategyKind::DirectNaive => "direct_naive",
@@ -80,6 +83,7 @@ impl StrategyKind {
         }
     }
 
+    /// Parse a CLI name (long form or shorthand) back into a strategy.
     pub fn parse(s: &str) -> Option<StrategyKind> {
         match s {
             "direct_naive" | "naive" => Some(StrategyKind::DirectNaive),
@@ -98,9 +102,14 @@ impl StrategyKind {
 /// Intra-class ordering choice (the paper's design + ablations).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OrderingKind {
+    /// The paper's design: release the candidate whose admission leaves the
+    /// feasible set (requests that can still meet their deadlines) largest.
     FeasibleSet,
+    /// Arrival order — the ablation baseline.
     Fifo,
+    /// Shortest job first by prior p50 cost.
     Sjf,
+    /// Earliest deadline first.
     Edf,
 }
 
@@ -119,6 +128,7 @@ impl OrderingKind {
         }
     }
 
+    /// Stable CLI/CSV name.
     pub fn name(self) -> &'static str {
         match self {
             OrderingKind::FeasibleSet => "feasible_set",
@@ -128,6 +138,7 @@ impl OrderingKind {
         }
     }
 
+    /// Parse a CLI name back into an ordering.
     pub fn parse(s: &str) -> Option<OrderingKind> {
         match s {
             "feasible_set" => Some(OrderingKind::FeasibleSet),
@@ -142,6 +153,7 @@ impl OrderingKind {
 /// Full scheduler configuration.
 #[derive(Debug, Clone)]
 pub struct SchedulerCfg {
+    /// Which named strategy this configuration composes.
     pub strategy: StrategyKind,
     /// Client's global in-flight budget (its own pacing target; the
     /// provider's true concurrency is unknown to it).
@@ -151,11 +163,15 @@ pub struct SchedulerCfg {
     /// for them rather than park them behind heavy work ("protected
     /// share"). Quota-tiered ignores this (strict isolation).
     pub interactive_bypass: usize,
+    /// Deficit round-robin allocation parameters.
     pub drr: DrrCfg,
+    /// Feasible-set ordering parameters (score weights).
     pub ordering: OrderingCfg,
+    /// Overload-control parameters (cost ladder thresholds, defer backoff).
     pub overload: OverloadCfg,
-    /// Quota split for `QuotaTiered` (interactive, heavy).
+    /// `QuotaTiered` in-flight quota for the interactive class.
     pub quota_interactive: usize,
+    /// `QuotaTiered` in-flight quota for the heavy class.
     pub quota_heavy: usize,
     /// Heavy-class ordering (interactive is always FIFO, matching §3.1:
     /// the feasible-set rule is specified "for the heavy class").
@@ -167,6 +183,8 @@ pub struct SchedulerCfg {
 }
 
 impl SchedulerCfg {
+    /// The paper's default configuration for `strategy`: overload control
+    /// enabled only for the full stack, everything else at §4 defaults.
     pub fn for_strategy(strategy: StrategyKind) -> Self {
         let overload = match strategy {
             StrategyKind::FinalAdrrOlc => OverloadCfg::default(),
@@ -204,9 +222,14 @@ pub enum Action {
 /// Aggregate policy-side statistics for a run.
 #[derive(Debug, Clone, Default)]
 pub struct SchedStats {
+    /// Completed sends observed by the scheduler (the driver counts raw
+    /// sends separately).
     pub sends: u64,
+    /// Total defer decisions issued by the overload controller.
     pub defers: u64,
+    /// Total reject decisions issued by the overload controller.
     pub rejects: u64,
+    /// Releases where the chosen candidate shrank the feasible set.
     pub feasibility_violations: u64,
 }
 
@@ -224,6 +247,7 @@ pub struct ClientScheduler {
 }
 
 impl ClientScheduler {
+    /// Compose the layers named by `cfg.strategy`.
     pub fn new(cfg: SchedulerCfg) -> Self {
         let allocator: Option<Box<dyn Allocator>> = match cfg.strategy {
             StrategyKind::DirectNaive => None,
@@ -260,22 +284,27 @@ impl ClientScheduler {
         }
     }
 
+    /// The configuration this scheduler was built from.
     pub fn cfg(&self) -> &SchedulerCfg {
         &self.cfg
     }
 
+    /// Client-observable API state (in-flight set, latency signals).
     pub fn state(&self) -> &ApiState {
         &self.state
     }
 
+    /// The overload controller (severity and defer/reject counters).
     pub fn controller(&self) -> &OverloadController {
         &self.controller
     }
 
+    /// Requests currently queued client-side (both classes).
     pub fn queued(&self) -> usize {
         self.queues.total_len()
     }
 
+    /// Requests parked in deferral backoff awaiting their retry event.
     pub fn deferred_count(&self) -> usize {
         self.deferred.len()
     }

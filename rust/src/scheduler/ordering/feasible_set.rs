@@ -52,10 +52,14 @@ use crate::core::ReqId;
 use crate::scheduler::queues::{QueueView, SchedRequest};
 use std::collections::{BTreeSet, HashMap};
 
+/// Feasible-set score weights and the client-side service-time belief.
 #[derive(Debug, Clone)]
 pub struct OrderingCfg {
+    /// Weight of the normalized-wait term (favors older requests).
     pub w_wait: f64,
+    /// Weight of the size penalty (favors smaller jobs).
     pub w_size: f64,
+    /// Weight of the deadline-urgency term.
     pub w_urgency: f64,
     /// Normalizing token reference for the size term.
     pub ref_tokens: f64,
@@ -63,6 +67,7 @@ pub struct OrderingCfg {
     /// feasibility estimate; learned constants would also work — kept
     /// explicit so the feasibility rule is auditable).
     pub est_base_ms: f64,
+    /// Per-token slope of the same service-time belief.
     pub est_per_token_ms: f64,
     /// Safety multiplier on the estimate (provider congestion headroom).
     pub est_slack_factor: f64,
@@ -121,6 +126,8 @@ struct Group {
     len: [usize; 2],
 }
 
+/// The slowdown-aware feasible-set ordering with its incremental
+/// group/phase candidate index (see the module docs).
 pub struct FeasibleSet {
     cfg: OrderingCfg,
     violations: u64,
@@ -147,6 +154,7 @@ pub struct FeasibleSet {
 }
 
 impl FeasibleSet {
+    /// An empty index with the given weights.
     pub fn new(cfg: OrderingCfg) -> Self {
         // The index leans on score monotonicity in `now`; negative wait or
         // urgency weights would break it (and were never meaningful).

@@ -49,7 +49,11 @@ const NO_SEQ: u64 = u64::MAX;
 /// Intra-class sequencing policy: pick the id of the next request to
 /// release from `queue` (None iff empty).
 pub trait Ordering {
+    /// Pick the next release from `queue` at event time `now`, answering
+    /// from the policy's incremental index (`None` iff the queue is empty).
     fn select(&mut self, queue: QueueView<'_>, now: f64) -> Option<ReqId>;
+
+    /// Stable policy name (CSV/report label).
     fn name(&self) -> &'static str;
 
     /// The retained O(depth) reference scan — the semantic spec that
@@ -154,6 +158,7 @@ pub struct Sjf {
 }
 
 impl Sjf {
+    /// An empty SJF index.
     pub fn new() -> Sjf {
         Sjf::default()
     }
@@ -223,6 +228,7 @@ pub struct Edf {
 }
 
 impl Edf {
+    /// An empty EDF index.
     pub fn new() -> Edf {
         Edf::default()
     }

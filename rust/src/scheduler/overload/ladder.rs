@@ -13,8 +13,14 @@ use crate::core::TokenBucket;
 /// Admission decision for one candidate release.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum OverloadDecision {
+    /// Release now.
     Admit,
-    Defer { delay_ms: f64 },
+    /// Hold the candidate and retry after `delay_ms` (exponential backoff).
+    Defer {
+        /// How long to hold before the next admission attempt.
+        delay_ms: f64,
+    },
+    /// Shed the request outright (counts against goodput, not timeouts).
     Reject,
 }
 
@@ -35,6 +41,8 @@ pub enum BucketPolicy {
 }
 
 impl BucketPolicy {
+    /// Shedding weight ∈ {0, 1, 2} for a bucket belief (`None` = neutral
+    /// lane, weight 1).
     pub fn weight(self, bucket: Option<TokenBucket>) -> u8 {
         let Some(bucket) = bucket else {
             return 1; // neutral lane: uniform admission severity
@@ -61,6 +69,7 @@ impl BucketPolicy {
         }
     }
 
+    /// Stable CLI/CSV name.
     pub fn name(self) -> &'static str {
         match self {
             BucketPolicy::CostLadder => "cost_ladder",
@@ -70,6 +79,7 @@ impl BucketPolicy {
         }
     }
 
+    /// Parse a [`BucketPolicy::name`] (plus short aliases).
     pub fn parse(s: &str) -> Option<BucketPolicy> {
         match s {
             "cost_ladder" | "ladder" => Some(BucketPolicy::CostLadder),
@@ -80,6 +90,7 @@ impl BucketPolicy {
         }
     }
 
+    /// Every policy, in report order.
     pub const ALL: [BucketPolicy; 4] = [
         BucketPolicy::CostLadder,
         BucketPolicy::UniformMild,

@@ -16,16 +16,25 @@ use crate::scheduler::queues::SchedRequest;
 /// bucket weights medium=0, long=1, xlong=2; shorts never rejected.
 #[derive(Debug, Clone)]
 pub struct OverloadCfg {
+    /// Master switch; disabled = admit everything (timeout-only baseline).
     pub enabled: bool,
+    /// Severity weight on provider load (observable in-flight fraction).
     pub w_load: f64,
+    /// Severity weight on queue pressure (queued estimated tokens).
     pub w_queue: f64,
+    /// Severity weight on the tail latency/deadline ratio.
     pub w_tail: f64,
+    /// Severity at which deferrable buckets start deferring.
     pub t_defer: f64,
+    /// Severity at which weight-2 (xlong) buckets are rejected.
     pub t_reject_xlong: f64,
+    /// Severity at which weight-1 (long) buckets are rejected.
     pub t_reject_long: f64,
+    /// How bucket beliefs map to shedding weights.
     pub bucket_policy: BucketPolicy,
     /// Base deferral backoff; doubles per attempt up to `defer_cap_ms`.
     pub defer_base_ms: f64,
+    /// Upper bound on the exponential deferral backoff.
     pub defer_cap_ms: f64,
     /// Queue-pressure normalization (estimated queued tokens at pressure 1).
     pub queue_budget_tokens: f64,
@@ -53,6 +62,7 @@ impl Default for OverloadCfg {
 }
 
 impl OverloadCfg {
+    /// Controller off: every candidate is admitted (ablation baseline).
     pub fn disabled() -> Self {
         OverloadCfg { enabled: false, ..Default::default() }
     }
@@ -73,14 +83,16 @@ impl OverloadCfg {
 /// (severity, bucket belief) through the bucket policy.
 pub struct OverloadController {
     cfg: OverloadCfg,
-    /// Action counters by *true-at-decision* belief bucket index (4 = no
-    /// belief / neutral lane).
+    /// Defer counters by *belief-at-decision* bucket index (4 = no belief /
+    /// neutral lane).
     pub defers_by_bucket: [u64; 5],
+    /// Reject counters, same indexing as `defers_by_bucket`.
     pub rejects_by_bucket: [u64; 5],
     last_severity: f64,
 }
 
 impl OverloadController {
+    /// A controller for `cfg` with zeroed action counters.
     pub fn new(cfg: OverloadCfg) -> Self {
         OverloadController {
             cfg,
@@ -90,6 +102,7 @@ impl OverloadController {
         }
     }
 
+    /// The active configuration.
     pub fn cfg(&self) -> &OverloadCfg {
         &self.cfg
     }
@@ -115,6 +128,7 @@ impl OverloadController {
             / (c.w_load + c.w_queue + c.w_tail)
     }
 
+    /// The most recent severity recorded via [`OverloadController::severity`].
     pub fn last_severity(&self) -> f64 {
         self.last_severity
     }
@@ -145,10 +159,12 @@ impl OverloadController {
         decision
     }
 
+    /// Deferrals issued so far, summed over buckets.
     pub fn total_defers(&self) -> u64 {
         self.defers_by_bucket.iter().sum()
     }
 
+    /// Rejections issued so far, summed over buckets.
     pub fn total_rejects(&self) -> u64 {
         self.rejects_by_bucket.iter().sum()
     }

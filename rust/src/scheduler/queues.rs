@@ -19,16 +19,22 @@ const NIL: u32 = u32::MAX;
 /// The scheduler's view of one pending request (no hidden fields).
 #[derive(Debug, Clone)]
 pub struct SchedRequest {
+    /// Stable request id (dense per run — the request table index).
     pub id: ReqId,
+    /// Arrival time (model ms).
     pub arrival_ms: f64,
+    /// Absolute deadline (model ms).
     pub deadline_ms: f64,
+    /// Policy-facing cost priors (p50/p90 output-token estimates).
     pub priors: Priors,
+    /// Predictor route: the class and bucket this request was filed under.
     pub route: Route,
     /// Number of times overload control has deferred this request.
     pub defer_attempts: u32,
 }
 
 impl SchedRequest {
+    /// The class queue this request is routed to.
     pub fn class(&self) -> Class {
         self.route.class
     }
@@ -56,11 +62,12 @@ pub struct ClassQueues {
     index: Vec<u32>,
     /// Running sum of queued p50 estimates — the queue-pressure signal is
     /// read once per pump iteration, so it is maintained incrementally
-    /// instead of rescanned (EXPERIMENTS.md §Perf opt 2).
+    /// instead of rescanned.
     queued_tokens: f64,
 }
 
 impl ClassQueues {
+    /// Empty queues with no reserved slots.
     pub fn new() -> Self {
         ClassQueues {
             slots: Vec::new(),
@@ -255,14 +262,17 @@ impl ClassQueues {
         QueueView { queues: self, class }
     }
 
+    /// Queued request count of one class. O(1).
     pub fn len(&self, class: Class) -> usize {
         self.len[class.index()]
     }
 
+    /// Queued request count across both classes. O(1).
     pub fn total_len(&self) -> usize {
         self.len[0] + self.len[1]
     }
 
+    /// Whether both class queues are empty.
     pub fn is_empty(&self) -> bool {
         self.total_len() == 0
     }
@@ -348,18 +358,22 @@ pub struct QueueView<'a> {
 }
 
 impl<'a> QueueView<'a> {
+    /// Iterate the viewed class in FIFO (arrival) order.
     pub fn iter(&self) -> QueueIter<'a> {
         self.queues.iter(self.class)
     }
 
+    /// Oldest request of the viewed class.
     pub fn head(&self) -> Option<&'a SchedRequest> {
         self.queues.head(self.class)
     }
 
+    /// Queued request count of the viewed class. O(1).
     pub fn len(&self) -> usize {
         self.queues.len(self.class)
     }
 
+    /// Whether the viewed class queue is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -35,15 +35,20 @@ const TAIL_ALPHA: f64 = 0.15;
 /// Shard-selection policy (client-side).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardPolicy {
+    /// Argmin of the client's own per-shard in-flight count.
     LeastInflight,
+    /// Argmin of `(inflight+1)/weight` — capacity-aware least-inflight.
     Weighted,
+    /// Deterministic hash of the request id; load-blind but sticky.
     HashAffinity,
 }
 
 impl ShardPolicy {
+    /// Every policy, in CLI/report order.
     pub const ALL: [ShardPolicy; 3] =
         [ShardPolicy::LeastInflight, ShardPolicy::Weighted, ShardPolicy::HashAffinity];
 
+    /// Stable CLI/CSV name (`--shard-policy <name>`).
     pub fn name(self) -> &'static str {
         match self {
             ShardPolicy::LeastInflight => "least_inflight",
@@ -52,6 +57,7 @@ impl ShardPolicy {
         }
     }
 
+    /// Parse a [`ShardPolicy::name`] (plus short aliases).
     pub fn parse(s: &str) -> Option<ShardPolicy> {
         match s {
             "least_inflight" | "lif" => Some(ShardPolicy::LeastInflight),
@@ -67,6 +73,7 @@ impl ShardPolicy {
 pub struct ShardCfg {
     /// Endpoint count. 1 = the classic single-provider setup.
     pub n: usize,
+    /// How releases are routed across the fleet.
     pub policy: ShardPolicy,
     /// Advertised relative capacity per shard (used by `Weighted`); empty
     /// means uniform. Length must be `n` when non-empty.
@@ -74,10 +81,13 @@ pub struct ShardCfg {
 }
 
 impl ShardCfg {
+    /// The classic single-endpoint setup (no routing decision to make).
     pub fn single() -> ShardCfg {
         ShardCfg { n: 1, policy: ShardPolicy::LeastInflight, weights: Vec::new() }
     }
 
+    /// A fleet of `n` shards routed by `policy`; `weights` may be empty
+    /// (uniform) or one advertised capacity per shard.
     pub fn new(n: usize, policy: ShardPolicy, weights: Vec<f64>) -> ShardCfg {
         assert!(n >= 1, "need at least one shard");
         assert!(weights.is_empty() || weights.len() == n, "weights must match shard count");
@@ -118,6 +128,7 @@ pub struct ShardSelector {
 }
 
 impl ShardSelector {
+    /// A selector for `cfg` with all shards idle and no tail evidence.
     pub fn new(cfg: ShardCfg) -> ShardSelector {
         assert!(cfg.n >= 1, "need at least one shard");
         assert!(
@@ -132,10 +143,12 @@ impl ShardSelector {
         }
     }
 
+    /// Number of shards in the fleet.
     pub fn n_shards(&self) -> usize {
         self.cfg.n
     }
 
+    /// Client-side in-flight count currently attributed to `shard`.
     pub fn inflight(&self, shard: usize) -> usize {
         self.inflight[shard]
     }

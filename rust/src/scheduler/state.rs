@@ -42,6 +42,7 @@ struct InflightEntry {
 }
 
 impl ApiState {
+    /// Fresh state: nothing in flight, no latency evidence yet.
     pub fn new() -> Self {
         ApiState {
             inflight: HashMap::new(),
@@ -53,6 +54,8 @@ impl ApiState {
         }
     }
 
+    /// Record a submission: `id` enters the in-flight set with its class
+    /// and estimated token cost.
     pub fn on_send(&mut self, id: ReqId, class: Class, est_tokens: f64, now: f64) {
         let prev = self
             .inflight
@@ -92,26 +95,32 @@ impl ApiState {
         Some(entry.class)
     }
 
+    /// Requests currently in flight.
     pub fn inflight(&self) -> usize {
         self.inflight.len()
     }
 
+    /// Requests of `class` currently in flight.
     pub fn inflight_class(&self, class: Class) -> usize {
         self.inflight_by_class[class.index()]
     }
 
+    /// Sum of p50 token estimates currently in flight (load signal).
     pub fn inflight_tokens(&self) -> f64 {
         self.inflight_tokens
     }
 
+    /// Whether `id` is currently in flight.
     pub fn is_inflight(&self, id: ReqId) -> bool {
         self.inflight.contains_key(&id)
     }
 
+    /// Submission time of an in-flight request.
     pub fn sent_ms(&self, id: ReqId) -> Option<f64> {
         self.inflight.get(&id).map(|e| e.sent_ms)
     }
 
+    /// Completions observed so far.
     pub fn completions(&self) -> u64 {
         self.completions
     }

@@ -54,8 +54,11 @@ pub struct RunDiagnostics {
     pub events_skipped: u64,
     /// Timers canceled because their request reached a terminal state.
     pub timers_canceled: u64,
+    /// Completed submissions to the provider (fleet-wide).
     pub sends: u64,
+    /// Peak hidden provider-side queue depth (total across shards).
     pub peak_provider_queue: usize,
+    /// Largest per-client in-flight count observed.
     pub peak_inflight: usize,
     /// Requests started per provider shard (`vec![n_started]` for the
     /// classic single-endpoint runs) — the fleet balance signal.
@@ -77,8 +80,11 @@ pub struct RunDiagnostics {
 
 /// Outcome bundle of one simulated run.
 pub struct RunOutput {
+    /// Aggregate metrics (the CSV row).
     pub metrics: RunMetrics,
+    /// Per-request terminal states and latencies.
     pub outcomes: Vec<RequestOutcome>,
+    /// Engine-level diagnostics beyond the metrics.
     pub diagnostics: RunDiagnostics,
 }
 
@@ -389,21 +395,27 @@ pub fn run_pool(
 /// analytic prior source internally.
 #[derive(Debug, Clone)]
 pub struct TenantSpec {
+    /// The tenant's own arrival stream.
     pub workload: WorkloadSpec,
+    /// The tenant's scheduler stack (including shard policy).
     pub sched: SchedulerCfg,
+    /// Information condition for the tenant's prior source.
     pub info: InfoLevel,
 }
 
 /// One tenant's slice of a multi-tenant run.
 pub struct TenantOutput {
+    /// The tenant's own aggregate metrics.
     pub metrics: RunMetrics,
     /// Outcome ids are *global* (offset by the preceding tenants' counts).
     pub outcomes: Vec<RequestOutcome>,
+    /// Submissions this tenant completed.
     pub sends: u64,
 }
 
 /// Outcome bundle of one multi-tenant run.
 pub struct MultiRunOutput {
+    /// Per-tenant slices, in spec order.
     pub tenants: Vec<TenantOutput>,
     /// Engine-level diagnostics for the whole run. `peak_inflight` is the
     /// max over tenants of a tenant's own in-flight count (each client
@@ -445,6 +457,35 @@ pub fn split_requests(total: usize, tenants: usize) -> Vec<usize> {
 /// pool — and therefore all cross-tenant interference — is shared. The
 /// provider stream is the same `derive("provider")` stream `run_pool`
 /// uses, so the fleet physics are identical across tenant counts.
+///
+/// # Example
+///
+/// Two tenants with different strategies contending on a 2-shard fleet:
+///
+/// ```
+/// use blackbox_sched::predictor::InfoLevel;
+/// use blackbox_sched::provider::pool::PoolCfg;
+/// use blackbox_sched::provider::ProviderCfg;
+/// use blackbox_sched::scheduler::{SchedulerCfg, StrategyKind};
+/// use blackbox_sched::sim::driver::{run_tenants, TenantSpec};
+/// use blackbox_sched::workload::{Mix, WorkloadSpec};
+///
+/// let spec = |strategy| TenantSpec {
+///     workload: WorkloadSpec::new(Mix::Balanced, 30, 6.0),
+///     sched: SchedulerCfg::for_strategy(strategy),
+///     info: InfoLevel::Coarse,
+/// };
+/// let pool = PoolCfg::split(ProviderCfg::default(), 2);
+/// let out = run_tenants(
+///     &[spec(StrategyKind::FinalAdrrOlc), spec(StrategyKind::DirectNaive)],
+///     &pool,
+///     7,
+/// );
+/// assert_eq!(out.tenants.len(), 2);
+/// let offered: usize = out.tenants.iter().map(|t| t.metrics.n_offered).sum();
+/// assert_eq!(offered, 60, "every tenant's workload is offered");
+/// assert_eq!(out.diagnostics.started_by_shard.len(), 2);
+/// ```
 pub fn run_tenants(tenants: &[TenantSpec], pool_cfg: &PoolCfg, seed: u64) -> MultiRunOutput {
     assert!(!tenants.is_empty(), "need at least one tenant");
     let mut all_requests: Vec<Request> = Vec::new();

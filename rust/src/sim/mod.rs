@@ -1,27 +1,45 @@
 //! Discrete-event simulation engine.
 //!
-//! A binary-heap event queue keyed by (time, sequence) — the sequence number
+//! The future-event list is keyed by (time, sequence) — the sequence number
 //! makes tie-breaking deterministic, which the five-seed reproducibility of
 //! every paper table depends on. The engine is generic over the event
-//! payload; the experiment driver (`experiments::driver`) owns the handler
-//! loop.
+//! payload; the simulation driver ([`driver`]) owns the handler loop.
+//!
+//! Two interchangeable backends sit behind the [`EventQueue`] API:
+//!
+//! * **Hierarchical timer wheel** ([`wheel`], the default): tick-quantized
+//!   levels with O(1) schedule/cancel and cascading overflow — the timer
+//!   churn of millions of timeout/retry timers costs constant work per
+//!   operation instead of the heap's O(log n). Pop order is *exactly* the
+//!   reference heap's `(time, seq)` order (see `wheel` for the invariant).
+//! * **Binary heap** (the retained reference): the original
+//!   `BinaryHeap<(time, seq)>` implementation, selected with
+//!   `BBSCHED_EVENT_QUEUE=heap` or [`EventQueue::with_backend`]. Debug
+//!   builds of the wheel cross-check every pop against a shadow copy of
+//!   this heap (the same discipline as the ordering indexes'
+//!   `reference_select`), and `tests/event_queue_wheel.rs` property-tests
+//!   the equivalence in release mode.
 //!
 //! Entries come in two flavors: plain events ([`EventQueue::push`]) and
 //! cancelable timers ([`EventQueue::push_cancelable`]), which return a
 //! generation-stamped [`TimerId`]. Canceling is O(1) lazy deletion: the
-//! slot's generation is bumped and the stale heap entry is discarded when
-//! it surfaces at the head, without ever invoking the handler or counting
+//! slot's generation is bumped and the stale entry is discarded when it
+//! surfaces at the head, without ever invoking the handler or counting
 //! toward [`EventQueue::processed`]. At million-request scale this keeps
-//! the heap from carrying one dead `Timeout` entry per completed request.
+//! the queue from carrying one dead `Timeout` entry per completed request.
+#![warn(missing_docs)]
 
 pub mod driver;
+mod wheel;
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use wheel::TimerWheel;
+
 const NIL: u32 = u32::MAX;
 
-/// Handle to a cancelable heap entry. Generation-stamped: once the entry
+/// Handle to a cancelable queue entry. Generation-stamped: once the entry
 /// fires or is canceled, the slot's generation advances and this id becomes
 /// inert (a late [`EventQueue::cancel`] returns `false` instead of
 /// corrupting a reused slot).
@@ -31,7 +49,7 @@ pub struct TimerId {
     gen: u32,
 }
 
-/// Heap entry: min-ordered by (time, seq).
+/// Queue entry: min-ordered by (time, seq).
 struct Entry<E> {
     time: f64,
     seq: u64,
@@ -63,40 +81,137 @@ impl<E> Ord for Entry<E> {
     }
 }
 
+/// Which future-event-list implementation an [`EventQueue`] runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Hierarchical timer wheel (the default): O(1) schedule/cancel.
+    Wheel,
+    /// The retained `BinaryHeap` reference implementation.
+    Heap,
+}
+
+enum Backend<E> {
+    Wheel(TimerWheel<E>),
+    Heap(BinaryHeap<Entry<E>>),
+}
+
+/// The process-wide default backend: the wheel, unless the reference mode
+/// flag `BBSCHED_EVENT_QUEUE=heap` is set in the environment.
+fn default_backend() -> BackendKind {
+    match std::env::var("BBSCHED_EVENT_QUEUE") {
+        Ok(v) if v == "heap" => BackendKind::Heap,
+        _ => BackendKind::Wheel,
+    }
+}
+
 /// Deterministic future-event list.
+///
+/// # Examples
+///
+/// Cancelable timers — the driver's timeout pattern: schedule a hard
+/// timeout per request, kill it in O(1) when the request completes first.
+///
+/// ```
+/// use blackbox_sched::sim::EventQueue;
+///
+/// let mut q = EventQueue::new();
+/// q.push(3.0, "completion");
+/// let timeout = q.push_cancelable(30_000.0, "timeout");
+/// assert_eq!(q.peek_time(), Some(3.0));
+///
+/// // The completion arrives first: cancel the now-moot timeout timer.
+/// assert!(q.cancel(timeout));
+/// assert!(!q.cancel(timeout), "second cancel is a no-op");
+///
+/// assert_eq!(q.pop(), Some((3.0, "completion")));
+/// assert_eq!(q.pop(), None, "the canceled timer never fires");
+/// assert_eq!(q.processed(), 1);
+/// assert_eq!(q.skipped(), 1, "the dead timer was discarded, not processed");
+/// ```
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    backend: Backend<E>,
     next_seq: u64,
     popped: u64,
     skipped: u64,
+    /// Facade-level operation count (pushes + pops + skips): the heap
+    /// backend's "structural work" stand-in, so [`EventQueue::work`] is
+    /// meaningful on either backend.
+    ops: u64,
     /// Current generation per timer slot; an entry is live iff its stamped
     /// generation matches.
     gens: Vec<u32>,
     /// Retired timer slots available for reuse.
     free: Vec<u32>,
+    /// Pop-for-pop cross-check against the reference heap (wheel backend,
+    /// debug builds only) — mirrors the PR 5 `reference_select` pattern.
+    #[cfg(debug_assertions)]
+    mirror: Option<BinaryHeap<Entry<()>>>,
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue on the process default backend (the wheel, unless
+    /// `BBSCHED_EVENT_QUEUE=heap` selects the reference heap).
     pub fn new() -> Self {
+        Self::with_backend(default_backend())
+    }
+
+    /// An empty queue on an explicitly chosen backend — the reference heap
+    /// for cross-checking, or the wheel regardless of the environment.
+    pub fn with_backend(kind: BackendKind) -> Self {
+        let backend = match kind {
+            BackendKind::Wheel => Backend::Wheel(TimerWheel::new()),
+            BackendKind::Heap => Backend::Heap(BinaryHeap::new()),
+        };
         EventQueue {
-            heap: BinaryHeap::new(),
+            #[cfg(debug_assertions)]
+            mirror: match &backend {
+                Backend::Wheel(_) => Some(BinaryHeap::new()),
+                Backend::Heap(_) => None,
+            },
+            backend,
             next_seq: 0,
             popped: 0,
             skipped: 0,
+            ops: 0,
             gens: Vec::new(),
             free: Vec::new(),
         }
     }
 
+    /// An empty queue sized for `cap` entries. The heap backend reserves
+    /// eagerly; the wheel's slot vectors grow organically (its entries are
+    /// spread across 384 slots, so one up-front reservation has no home).
     pub fn with_capacity(cap: usize) -> Self {
-        EventQueue { heap: BinaryHeap::with_capacity(cap), ..EventQueue::new() }
+        let mut q = Self::new();
+        if let Backend::Heap(h) = &mut q.backend {
+            h.reserve(cap);
+        }
+        q
+    }
+
+    /// Which backend this queue runs on.
+    pub fn backend(&self) -> BackendKind {
+        match self.backend {
+            Backend::Wheel(_) => BackendKind::Wheel,
+            Backend::Heap(_) => BackendKind::Heap,
+        }
     }
 
     /// Schedule `payload` at absolute time `t` (ms).
     pub fn push(&mut self, t: f64, payload: E) {
         debug_assert!(t.is_finite(), "non-finite event time {t}");
-        self.heap.push(Entry { time: t, seq: self.next_seq, payload, timer: None });
+        let seq = self.next_seq;
         self.next_seq += 1;
+        self.ops += 1;
+        #[cfg(debug_assertions)]
+        if let Some(m) = &mut self.mirror {
+            m.push(Entry { time: t, seq, payload: (), timer: None });
+        }
+        let e = Entry { time: t, seq, payload, timer: None };
+        match &mut self.backend {
+            Backend::Wheel(w) => w.push(e),
+            Backend::Heap(h) => h.push(e),
+        }
     }
 
     /// Schedule a cancelable event at absolute time `t`; the returned
@@ -112,13 +227,23 @@ impl<E> EventQueue<E> {
             }
         };
         let id = TimerId { slot, gen: self.gens[slot as usize] };
-        self.heap.push(Entry { time: t, seq: self.next_seq, payload, timer: Some(id) });
+        let seq = self.next_seq;
         self.next_seq += 1;
+        self.ops += 1;
+        #[cfg(debug_assertions)]
+        if let Some(m) = &mut self.mirror {
+            m.push(Entry { time: t, seq, payload: (), timer: Some(id) });
+        }
+        let e = Entry { time: t, seq, payload, timer: Some(id) };
+        match &mut self.backend {
+            Backend::Wheel(w) => w.push(e),
+            Backend::Heap(h) => h.push(e),
+        }
         id
     }
 
     /// Cancel a pending cancelable event. Returns `true` if it was still
-    /// pending (it will now be silently discarded when it reaches the heap
+    /// pending (it will now be silently discarded when it reaches the queue
     /// head); `false` if it already fired or was already canceled.
     pub fn cancel(&mut self, id: TimerId) -> bool {
         let g = &mut self.gens[id.slot as usize];
@@ -131,21 +256,35 @@ impl<E> EventQueue<E> {
         }
     }
 
-    fn entry_live(gens: &[u32], e: &Entry<E>) -> bool {
+    fn entry_live<P>(gens: &[u32], e: &Entry<P>) -> bool {
         match e.timer {
             None => true,
             Some(t) => gens[t.slot as usize] == t.gen,
         }
     }
 
-    /// Discard canceled entries sitting at the heap head.
+    /// Discard canceled entries sitting at the queue head.
     fn drop_dead_head(&mut self) {
-        while let Some(e) = self.heap.peek() {
-            if Self::entry_live(&self.gens, e) {
-                break;
+        loop {
+            let live = match &mut self.backend {
+                Backend::Wheel(w) => match w.peek() {
+                    None => return,
+                    Some(e) => Self::entry_live(&self.gens, e),
+                },
+                Backend::Heap(h) => match h.peek() {
+                    None => return,
+                    Some(e) => Self::entry_live(&self.gens, e),
+                },
+            };
+            if live {
+                return;
             }
-            self.heap.pop();
+            match &mut self.backend {
+                Backend::Wheel(w) => w.pop(),
+                Backend::Heap(h) => h.pop(),
+            };
             self.skipped += 1;
+            self.ops += 1;
         }
     }
 
@@ -153,32 +292,67 @@ impl<E> EventQueue<E> {
     /// skipped without counting toward [`EventQueue::processed`].
     pub fn pop(&mut self) -> Option<(f64, E)> {
         self.drop_dead_head();
-        self.heap.pop().map(|e| {
-            if let Some(t) = e.timer {
-                // The timer fired: retire the slot so its id is inert and
-                // the slot can be reused by a future push_cancelable.
-                self.gens[t.slot as usize] = self.gens[t.slot as usize].wrapping_add(1);
-                self.free.push(t.slot);
+        let e = match &mut self.backend {
+            Backend::Wheel(w) => w.pop(),
+            Backend::Heap(h) => h.pop(),
+        }?;
+        #[cfg(debug_assertions)]
+        if let Some(m) = &mut self.mirror {
+            // Pop-for-pop cross-check: the reference heap must surface the
+            // same live (time, seq). Dead mirror entries are skipped
+            // against the same generation table — before the fired timer's
+            // slot is retired below.
+            loop {
+                let me = m.pop().expect("reference heap exhausted before the wheel");
+                if Self::entry_live(&self.gens, &me) {
+                    assert!(
+                        me.time.to_bits() == e.time.to_bits() && me.seq == e.seq,
+                        "wheel diverged from the reference heap: wheel popped (t={}, seq={}), \
+                         reference (t={}, seq={})",
+                        e.time,
+                        e.seq,
+                        me.time,
+                        me.seq
+                    );
+                    break;
+                }
             }
-            self.popped += 1;
-            (e.time, e.payload)
-        })
+        }
+        if let Some(t) = e.timer {
+            // The timer fired: retire the slot so its id is inert and
+            // the slot can be reused by a future push_cancelable.
+            self.gens[t.slot as usize] = self.gens[t.slot as usize].wrapping_add(1);
+            self.free.push(t.slot);
+        }
+        self.popped += 1;
+        self.ops += 1;
+        Some((e.time, e.payload))
     }
 
     /// Earliest live scheduled time without popping.
     pub fn peek_time(&mut self) -> Option<f64> {
         self.drop_dead_head();
-        self.heap.peek().map(|e| e.time)
+        match &mut self.backend {
+            Backend::Wheel(w) => w.peek().map(|e| e.time),
+            Backend::Heap(h) => h.peek().map(|e| e.time),
+        }
     }
 
-    /// Entries currently in the heap, including canceled timers that have
+    /// Entries currently in the queue, including canceled timers that have
     /// not yet surfaced at the head.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Wheel(w) => w.len(),
+            Backend::Heap(h) => h.len(),
+        }
     }
 
+    /// True when no entries (live or dead) remain.
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        match &self.backend {
+            Backend::Wheel(w) => w.is_empty(),
+            Backend::Heap(h) => h.is_empty(),
+        }
     }
 
     /// Total live events processed so far (engine throughput metric).
@@ -189,6 +363,18 @@ impl<E> EventQueue<E> {
     /// Canceled entries discarded at the head without being processed.
     pub fn skipped(&self) -> u64 {
         self.skipped
+    }
+
+    /// Counted structural work: on the wheel, placements + cascade moves +
+    /// clock jumps + due transfers + pops (the `bbsched bench` timer-churn
+    /// leg gates this per operation — O(1) amortized means the ratio stays
+    /// flat as the queue grows); on the reference heap, the plain operation
+    /// count, so the ratio is 1 by construction.
+    pub fn work(&self) -> u64 {
+        match &self.backend {
+            Backend::Wheel(w) => w.work(),
+            Backend::Heap(_) => self.ops,
+        }
     }
 }
 
@@ -280,6 +466,112 @@ mod tests {
         assert_eq!(q.peek_time(), Some(5.0));
         assert_eq!(q.pop(), Some((5.0, ())));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn same_tick_events_pop_by_exact_time_then_seq() {
+        // Sub-tick times inside one wheel tick, pushed out of order, plus
+        // exact ties: the (time, seq) contract must survive quantization.
+        let mut q = EventQueue::new();
+        q.push(4.9, "late");
+        q.push(4.1, "early");
+        q.push(4.5, "mid-a");
+        q.push(4.5, "mid-b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["early", "mid-a", "mid-b", "late"]);
+    }
+
+    #[test]
+    fn fifo_holds_across_the_tick_boundary() {
+        // Straddling a tick edge: 4.999... sorts before 5.0 even though
+        // they land one tick apart, and events pushed after a pop at the
+        // current tick still interleave by exact time.
+        let mut q = EventQueue::new();
+        q.push(5.0, "b");
+        q.push(4.999, "a");
+        q.push(5.001, "c");
+        assert_eq!(q.pop(), Some((4.999, "a")));
+        q.push(5.0005, "b2"); // same tick as the current head, later time
+        assert_eq!(q.pop(), Some((5.0, "b")));
+        assert_eq!(q.pop(), Some((5.0005, "b2")));
+        assert_eq!(q.pop(), Some((5.001, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn cascade_preserves_order_and_cancelation() {
+        // 65 and 70 share a level-1 slot from tick 0; popping 65 forces the
+        // cascade that re-files 70 at level 0. Canceling it *after* the
+        // cascade exercises lazy deletion on a cascaded entry.
+        let mut q = EventQueue::new();
+        let t = q.push_cancelable(70.0, "timer");
+        q.push(65.0, "a");
+        q.push(68.0, "b");
+        assert_eq!(q.pop(), Some((65.0, "a")));
+        assert!(q.cancel(t), "cancelable after cascading down a level");
+        assert_eq!(q.pop(), Some((68.0, "b")));
+        assert_eq!(q.pop(), None, "canceled cascaded timer never fires");
+        assert_eq!(q.skipped(), 1);
+    }
+
+    #[test]
+    fn far_future_events_overflow_and_return() {
+        // Beyond the 2^36-tick wheel horizon: entries park in overflow and
+        // re-enter as the clock jumps; order and cancelation still hold.
+        let far = 80_000_000_000.0; // ~2.5 model-years in ms
+        let mut q = EventQueue::new();
+        q.push(far + 7.0, "far-b");
+        q.push(5.0, "near");
+        let t = q.push_cancelable(far + 3.0, "far-dead");
+        q.push(far + 1.0, "far-a");
+        assert_eq!(q.pop(), Some((5.0, "near")));
+        assert!(q.cancel(t));
+        assert_eq!(q.pop(), Some((far + 1.0, "far-a")));
+        assert_eq!(q.pop(), Some((far + 7.0, "far-b")));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.skipped(), 1);
+    }
+
+    #[test]
+    fn explicit_backends_agree_on_a_fixed_script() {
+        let mut wheel = EventQueue::with_backend(BackendKind::Wheel);
+        let mut heap = EventQueue::with_backend(BackendKind::Heap);
+        assert_eq!(wheel.backend(), BackendKind::Wheel);
+        assert_eq!(heap.backend(), BackendKind::Heap);
+        for q in [&mut wheel, &mut heap] {
+            q.push(10.0, 0);
+            let a = q.push_cancelable(4.0, 1);
+            q.push_cancelable(6.5, 2);
+            q.push(6.5, 3);
+            assert!(q.cancel(a));
+        }
+        loop {
+            let (w, h) = (wheel.pop(), heap.pop());
+            assert_eq!(w, h);
+            if w.is_none() {
+                break;
+            }
+        }
+        assert_eq!(wheel.processed(), heap.processed());
+        assert_eq!(wheel.skipped(), heap.skipped());
+    }
+
+    #[test]
+    fn work_counter_is_positive_and_deterministic() {
+        let run = || {
+            let mut q = EventQueue::with_backend(BackendKind::Wheel);
+            for i in 0..200u64 {
+                let t = q.push_cancelable((i * 7 % 311) as f64, i);
+                if i % 3 == 0 {
+                    q.cancel(t);
+                }
+            }
+            while q.pop().is_some() {}
+            q.work()
+        };
+        let w = run();
+        assert!(w > 0, "wheel work must be counted");
+        assert_eq!(w, run(), "counted work is deterministic");
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Hierarchical timer wheel — the default [`EventQueue`](super::EventQueue)
+//! backend.
+//!
+//! Six levels of 64 slots each, tick-quantized at [`TICK_MS`]: an entry at
+//! tick `T` lives at the level of the highest base-64 digit in which `T`
+//! differs from the current tick `cur`, in the slot named by that digit.
+//! Scheduling and canceling are O(1); advancing the clock jumps straight to
+//! the next occupied slot (per-level occupancy bitmaps + `trailing_zeros`),
+//! cascading higher-level slots down as their digits resolve. Entries more
+//! than `2^36` ticks out (~2 model-years) park in a time-ordered overflow
+//! heap and enter the wheel as the clock approaches.
+//!
+//! # Exact heap equivalence
+//!
+//! The wheel must be pop-for-pop identical to the retained `BinaryHeap`
+//! reference (`(time, seq)` min-order) — the determinism contract every
+//! experiment table rests on. The invariant that guarantees it: the `due`
+//! heap holds exactly the entries with `tick ≤ cur`, while wheel slots and
+//! the overflow heap hold only entries with `tick > cur`, and `cur` only
+//! advances while `due` is empty. Any due entry's time is therefore
+//! `< (cur+1)·TICK_MS ≤` any non-due entry's time, so the head of `due` —
+//! a true `(time, seq)` min-heap — is always the global minimum, for *any*
+//! interleaving of pushes and pops. Same-tick entries never lose their
+//! exact sub-tick times; they are compared by `(time, seq)` inside `due`
+//! exactly as the reference heap compares them.
+//!
+//! Structural work (placements, cascade moves, clock jumps, due transfers)
+//! is counted in [`TimerWheel::work`]; the `bbsched bench` timer-churn leg
+//! gates the count's growth per operation, so the O(1)-amortized claim is
+//! enforced rather than asserted.
+
+use std::collections::BinaryHeap;
+
+use super::Entry;
+
+/// Simulated milliseconds per wheel tick. 1 ms resolves every same-tick
+/// ordering through the `due` heap's exact `(time, seq)` comparison while
+/// keeping the six-level wheel horizon at ~2 model-years; the DES clock is
+/// in ms, so one tick is the natural quantum.
+pub(super) const TICK_MS: f64 = 1.0;
+/// log2 of the slots per level.
+const LEVEL_BITS: u32 = 6;
+/// Slots per wheel level.
+const SLOTS: usize = 1 << LEVEL_BITS;
+/// Wheel levels. Together they address `2^(LEVEL_BITS · LEVELS)` ticks.
+const LEVELS: usize = 6;
+/// Ticks addressable in-wheel; entries further out park in overflow.
+const HORIZON_BITS: u32 = LEVEL_BITS * LEVELS as u32;
+
+/// Quantize an event time to its wheel tick (saturating at 0 and u64::MAX).
+fn tick_of(t: f64) -> u64 {
+    (t.max(0.0) / TICK_MS) as u64
+}
+
+/// The wheel proper. Generic over the payload exactly like the facade; the
+/// facade owns sequence numbers, timer generations, and all counters except
+/// the structural-work count.
+pub(super) struct TimerWheel<E> {
+    /// Entries with `tick ≤ cur`: a `(time, seq)` min-heap whose head is the
+    /// queue's global minimum (see the module docs for the proof sketch).
+    due: BinaryHeap<Entry<E>>,
+    /// `slots[level * SLOTS + idx]` — unsorted; a slot is only ever emptied
+    /// whole (level 0: all same tick → `due`; higher: cascade down).
+    slots: Vec<Vec<Entry<E>>>,
+    /// Per-level occupancy bitmap (bit `idx` set ⇔ slot non-empty).
+    occupied: [u64; LEVELS],
+    /// Entries beyond the wheel horizon, time-ordered; drained into the
+    /// wheel as `cur` advances toward them.
+    overflow: BinaryHeap<Entry<E>>,
+    /// Current tick. Advances only while `due` is empty.
+    cur: u64,
+    /// Entries currently in wheel slots (excludes `due` and `overflow`).
+    in_slots: usize,
+    /// Cascade scratch buffer, kept to retain its allocation.
+    scratch: Vec<Entry<E>>,
+    /// Counted structural work: placements, cascade moves, clock jumps,
+    /// due transfers, pops. Deterministic — the timer-churn gate's metric.
+    work: u64,
+}
+
+impl<E> TimerWheel<E> {
+    pub(super) fn new() -> Self {
+        TimerWheel {
+            due: BinaryHeap::new(),
+            slots: (0..LEVELS * SLOTS).map(|_| Vec::new()).collect(),
+            occupied: [0; LEVELS],
+            overflow: BinaryHeap::new(),
+            cur: 0,
+            in_slots: 0,
+            scratch: Vec::new(),
+            work: 0,
+        }
+    }
+
+    pub(super) fn len(&self) -> usize {
+        self.due.len() + self.in_slots + self.overflow.len()
+    }
+
+    pub(super) fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub(super) fn work(&self) -> u64 {
+        self.work
+    }
+
+    /// Schedule an entry. O(1): one bitmap bit, one Vec push.
+    pub(super) fn push(&mut self, e: Entry<E>) {
+        self.work += 1;
+        let tick = tick_of(e.time);
+        if tick <= self.cur {
+            self.due.push(e);
+        } else if (tick ^ self.cur) >> HORIZON_BITS != 0 {
+            self.overflow.push(e);
+        } else {
+            self.place(tick, e);
+        }
+    }
+
+    /// Pop the `(time, seq)`-minimum entry, live or dead — liveness (timer
+    /// generations) is the facade's concern.
+    pub(super) fn pop(&mut self) -> Option<Entry<E>> {
+        self.ensure_due();
+        let e = self.due.pop();
+        if e.is_some() {
+            self.work += 1;
+        }
+        e
+    }
+
+    /// Peek the `(time, seq)`-minimum entry without removing it.
+    pub(super) fn peek(&mut self) -> Option<&Entry<E>> {
+        self.ensure_due();
+        self.due.peek()
+    }
+
+    /// File an entry with `tick > cur` into its wheel slot: the level of
+    /// the highest base-64 digit differing from `cur`, at that digit.
+    fn place(&mut self, tick: u64, e: Entry<E>) {
+        debug_assert!(tick > self.cur && (tick ^ self.cur) >> HORIZON_BITS == 0);
+        let diff = tick ^ self.cur;
+        let level = ((63 - diff.leading_zeros()) / LEVEL_BITS) as usize;
+        let idx = ((tick >> (LEVEL_BITS * level as u32)) & (SLOTS as u64 - 1)) as usize;
+        // Invariant: `tick > cur` with all higher digits equal ⇒ this digit
+        // exceeds cur's, so occupied bits always sit above the clock digit.
+        debug_assert!(idx as u64 > (self.cur >> (LEVEL_BITS * level as u32)) & (SLOTS as u64 - 1));
+        self.slots[level * SLOTS + idx].push(e);
+        self.occupied[level] |= 1u64 << idx;
+        self.in_slots += 1;
+    }
+
+    /// Establish "`due` is non-empty or the wheel is empty": drain overflow
+    /// entries the clock has reached, then repeatedly jump `cur` to the
+    /// earliest occupied slot, moving level-0 slots to `due` and cascading
+    /// higher slots down. Terminates: every iteration either returns, moves
+    /// an entry strictly closer to `due`, or advances `cur`.
+    fn ensure_due(&mut self) {
+        loop {
+            // Overflow first, every iteration: clock jumps below may have
+            // brought parked entries into range (or past). The overflow
+            // heap is time-ordered, so a prefix drain is complete.
+            while let Some(head) = self.overflow.peek() {
+                let tick = tick_of(head.time);
+                if tick > self.cur && (tick ^ self.cur) >> HORIZON_BITS != 0 {
+                    break;
+                }
+                let e = self.overflow.pop().expect("peeked entry");
+                self.work += 1;
+                if tick <= self.cur {
+                    self.due.push(e);
+                } else {
+                    self.place(tick, e);
+                }
+            }
+            if !self.due.is_empty() {
+                return;
+            }
+            // Bottom-up scan: the first occupied slot (lowest level, lowest
+            // index) is the globally earliest — after the drain above, all
+            // remaining overflow entries sort after every wheel entry, and
+            // the place() invariant keeps each level's bits above the clock
+            // digit, so lower levels always hold nearer ticks.
+            let mut advanced = false;
+            for level in 0..LEVELS {
+                if self.occupied[level] == 0 {
+                    continue;
+                }
+                let shift = LEVEL_BITS * level as u32;
+                let idx = self.occupied[level].trailing_zeros() as u64;
+                debug_assert!(idx > (self.cur >> shift) & (SLOTS as u64 - 1));
+                // Jump the clock to the slot's base tick: digits above this
+                // level unchanged, this digit = idx, lower digits zeroed
+                // (lower levels are empty — we scanned them first).
+                self.cur = (self.cur & !((1u64 << (shift + LEVEL_BITS)) - 1)) | (idx << shift);
+                self.occupied[level] &= !(1u64 << idx);
+                self.work += 1;
+                // Take the slot whole, swapping in the retained scratch
+                // allocation so cascade capacity circulates instead of
+                // being freed and regrown.
+                let si = level * SLOTS + idx as usize;
+                let mut batch = std::mem::take(&mut self.scratch);
+                std::mem::swap(&mut batch, &mut self.slots[si]);
+                self.in_slots -= batch.len();
+                for e in batch.drain(..) {
+                    self.work += 1;
+                    let tick = tick_of(e.time);
+                    if tick <= self.cur {
+                        // Level 0: every entry shares the slot's tick, which
+                        // is now `cur`. Higher levels: the slot-base entry.
+                        self.due.push(e);
+                    } else {
+                        // Cascade: this digit now matches `cur`, so the
+                        // entry re-files at a strictly lower level.
+                        self.place(tick, e);
+                    }
+                }
+                self.scratch = batch;
+                advanced = true;
+                break;
+            }
+            if !advanced {
+                // Wheel empty. Jump to the overflow head (strictly ahead of
+                // `cur` or the drain would have taken it) and let the next
+                // iteration's drain admit it — or report empty.
+                match self.overflow.peek() {
+                    Some(head) => {
+                        self.cur = tick_of(head.time);
+                        self.work += 1;
+                    }
+                    None => return,
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Backend-equivalence property tests for the event queue.
+//!
+//! The wheel-backed `EventQueue` must be **pop-for-pop identical** to the
+//! retained `BinaryHeap` reference on arbitrary interleavings of `push` /
+//! `push_cancelable` / `cancel` / `pop` — same `(time, seq)` stream, same
+//! `processed()` / `skipped()` counters. Debug builds already cross-check
+//! every pop against an internal shadow heap; these tests drive the two
+//! public backends side by side so the contract also holds in **release**
+//! mode, where the shadow (like every `debug_assert!`) is compiled out.
+
+use blackbox_sched::sim::{BackendKind, EventQueue, TimerId};
+use blackbox_sched::testing::prop::{self, Gen};
+
+/// Drive both backends through one identical randomized op script, with
+/// event times drawn by `time_of`. Asserts bit-identical pop streams,
+/// cancel results, peeks, and counters.
+fn exercise(g: &mut Gen, mut time_of: impl FnMut(&mut Gen, f64) -> f64) {
+    let mut wheel = EventQueue::with_backend(BackendKind::Wheel);
+    let mut heap = EventQueue::with_backend(BackendKind::Heap);
+    let mut wheel_ids: Vec<TimerId> = Vec::new();
+    let mut heap_ids: Vec<TimerId> = Vec::new();
+    let mut now = 0.0_f64;
+    let n_ops = g.usize_in(1, 200);
+    for tag in 0..n_ops {
+        match g.usize_in(0, 10) {
+            // Plain event.
+            0..=3 => {
+                let t = time_of(&mut *g, now);
+                wheel.push(t, tag);
+                heap.push(t, tag);
+            }
+            // Cancelable timer (ids recorded per queue — never shared).
+            4..=6 => {
+                let t = time_of(&mut *g, now);
+                wheel_ids.push(wheel.push_cancelable(t, tag));
+                heap_ids.push(heap.push_cancelable(t, tag));
+            }
+            // Cancel a random previously issued id — possibly one that
+            // already fired or was already canceled (must agree on false).
+            7..=8 => {
+                if !wheel_ids.is_empty() {
+                    let i = g.usize_in(0, wheel_ids.len());
+                    assert_eq!(wheel.cancel(wheel_ids[i]), heap.cancel(heap_ids[i]));
+                }
+            }
+            // Pop, advancing "now" so later pushes stay DES-shaped.
+            _ => {
+                let (w, h) = (wheel.pop(), heap.pop());
+                assert_eq!(
+                    w.as_ref().map(|(t, p)| (t.to_bits(), *p)),
+                    h.as_ref().map(|(t, p)| (t.to_bits(), *p)),
+                    "pop divergence mid-script"
+                );
+                if let Some((t, _)) = w {
+                    now = now.max(t);
+                }
+            }
+        }
+    }
+    // Drain both queues to empty, peeking before every pop.
+    loop {
+        assert_eq!(
+            wheel.peek_time().map(f64::to_bits),
+            heap.peek_time().map(f64::to_bits),
+            "peek divergence during drain"
+        );
+        let (w, h) = (wheel.pop(), heap.pop());
+        assert_eq!(
+            w.as_ref().map(|(t, p)| (t.to_bits(), *p)),
+            h.as_ref().map(|(t, p)| (t.to_bits(), *p)),
+            "pop divergence during drain"
+        );
+        if w.is_none() {
+            break;
+        }
+    }
+    assert_eq!(wheel.processed(), heap.processed());
+    assert_eq!(wheel.skipped(), heap.skipped());
+    assert_eq!(wheel.len(), 0);
+    assert_eq!(heap.len(), 0);
+}
+
+#[test]
+fn wheel_matches_heap_on_randomized_op_sequences() {
+    // The full time spectrum: exact tick edges, sub-tick jitter, multi-level
+    // wheel distances, and far-future times past the 2^36-tick horizon.
+    prop::forall(120, |g| {
+        exercise(g, |g, now| match g.usize_in(0, 4) {
+            0 => (now + g.f64_in(0.0, 3.0)).floor(),
+            1 => now + g.f64_in(0.0, 2.0),
+            2 => now + g.f64_in(0.0, 5_000.0),
+            _ => now + g.f64_in(0.0, 1.0e11),
+        });
+    });
+}
+
+#[test]
+fn wheel_matches_heap_across_cascades_and_cancels() {
+    // Times concentrated at level ≥ 1 distances (64..16384 ticks out), so
+    // pops of nearer events constantly force cascades while cancels land on
+    // entries parked mid-wheel — the "timer cancel during cascade" surface.
+    prop::forall(120, |g| {
+        exercise(g, |g, now| {
+            if g.bool() {
+                now + g.f64_in(64.0, 16_384.0)
+            } else {
+                now + g.f64_in(0.0, 4.0)
+            }
+        });
+    });
+}
+
+#[test]
+fn wheel_matches_heap_on_same_tick_bursts() {
+    // Many events inside one or two ticks: the FIFO-by-(time, seq) contract
+    // at and across the tick boundary, where quantization would bite first.
+    prop::forall(120, |g| {
+        exercise(g, |g, now| now.floor() + g.f64_in(0.0, 2.0));
+    });
+}
+
+#[test]
+fn cancel_after_pop_returns_false_on_both_backends() {
+    for kind in [BackendKind::Wheel, BackendKind::Heap] {
+        let mut q = EventQueue::with_backend(kind);
+        let t = q.push_cancelable(2.0, "x");
+        assert_eq!(q.pop(), Some((2.0, "x")));
+        assert!(!q.cancel(t), "{kind:?}: cancel after fire must return false");
+        assert_eq!(q.processed(), 1);
+        assert_eq!(q.skipped(), 0);
+    }
+}
+
+#[test]
+fn same_tick_fifo_across_tick_boundary_on_both_backends() {
+    for kind in [BackendKind::Wheel, BackendKind::Heap] {
+        let mut q = EventQueue::with_backend(kind);
+        q.push(5.0, "b");
+        q.push(4.999, "a");
+        q.push(5.0, "c"); // exact tie with "b": seq order decides
+        q.push(5.001, "d");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["a", "b", "c", "d"], "{kind:?}");
+    }
+}
+
+#[test]
+fn timer_cancel_during_cascade_on_both_backends() {
+    for kind in [BackendKind::Wheel, BackendKind::Heap] {
+        let mut q = EventQueue::with_backend(kind);
+        // 65/68/70 share a level-1 wheel slot from tick 0; popping 65
+        // cascades the rest to level 0. Cancel one only after the cascade.
+        let t = q.push_cancelable(70.0, "timer");
+        q.push(65.0, "a");
+        q.push(68.0, "b");
+        assert_eq!(q.pop(), Some((65.0, "a")), "{kind:?}");
+        assert!(q.cancel(t), "{kind:?}: cancelable after cascade");
+        assert_eq!(q.pop(), Some((68.0, "b")), "{kind:?}");
+        assert_eq!(q.pop(), None, "{kind:?}: canceled cascaded timer never fires");
+        assert_eq!(q.skipped(), 1, "{kind:?}");
+    }
+}
