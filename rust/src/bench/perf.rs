@@ -28,6 +28,16 @@
 //! ordering's work still scales like depth^X or worse (the incremental
 //! ordering indexes keep it near 0; the old full scans sat near 1).
 //!
+//! `--partitions N` adds a partition-scaling leg: one large multi-tenant
+//! run (`--partition-requests`, ~1M events at the default) executed at
+//! partition counts 1, 2, 4, … N through the partitioned event loop
+//! (`sim::partition`), recording wall time, speedup over serial, and the
+//! counted synchronization work (windows, barrier crossings, replayed
+//! ops, routed deliveries). Every partitioned run is digest-checked
+//! against the serial run — bit-identical outputs are a hard failure,
+//! not a gate — and `--speedup-gate X` fails the bench when the
+//! 4-partition run is not ≥X× faster than serial (CI pins 2.0).
+//!
 //! `--timers` adds a timer-churn leg: a schedule/cancel-heavy synthetic
 //! workload (the driver's timeout/retry pattern, distilled) run directly
 //! against the `EventQueue` at the smallest and largest `--sizes` points,
@@ -66,6 +76,18 @@ use crate::workload::{Mix, WorkloadSpec};
 const DEPTH_MULT_LO: f64 = 4.0;
 const DEPTH_MULT_HI: f64 = 16.0;
 
+/// The partition leg's fixed workload shape: the paper's headline regime
+/// distilled — many tenants on a wide fleet under congestion. Jitter and
+/// congestion slowdown are zeroed so the lookahead window is the full
+/// `base_ms` (the widest-window, best-case-for-parallelism physics; the
+/// equivalence tests cover jittered fleets bit-for-bit).
+const PARTITION_TENANTS: usize = 8;
+const PARTITION_SHARDS: usize = 16;
+const PARTITION_BASE_MS: f64 = 40.0;
+const PARTITION_PER_TOKEN_MS: f64 = 0.02;
+const PARTITION_CONCURRENCY: usize = 1_280;
+const PARTITION_RATE_RPS: f64 = 20_000.0;
+
 /// Scale-bench configuration (CLI-settable via `bbsched bench`).
 #[derive(Debug, Clone)]
 pub struct ScaleBenchOpts {
@@ -99,6 +121,16 @@ pub struct ScaleBenchOpts {
     /// Fail if the queue's counted work per operation scales worse than
     /// n^this between the timer leg's two sizes (needs `timers`).
     pub timer_gate_exponent: Option<f64>,
+    /// Max partition count for the partition-scaling leg (1 = no leg):
+    /// one large multi-tenant run executed at counts 1, 2, 4, … this,
+    /// digest-checked bit-identical across counts.
+    pub partitions: usize,
+    /// Request count for the partition leg's workload (~4 events each; the
+    /// default is the million-event regime).
+    pub partition_requests: usize,
+    /// Fail if the 4-partition run is not ≥this× faster than serial
+    /// (needs `partitions >= 4`).
+    pub speedup_gate: Option<f64>,
 }
 
 impl Default for ScaleBenchOpts {
@@ -116,6 +148,9 @@ impl Default for ScaleBenchOpts {
             depth_gate_exponent: None,
             timers: false,
             timer_gate_exponent: None,
+            partitions: 1,
+            partition_requests: 250_000,
+            speedup_gate: None,
         }
     }
 }
@@ -189,6 +224,15 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
         opts.timer_gate_exponent.is_none()
             || (opts.sizes.len() >= 2 && opts.sizes.first() != opts.sizes.last()),
         "--timer-gate-exponent needs at least two distinct sizes to compute a scaling exponent"
+    );
+    anyhow::ensure!(opts.partitions >= 1, "bench needs at least one partition");
+    anyhow::ensure!(
+        opts.speedup_gate.is_none() || opts.partitions >= 4,
+        "--speedup-gate needs --partitions >= 4 (it compares the 4-partition leg to serial)"
+    );
+    anyhow::ensure!(
+        opts.partitions == 1 || opts.partition_requests > 0,
+        "--partitions needs a positive --partition-requests workload"
     );
     let mut records: Vec<RunRecord> = Vec::new();
     // Legs as (shards, tenants): the classic single endpoint, plus (when
@@ -583,6 +627,161 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
         }
     }
 
+    // ---- partition leg: one big run across 1, 2, 4, … N event loops ----
+    //
+    // The same multi-tenant workload executed through the partitioned
+    // executor at each count. Outputs must be bit-identical across counts
+    // (digest-checked — a mismatch is a correctness bug, failed
+    // immediately), so the only thing the sweep measures is wall time and
+    // the counted synchronization overhead.
+    let mut partition_runs: Vec<Json> = Vec::new();
+    let mut partition_scaling: Vec<Json> = Vec::new();
+    if opts.partitions > 1 {
+        let n = opts.partition_requests;
+        println!(
+            "\n== partition leg: {n} requests, {PARTITION_TENANTS} tenants, \
+             {PARTITION_SHARDS} shards, up to {} partitions ==",
+            opts.partitions
+        );
+        let mut counts = vec![1usize];
+        let mut c = 2usize;
+        while c < opts.partitions {
+            counts.push(c);
+            c *= 2;
+        }
+        counts.push(opts.partitions);
+        let shard = ProviderCfg {
+            base_ms: PARTITION_BASE_MS,
+            per_token_ms: PARTITION_PER_TOKEN_MS,
+            max_concurrency: PARTITION_CONCURRENCY,
+            jitter_sigma: 0.0,
+            slowdown_gamma: 0.0,
+            ..ProviderCfg::default()
+        };
+        let pool = PoolCfg::split(shard, PARTITION_SHARDS);
+        let specs: Vec<TenantSpec> = driver::split_requests(n, PARTITION_TENANTS)
+            .into_iter()
+            .map(|per_n| TenantSpec {
+                workload: WorkloadSpec::new(
+                    opts.mix,
+                    per_n,
+                    PARTITION_RATE_RPS / PARTITION_TENANTS as f64,
+                ),
+                sched: SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
+                info: InfoLevel::Coarse,
+            })
+            .collect();
+        let repeats = if opts.speedup_gate.is_some() { 3 } else { 1 };
+        let mut t = TextTable::new([
+            "partitions",
+            "wall (ms)",
+            "speedup",
+            "windows",
+            "barriers",
+            "ops replayed",
+            "deliveries",
+        ]);
+        let mut serial_wall_ms: Option<f64> = None;
+        let mut serial_digest: Option<u64> = None;
+        let mut wall_by_count: Vec<(usize, f64)> = Vec::new();
+        for &pcount in &counts {
+            let mut wall_s = f64::INFINITY;
+            let mut last: Option<driver::MultiRunOutput> = None;
+            for _ in 0..repeats {
+                let t0 = Instant::now();
+                let o = driver::run_tenants_partitioned(&specs, &pool, opts.seed, pcount);
+                wall_s = wall_s.min(t0.elapsed().as_secs_f64());
+                last = Some(o);
+            }
+            let o = last.expect("repeats >= 1");
+            let digest = digest_multi(&o);
+            match serial_digest {
+                None => serial_digest = Some(digest),
+                Some(want) => {
+                    if digest != want {
+                        bail!(
+                            "partition leg: {pcount}-partition output diverged from serial \
+                             (digest {digest:#x} != {want:#x}) — the bit-compat contract is \
+                             broken, see tests/partition_equivalence.rs"
+                        );
+                    }
+                }
+            }
+            let wall_ms = wall_s * 1e3;
+            let speedup = match serial_wall_ms {
+                None => {
+                    serial_wall_ms = Some(wall_ms);
+                    1.0
+                }
+                Some(serial) => serial / wall_ms,
+            };
+            wall_by_count.push((pcount, wall_ms));
+            let ps = &o.partition;
+            t.row([
+                format!("{pcount} ({} ran)", ps.partitions),
+                format!("{wall_ms:.1}"),
+                format!("{speedup:.2}x"),
+                ps.windows.to_string(),
+                ps.barrier_crossings.to_string(),
+                ps.ops_routed.to_string(),
+                ps.deliveries.to_string(),
+            ]);
+            partition_runs.push(
+                Json::obj()
+                    .set("partitions", pcount)
+                    .set("partitions_effective", ps.partitions)
+                    .set("serial_fallback", ps.serial_fallback)
+                    .set("requests", n)
+                    .set("wall_ms", wall_ms)
+                    .set("speedup", speedup)
+                    .set("events_processed", o.diagnostics.events_processed)
+                    .set(
+                        "events_per_sec",
+                        if wall_s > 0.0 {
+                            o.diagnostics.events_processed as f64 / wall_s
+                        } else {
+                            0.0
+                        },
+                    )
+                    .set("lookahead_ms", ps.lookahead_ms)
+                    .set("windows", ps.windows)
+                    .set("barrier_crossings", ps.barrier_crossings)
+                    .set("ops_routed", ps.ops_routed)
+                    .set("deliveries", ps.deliveries)
+                    .set("boundary_deferrals", ps.boundary_deferrals),
+            );
+        }
+        println!("{}", t.render());
+        let serial = serial_wall_ms.expect("serial leg ran");
+        for &(pcount, wall_ms) in wall_by_count.iter().skip(1) {
+            partition_scaling.push(
+                Json::obj()
+                    .set("partitions", pcount)
+                    .set("requests", n)
+                    .set("serial_wall_ms", serial)
+                    .set("wall_ms", wall_ms)
+                    .set("speedup", serial / wall_ms),
+            );
+        }
+        if let Some(min_speedup) = opts.speedup_gate {
+            let p4 = wall_by_count.iter().find(|&&(pc, _)| pc == 4);
+            match p4 {
+                Some(&(_, wall_ms)) => {
+                    let speedup = serial / wall_ms;
+                    if speedup < min_speedup {
+                        violations.push(format!(
+                            "partitions: 4-partition speedup {speedup:.2}x < {min_speedup}x \
+                             (serial {serial:.1} ms, partitioned {wall_ms:.1} ms)"
+                        ));
+                    }
+                }
+                None => violations.push(
+                    "partitions: --speedup-gate armed but no 4-partition leg ran".to_string(),
+                ),
+            }
+        }
+    }
+
     let mut doc = Json::obj()
         .set("bench", "scale")
         .set("mix", opts.mix.name())
@@ -590,6 +789,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
         .set("seed", opts.seed)
         .set("shards", opts.shards)
         .set("tenants", opts.tenants)
+        .set("partitions", opts.partitions)
         .set("sizes", opts.sizes.clone())
         .set("runs", Json::Arr(records.iter().map(RunRecord::to_json).collect()))
         .set("scaling", Json::Arr(scaling));
@@ -603,12 +803,67 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             .set("timer_runs", Json::Arr(timer_runs))
             .set("timer_scaling", Json::Arr(timer_scaling));
     }
+    if opts.partitions > 1 {
+        doc = doc
+            .set("partition_runs", Json::Arr(partition_runs))
+            .set("partition_scaling", Json::Arr(partition_scaling));
+    }
     doc.write_file(&opts.out_path)?;
     println!("wrote {}", opts.out_path);
     if !violations.is_empty() {
         bail!("scaling gate failed: {}", violations.join("; "));
     }
     Ok(())
+}
+
+/// FNV-1a over u64 words — a stable digest for the partition leg's
+/// bit-identity check (no dependency, no hashing of padding bytes).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn put(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+}
+
+/// Digest everything the run output that must be bit-identical across
+/// partition counts: per-request outcomes (status, latency *bits*, defer
+/// counts), per-tenant sends, and the full engine diagnostics including
+/// the f64 depth integral.
+fn digest_multi(o: &driver::MultiRunOutput) -> u64 {
+    let mut h = Fnv::new();
+    for t in &o.tenants {
+        h.put(t.sends);
+        h.put(t.metrics.n_completed as u64);
+        h.put(t.metrics.n_rejected as u64);
+        h.put(t.metrics.n_timed_out as u64);
+        for oc in &t.outcomes {
+            h.put(oc.id as u64);
+            h.put(oc.status as u64);
+            h.put(oc.latency_ms.map_or(u64::MAX, f64::to_bits));
+            h.put(u64::from(oc.defer_count));
+        }
+    }
+    let d = &o.diagnostics;
+    h.put(d.events_processed);
+    h.put(d.events_skipped);
+    h.put(d.timers_canceled);
+    h.put(d.sends);
+    h.put(d.peak_provider_queue as u64);
+    h.put(d.peak_inflight as u64);
+    for &s in &d.started_by_shard {
+        h.put(s);
+    }
+    h.put(d.mean_queue_depth.to_bits());
+    h.put(d.peak_queue_depth as u64);
+    h.put(d.ordering_select_work);
+    h.0
 }
 
 /// One timer-churn measurement.
@@ -917,6 +1172,76 @@ mod tests {
             let err = run_scale_bench(&opts).expect_err("gate with no evaluable exponent");
             assert!(err.to_string().contains("two distinct sizes"), "{err}");
         }
+    }
+
+    #[test]
+    fn partition_leg_records_sweep_and_bitwise_identity() {
+        let out_path = std::env::temp_dir().join("bbsched_bench_partition_test.json");
+        let opts = ScaleBenchOpts {
+            sizes: vec![40],
+            rate_rps: 12.0,
+            partitions: 4,
+            partition_requests: 2_000,
+            out_path: out_path.to_string_lossy().into_owned(),
+            ..ScaleBenchOpts::default()
+        };
+        // The leg digest-checks every partitioned run against serial and
+        // bails on divergence, so success here *is* the identity check.
+        run_scale_bench(&opts).expect("bench runs with identical partitioned outputs");
+        let doc = Json::read_file(&opts.out_path).expect("BENCH.json parses");
+        let runs = doc.get("partition_runs").and_then(Json::as_arr).expect("partition_runs");
+        assert_eq!(runs.len(), 3, "counts 1, 2, 4");
+        for r in runs {
+            assert!(r.get("wall_ms").and_then(Json::as_f64).unwrap() >= 0.0);
+            assert!(r.get("lookahead_ms").and_then(Json::as_f64).unwrap() > 0.0);
+            assert_eq!(r.get("serial_fallback"), Some(&Json::Bool(false)));
+            let req = r.get("partitions").and_then(Json::as_usize).unwrap();
+            let ran = r.get("partitions_effective").and_then(Json::as_usize).unwrap();
+            assert_eq!(ran, req, "no fallback: the parallel path must really run");
+            if req > 1 {
+                assert!(r.get("windows").and_then(Json::as_u64).unwrap() > 0);
+                assert!(r.get("ops_routed").and_then(Json::as_u64).unwrap() > 0);
+            }
+        }
+        let scaling =
+            doc.get("partition_scaling").and_then(Json::as_arr).expect("partition_scaling");
+        assert_eq!(scaling.len(), 2, "speedup entries for counts 2 and 4");
+        for s in scaling {
+            assert!(s.get("speedup").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        let _ = std::fs::remove_file(&opts.out_path);
+    }
+
+    #[test]
+    fn speedup_gate_requires_partition_leg() {
+        let opts = ScaleBenchOpts {
+            sizes: vec![40, 80],
+            partitions: 2, // < 4: the gate's comparison point never runs
+            speedup_gate: Some(2.0),
+            out_path: "/tmp/bbsched_bench_speedup_gate.json".to_string(),
+            ..ScaleBenchOpts::default()
+        };
+        let err = run_scale_bench(&opts).expect_err("gate without its 4-partition leg");
+        assert!(err.to_string().contains("--partitions"), "{err}");
+    }
+
+    #[test]
+    fn impossible_speedup_gate_fails_the_bench() {
+        let out_path = std::env::temp_dir().join("bbsched_bench_speedup_gate_fail.json");
+        let opts = ScaleBenchOpts {
+            sizes: vec![40],
+            rate_rps: 12.0,
+            partitions: 4,
+            partition_requests: 2_000,
+            // No real machine turns 4 partitions into a billion-fold
+            // speedup; the gate must trip — the CI failure path.
+            speedup_gate: Some(1e9),
+            out_path: out_path.to_string_lossy().into_owned(),
+            ..ScaleBenchOpts::default()
+        };
+        let err = run_scale_bench(&opts).expect_err("speedup gate must trip");
+        assert!(err.to_string().contains("speedup"), "{err}");
+        let _ = std::fs::remove_file(&out_path);
     }
 
     #[test]

@@ -2,9 +2,9 @@
 //! smoke tests, and the real-time serve demo.
 //!
 //! Usage:
-//!   bbsched exp <name|all> [--seeds N] [--requests N] [--jobs N] [--out DIR]
+//!   bbsched exp <name|all> [--seeds N] [--requests N] [--jobs N] [--partitions N] [--out DIR]
 //!   bbsched run [--strategy S] [--mix M] [--rate R] [--seed N] ...
-//!   bbsched bench [--sizes N,N] [--shards N] [--tenants M] [--depth] [--timers] [--out BENCH.json] [--smoke]
+//!   bbsched bench [--sizes N,N] [--shards N] [--tenants M] [--depth] [--timers] [--partitions N] [--out BENCH.json] [--smoke]
 //!   bbsched trace gen|show [--out PATH] ...
 //!   bbsched predict [--artifacts DIR] [--n N]        (PJRT smoke + goldens)
 //!   bbsched serve [--rate R] [--requests N] [--scale S] [--tenants M] (real-time demo)
@@ -74,6 +74,12 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         .opt("seeds", "5", "seeds per cell")
         .opt("requests", "200", "offered requests per run")
         .opt("jobs", "0", "sweep worker threads (0 = all cores; output is identical for any value)")
+        .opt(
+            "partitions",
+            "",
+            "event-loop partitions per multi-tenant run (sets BBSCHED_PARTITIONS: 1 = serial, \
+             0 = all cores; output is identical for any value)",
+        )
         .opt("out", "paper_results/tables", "CSV output dir")
         .flag("verbose", "per-seed detail")
         .positionals();
@@ -81,6 +87,13 @@ fn cmd_exp(args: &[String]) -> Result<()> {
     if a.help {
         print!("{}", cmd.help_text());
         return Ok(());
+    }
+    // The partition count travels by env (like BBSCHED_EVENT_QUEUE) so
+    // every run_tenants call site inherits it without threading a
+    // parameter through the experiment drivers.
+    if !a.str("partitions").is_empty() {
+        let p = a.usize("partitions")?;
+        std::env::set_var(blackbox_sched::sim::partition::PARTITIONS_ENV, p.to_string());
     }
     let name = a.positionals.first().map(String::as_str).unwrap_or("all");
     let opts = ExpOpts {
@@ -198,6 +211,23 @@ fn cmd_bench(args: &[String]) -> Result<()> {
             "0",
             "fail if the timer-leg work/op exponent exceeds this (0 = off; needs --timers)",
         )
+        .opt(
+            "partitions",
+            "1",
+            "add a partition-scaling leg sweeping the event loop at 1,2,4..N partitions \
+             (outputs digest-checked identical to serial)",
+        )
+        .opt(
+            "partition-requests",
+            "250000",
+            "request count for the partition leg's workload (~1M events at the default)",
+        )
+        .opt(
+            "speedup-gate",
+            "0",
+            "fail if the 4-partition run is not >= this x faster than serial \
+             (0 = off; needs --partitions >= 4)",
+        )
         .flag("depth", "add the deep-queue leg: per-release cost vs queue depth at 4x/16x rate")
         .flag("timers", "add the timer-churn leg: event-queue work/op at the two size points")
         .flag("smoke", "CI smoke sizes (1000,5000)");
@@ -226,6 +256,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
     let gate = a.f64("gate-exponent")?;
     let depth_gate = a.f64("depth-gate-exponent")?;
     let timer_gate = a.f64("timer-gate-exponent")?;
+    let speedup_gate = a.f64("speedup-gate")?;
     let opts = ScaleBenchOpts {
         sizes,
         rate_rps: a.f64("rate")?,
@@ -239,6 +270,9 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         depth_gate_exponent: if depth_gate > 0.0 { Some(depth_gate) } else { None },
         timers: a.flag("timers"),
         timer_gate_exponent: if timer_gate > 0.0 { Some(timer_gate) } else { None },
+        partitions: a.usize("partitions")?,
+        partition_requests: a.usize("partition-requests")?,
+        speedup_gate: if speedup_gate > 0.0 { Some(speedup_gate) } else { None },
     };
     run_scale_bench(&opts)
 }

@@ -44,7 +44,13 @@ impl AllocCtx {
 }
 
 /// Inter-class share policy.
-pub trait Allocator {
+///
+/// `Send` is a supertrait for the same reason as [`Ordering`]'s: tenant
+/// schedulers cross into partition worker threads
+/// (`sim::partition`), boxed allocator included.
+///
+/// [`Ordering`]: crate::scheduler::ordering::Ordering
+pub trait Allocator: Send {
     /// Which class gets the next send opportunity? `None` = no eligible
     /// class (all queues empty, or quota exhausted for backlogged classes).
     fn next_class(&mut self, ctx: &AllocCtx) -> Option<Class>;

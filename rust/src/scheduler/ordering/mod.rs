@@ -48,7 +48,12 @@ const NO_SEQ: u64 = u64::MAX;
 
 /// Intra-class sequencing policy: pick the id of the next request to
 /// release from `queue` (None iff empty).
-pub trait Ordering {
+///
+/// `Send` is a supertrait: the partitioned event loop (`sim::partition`)
+/// hands each tenant's scheduler — boxed policies included — to its
+/// partition's worker thread. Every policy is plain owned data, so the
+/// bound costs implementors nothing.
+pub trait Ordering: Send {
     /// Pick the next release from `queue` at event time `now`, answering
     /// from the policy's incremental index (`None` iff the queue is empty).
     fn select(&mut self, queue: QueueView<'_>, now: f64) -> Option<ReqId>;

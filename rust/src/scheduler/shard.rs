@@ -260,6 +260,30 @@ impl ShardSelector {
     }
 }
 
+/// Carve `n_items` into `n_parts` balanced contiguous half-open ranges
+/// (the first `n_items % n_parts` ranges get one extra item).
+///
+/// This is the deterministic partition map for the partitioned event loop
+/// (`sim::partition`): tenants are carved with it, and because selector
+/// state — in-flight counts, tail EWMAs, hash affinity — is entirely
+/// tenant-local (nothing here aggregates across tenants), carving tenants
+/// into partitions needs no selector-state merge at all: each partition
+/// carries its tenants' selectors untouched, bit-identical to serial.
+pub fn carve(n_items: usize, n_parts: usize) -> Vec<(usize, usize)> {
+    assert!(n_parts >= 1, "need at least one part");
+    let base = n_items / n_parts;
+    let extra = n_items % n_parts;
+    let mut out = Vec::with_capacity(n_parts);
+    let mut lo = 0usize;
+    for i in 0..n_parts {
+        let len = base + usize::from(i < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    debug_assert_eq!(lo, n_items);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -382,5 +406,35 @@ mod tests {
             assert_eq!(ShardPolicy::parse(p.name()), Some(p));
         }
         assert_eq!(ShardPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn carve_is_balanced_contiguous_and_covering() {
+        for n_items in 0..40usize {
+            for n_parts in 1..10usize {
+                let parts = carve(n_items, n_parts);
+                assert_eq!(parts.len(), n_parts, "{n_items}/{n_parts}");
+                let mut expect_lo = 0usize;
+                let (mut min_len, mut max_len) = (usize::MAX, 0usize);
+                for &(lo, hi) in &parts {
+                    assert_eq!(lo, expect_lo, "contiguous {n_items}/{n_parts}");
+                    assert!(hi >= lo);
+                    min_len = min_len.min(hi - lo);
+                    max_len = max_len.max(hi - lo);
+                    expect_lo = hi;
+                }
+                assert_eq!(expect_lo, n_items, "covering {n_items}/{n_parts}");
+                assert!(max_len - min_len <= 1, "balanced {n_items}/{n_parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn carve_gives_every_part_work_when_items_suffice() {
+        for &(n_items, n_parts) in &[(8usize, 4usize), (9, 4), (4, 4), (100, 7)] {
+            for (lo, hi) in carve(n_items, n_parts) {
+                assert!(hi > lo, "{n_items}/{n_parts}: empty part");
+            }
+        }
     }
 }

@@ -38,11 +38,24 @@ use crate::workload::WorkloadSpec;
 
 /// DES event payloads.
 #[derive(Debug, Clone, Copy)]
-enum Ev {
+pub(crate) enum Ev {
+    /// A request enters its owner's scheduler.
     Arrival(ReqId),
+    /// The provider finished a submission (or promoted hidden-queue work).
     ProviderDone(ReqId),
+    /// A deferred request's backoff expired.
     Retry(ReqId),
+    /// A request's hard timeout fired.
     Timeout(ReqId),
+}
+
+impl Ev {
+    /// The request this event belongs to (every event has exactly one).
+    pub(crate) fn req(self) -> ReqId {
+        match self {
+            Ev::Arrival(id) | Ev::ProviderDone(id) | Ev::Retry(id) | Ev::Timeout(id) => id,
+        }
+    }
 }
 
 /// Extra run diagnostics beyond `RunMetrics`.
@@ -128,20 +141,244 @@ fn flush_sends(
 }
 
 /// Mutable event-loop results shared by the single- and multi-tenant entry
-/// points. Indexed by global request id.
-struct CoreRun {
-    status: Vec<RequestStatus>,
-    latency: Vec<Option<f64>>,
-    defer_counts: Vec<u32>,
-    sends: u64,
-    sends_by_tenant: Vec<u64>,
-    peak_inflight: usize,
-    timers_canceled: u64,
-    events_processed: u64,
-    events_skipped: u64,
-    mean_queue_depth: f64,
-    peak_queue_depth: usize,
-    ordering_select_work: u64,
+/// points (and assembled by the partition executor from its per-partition
+/// loops). Indexed by global request id.
+pub(crate) struct CoreRun {
+    pub(crate) status: Vec<RequestStatus>,
+    pub(crate) latency: Vec<Option<f64>>,
+    pub(crate) defer_counts: Vec<u32>,
+    pub(crate) sends: u64,
+    pub(crate) sends_by_tenant: Vec<u64>,
+    pub(crate) peak_inflight: usize,
+    pub(crate) timers_canceled: u64,
+    pub(crate) events_processed: u64,
+    pub(crate) events_skipped: u64,
+    pub(crate) mean_queue_depth: f64,
+    pub(crate) peak_queue_depth: usize,
+    pub(crate) ordering_select_work: u64,
+}
+
+/// Time-weighted queue-depth integrator, shared verbatim by the serial loop
+/// and the partitioned coordinator so `mean_queue_depth` is bit-identical
+/// regardless of partition count: both modes perform the exact same
+/// sequence of f64 operations over the same (time, depth) observations.
+pub(crate) struct DepthFold {
+    span_start: Option<f64>,
+    last_now: f64,
+    last_depth: usize,
+    area: f64,
+    peak: usize,
+}
+
+impl DepthFold {
+    pub(crate) fn new() -> DepthFold {
+        DepthFold { span_start: None, last_now: 0.0, last_depth: 0, area: 0.0, peak: 0 }
+    }
+
+    /// Record the total scheduler queue depth after an event at `now`. The
+    /// depth after each event holds until the next event pops, so
+    /// ∫depth·dt accumulates one rectangle per event.
+    pub(crate) fn observe(&mut self, now: f64, depth: usize) {
+        if self.span_start.is_none() {
+            self.span_start = Some(now);
+        } else {
+            self.area += self.last_depth as f64 * (now - self.last_now);
+        }
+        self.last_now = now;
+        self.last_depth = depth;
+        self.peak = self.peak.max(depth);
+    }
+
+    /// `(mean, peak)` depth over the observed event-time span.
+    pub(crate) fn finish(&self) -> (f64, usize) {
+        let span = self.last_now - self.span_start.unwrap_or(0.0);
+        let mean = if span > 0.0 { self.area / span } else { 0.0 };
+        (mean, self.peak)
+    }
+}
+
+/// The event loop's provider-facing seam. The serial loop talks to the
+/// shared [`ProviderPool`] directly ([`SerialFabric`]); a partition worker
+/// records stamped shard ops into its mailbox instead
+/// (`sim::partition::PartitionFabric`) for the coordinator to replay in
+/// merged stamp order between windows. [`process_tick`] is generic over
+/// this trait, so both modes run the *same* tick body — the partitioned
+/// bit-compat contract is structural, not re-implemented.
+pub(crate) trait ShardFabric {
+    /// A `Send` action released `id` to `shard`.
+    fn send(&mut self, id: ReqId, tokens: f64, shard: usize, now: f64, q: &mut EventQueue<Ev>);
+    /// A contiguous run of Sends ended (the next action pushes an event, or
+    /// the tick is over): dispatch the batch.
+    fn flush(&mut self, now: f64, q: &mut EventQueue<Ev>);
+    /// A `ProviderDone` popped: retire the submission, promote hidden work.
+    fn finish(&mut self, id: ReqId, now: f64, q: &mut EventQueue<Ev>);
+    /// The tick is fully applied; `depth` is this loop's scheduler queue
+    /// depth after it.
+    fn end_tick(&mut self, now: f64, depth: usize);
+}
+
+/// Direct pool access plus the inline depth fold: the serial reference
+/// fabric.
+pub(crate) struct SerialFabric<'p> {
+    provider: &'p mut ProviderPool,
+    batch: Vec<(ReqId, f64, usize)>,
+    started: Vec<Started>,
+    pub(crate) fold: DepthFold,
+}
+
+impl<'p> SerialFabric<'p> {
+    pub(crate) fn new(provider: &'p mut ProviderPool) -> SerialFabric<'p> {
+        SerialFabric { provider, batch: Vec::new(), started: Vec::new(), fold: DepthFold::new() }
+    }
+}
+
+impl ShardFabric for SerialFabric<'_> {
+    fn send(&mut self, id: ReqId, tokens: f64, shard: usize, _now: f64, _q: &mut EventQueue<Ev>) {
+        self.batch.push((id, tokens, shard));
+    }
+    fn flush(&mut self, now: f64, q: &mut EventQueue<Ev>) {
+        flush_sends(self.provider, &mut self.batch, &mut self.started, q, now);
+    }
+    fn finish(&mut self, id: ReqId, now: f64, q: &mut EventQueue<Ev>) {
+        // Promote hidden-queue work first (provider-internal). The promoted
+        // requests may belong to any tenant — their completions are routed
+        // by ownership when they pop.
+        for started in self.provider.on_finish(id, now) {
+            q.push(started.finish_ms, Ev::ProviderDone(started.id));
+        }
+    }
+    fn end_tick(&mut self, now: f64, depth: usize) {
+        self.fold.observe(now, depth);
+    }
+}
+
+/// One event loop's mutable request-state window. The serial loop owns the
+/// whole run (`base == 0`, full-length slices); a partition worker owns the
+/// contiguous tenant-major slice carved for it, with `base`/`tenant_base`
+/// translating global request and tenant ids to slice indices.
+pub(crate) struct LoopState<'a> {
+    /// Global id of the first request in these slices.
+    pub(crate) base: usize,
+    /// Tenant index of the first scheduler in the loop's scheduler slice.
+    pub(crate) tenant_base: usize,
+    pub(crate) status: &'a mut [RequestStatus],
+    pub(crate) latency: &'a mut [Option<f64>],
+    pub(crate) defer_counts: &'a mut [u32],
+    pub(crate) timeout_timer: &'a mut [Option<TimerId>],
+    pub(crate) retry_timer: &'a mut [Option<TimerId>],
+    pub(crate) sends_by_tenant: &'a mut [u64],
+    pub(crate) sends: u64,
+    pub(crate) peak_inflight: usize,
+    pub(crate) timers_canceled: u64,
+}
+
+/// Apply one popped event — the scheduler callback plus the resulting
+/// actions — against the loop's state window. This is the *entire*
+/// per-event body of the DES: the serial loop and every partition worker
+/// call it with their own fabric, so there is exactly one copy of the
+/// scheduling semantics.
+#[allow(clippy::too_many_arguments)] // the loop's full working set, threaded explicitly
+pub(crate) fn process_tick<F: ShardFabric>(
+    now: f64,
+    ev: Ev,
+    requests: &[Request],
+    priors: &[(Priors, Route)],
+    owner: &[u32],
+    schedulers: &mut [ClientScheduler],
+    st: &mut LoopState<'_>,
+    q: &mut EventQueue<Ev>,
+    actions: &mut Vec<Action>,
+    fabric: &mut F,
+) {
+    actions.clear();
+    // Every event belongs to exactly one tenant; all actions this tick
+    // come from that tenant's scheduler.
+    let tenant = owner[ev.req()] as usize - st.tenant_base;
+    let scheduler = &mut schedulers[tenant];
+    match ev {
+        Ev::Arrival(id) => {
+            let (p, route) = priors[id];
+            scheduler.on_arrival(&requests[id], p, route, now, actions);
+        }
+        Ev::ProviderDone(id) => {
+            fabric.finish(id, now, q);
+            let li = id - st.base;
+            if st.status[li] == RequestStatus::InFlight {
+                st.status[li] = RequestStatus::Completed;
+                let lat = now - requests[id].arrival_ms;
+                st.latency[li] = Some(lat);
+                if let Some(t) = st.timeout_timer[li].take() {
+                    if q.cancel(t) {
+                        st.timers_canceled += 1;
+                    }
+                }
+                let budget = requests[id].deadline_ms - requests[id].arrival_ms;
+                scheduler.on_completion(id, lat, budget, now, actions);
+            }
+            // TimedOut → client already abandoned; completion is unobserved.
+        }
+        Ev::Retry(id) => {
+            let li = id - st.base;
+            st.retry_timer[li] = None;
+            if st.status[li] == RequestStatus::Deferred {
+                st.status[li] = RequestStatus::Queued;
+                scheduler.on_retry_due(id, now, actions);
+            }
+        }
+        Ev::Timeout(id) => {
+            // The timer fired; its slot is already retired by the queue.
+            let li = id - st.base;
+            st.timeout_timer[li] = None;
+            if matches!(
+                st.status[li],
+                RequestStatus::Queued | RequestStatus::Deferred | RequestStatus::InFlight
+            ) {
+                scheduler.cancel(id, now, actions);
+                st.status[li] = RequestStatus::TimedOut;
+                if let Some(t) = st.retry_timer[li].take() {
+                    if q.cancel(t) {
+                        st.timers_canceled += 1;
+                    }
+                }
+            }
+        }
+    }
+    // Apply scheduler actions; sending can cascade (a Send fills a slot;
+    // the provider may queue it internally). Contiguous Sends are
+    // dispatched as one batch; the batch flushes before any action that
+    // pushes an event, preserving per-action event order exactly.
+    for a in actions.iter() {
+        match *a {
+            Action::Send { id, shard } => {
+                let li = id - st.base;
+                debug_assert_eq!(st.status[li], RequestStatus::Queued, "send of non-queued {id}");
+                st.status[li] = RequestStatus::InFlight;
+                st.sends += 1;
+                st.sends_by_tenant[tenant] += 1;
+                st.peak_inflight = st.peak_inflight.max(schedulers[tenant].state().inflight());
+                fabric.send(id, requests[id].true_output_tokens as f64, shard, now, q);
+            }
+            Action::Retry { id, at_ms } => {
+                fabric.flush(now, q);
+                let li = id - st.base;
+                st.status[li] = RequestStatus::Deferred;
+                st.defer_counts[li] += 1;
+                st.retry_timer[li] = Some(q.push_cancelable(at_ms, Ev::Retry(id)));
+            }
+            Action::Reject { id } => {
+                let li = id - st.base;
+                st.status[li] = RequestStatus::Rejected;
+                if let Some(t) = st.timeout_timer[li].take() {
+                    if q.cancel(t) {
+                        st.timers_canceled += 1;
+                    }
+                }
+            }
+        }
+    }
+    fabric.flush(now, q);
+    let depth = schedulers.iter().map(|s| s.queued()).sum();
+    fabric.end_tick(now, depth);
 }
 
 /// The shared DES loop: pop events, feed the owning tenant's scheduler,
@@ -150,8 +387,10 @@ struct CoreRun {
 /// `owner[id]` names the tenant (scheduler index) each request belongs to;
 /// the single-tenant entry point passes all-zeros, so this is *literally*
 /// the same code path for both — the 1-tenant bit-compat contract is
-/// structural, not re-implemented.
-fn run_core(
+/// structural, not re-implemented. The partitioned executor
+/// (`sim::partition`) runs the same [`process_tick`] body per partition and
+/// must stay bit-identical to this loop; `--partitions 1` runs come here.
+pub(crate) fn run_core(
     requests: &[Request],
     priors: &[(Priors, Route)],
     owner: &[u32],
@@ -162,10 +401,7 @@ fn run_core(
     let mut status = vec![RequestStatus::Queued; n];
     let mut latency: Vec<Option<f64>> = vec![None; n];
     let mut defer_counts = vec![0u32; n];
-    let mut sends = 0u64;
     let mut sends_by_tenant = vec![0u64; schedulers.len()];
-    let mut peak_inflight = 0usize;
-    let mut timers_canceled = 0u64;
 
     // Setup pushes are tenant-major (requests are concatenated per tenant),
     // so heap ties — (time, seq) — resolve by (tenant, arrival order).
@@ -178,122 +414,42 @@ fn run_core(
     let mut retry_timer: Vec<Option<TimerId>> = vec![None; n];
 
     // One action buffer for the whole run: the scheduler appends, the
-    // apply loop below drains, and `clear` keeps the capacity. Sends are
-    // dispatched to the pool in batches (one `submit_batch` per contiguous
-    // run of Sends), reusing the same two buffers for the whole run.
+    // apply loop drains, and `clear` keeps the capacity. The serial fabric
+    // batches Sends to the pool (one `submit_batch` per contiguous run of
+    // Sends), reusing its two buffers for the whole run.
     let mut actions: Vec<Action> = Vec::new();
-    let mut send_batch: Vec<(ReqId, f64, usize)> = Vec::new();
-    let mut started_buf: Vec<Started> = Vec::new();
-
-    // Time-weighted queue-depth accounting: the depth after each event
-    // holds until the next event pops, so ∫depth·dt accumulates per event.
-    let mut depth_area = 0.0f64;
-    let mut span_start: Option<f64> = None;
-    let mut last_now = 0.0f64;
-    let mut last_depth = 0usize;
-    let mut peak_queue_depth = 0usize;
+    let mut fabric = SerialFabric::new(provider);
+    let mut st = LoopState {
+        base: 0,
+        tenant_base: 0,
+        status: &mut status,
+        latency: &mut latency,
+        defer_counts: &mut defer_counts,
+        timeout_timer: &mut timeout_timer,
+        retry_timer: &mut retry_timer,
+        sends_by_tenant: &mut sends_by_tenant,
+        sends: 0,
+        peak_inflight: 0,
+        timers_canceled: 0,
+    };
 
     while let Some((now, ev)) = q.pop() {
-        if span_start.is_none() {
-            span_start = Some(now);
-        } else {
-            depth_area += last_depth as f64 * (now - last_now);
-        }
-        actions.clear();
-        // Every event belongs to exactly one tenant; all actions this tick
-        // come from that tenant's scheduler.
-        let tenant = match ev {
-            Ev::Arrival(id) | Ev::ProviderDone(id) | Ev::Retry(id) | Ev::Timeout(id) => {
-                owner[id] as usize
-            }
-        };
-        let scheduler = &mut schedulers[tenant];
-        match ev {
-            Ev::Arrival(id) => {
-                let (p, route) = priors[id];
-                scheduler.on_arrival(&requests[id], p, route, now, &mut actions);
-            }
-            Ev::ProviderDone(id) => {
-                // Promote hidden-queue work first (provider-internal). The
-                // promoted requests may belong to any tenant — their
-                // completions are routed by ownership when they pop.
-                for started in provider.on_finish(id, now) {
-                    q.push(started.finish_ms, Ev::ProviderDone(started.id));
-                }
-                if status[id] == RequestStatus::InFlight {
-                    status[id] = RequestStatus::Completed;
-                    let lat = now - requests[id].arrival_ms;
-                    latency[id] = Some(lat);
-                    if let Some(t) = timeout_timer[id].take() {
-                        if q.cancel(t) {
-                            timers_canceled += 1;
-                        }
-                    }
-                    let budget = requests[id].deadline_ms - requests[id].arrival_ms;
-                    scheduler.on_completion(id, lat, budget, now, &mut actions);
-                }
-                // TimedOut → client already abandoned; completion is unobserved.
-            }
-            Ev::Retry(id) => {
-                retry_timer[id] = None;
-                if status[id] == RequestStatus::Deferred {
-                    status[id] = RequestStatus::Queued;
-                    scheduler.on_retry_due(id, now, &mut actions);
-                }
-            }
-            Ev::Timeout(id) => {
-                // The timer fired; its slot is already retired by the queue.
-                timeout_timer[id] = None;
-                if matches!(status[id], RequestStatus::Queued | RequestStatus::Deferred | RequestStatus::InFlight)
-                {
-                    scheduler.cancel(id, now, &mut actions);
-                    status[id] = RequestStatus::TimedOut;
-                    if let Some(t) = retry_timer[id].take() {
-                        if q.cancel(t) {
-                            timers_canceled += 1;
-                        }
-                    }
-                }
-            }
-        }
-        // Apply scheduler actions; sending can cascade (a Send fills a slot;
-        // the provider may queue it internally). Contiguous Sends are
-        // dispatched as one batch; the batch flushes before any action that
-        // pushes an event, preserving per-action event order exactly.
-        for a in &actions {
-            match *a {
-                Action::Send { id, shard } => {
-                    debug_assert_eq!(status[id], RequestStatus::Queued, "send of non-queued {id}");
-                    status[id] = RequestStatus::InFlight;
-                    sends += 1;
-                    sends_by_tenant[tenant] += 1;
-                    peak_inflight = peak_inflight.max(schedulers[tenant].state().inflight());
-                    send_batch.push((id, requests[id].true_output_tokens as f64, shard));
-                }
-                Action::Retry { id, at_ms } => {
-                    flush_sends(provider, &mut send_batch, &mut started_buf, &mut q, now);
-                    status[id] = RequestStatus::Deferred;
-                    defer_counts[id] += 1;
-                    retry_timer[id] = Some(q.push_cancelable(at_ms, Ev::Retry(id)));
-                }
-                Action::Reject { id } => {
-                    status[id] = RequestStatus::Rejected;
-                    if let Some(t) = timeout_timer[id].take() {
-                        if q.cancel(t) {
-                            timers_canceled += 1;
-                        }
-                    }
-                }
-            }
-        }
-        flush_sends(provider, &mut send_batch, &mut started_buf, &mut q, now);
-        last_now = now;
-        last_depth = schedulers.iter().map(|s| s.queued()).sum();
-        peak_queue_depth = peak_queue_depth.max(last_depth);
+        process_tick(
+            now,
+            ev,
+            requests,
+            priors,
+            owner,
+            schedulers,
+            &mut st,
+            &mut q,
+            &mut actions,
+            &mut fabric,
+        );
     }
 
-    let span = last_now - span_start.unwrap_or(0.0);
-    let mean_queue_depth = if span > 0.0 { depth_area / span } else { 0.0 };
+    let (sends, peak_inflight, timers_canceled) = (st.sends, st.peak_inflight, st.timers_canceled);
+    let (mean_queue_depth, peak_queue_depth) = fabric.fold.finish();
     let ordering_select_work = schedulers.iter().map(|s| s.ordering_work()).sum();
 
     CoreRun {
@@ -420,7 +576,12 @@ pub struct MultiRunOutput {
     /// Engine-level diagnostics for the whole run. `peak_inflight` is the
     /// max over tenants of a tenant's own in-flight count (each client
     /// paces only itself); `sends`/`started_by_shard` are fleet-wide.
+    /// Identical regardless of partition count — the partitioned
+    /// executor's merge contract (`tests/partition_equivalence.rs`).
     pub diagnostics: RunDiagnostics,
+    /// Partitioned-execution accounting (window/barrier/mailbox counters).
+    /// `partitions == 1` for serial runs; never affects `diagnostics`.
+    pub partition: crate::sim::partition::PartitionStats,
 }
 
 /// Workload/prior seed for tenant `t` of a run. Tenant 0 uses the run seed
@@ -487,6 +648,27 @@ pub fn split_requests(total: usize, tenants: usize) -> Vec<usize> {
 /// assert_eq!(out.diagnostics.started_by_shard.len(), 2);
 /// ```
 pub fn run_tenants(tenants: &[TenantSpec], pool_cfg: &PoolCfg, seed: u64) -> MultiRunOutput {
+    run_tenants_partitioned(tenants, pool_cfg, seed, crate::sim::partition::default_partitions())
+}
+
+/// [`run_tenants`] with an explicit partition count for the event loop.
+///
+/// `partitions == 1` is the serial reference loop (exactly [`run_tenants`]
+/// with the default environment); `partitions >= 2` carves the tenants into
+/// that many contiguous groups and runs one event loop per group in
+/// parallel under conservative time-window synchronization — see
+/// [`crate::sim::partition`] for the protocol and the bit-compat contract
+/// (outputs are bit-identical to serial). `partitions == 0` means one
+/// partition per core. The effective count is capped by the tenant count,
+/// and configurations without a positive service-time floor (zero
+/// lookahead) fall back to serial — `MultiRunOutput::partition` records
+/// what actually ran.
+pub fn run_tenants_partitioned(
+    tenants: &[TenantSpec],
+    pool_cfg: &PoolCfg,
+    seed: u64,
+    partitions: usize,
+) -> MultiRunOutput {
     assert!(!tenants.is_empty(), "need at least one tenant");
     let mut all_requests: Vec<Request> = Vec::new();
     let mut priors: Vec<(Priors, Route)> = Vec::new();
@@ -516,7 +698,16 @@ pub fn run_tenants(tenants: &[TenantSpec], pool_cfg: &PoolCfg, seed: u64) -> Mul
     }
     let mut provider = ProviderPool::new(pool_cfg, Rng::new(seed).derive("provider"));
 
-    let core = run_core(&all_requests, &priors, &owner, &mut schedulers, &mut provider);
+    let (core, partition) = crate::sim::partition::run_core_partitioned(
+        &all_requests,
+        &priors,
+        &owner,
+        &ranges,
+        &mut schedulers,
+        &mut provider,
+        pool_cfg,
+        partitions,
+    );
 
     let tenants_out: Vec<TenantOutput> = ranges
         .iter()
@@ -547,6 +738,7 @@ pub fn run_tenants(tenants: &[TenantSpec], pool_cfg: &PoolCfg, seed: u64) -> Mul
             peak_queue_depth: core.peak_queue_depth,
             ordering_select_work: core.ordering_select_work,
         },
+        partition,
     }
 }
 

@@ -30,6 +30,7 @@
 #![warn(missing_docs)]
 
 pub mod driver;
+pub mod partition;
 mod wheel;
 
 use std::cmp::Ordering;

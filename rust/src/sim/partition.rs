@@ -1,0 +1,775 @@
+//! Partitioned event loop: one run across all cores, bit-identical to
+//! serial.
+//!
+//! The serial DES (`driver::run_core`) pops a single global `(time, seq)`
+//! heap. This module carves a multi-tenant run into **partitions** —
+//! contiguous tenant groups with their contiguous tenant-major request-id
+//! ranges — and runs one event loop per partition on its own thread, under
+//! **conservative time-window synchronization** (the classic
+//! Chandy–Misra–Bryant lookahead discipline):
+//!
+//! * **Partition map.** Tenants are carved into `P` balanced contiguous
+//!   groups ([`crate::scheduler::shard::carve`]). Because request ids are
+//!   assigned tenant-major at setup, each partition owns a contiguous id
+//!   range, and the global per-request arrays split into disjoint `&mut`
+//!   windows — no locks on the hot path. All scheduler state is
+//!   tenant-local (selector EWMAs included), so it partitions cleanly.
+//!
+//! * **Lookahead.** The only cross-partition coupling is the shared
+//!   provider pool, and the pool cannot *reorder* the past: a submission
+//!   at time `t` finishes no earlier than `t + L`, where `L` is the
+//!   minimum service-time floor over shards ([`lookahead_floor_ms`]).
+//!   Within a window `[W, W + L)` every partition can therefore advance
+//!   independently: no provider completion generated inside the window
+//!   can land inside it.
+//!
+//! * **Mailbox protocol.** Partition workers never touch the pool.
+//!   Each tick records its shard ops (submit / finish) with their
+//!   timestamps into a per-partition mailbox. At the window barrier the
+//!   coordinator k-way-merges all mailboxes by `(time, partition)` and
+//!   **replays** them against the one shared pool — the exact op sequence
+//!   the serial loop would have applied, so shard RNG draws, hidden-queue
+//!   FIFO order, and `started_by_shard` are bitwise identical by
+//!   construction. Resulting completions are routed back to the owning
+//!   partition's mailbox and drained into its local heap at the next
+//!   window start.
+//!
+//! * **Why `(time, partition)` merge order preserves the serial `(time,
+//!   seq)` tie-break.** Setup events (arrivals, timeouts) get seqs
+//!   tenant-major, i.e. partition-major — equal-time setup ties resolve
+//!   by partition index in both modes. Dynamically pushed events carry
+//!   continuous-valued times (RNG-jittered arrivals, service times,
+//!   backoffs), so exact f64 collisions between causally unrelated events
+//!   of *different* partitions have measure zero; only such a collision
+//!   (or an equal-time inversion between a local push and a routed
+//!   completion) could diverge from serial, and the release-mode property
+//!   test (`tests/partition_equivalence.rs`) pins the contract across
+//!   strategies × fleets × tenant mixes × seeds.
+//!
+//! Diagnostics merge deterministically: counters sum, peaks max, and the
+//! time-weighted queue-depth integral re-runs the serial fold op-for-op
+//! over the merged `(time, depth)` sample stream (`driver::DepthFold`), so
+//! `RunDiagnostics` is identical regardless of partition count.
+//!
+//! Degenerate configurations fall back to the serial reference loop:
+//! an effective partition count below 2, or a fleet with no positive
+//! service-time floor (`base_ms == 0` — zero lookahead would deadlock the
+//! window protocol). [`PartitionStats::serial_fallback`] records the
+//! latter, so callers can tell "asked serial" from "couldn't partition".
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::core::{Priors, ReqId, Request, RequestStatus};
+use crate::predictor::Route;
+use crate::provider::pool::{PoolCfg, ProviderPool};
+use crate::provider::Started;
+use crate::scheduler::shard::carve;
+use crate::scheduler::{Action, ClientScheduler};
+use crate::sim::driver::{self, process_tick, CoreRun, DepthFold, Ev, LoopState, ShardFabric};
+use crate::sim::{EventQueue, TimerId};
+use crate::util::pool::{default_jobs, scoped_workers, SpinBarrier};
+
+/// Environment variable selecting the default partition count for
+/// multi-tenant runs (mirrors `BBSCHED_EVENT_QUEUE`): unset or
+/// unparsable means `1` (serial); `0` means one partition per core.
+pub const PARTITIONS_ENV: &str = "BBSCHED_PARTITIONS";
+
+/// Partition count from [`PARTITIONS_ENV`]; `1` (serial) when unset or
+/// invalid, `0` passes through as "one partition per core".
+pub fn default_partitions() -> usize {
+    match std::env::var(PARTITIONS_ENV) {
+        Ok(v) => v.trim().parse::<usize>().unwrap_or(1),
+        Err(_) => 1,
+    }
+}
+
+/// `normal()` draws from a 53-bit uniform, so Box–Muller yields
+/// `|z| <= sqrt(2 * 53 * ln 2) ≈ 8.5717`; any bound above that makes the
+/// lognormal floor conservative.
+const Z_BOUND: f64 = 8.58;
+
+/// Floors below this are useless as lookahead (each window would advance
+/// virtual time by less than a nanosecond) — treat them as zero.
+const MIN_LOOKAHEAD_MS: f64 = 1e-9;
+
+/// The conservative lookahead: a lower bound on every service time any
+/// shard can ever sample, or `None` if the fleet admits (near-)zero
+/// service times.
+///
+/// Service is `(base_ms + per_token_ms * tokens) * slowdown(n) *
+/// lognormal(0, σ)` with `tokens >= 0`, `slowdown >= 1` (for `γ >= 0`),
+/// and the lognormal factor bounded below by `exp(-σ * Z_BOUND)` because
+/// the RNG's Box–Muller normal draws from a 53-bit uniform and is
+/// therefore bounded (`|z| <= 8.5717 < Z_BOUND = 8.58`). The floor is
+/// the minimum over shards of `base_ms * exp(-σ * Z_BOUND)`, shaved by one
+/// part in 10⁹ when `σ > 0` to absorb the floating-point rounding of the
+/// jitter product; for `σ == 0` the floor is exactly `base_ms` (and the
+/// window-boundary guarantee follows from monotonicity of f64 rounding).
+pub fn lookahead_floor_ms(cfg: &PoolCfg) -> Option<f64> {
+    let mut floor = f64::INFINITY;
+    for shard in &cfg.shards {
+        let valid = shard.base_ms > 0.0
+            && shard.per_token_ms >= 0.0
+            && shard.jitter_sigma >= 0.0
+            && shard.slowdown_gamma >= 0.0;
+        if !valid {
+            return None; // NaNs fail the comparisons too
+        }
+        let mut f = shard.base_ms;
+        if shard.jitter_sigma > 0.0 {
+            f *= (-shard.jitter_sigma * Z_BOUND).exp();
+            f *= 1.0 - 1e-9;
+        }
+        floor = floor.min(f);
+    }
+    if floor.is_finite() && floor > MIN_LOOKAHEAD_MS {
+        Some(floor)
+    } else {
+        None
+    }
+}
+
+/// What the partition executor actually did for one run — recorded on
+/// [`driver::MultiRunOutput`] so callers and benches can verify the
+/// parallel path (not the serial fallback) ran, and how much
+/// synchronization it cost.
+#[derive(Debug, Clone, Default)]
+pub struct PartitionStats {
+    /// Event loops that actually ran (1 = the serial reference loop).
+    pub partitions: usize,
+    /// Lookahead windows executed.
+    pub windows: u64,
+    /// Barrier waits performed by the coordinator (two per window, plus
+    /// the initial collection and the final release).
+    pub barrier_crossings: u64,
+    /// Shard ops (submit/finish) replayed by the coordinator.
+    pub ops_routed: u64,
+    /// Provider completions routed back to partition mailboxes.
+    pub deliveries: u64,
+    /// Times a partition stopped at an event *exactly* on its window
+    /// boundary (processed next window — the lookahead bound is strict).
+    pub boundary_deferrals: u64,
+    /// `true` when >= 2 partitions were requested but the fleet has no
+    /// positive service-time floor, forcing the serial loop.
+    pub serial_fallback: bool,
+    /// The conservative window length used (0 when no floor exists).
+    pub lookahead_ms: f64,
+}
+
+/// A partition worker's provider seam: record stamped shard ops for the
+/// coordinator's replay instead of touching the pool, and buffer the
+/// per-tick depth samples for the merged diagnostics fold.
+struct PartitionFabric {
+    ops: Vec<StampedOp>,
+    samples: Vec<(f64, usize)>,
+}
+
+/// One shard op with the virtual time it happened at. In-stream order is
+/// the within-partition order; the coordinator merges streams by
+/// `(time, partition)`.
+#[derive(Debug, Clone, Copy)]
+struct StampedOp {
+    time: f64,
+    op: ShardOp,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum ShardOp {
+    /// A `Send` action released `id` to `shard` (serial: `submit`).
+    Submit { id: ReqId, tokens: f64, shard: usize },
+    /// A `ProviderDone` popped for `id` (serial: `on_finish`).
+    Finish { id: ReqId },
+}
+
+impl ShardFabric for PartitionFabric {
+    fn send(&mut self, id: ReqId, tokens: f64, shard: usize, now: f64, _q: &mut EventQueue<Ev>) {
+        self.ops.push(StampedOp { time: now, op: ShardOp::Submit { id, tokens, shard } });
+    }
+    fn flush(&mut self, _now: f64, _q: &mut EventQueue<Ev>) {
+        // Replay applies ops one by one in stream order — the serial
+        // fabric's batch boundaries carry no information (submit_batch is
+        // per-item submit in order).
+    }
+    fn finish(&mut self, id: ReqId, now: f64, _q: &mut EventQueue<Ev>) {
+        self.ops.push(StampedOp { time: now, op: ShardOp::Finish { id } });
+    }
+    fn end_tick(&mut self, now: f64, depth: usize) {
+        self.samples.push((now, depth));
+    }
+}
+
+/// One partition's mailbox. Workers publish `ops`/`samples`/`peek` at the
+/// end of each window; the coordinator consumes them, then fills
+/// `deliveries` (completions owned by this partition, in replay order)
+/// for the worker to drain at the next window start.
+#[derive(Default)]
+struct Slot {
+    ops: Vec<StampedOp>,
+    samples: Vec<(f64, usize)>,
+    deliveries: Vec<(f64, ReqId)>,
+    peek: Option<f64>,
+}
+
+/// The per-partition `&mut` windows into the run's global arrays, claimed
+/// once by the owning worker.
+struct PartMut<'a> {
+    schedulers: &'a mut [ClientScheduler],
+    status: &'a mut [RequestStatus],
+    latency: &'a mut [Option<f64>],
+    defer_counts: &'a mut [u32],
+    sends_by_tenant: &'a mut [u64],
+}
+
+/// Scalars each worker accumulates privately and returns at join.
+struct WorkerOut {
+    sends: u64,
+    peak_inflight: usize,
+    timers_canceled: u64,
+    processed: u64,
+    skipped: u64,
+    boundary_deferrals: u64,
+}
+
+/// What the coordinator thread accumulates across windows.
+struct CoordOut {
+    fold: DepthFold,
+    windows: u64,
+    barrier_crossings: u64,
+    ops_routed: u64,
+    deliveries: u64,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// Poison-tolerant lock: a worker panic is surfaced through the abort
+/// protocol (and re-raised at join), not by poisoning every mailbox.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Split `s` into consecutive `&mut` chunks matching `bounds` (contiguous
+/// `(lo, hi)` half-open ranges covering the slice).
+fn split_chunks<'a, T>(mut s: &'a mut [T], bounds: &[(usize, usize)]) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(bounds.len());
+    let mut consumed = 0usize;
+    for &(lo, hi) in bounds {
+        debug_assert_eq!(lo, consumed, "bounds must be contiguous");
+        let (head, rest) = s.split_at_mut(hi - lo);
+        out.push(head);
+        s = rest;
+        consumed = hi;
+    }
+    debug_assert!(s.is_empty(), "bounds must cover the slice");
+    out
+}
+
+/// Route a replayed completion to the partition owning its request id.
+fn route(
+    guards: &mut [MutexGuard<'_, Slot>],
+    req_parts: &[(usize, usize)],
+    started: Started,
+    window_end: f64,
+    deliveries: &mut u64,
+) {
+    // Empty partitions share `lo` with their successor; the last range
+    // with `lo <= id` is the nonempty one containing `id`.
+    let pi = req_parts.partition_point(|&(lo, _)| lo <= started.id) - 1;
+    debug_assert!(
+        started.id >= req_parts[pi].0 && started.id < req_parts[pi].1,
+        "routed {} outside partition {pi} range {:?}",
+        started.id,
+        req_parts[pi],
+    );
+    // The conservative-lookahead invariant: nothing submitted or promoted
+    // inside a window can finish inside it.
+    debug_assert!(
+        started.finish_ms >= window_end,
+        "completion {} at {} lands before window end {window_end}",
+        started.id,
+        started.finish_ms,
+    );
+    guards[pi].deliveries.push((started.finish_ms, started.id));
+    *deliveries += 1;
+}
+
+/// Run the DES across `partitions` event loops (see the module docs), or
+/// fall back to the serial [`driver::run_core`] when the effective count
+/// is < 2 or the fleet has no lookahead. Returns the same [`CoreRun`] the
+/// serial loop would — bit-identical — plus what the executor did.
+#[allow(clippy::too_many_arguments)] // the run's full working set, threaded explicitly
+pub(crate) fn run_core_partitioned(
+    requests: &[Request],
+    priors: &[(Priors, Route)],
+    owner: &[u32],
+    tenant_ranges: &[(usize, usize)],
+    schedulers: &mut [ClientScheduler],
+    provider: &mut ProviderPool,
+    pool_cfg: &PoolCfg,
+    partitions: usize,
+) -> (CoreRun, PartitionStats) {
+    let n_tenants = schedulers.len();
+    let requested = if partitions == 0 { default_jobs() } else { partitions };
+    let p = requested.min(n_tenants);
+    let floor = lookahead_floor_ms(pool_cfg);
+    if p < 2 || floor.is_none() {
+        let core = driver::run_core(requests, priors, owner, schedulers, provider);
+        let stats = PartitionStats {
+            partitions: 1,
+            serial_fallback: p >= 2 && floor.is_none(),
+            lookahead_ms: floor.unwrap_or(0.0),
+            ..PartitionStats::default()
+        };
+        return (core, stats);
+    }
+    run_partitioned(
+        requests,
+        priors,
+        owner,
+        tenant_ranges,
+        schedulers,
+        provider,
+        p,
+        floor.expect("checked above"),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_partitioned(
+    requests: &[Request],
+    priors: &[(Priors, Route)],
+    owner: &[u32],
+    tenant_ranges: &[(usize, usize)],
+    schedulers: &mut [ClientScheduler],
+    provider: &mut ProviderPool,
+    p: usize,
+    lookahead_ms: f64,
+) -> (CoreRun, PartitionStats) {
+    let n = requests.len();
+    let n_tenants = schedulers.len();
+    debug_assert!(p >= 2 && p <= n_tenants);
+
+    // The partition map: balanced contiguous tenant groups; request-id
+    // ranges follow because ids are tenant-major.
+    let tenant_parts = carve(n_tenants, p);
+    let req_parts: Vec<(usize, usize)> = tenant_parts
+        .iter()
+        .map(|&(tlo, thi)| (tenant_ranges[tlo].0, tenant_ranges[thi - 1].1))
+        .collect();
+    debug_assert_eq!(req_parts.last().map(|r| r.1), Some(n));
+
+    let mut status = vec![RequestStatus::Queued; n];
+    let mut latency: Vec<Option<f64>> = vec![None; n];
+    let mut defer_counts = vec![0u32; n];
+    let mut sends_by_tenant = vec![0u64; n_tenants];
+
+    let slots: Vec<Mutex<Slot>> = (0..p).map(|_| Mutex::new(Slot::default())).collect();
+    // Coordinator → workers: the next window start (f64 bits) and the two
+    // stop signals. `abort` is set by a panicking worker *before* its
+    // barrier arrival so siblings are released instead of deadlocking.
+    let w_bits = AtomicU64::new(0);
+    let done = AtomicBool::new(false);
+    let abort = AtomicBool::new(false);
+    // Two barriers per window: `release` starts a round (workers may read
+    // `w_bits`/`done` after it), `collect` ends it (the coordinator may
+    // read mailboxes after it).
+    let release = SpinBarrier::new(p + 1);
+    let collect = SpinBarrier::new(p + 1);
+
+    let (worker_outs, coord) = {
+        let parts: Vec<Mutex<Option<PartMut<'_>>>> = {
+            let sched_chunks = split_chunks(&mut *schedulers, &tenant_parts);
+            let status_chunks = split_chunks(&mut status[..], &req_parts);
+            let latency_chunks = split_chunks(&mut latency[..], &req_parts);
+            let defer_chunks = split_chunks(&mut defer_counts[..], &req_parts);
+            let sbt_chunks = split_chunks(&mut sends_by_tenant[..], &tenant_parts);
+            sched_chunks
+                .into_iter()
+                .zip(status_chunks)
+                .zip(latency_chunks)
+                .zip(defer_chunks)
+                .zip(sbt_chunks)
+                .map(|((((sch, st), lat), def), sbt)| {
+                    Mutex::new(Some(PartMut {
+                        schedulers: sch,
+                        status: st,
+                        latency: lat,
+                        defer_counts: def,
+                        sends_by_tenant: sbt,
+                    }))
+                })
+                .collect()
+        };
+
+        let worker = |i: usize| -> WorkerOut {
+            let pm = lock(&parts[i]).take().expect("partition state claimed exactly once");
+            let (req_lo, req_hi) = req_parts[i];
+            let pn = req_hi - req_lo;
+            // Local queue setup in the serial push order for this id
+            // range: within-partition (time, seq) ties resolve exactly as
+            // the global loop's tenant-major setup does.
+            let mut q: EventQueue<Ev> = EventQueue::with_capacity(pn * 4);
+            let mut timeout_timer: Vec<Option<TimerId>> = Vec::with_capacity(pn);
+            for r in &requests[req_lo..req_hi] {
+                q.push(r.arrival_ms, Ev::Arrival(r.id));
+                timeout_timer.push(Some(q.push_cancelable(r.timeout_ms, Ev::Timeout(r.id))));
+            }
+            let mut retry_timer: Vec<Option<TimerId>> = vec![None; pn];
+            let mut actions: Vec<Action> = Vec::new();
+            let mut fabric = PartitionFabric { ops: Vec::new(), samples: Vec::new() };
+            let schedulers = pm.schedulers;
+            let mut st = LoopState {
+                base: req_lo,
+                tenant_base: tenant_parts[i].0,
+                status: pm.status,
+                latency: pm.latency,
+                defer_counts: pm.defer_counts,
+                timeout_timer: &mut timeout_timer,
+                retry_timer: &mut retry_timer,
+                sends_by_tenant: pm.sends_by_tenant,
+                sends: 0,
+                peak_inflight: 0,
+                timers_canceled: 0,
+            };
+            let mut boundary_deferrals = 0u64;
+            let mut pending_panic: Option<Box<dyn std::any::Any + Send>> = None;
+            lock(&slots[i]).peek = q.peek_time();
+            collect.wait();
+            loop {
+                release.wait();
+                if done.load(Ordering::Acquire) {
+                    break;
+                }
+                let w = f64::from_bits(w_bits.load(Ordering::Acquire));
+                let end = w + lookahead_ms;
+                let round = catch_unwind(AssertUnwindSafe(|| {
+                    // Mailbox drain: completions the coordinator routed
+                    // here, pushed in replay order (the serial push order).
+                    {
+                        let mut slot = lock(&slots[i]);
+                        for &(finish_ms, id) in slot.deliveries.iter() {
+                            debug_assert!(
+                                finish_ms >= w,
+                                "delivery for {id} at {finish_ms} precedes window start {w}"
+                            );
+                            q.push(finish_ms, Ev::ProviderDone(id));
+                        }
+                        slot.deliveries.clear();
+                    }
+                    // Advance strictly below `end`: the lookahead bound
+                    // covers times < end only, so a boundary-exact event
+                    // belongs to the next window.
+                    loop {
+                        match q.peek_time() {
+                            Some(t) if t < end => {}
+                            Some(t) => {
+                                if t == end {
+                                    boundary_deferrals += 1;
+                                }
+                                break;
+                            }
+                            None => break,
+                        }
+                        let (now, ev) = q.pop().expect("peeked event pops");
+                        debug_assert!(
+                            now >= w && now < end,
+                            "event at {now} outside window [{w}, {end})"
+                        );
+                        process_tick(
+                            now,
+                            ev,
+                            requests,
+                            priors,
+                            owner,
+                            schedulers,
+                            &mut st,
+                            &mut q,
+                            &mut actions,
+                            &mut fabric,
+                        );
+                    }
+                    // Publish the round: swap keeps both buffers' capacity
+                    // ping-ponging instead of reallocating every window.
+                    let mut slot = lock(&slots[i]);
+                    std::mem::swap(&mut slot.ops, &mut fabric.ops);
+                    std::mem::swap(&mut slot.samples, &mut fabric.samples);
+                    slot.peek = q.peek_time();
+                }));
+                if let Err(payload) = round {
+                    pending_panic = Some(payload);
+                    abort.store(true, Ordering::Release);
+                }
+                collect.wait();
+            }
+            if let Some(payload) = pending_panic {
+                resume_unwind(payload);
+            }
+            WorkerOut {
+                sends: st.sends,
+                peak_inflight: st.peak_inflight,
+                timers_canceled: st.timers_canceled,
+                processed: q.processed(),
+                skipped: q.skipped(),
+                boundary_deferrals,
+            }
+        };
+
+        let coordinator = || -> CoordOut {
+            let mut out = CoordOut {
+                fold: DepthFold::new(),
+                windows: 0,
+                barrier_crossings: 0,
+                ops_routed: 0,
+                deliveries: 0,
+                panic: None,
+            };
+            // Per-partition latest depth: the global depth after any
+            // sample is the integer sum of each partition's latest local
+            // depth — exactly the serial fold's observations.
+            let mut cur_depth = vec![0usize; p];
+            let mut depth_total = 0usize;
+            collect.wait();
+            out.barrier_crossings += 1;
+            loop {
+                // Next window start: the earliest pending event anywhere —
+                // local heap heads and undrained deliveries (a drained-out
+                // partition may still owe a routed completion).
+                let mut w = f64::INFINITY;
+                for slot in &slots {
+                    let slot = lock(slot);
+                    if let Some(t) = slot.peek {
+                        w = w.min(t);
+                    }
+                    for &(finish_ms, _) in slot.deliveries.iter() {
+                        w = w.min(finish_ms);
+                    }
+                }
+                if w == f64::INFINITY {
+                    done.store(true, Ordering::Release);
+                    release.wait();
+                    out.barrier_crossings += 1;
+                    break;
+                }
+                w_bits.store(w.to_bits(), Ordering::Release);
+                release.wait();
+                collect.wait();
+                out.barrier_crossings += 2;
+                out.windows += 1;
+                if abort.load(Ordering::Acquire) {
+                    // A worker panicked this round: release everyone into
+                    // the done-branch and let join re-raise its payload.
+                    done.store(true, Ordering::Release);
+                    release.wait();
+                    out.barrier_crossings += 1;
+                    break;
+                }
+                let window_end = w + lookahead_ms;
+                let merged = catch_unwind(AssertUnwindSafe(|| {
+                    let mut guards: Vec<MutexGuard<'_, Slot>> =
+                        slots.iter().map(|s| lock(s)).collect();
+                    // Replay shard ops in merged (time, partition) order —
+                    // the serial loop's op order (see module docs).
+                    let mut cursors = vec![0usize; p];
+                    loop {
+                        let mut best: Option<(f64, usize)> = None;
+                        for (pi, g) in guards.iter().enumerate() {
+                            if let Some(op) = g.ops.get(cursors[pi]) {
+                                let better = match best {
+                                    None => true,
+                                    Some((bt, _)) => op.time < bt,
+                                };
+                                if better {
+                                    best = Some((op.time, pi));
+                                }
+                            }
+                        }
+                        let Some((_, pi)) = best else { break };
+                        let op = guards[pi].ops[cursors[pi]];
+                        cursors[pi] += 1;
+                        out.ops_routed += 1;
+                        match op.op {
+                            ShardOp::Submit { id, tokens, shard } => {
+                                if let Some(s) = provider.submit(id, tokens, shard, op.time) {
+                                    route(
+                                        &mut guards,
+                                        &req_parts,
+                                        s,
+                                        window_end,
+                                        &mut out.deliveries,
+                                    );
+                                }
+                            }
+                            ShardOp::Finish { id } => {
+                                for s in provider.on_finish(id, op.time) {
+                                    route(
+                                        &mut guards,
+                                        &req_parts,
+                                        s,
+                                        window_end,
+                                        &mut out.deliveries,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    // Fold depth samples in the same merged order, keeping
+                    // the integer global depth exact.
+                    let mut cursors = vec![0usize; p];
+                    loop {
+                        let mut best: Option<(f64, usize)> = None;
+                        for (pi, g) in guards.iter().enumerate() {
+                            if let Some(&(t, _)) = g.samples.get(cursors[pi]) {
+                                let better = match best {
+                                    None => true,
+                                    Some((bt, _)) => t < bt,
+                                };
+                                if better {
+                                    best = Some((t, pi));
+                                }
+                            }
+                        }
+                        let Some((_, pi)) = best else { break };
+                        let (t, d) = guards[pi].samples[cursors[pi]];
+                        cursors[pi] += 1;
+                        depth_total = depth_total - cur_depth[pi] + d;
+                        cur_depth[pi] = d;
+                        out.fold.observe(t, depth_total);
+                    }
+                    for g in guards.iter_mut() {
+                        g.ops.clear();
+                        g.samples.clear();
+                    }
+                }));
+                if let Err(payload) = merged {
+                    out.panic = Some(payload);
+                    done.store(true, Ordering::Release);
+                    release.wait();
+                    out.barrier_crossings += 1;
+                    break;
+                }
+            }
+            out
+        };
+
+        scoped_workers(p, worker, coordinator)
+    };
+
+    if let Some(payload) = coord.panic {
+        resume_unwind(payload);
+    }
+
+    let (mean_queue_depth, peak_queue_depth) = coord.fold.finish();
+    let core = CoreRun {
+        status,
+        latency,
+        defer_counts,
+        sends: worker_outs.iter().map(|w| w.sends).sum(),
+        sends_by_tenant,
+        peak_inflight: worker_outs.iter().map(|w| w.peak_inflight).max().unwrap_or(0),
+        timers_canceled: worker_outs.iter().map(|w| w.timers_canceled).sum(),
+        events_processed: worker_outs.iter().map(|w| w.processed).sum(),
+        events_skipped: worker_outs.iter().map(|w| w.skipped).sum(),
+        mean_queue_depth,
+        peak_queue_depth,
+        ordering_select_work: schedulers.iter().map(|s| s.ordering_work()).sum(),
+    };
+    let stats = PartitionStats {
+        partitions: p,
+        windows: coord.windows,
+        barrier_crossings: coord.barrier_crossings,
+        ops_routed: coord.ops_routed,
+        deliveries: coord.deliveries,
+        boundary_deferrals: worker_outs.iter().map(|w| w.boundary_deferrals).sum(),
+        serial_fallback: false,
+        lookahead_ms,
+    };
+    (core, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::provider::ProviderCfg;
+
+    fn cfg(base_ms: f64, jitter_sigma: f64) -> ProviderCfg {
+        ProviderCfg { base_ms, jitter_sigma, ..ProviderCfg::default() }
+    }
+
+    #[test]
+    fn floor_is_exact_base_without_jitter() {
+        let pool = PoolCfg::single(cfg(40.0, 0.0));
+        assert_eq!(lookahead_floor_ms(&pool), Some(40.0));
+    }
+
+    #[test]
+    fn floor_takes_min_across_shards_and_discounts_jitter() {
+        let pool = PoolCfg { shards: vec![cfg(100.0, 0.0), cfg(80.0, 0.1)] };
+        let f = lookahead_floor_ms(&pool).unwrap();
+        let expected = 80.0 * (-0.1f64 * Z_BOUND).exp() * (1.0 - 1e-9);
+        assert_eq!(f.to_bits(), expected.to_bits());
+        assert!(f < 80.0 && f > 0.0);
+    }
+
+    #[test]
+    fn floor_rejects_degenerate_fleets() {
+        assert_eq!(lookahead_floor_ms(&PoolCfg::single(cfg(0.0, 0.0))), None);
+        assert_eq!(lookahead_floor_ms(&PoolCfg::single(cfg(-1.0, 0.0))), None);
+        assert_eq!(lookahead_floor_ms(&PoolCfg::single(cfg(f64::NAN, 0.0))), None);
+        assert_eq!(lookahead_floor_ms(&PoolCfg::single(cfg(40.0, f64::NAN))), None);
+        let mut neg_token = cfg(40.0, 0.0);
+        neg_token.per_token_ms = -0.5;
+        assert_eq!(lookahead_floor_ms(&PoolCfg::single(neg_token)), None);
+        let mut neg_gamma = cfg(40.0, 0.0);
+        neg_gamma.slowdown_gamma = -0.1;
+        assert_eq!(lookahead_floor_ms(&PoolCfg::single(neg_gamma)), None);
+        // A huge sigma drives the floor below the useful threshold.
+        assert_eq!(lookahead_floor_ms(&PoolCfg::single(cfg(1e-3, 3.0))), None);
+    }
+
+    #[test]
+    fn floor_bound_really_holds_for_sampled_services() {
+        // Empirical guard for the Z_BOUND analysis: no sampled service
+        // time may undercut the floor.
+        use crate::util::rng::Rng;
+        let shard = cfg(50.0, 0.25);
+        let pool = PoolCfg::single(shard);
+        let floor = lookahead_floor_ms(&pool).unwrap();
+        let mut rng = Rng::new(0xF1005);
+        for _ in 0..200_000 {
+            let s = 50.0 * rng.lognormal(0.0, 0.25);
+            assert!(s >= floor, "sampled service {s} under floor {floor}");
+        }
+    }
+
+    #[test]
+    fn default_partitions_parses_env_conventions() {
+        // Can't mutate the env safely in parallel tests; exercise the
+        // parse path the function uses.
+        assert_eq!("4".trim().parse::<usize>().unwrap_or(1), 4);
+        assert_eq!("".trim().parse::<usize>().unwrap_or(1), 1);
+        assert_eq!("nope".trim().parse::<usize>().unwrap_or(1), 1);
+        assert_eq!(" 0 ".trim().parse::<usize>().unwrap_or(1), 0);
+    }
+
+    #[test]
+    fn split_chunks_covers_and_isolates() {
+        let mut v: Vec<u32> = (0..10).collect();
+        let bounds = [(0usize, 3usize), (3, 3), (3, 10)];
+        let chunks = split_chunks(&mut v[..], &bounds);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0], &[0, 1, 2]);
+        assert!(chunks[1].is_empty());
+        assert_eq!(chunks[2].len(), 7);
+    }
+
+    #[test]
+    fn routing_picks_the_owning_partition_with_empty_ranges() {
+        // partition_point convention: empty ranges share `lo` with their
+        // successor and must never win.
+        let req_parts = [(0usize, 4usize), (4, 4), (4, 9)];
+        for (id, want) in [(0usize, 0usize), (3, 0), (4, 2), (8, 2)] {
+            let pi = req_parts.partition_point(|&(lo, _)| lo <= id) - 1;
+            assert_eq!(pi, want, "id {id}");
+        }
+    }
+}

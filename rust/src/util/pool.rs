@@ -1,13 +1,18 @@
 //! Scoped worker pool for deterministic fan-out (std::thread only — the
 //! offline image vendors no rayon).
 //!
-//! [`scoped_map`] runs a function over a work list on up to `jobs` threads
-//! and returns the results **in input order**, so a parallel experiment
-//! sweep is byte-identical to a serial one. Workers claim the next
-//! unclaimed index from a shared atomic counter (dynamic load balancing —
-//! experiment cells have very uneven costs), and every item is executed
-//! exactly once: the counter hands each index to exactly one worker, and
-//! the per-slot `Option` take asserts single ownership.
+//! Two layers share one spawn/join primitive, [`scoped_workers`]:
+//!
+//! * [`scoped_map`] runs a function over a work list on up to `jobs` threads
+//!   and returns the results **in input order**, so a parallel experiment
+//!   sweep is byte-identical to a serial one. Workers claim the next
+//!   unclaimed index from a shared atomic counter (dynamic load balancing —
+//!   experiment cells have very uneven costs), and every item is executed
+//!   exactly once: the counter hands each index to exactly one worker, and
+//!   the per-slot `Option` take asserts single ownership.
+//! * The partitioned event loop (`sim::partition`) spawns one long-lived
+//!   worker per partition plus a coordinator on the calling thread,
+//!   synchronized by a [`SpinBarrier`] at lookahead-window boundaries.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -18,6 +23,34 @@ pub const ALL_CORES: usize = 0;
 /// Number of worker threads used when `jobs == 0` (all available cores).
 pub fn default_jobs() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Spawn `n` scoped worker threads running `worker(i)` while `coordinator`
+/// runs on the calling thread; join everything and return the workers'
+/// results **in index order** alongside the coordinator's result.
+///
+/// This is the one spawn/claim/join site shared by [`scoped_map`] (whose
+/// coordinator is a no-op — the calling thread just waits) and the
+/// partition executor (whose coordinator drives the window protocol). A
+/// worker panic propagates to the caller after the scope joins the rest;
+/// callers whose workers block on shared synchronization (barriers) must
+/// arrange their own abort signalling so sibling workers still exit.
+pub fn scoped_workers<R, W, C, K>(n: usize, worker: W, coordinator: K) -> (Vec<R>, C)
+where
+    R: Send,
+    W: Fn(usize) -> R + Sync,
+    K: FnOnce() -> C,
+{
+    std::thread::scope(|scope| {
+        let worker = &worker;
+        let handles: Vec<_> = (0..n).map(|i| scope.spawn(move || worker(i))).collect();
+        let coord = coordinator();
+        let results: Vec<R> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+            .collect();
+        (results, coord)
+    })
 }
 
 /// Map `f` over `items` with up to `jobs` workers, preserving input order.
@@ -43,23 +76,68 @@ where
     let work: Vec<Mutex<Option<T>>> = items.into_iter().map(|t| Mutex::new(Some(t))).collect();
     let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
     let next = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..jobs {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let item = work[i].lock().unwrap().take().expect("index claimed exactly once");
-                let r = f(item);
-                *results[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
+    scoped_workers(
+        jobs,
+        |_| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            let item = work[i].lock().unwrap().take().expect("index claimed exactly once");
+            let r = f(item);
+            *results[i].lock().unwrap() = Some(r);
+        },
+        || (),
+    );
     results
         .into_iter()
         .map(|slot| slot.into_inner().unwrap().expect("worker filled every slot"))
         .collect()
+}
+
+/// A reusable generation-counted barrier for `n` participants.
+///
+/// Unlike `std::sync::Barrier`, waiters spin briefly before falling back to
+/// `yield_now` — the partition executor crosses a barrier every lookahead
+/// window (sub-millisecond cadence), where parking/unparking OS primitives
+/// dominate the window's useful work, but pure spinning starves oversubscribed
+/// runners (P workers + 1 coordinator on P cores is the common CI shape).
+///
+/// The barrier is reusable: the last arriver resets the arrival count
+/// *before* bumping the generation, and no thread can re-enter `wait` until
+/// the generation it observed has been bumped, so arrivals for round k+1
+/// never race the reset for round k.
+pub struct SpinBarrier {
+    n: usize,
+    arrived: AtomicUsize,
+    generation: AtomicUsize,
+}
+
+impl SpinBarrier {
+    /// A barrier releasing when `n` participants have called [`wait`](Self::wait).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "barrier needs at least one participant");
+        SpinBarrier { n, arrived: AtomicUsize::new(0), generation: AtomicUsize::new(0) }
+    }
+
+    /// Block (spin, then yield) until all `n` participants have arrived.
+    pub fn wait(&self) {
+        let generation = self.generation.load(Ordering::Acquire);
+        if self.arrived.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+            self.arrived.store(0, Ordering::Release);
+            self.generation.store(generation.wrapping_add(1), Ordering::Release);
+            return;
+        }
+        let mut spins = 0u32;
+        while self.generation.load(Ordering::Acquire) == generation {
+            spins = spins.saturating_add(1);
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -130,5 +208,89 @@ mod tests {
         let out = scoped_map(items, 4, |s| s.len());
         assert_eq!(out[0], 5);
         assert_eq!(out[19], 6);
+    }
+
+    #[test]
+    fn scoped_workers_returns_results_in_index_order() {
+        let (results, coord) = scoped_workers(
+            8,
+            |i| {
+                // Uneven spin so completion order scrambles.
+                let mut acc = 0u64;
+                for k in 0..((8 - i) as u64 * 5_000) {
+                    acc = acc.wrapping_add(std::hint::black_box(k));
+                }
+                std::hint::black_box(acc);
+                i * 10
+            },
+            || "done",
+        );
+        assert_eq!(results, (0..8).map(|i| i * 10).collect::<Vec<_>>());
+        assert_eq!(coord, "done");
+    }
+
+    #[test]
+    fn scoped_workers_coordinator_runs_concurrently() {
+        // The coordinator and workers must overlap: workers block on a
+        // barrier only the coordinator's participation can release.
+        let barrier = SpinBarrier::new(5);
+        let (results, _) = scoped_workers(
+            4,
+            |i| {
+                barrier.wait();
+                i
+            },
+            || barrier.wait(),
+        );
+        assert_eq!(results, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn spin_barrier_is_reusable_across_rounds() {
+        // 4 workers + coordinator cross the same barrier 100 times; a
+        // shared counter bumped strictly between crossings must show every
+        // participant saw every round.
+        const ROUNDS: usize = 100;
+        const WORKERS: usize = 4;
+        let barrier = SpinBarrier::new(WORKERS + 1);
+        let round = AtomicUsize::new(0);
+        let (counts, _) = scoped_workers(
+            WORKERS,
+            |_| {
+                let mut seen = 0usize;
+                for r in 0..ROUNDS {
+                    barrier.wait();
+                    // Between the two barriers the coordinator has set
+                    // `round` to r and nobody may advance past it.
+                    assert_eq!(round.load(Ordering::SeqCst), r);
+                    seen += 1;
+                    barrier.wait();
+                }
+                seen
+            },
+            || {
+                for r in 0..ROUNDS {
+                    round.store(r, Ordering::SeqCst);
+                    barrier.wait();
+                    barrier.wait();
+                }
+            },
+        );
+        assert_eq!(counts, vec![ROUNDS; WORKERS]);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker 2 exploded")]
+    fn scoped_workers_propagates_worker_panics() {
+        let _ = scoped_workers(
+            4,
+            |i| {
+                if i == 2 {
+                    panic!("worker 2 exploded");
+                }
+                i
+            },
+            || (),
+        );
     }
 }

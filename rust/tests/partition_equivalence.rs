@@ -1,0 +1,224 @@
+//! The partitioned event loop's bit-compat contract: for any partition
+//! count, [`run_tenants_partitioned`] must be **byte-identical** to the
+//! serial reference loop (`partitions == 1`) — same per-tenant metric
+//! bits, same per-request outcomes (status, latency bits, defer counts),
+//! same engine diagnostics including the f64 queue-depth integral and the
+//! per-shard start counts — across strategies × fleets × tenant mixes ×
+//! seeds. This is the same bit-compat-ladder discipline as the 1-shard
+//! and 1-tenant equivalences (`tests/pool_equivalence.rs`,
+//! `tests/tenant_equivalence.rs`), one rung up.
+//!
+//! The release-mode leg of CI is load-bearing here: the window-boundary
+//! shadow checks are `debug_assert!`s, so the release run proves the
+//! protocol itself (not the asserts) carries the equality.
+
+use blackbox_sched::predictor::InfoLevel;
+use blackbox_sched::provider::pool::PoolCfg;
+use blackbox_sched::provider::ProviderCfg;
+use blackbox_sched::scheduler::{SchedulerCfg, ShardPolicy, StrategyKind};
+use blackbox_sched::sim::driver::{run_tenants_partitioned, MultiRunOutput, TenantSpec};
+use blackbox_sched::workload::{Mix, WorkloadSpec};
+
+/// Assert two multi-tenant outputs are bitwise identical: tenant metrics
+/// (f64s compared by bits), every outcome, and the full diagnostics.
+fn outputs_bitwise_equal(a: &MultiRunOutput, b: &MultiRunOutput, ctx: &str) {
+    assert_eq!(a.tenants.len(), b.tenants.len(), "{ctx}");
+    for (t, (x, y)) in a.tenants.iter().zip(b.tenants.iter()).enumerate() {
+        assert_eq!(x.sends, y.sends, "{ctx}: tenant {t} sends");
+        assert_eq!(x.metrics.n_offered, y.metrics.n_offered, "{ctx}: tenant {t}");
+        assert_eq!(x.metrics.n_completed, y.metrics.n_completed, "{ctx}: tenant {t}");
+        assert_eq!(x.metrics.n_rejected, y.metrics.n_rejected, "{ctx}: tenant {t}");
+        assert_eq!(x.metrics.n_timed_out, y.metrics.n_timed_out, "{ctx}: tenant {t}");
+        assert_eq!(x.metrics.defers_total, y.metrics.defers_total, "{ctx}: tenant {t}");
+        assert_eq!(x.metrics.rejects_total, y.metrics.rejects_total, "{ctx}: tenant {t}");
+        assert_eq!(x.metrics.defers_by_bucket, y.metrics.defers_by_bucket, "{ctx}: tenant {t}");
+        assert_eq!(x.metrics.rejects_by_bucket, y.metrics.rejects_by_bucket, "{ctx}: tenant {t}");
+        assert_eq!(
+            x.metrics.feasibility_violations,
+            y.metrics.feasibility_violations,
+            "{ctx}: tenant {t}"
+        );
+        assert_eq!(x.metrics.completed_by_bucket, y.metrics.completed_by_bucket, "{ctx}: {t}");
+        assert_eq!(x.metrics.offered_by_bucket, y.metrics.offered_by_bucket, "{ctx}: {t}");
+        for (m, n) in [
+            (x.metrics.short_p95_ms, y.metrics.short_p95_ms),
+            (x.metrics.short_p90_ms, y.metrics.short_p90_ms),
+            (x.metrics.global_p95_ms, y.metrics.global_p95_ms),
+            (x.metrics.global_std_ms, y.metrics.global_std_ms),
+            (x.metrics.heavy_p90_ms, y.metrics.heavy_p90_ms),
+            (x.metrics.completion_rate, y.metrics.completion_rate),
+            (x.metrics.satisfaction, y.metrics.satisfaction),
+            (x.metrics.goodput_rps, y.metrics.goodput_rps),
+            (x.metrics.makespan_ms, y.metrics.makespan_ms),
+        ] {
+            assert_eq!(m.to_bits(), n.to_bits(), "{ctx}: tenant {t} metric drift {m} vs {n}");
+        }
+        assert_eq!(x.outcomes.len(), y.outcomes.len(), "{ctx}: tenant {t}");
+        for (o, p) in x.outcomes.iter().zip(y.outcomes.iter()) {
+            assert_eq!(o.id, p.id, "{ctx}");
+            assert_eq!(o.status, p.status, "{ctx}: request {}", o.id);
+            assert_eq!(
+                o.latency_ms.map(f64::to_bits),
+                p.latency_ms.map(f64::to_bits),
+                "{ctx}: request {} latency bits",
+                o.id
+            );
+            assert_eq!(o.defer_count, p.defer_count, "{ctx}: request {}", o.id);
+        }
+    }
+    let (da, db) = (&a.diagnostics, &b.diagnostics);
+    assert_eq!(da.events_processed, db.events_processed, "{ctx}");
+    assert_eq!(da.events_skipped, db.events_skipped, "{ctx}");
+    assert_eq!(da.timers_canceled, db.timers_canceled, "{ctx}");
+    assert_eq!(da.sends, db.sends, "{ctx}");
+    assert_eq!(da.peak_provider_queue, db.peak_provider_queue, "{ctx}");
+    assert_eq!(da.peak_inflight, db.peak_inflight, "{ctx}");
+    assert_eq!(da.started_by_shard, db.started_by_shard, "{ctx}");
+    assert_eq!(
+        da.mean_queue_depth.to_bits(),
+        db.mean_queue_depth.to_bits(),
+        "{ctx}: depth integral drift {} vs {}",
+        da.mean_queue_depth,
+        db.mean_queue_depth
+    );
+    assert_eq!(da.peak_queue_depth, db.peak_queue_depth, "{ctx}");
+    assert_eq!(da.ordering_select_work, db.ordering_select_work, "{ctx}");
+}
+
+/// A heterogeneous 4-tenant mix: different workloads, rates, request
+/// counts, and shard policies, all on the given strategy.
+fn tenant_mix(strategy: StrategyKind) -> Vec<TenantSpec> {
+    let shapes = [
+        (Mix::Balanced, 50usize, 9.0),
+        (Mix::Heavy, 70, 6.0),
+        (Mix::Balanced, 60, 12.0),
+        (Mix::Heavy, 40, 4.0),
+    ];
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(t, &(mix, n, rate))| {
+            let mut sched = SchedulerCfg::for_strategy(strategy);
+            sched.shards.policy = ShardPolicy::ALL[t % ShardPolicy::ALL.len()];
+            TenantSpec { workload: WorkloadSpec::new(mix, n, rate), sched, info: InfoLevel::Coarse }
+        })
+        .collect()
+}
+
+#[test]
+fn partitioned_matches_serial_bit_for_bit() {
+    let fleets = [
+        ("split4", PoolCfg::split(ProviderCfg::default(), 4)),
+        ("hetero3", PoolCfg::heterogeneous(ProviderCfg::default(), 3, 0.4)),
+    ];
+    for seed in 0..3u64 {
+        for (fleet_name, pool) in &fleets {
+            for strategy in StrategyKind::ALL {
+                let specs = tenant_mix(strategy);
+                let serial = run_tenants_partitioned(&specs, pool, seed, 1);
+                assert_eq!(serial.partition.partitions, 1);
+                for partitions in [2usize, 3, 4] {
+                    let ctx = format!("seed {seed}, {fleet_name}, {strategy:?}, P={partitions}");
+                    let par = run_tenants_partitioned(&specs, pool, seed, partitions);
+                    assert_eq!(
+                        par.partition.partitions, partitions,
+                        "{ctx}: the parallel path must actually run"
+                    );
+                    assert!(!par.partition.serial_fallback, "{ctx}");
+                    assert!(par.partition.windows > 0, "{ctx}: windows advanced");
+                    assert!(par.partition.lookahead_ms > 0.0, "{ctx}");
+                    outputs_bitwise_equal(&par, &serial, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn boundary_exact_events_defer_and_still_match() {
+    // Deterministic service physics: no jitter, no per-token cost, no
+    // congestion slowdown, so *every* service time is exactly `base_ms`
+    // and the lookahead window is exactly `base_ms` wide. A submission at
+    // a window's start then completes exactly on its window end — the
+    // strict `t < end` rule must defer it to the next window, and the
+    // merged result must still be bit-identical to serial.
+    let shard = ProviderCfg {
+        base_ms: 25.0,
+        per_token_ms: 0.0,
+        jitter_sigma: 0.0,
+        slowdown_gamma: 0.0,
+        max_concurrency: 4,
+        ..ProviderCfg::default()
+    };
+    let pool = PoolCfg::split(shard, 2);
+    // Saturate the 4 service slots (~180 rps against 25 ms services) so
+    // queued submissions chain off completions: every chained start lands
+    // on a `t0 + 25k` lattice shared across partitions through the common
+    // pool, which is what manufactures exact peek == window-end hits.
+    let mut specs = tenant_mix(StrategyKind::FinalAdrrOlc);
+    for (spec, rate) in specs.iter_mut().zip([60.0, 50.0, 40.0, 30.0]) {
+        spec.workload.rate_rps = rate;
+    }
+    let mut deferrals = 0u64;
+    for seed in 0..3u64 {
+        let serial = run_tenants_partitioned(&specs, &pool, seed, 1);
+        let par = run_tenants_partitioned(&specs, &pool, seed, 4);
+        let ctx = format!("boundary-exact, seed {seed}");
+        assert_eq!(par.partition.partitions, 4, "{ctx}");
+        assert_eq!(par.partition.lookahead_ms, 25.0, "{ctx}: σ=0 floor is exactly base_ms");
+        deferrals += par.partition.boundary_deferrals;
+        outputs_bitwise_equal(&par, &serial, &ctx);
+    }
+    assert!(
+        deferrals > 0,
+        "constant service under saturation must put events exactly on window boundaries"
+    );
+}
+
+#[test]
+fn zero_lookahead_falls_back_to_serial() {
+    // `base_ms == 0` admits arbitrarily small service times: no positive
+    // lookahead exists, the window protocol cannot run, and the executor
+    // must fall back to the serial loop (flagged, still correct).
+    let shard = ProviderCfg { base_ms: 0.0, ..ProviderCfg::default() };
+    let pool = PoolCfg::split(shard, 2);
+    let specs = tenant_mix(StrategyKind::AdaptiveDrr);
+    let serial = run_tenants_partitioned(&specs, &pool, 7, 1);
+    assert!(!serial.partition.serial_fallback, "serial was asked for, not forced");
+    let par = run_tenants_partitioned(&specs, &pool, 7, 4);
+    assert!(par.partition.serial_fallback, "zero lookahead must be rejected");
+    assert_eq!(par.partition.partitions, 1);
+    assert_eq!(par.partition.lookahead_ms, 0.0);
+    outputs_bitwise_equal(&par, &serial, "zero-lookahead fallback");
+}
+
+#[test]
+fn empty_tenant_partitions_cleanly() {
+    // A tenant with zero requests yields a partition whose event queue
+    // starts empty — it must idle through the window protocol (no stall,
+    // no spurious termination while siblings still have work).
+    let mut specs = tenant_mix(StrategyKind::FinalAdrrOlc);
+    specs[1].workload = WorkloadSpec::new(Mix::Balanced, 0, 5.0);
+    let pool = PoolCfg::split(ProviderCfg::default(), 4);
+    let serial = run_tenants_partitioned(&specs, &pool, 3, 1);
+    assert!(serial.tenants[1].outcomes.is_empty(), "tenant 1 really offers nothing");
+    let par = run_tenants_partitioned(&specs, &pool, 3, 4);
+    assert_eq!(par.partition.partitions, 4);
+    outputs_bitwise_equal(&par, &serial, "empty-tenant partition");
+}
+
+#[test]
+fn partition_count_is_capped_by_tenants_and_zero_means_auto() {
+    let specs = tenant_mix(StrategyKind::DirectNaive);
+    let pool = PoolCfg::split(ProviderCfg::default(), 4);
+    let serial = run_tenants_partitioned(&specs, &pool, 11, 1);
+    // More partitions than tenants: capped to one loop per tenant.
+    let par = run_tenants_partitioned(&specs, &pool, 11, 64);
+    assert_eq!(par.partition.partitions, specs.len(), "capped at tenant count");
+    outputs_bitwise_equal(&par, &serial, "capped partitions");
+    // 0 = one partition per core (whatever this machine has) — output
+    // must be invariant to that machine-dependent choice.
+    let auto = run_tenants_partitioned(&specs, &pool, 11, 0);
+    assert!(auto.partition.partitions >= 1 && auto.partition.partitions <= specs.len());
+    outputs_bitwise_equal(&auto, &serial, "auto partitions");
+}
