@@ -57,10 +57,10 @@ use anyhow::{bail, Result};
 
 use crate::bench::peak_rss_kb;
 use crate::metrics::report::TextTable;
-use crate::predictor::{InfoLevel, LadderSource};
+use crate::predictor::{InfoLevel, LadderSource, NoisySource, PriorSource};
 use crate::provider::pool::PoolCfg;
 use crate::provider::ProviderCfg;
-use crate::scheduler::{OrderingKind, SchedulerCfg, ShardPolicy, StrategyKind};
+use crate::scheduler::{OrderingCfg, OrderingKind, SchedulerCfg, ShardPolicy, StrategyKind};
 use crate::sim::driver::{self, RunDiagnostics, TenantSpec};
 use crate::sim::BackendKind;
 use crate::sim::EventQueue;
@@ -75,6 +75,12 @@ use crate::workload::{Mix, WorkloadSpec};
 /// model-time horizon.
 const DEPTH_MULT_LO: f64 = 4.0;
 const DEPTH_MULT_HI: f64 = 16.0;
+
+/// Noise level for the depth leg's continuous-prior cases: enough
+/// multiplicative scatter that every request's prior bits are distinct, so
+/// exact-bit grouping degenerates to one group per entry (the regime
+/// quantized grouping exists to fix).
+const DEPTH_NOISE_L: f64 = 0.4;
 
 /// The partition leg's fixed workload shape: the paper's headline regime
 /// distilled — many tenants on a wide fleet under congestion. Jitter and
@@ -309,6 +315,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                                 ),
                                 sched: make_sched(),
                                 info: InfoLevel::Coarse,
+                                noise: 0.0,
                             })
                             .collect();
                         let t0 = Instant::now();
@@ -463,7 +470,48 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             select_work: u64,
             mean_depth: f64,
             peak_depth: usize,
+            group_count: u64,
+            scan_fallbacks: u64,
         }
+        /// One depth-leg configuration: a heavy-class ordering, the prior
+        /// noise level it runs under, and whether its exponent is gated.
+        struct DepthCase {
+            label: &'static str,
+            ordering: OrderingKind,
+            noise: f64,
+            quantized: bool,
+            gated: bool,
+        }
+        // Every ordering under the discrete Coarse ladder (the designed
+        // regime for exact-bit grouping), then the FeasibleSet index under
+        // *continuous* noisy priors twice: quantized grouping (gated — the
+        // bins must keep per-release work sublinear in depth) and exact
+        // grouping (ungated contrast: one group per distinct prior
+        // degenerates to a scan, the regime quantization exists to fix).
+        let mut cases: Vec<DepthCase> = OrderingKind::ALL
+            .iter()
+            .map(|&ordering| DepthCase {
+                label: ordering.name(),
+                ordering,
+                noise: 0.0,
+                quantized: false,
+                gated: true,
+            })
+            .collect();
+        cases.push(DepthCase {
+            label: "feasible_set_noisy_quant",
+            ordering: OrderingKind::FeasibleSet,
+            noise: DEPTH_NOISE_L,
+            quantized: true,
+            gated: true,
+        });
+        cases.push(DepthCase {
+            label: "feasible_set_noisy_exact",
+            ordering: OrderingKind::FeasibleSet,
+            noise: DEPTH_NOISE_L,
+            quantized: false,
+            gated: false,
+        });
         let mut t = TextTable::new([
             "ordering",
             "depth lo",
@@ -472,21 +520,27 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             "work/release hi",
             "exponent",
         ]);
-        for ordering in OrderingKind::ALL {
+        for case in &cases {
             let mut points: Vec<DepthPoint> = Vec::new();
             for mult in [DEPTH_MULT_LO, DEPTH_MULT_HI] {
                 let n = ((n_hi as f64) * mult / DEPTH_MULT_HI).round() as usize;
                 let rate = opts.rate_rps * mult;
                 let requests = WorkloadSpec::new(opts.mix, n, rate).generate(opts.seed);
-                let mut src = LadderSource::new(
-                    InfoLevel::Coarse,
-                    Rng::new(opts.seed ^ 0x5EED_50_u64).derive("priors"),
-                );
+                let root = Rng::new(opts.seed ^ 0x5EED_50_u64);
+                let ladder = LadderSource::new(InfoLevel::Coarse, root.derive("priors"));
+                let mut src: Box<dyn PriorSource> = if case.noise > 0.0 {
+                    Box::new(NoisySource::new(ladder, case.noise, root.derive("noise")))
+                } else {
+                    Box::new(ladder)
+                };
                 let mut sched = SchedulerCfg::for_strategy(StrategyKind::AdaptiveDrr);
-                sched.heavy_ordering = ordering;
+                sched.heavy_ordering = case.ordering;
+                if case.quantized {
+                    sched.ordering = OrderingCfg::quantized();
+                }
                 let pool = PoolCfg::single(ProviderCfg::default());
                 let t0 = Instant::now();
-                let o = driver::run_pool(&requests, &mut src, sched, &pool, opts.seed);
+                let o = driver::run_pool(&requests, src.as_mut(), sched, &pool, opts.seed);
                 let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
                 let p = DepthPoint {
                     wall_ms,
@@ -494,11 +548,15 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                     select_work: o.diagnostics.ordering_select_work,
                     mean_depth: o.diagnostics.mean_queue_depth,
                     peak_depth: o.diagnostics.peak_queue_depth,
+                    group_count: o.diagnostics.ordering_group_count,
+                    scan_fallbacks: o.diagnostics.ordering_scan_fallbacks,
                 };
                 let wpr = if p.sends > 0 { p.select_work as f64 / p.sends as f64 } else { 0.0 };
                 depth_runs.push(
                     Json::obj()
-                        .set("ordering", ordering.name())
+                        .set("ordering", case.label)
+                        .set("noise", case.noise)
+                        .set("quantized", case.quantized)
                         .set("rate_mult", mult)
                         .set("rate_rps", rate)
                         .set("requests", n)
@@ -507,7 +565,9 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                         .set("select_work", p.select_work)
                         .set("work_per_release", wpr)
                         .set("mean_queue_depth", p.mean_depth)
-                        .set("peak_queue_depth", p.peak_depth),
+                        .set("peak_queue_depth", p.peak_depth)
+                        .set("ordering_group_count", p.group_count)
+                        .set("ordering_scan_fallbacks", p.scan_fallbacks),
                 );
                 points.push(p);
             }
@@ -521,7 +581,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                 f64::NAN
             };
             t.row([
-                ordering.name().to_string(),
+                case.label.to_string(),
                 format!("{:.1}", lo.mean_depth),
                 format!("{:.1}", hi.mean_depth),
                 format!("{wpr_lo:.2}"),
@@ -530,7 +590,8 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             ]);
             depth_scaling.push(
                 Json::obj()
-                    .set("ordering", ordering.name())
+                    .set("ordering", case.label)
+                    .set("gated", case.gated)
                     .set("depth_lo", lo.mean_depth)
                     .set("depth_hi", hi.mean_depth)
                     .set("work_per_release_lo", wpr_lo)
@@ -540,11 +601,13 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             if let Some(max_e) = opts.depth_gate_exponent {
                 // Gate only when the two points actually built materially
                 // different depths — otherwise the log-ratio fit is noise.
-                if depth_ratio >= 2.0 && exponent.is_finite() && exponent > max_e {
+                // The noisy exact-grouping contrast is exempt: its scan
+                // regression is the behavior being demonstrated.
+                if case.gated && depth_ratio >= 2.0 && exponent.is_finite() && exponent > max_e {
                     violations.push(format!(
                         "depth {}: per-release work exponent {exponent:.2} > {max_e} \
                          (depth {:.0} -> {:.0})",
-                        ordering.name(),
+                        case.label,
                         lo.mean_depth,
                         hi.mean_depth,
                     ));
@@ -669,6 +732,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                 ),
                 sched: SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
                 info: InfoLevel::Coarse,
+                noise: 0.0,
             })
             .collect();
         let repeats = if opts.speedup_gate.is_some() { 3 } else { 1 };
@@ -863,6 +927,8 @@ fn digest_multi(o: &driver::MultiRunOutput) -> u64 {
     h.put(d.mean_queue_depth.to_bits());
     h.put(d.peak_queue_depth as u64);
     h.put(d.ordering_select_work);
+    h.put(d.ordering_group_count);
+    h.put(d.ordering_scan_fallbacks);
     h.0
 }
 
@@ -1035,13 +1101,28 @@ mod tests {
         run_scale_bench(&opts).expect("bench runs");
         let doc = Json::read_file(&opts.out_path).expect("BENCH.json parses");
         let runs = doc.get("depth_runs").and_then(Json::as_arr).expect("depth_runs array");
-        assert_eq!(runs.len(), 2 * OrderingKind::ALL.len(), "two rate points per ordering");
+        // Every ordering plus the two noisy-prior FeasibleSet cases, two
+        // rate points each.
+        let n_cases = OrderingKind::ALL.len() + 2;
+        assert_eq!(runs.len(), 2 * n_cases, "two rate points per depth case");
         for r in runs {
             assert!(r.get("mean_queue_depth").and_then(Json::as_f64).unwrap() >= 0.0);
             assert!(r.get("sends").and_then(Json::as_u64).unwrap() > 0, "releases happened");
         }
+        let noisy: Vec<_> = runs
+            .iter()
+            .filter(|r| r.get("noise").and_then(Json::as_f64) == Some(DEPTH_NOISE_L))
+            .collect();
+        assert_eq!(noisy.len(), 4, "quant + exact noisy cases, two points each");
         let scaling = doc.get("depth_scaling").and_then(Json::as_arr).expect("depth_scaling");
-        assert_eq!(scaling.len(), OrderingKind::ALL.len(), "one exponent per ordering");
+        assert_eq!(scaling.len(), n_cases, "one exponent per depth case");
+        assert!(
+            scaling.iter().any(|s| {
+                s.get("ordering").and_then(Json::as_str) == Some("feasible_set_noisy_exact")
+                    && s.get("gated").and_then(Json::as_bool) == Some(false)
+            }),
+            "the exact-grouping noisy contrast rides along ungated"
+        );
         let _ = std::fs::remove_file(&opts.out_path);
     }
 

@@ -150,19 +150,38 @@ impl Task {
     }
 }
 
-/// Policy-facing output-length prior (the semi-clairvoyant signal).
-/// Invariant: `p90 >= p50 > 0` — enforced by `Priors::new` and by the
-/// quantile-head kernel's gap parameterization.
+/// Policy-facing output-length prior (the semi-clairvoyant signal),
+/// extended to an *interval* prior: the point quantiles plus a calibrated
+/// prediction width (± tokens at one sigma) that uncertainty-aware
+/// orderings may hedge on.
+/// Invariant: `p90 >= p50 > 0` and `width >= 0` — enforced by the
+/// constructors and by the quantile-head kernel's gap parameterization.
+/// Point priors carry `width == 0.0`, so every policy that ignores width
+/// (and every pre-interval table) is bit-identical to the point world.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Priors {
+    /// Median output-token estimate.
     pub p50: f64,
+    /// 90th-percentile output-token estimate.
     pub p90: f64,
+    /// Calibrated one-sigma prediction half-width in tokens; `0.0` means
+    /// the source claims a point estimate (oracle, or a pre-interval
+    /// source that never set it).
+    pub width: f64,
 }
 
 impl Priors {
+    /// Point prior: quantiles only, `width = 0.0`.
     pub fn new(p50: f64, p90: f64) -> Priors {
         let p50 = p50.max(1.0);
-        Priors { p50, p90: p90.max(p50) }
+        Priors { p50, p90: p90.max(p50), width: 0.0 }
+    }
+
+    /// Interval prior: quantiles plus a calibrated prediction half-width.
+    pub fn with_width(p50: f64, p90: f64, width: f64) -> Priors {
+        let mut p = Priors::new(p50, p90);
+        p.width = width.max(0.0);
+        p
     }
 
     /// The bucket this prior routes to (used by tiered overload + routing
@@ -171,9 +190,17 @@ impl Priors {
         TokenBucket::from_tokens(self.p50)
     }
 
-    /// Scale both quantiles (predictor-noise sweep §4.10).
+    /// Scale both quantiles — and the width, which is in the same token
+    /// units (predictor-noise sweep §4.10).
     pub fn scaled(&self, factor: f64) -> Priors {
-        Priors::new(self.p50 * factor, self.p90 * factor)
+        Priors::with_width(self.p50 * factor, self.p90 * factor, self.width * factor)
+    }
+
+    /// Width-demoted cost: `p50 + theta·width`. Robust-SJF's sort key —
+    /// a wide interval inflates the effective size estimate, so uncertain
+    /// requests yield to confidently-small ones.
+    pub fn robust_cost(&self, theta: f64) -> f64 {
+        self.p50 + theta * self.width
     }
 }
 
@@ -303,6 +330,21 @@ mod tests {
         let p = Priors::new(10.0, 20.0).scaled(3.0);
         assert_eq!(p.p50, 30.0);
         assert_eq!(p.p90, 60.0);
+        assert_eq!(p.width, 0.0, "point priors stay point under scaling");
+    }
+
+    #[test]
+    fn interval_priors_width() {
+        let p = Priors::with_width(100.0, 200.0, 40.0);
+        assert_eq!(p.width, 40.0);
+        assert_eq!(p.robust_cost(0.0), 100.0);
+        assert_eq!(p.robust_cost(1.0), 140.0);
+        let s = p.scaled(2.0);
+        assert_eq!((s.p50, s.p90, s.width), (200.0, 400.0, 80.0));
+        // Width can never go negative.
+        assert_eq!(Priors::with_width(10.0, 20.0, -5.0).width, 0.0);
+        // Point constructor always yields width 0 (the bit-compat anchor).
+        assert_eq!(Priors::new(10.0, 20.0).width, 0.0);
     }
 
     #[test]

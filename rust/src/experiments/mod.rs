@@ -17,6 +17,7 @@ pub mod sensitivity;
 pub mod sharded;
 pub mod sharegpt;
 pub mod tenants;
+pub mod uncertainty;
 
 pub use runner::{run_cell, run_seed, CellSpec, Congestion, ParallelSweep, Regime};
 
@@ -58,7 +59,7 @@ impl ExpOpts {
 }
 
 /// All experiment names, in paper order (repo extensions at the end).
-pub const ALL_EXPERIMENTS: [&str; 14] = [
+pub const ALL_EXPERIMENTS: [&str; 15] = [
     "calibration",
     "ladder",
     "main",
@@ -73,6 +74,7 @@ pub const ALL_EXPERIMENTS: [&str; 14] = [
     "sharded",
     "tenants",
     "scale",
+    "uncertainty",
 ];
 
 /// Dispatch one experiment by name ("all" runs the full battery).
@@ -92,6 +94,7 @@ pub fn run_experiment(name: &str, opts: &ExpOpts) -> Result<()> {
         "sharded" => sharded::run(opts),
         "tenants" => tenants::run(opts),
         "scale" => scale::run(opts),
+        "uncertainty" => uncertainty::run(opts),
         "all" => {
             for n in ALL_EXPERIMENTS {
                 println!("\n########## experiment: {n} ##########");

@@ -67,6 +67,7 @@ impl TenantCell {
                     workload: WorkloadSpec::new(mix, per_n, per_rate),
                     sched: SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
                     info: InfoLevel::Coarse,
+                    noise: 0.0,
                 }
             })
             .collect()

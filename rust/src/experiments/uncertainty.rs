@@ -1,0 +1,339 @@
+//! Uncertainty experiment: interval-prior conditions × uncertainty-aware
+//! ordering × offered rate.
+//!
+//! The paper's noise sweep (§4.10) scales a point estimate and asks how
+//! fast scheduling value decays; this grid gives the scheduler the *width*
+//! of its own uncertainty and asks what it buys back. Axes:
+//!
+//! * **Condition** — `oracle` (exact, width 0), `coarse` (the ladder's
+//!   calibrated per-rung widths), `coarse+noise0.4` (multiplicative ×U[0.6,
+//!   1.4] scatter, widths widened to cover it), and `coarse+noise0.4+recal`
+//!   (same source, plus the online per-route recalibrator shrinking or
+//!   widening claimed widths from observed completions).
+//! * **Ordering** — `sjf` (width-blind point baseline), `robust_sjf`
+//!   (orders by `p50 + θ·width`, demoting wide-interval requests), and
+//!   `feasible_set` under **quantized grouping** (`OrderingCfg::
+//!   quantized()`), the index mode built for continuous noisy priors.
+//! * **Rate** — 1× and 4× the regime base rate (requests scale with the
+//!   rate, so both points cover the same model-time horizon).
+//!
+//! Besides the usual quality columns, the CSV carries the ordering-index
+//! observability counters: entries examined per release (`select_work /
+//! sends`), peak prior-group count, and scan-fallback selects — the
+//! quantized index must keep groups bounded and fallbacks at zero even
+//! under continuous priors, where exact-bit grouping degenerates.
+//!
+//! Note the recalibrator only moves *widths*, so under `sjf` and
+//! `feasible_set` (which score p50/p90 alone) the `+recal` rows are
+//! bit-identical to their no-recal siblings — the delta it buys is read
+//! against `robust_sjf`, the one ordering that consumes the interval.
+//!
+//! Fanned out on [`ParallelSweep`], so `uncertainty.csv` is byte-identical
+//! for any `--jobs` value (the CI determinism gate covers it via
+//! `exp all`).
+
+use anyhow::Result;
+
+use crate::experiments::runner::{Congestion, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_pm, fmt_rate, TextTable};
+use crate::metrics::{Aggregate, RunMetrics};
+use crate::predictor::{InfoLevel, LadderSource, NoisySource, PriorSource};
+use crate::provider::ProviderCfg;
+use crate::scheduler::{OrderingCfg, OrderingKind, SchedulerCfg, StrategyKind};
+use crate::sim::driver;
+use crate::util::csvio::CsvTable;
+use crate::util::rng::Rng;
+use crate::util::stats::mean;
+use crate::workload::{Mix, WorkloadSpec};
+
+/// Multiplicative noise level for the noisy conditions (the paper's §4.10
+/// mid band: estimates scatter ×U[0.6, 1.4] around the coarse rung).
+const NOISE_L: f64 = 0.4;
+
+/// Offered-rate multipliers on the regime's base rate.
+const MULTS: [f64; 2] = [1.0, 4.0];
+
+/// Prior-information condition: which source the scheduler sees and
+/// whether the online recalibrator is closed over it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Condition {
+    /// Exact token counts, width 0 — the information frontier.
+    Oracle,
+    /// The ladder's default semi-clairvoyant rung with its calibrated
+    /// per-rung interval widths.
+    Coarse,
+    /// Coarse scattered by ×U[1−l, 1+l], widths widened to keep coverage.
+    Noisy,
+    /// [`Condition::Noisy`] plus the per-route online recalibrator.
+    NoisyRecal,
+}
+
+impl Condition {
+    const ALL: [Condition; 4] =
+        [Condition::Oracle, Condition::Coarse, Condition::Noisy, Condition::NoisyRecal];
+
+    fn name(self) -> &'static str {
+        match self {
+            Condition::Oracle => "oracle",
+            Condition::Coarse => "coarse",
+            Condition::Noisy => "coarse+noise0.4",
+            Condition::NoisyRecal => "coarse+noise0.4+recal",
+        }
+    }
+
+    fn info(self) -> InfoLevel {
+        match self {
+            Condition::Oracle => InfoLevel::Oracle,
+            _ => InfoLevel::Coarse,
+        }
+    }
+
+    fn noise(self) -> f64 {
+        match self {
+            Condition::Oracle | Condition::Coarse => 0.0,
+            Condition::Noisy | Condition::NoisyRecal => NOISE_L,
+        }
+    }
+
+    fn recal(self) -> bool {
+        self == Condition::NoisyRecal
+    }
+}
+
+/// The orderings under comparison: the width-blind point baseline, the
+/// uncertainty-aware variant, and the indexed feasible-set rule.
+const ORDERINGS: [OrderingKind; 3] =
+    [OrderingKind::Sjf, OrderingKind::RobustSjf, OrderingKind::FeasibleSet];
+
+/// One grid cell.
+#[derive(Debug, Clone)]
+struct UncertaintyCell {
+    condition: Condition,
+    ordering: OrderingKind,
+    mult: f64,
+}
+
+/// Per-seed result: run metrics plus the ordering-index observability
+/// counters (sends, entries examined, peak groups, scan fallbacks).
+struct SeedOut {
+    metrics: RunMetrics,
+    depth_mean: f64,
+    sends: u64,
+    select_work: u64,
+    group_count: u64,
+    scan_fallbacks: u64,
+}
+
+/// The headline regime: balanced traffic in the paper's high-congestion
+/// band — rate multipliers push it past the knee.
+fn regime() -> Regime {
+    Regime { mix: Mix::Balanced, congestion: Congestion::High }
+}
+
+fn run_cell_seed(cell: &UncertaintyCell, n_base: usize, seed: u64) -> SeedOut {
+    let n = (n_base as f64 * cell.mult) as usize;
+    let rate = regime().rate_rps() * cell.mult;
+    let requests = WorkloadSpec::new(regime().mix, n, rate).generate(seed);
+    // The established prior-stream convention (ladder bytes are identical
+    // whether or not the noise wrapper is stacked on top).
+    let root = Rng::new(seed ^ 0x5EED_50_u64);
+    let ladder = LadderSource::new(cell.condition.info(), root.derive("priors"));
+    let mut src: Box<dyn PriorSource> = if cell.condition.noise() > 0.0 {
+        Box::new(NoisySource::new(ladder, cell.condition.noise(), root.derive("noise")))
+    } else {
+        Box::new(ladder)
+    };
+    let mut sched = SchedulerCfg::for_strategy(StrategyKind::AdaptiveDrr);
+    sched.heavy_ordering = cell.ordering;
+    if cell.ordering == OrderingKind::FeasibleSet {
+        // The index mode built for this experiment's continuous priors;
+        // winners are bit-identical to the exact path either way.
+        sched.ordering = OrderingCfg::quantized();
+    }
+    sched.recalibrate = cell.condition.recal();
+    let out = driver::run(&requests, src.as_mut(), sched, ProviderCfg::default(), seed);
+    SeedOut {
+        metrics: out.metrics,
+        depth_mean: out.diagnostics.mean_queue_depth,
+        sends: out.diagnostics.sends,
+        select_work: out.diagnostics.ordering_select_work,
+        group_count: out.diagnostics.ordering_group_count,
+        scan_fallbacks: out.diagnostics.ordering_scan_fallbacks,
+    }
+}
+
+/// The grid: condition × ordering × rate multiplier.
+fn grid() -> Vec<UncertaintyCell> {
+    let mut cells = Vec::new();
+    for condition in Condition::ALL {
+        for ordering in ORDERINGS {
+            for mult in MULTS {
+                cells.push(UncertaintyCell { condition, ordering, mult });
+            }
+        }
+    }
+    cells
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let cells = grid();
+    let all: Vec<Vec<SeedOut>> = opts
+        .sweep()
+        .map_cells(cells.len(), opts.seeds, |c, s| run_cell_seed(&cells[c], opts.n_requests, s));
+
+    let mut table = TextTable::new([
+        "Condition",
+        "Ordering",
+        "Rate",
+        "CR",
+        "Global P95",
+        "Goodput",
+        "Work/rel",
+        "Groups",
+        "Fallbacks",
+    ]);
+    let mut csv = CsvTable::new([
+        "condition",
+        "ordering",
+        "rate_mult",
+        "rate_rps",
+        "requests",
+        "depth_mean",
+        "cr_mean",
+        "cr_std",
+        "global_p95_mean",
+        "global_p95_std",
+        "goodput_mean",
+        "goodput_std",
+        "timeouts_mean",
+        "work_per_release_mean",
+        "ordering_group_count_mean",
+        "ordering_scan_fallbacks_mean",
+    ]);
+    for (cell, runs) in cells.iter().zip(&all) {
+        let metrics: Vec<RunMetrics> = runs.iter().map(|r| r.metrics.clone()).collect();
+        let agg = Aggregate::new(&metrics);
+        let cr = agg.mean_std(|m| m.completion_rate);
+        let global = agg.mean_std(|m| m.global_p95_ms);
+        let good = agg.mean_std(|m| m.goodput_rps);
+        let timeouts = agg.mean_std(|m| m.n_timed_out as f64);
+        let depth = mean(&runs.iter().map(|r| r.depth_mean).collect::<Vec<f64>>());
+        let wpr = mean(
+            &runs
+                .iter()
+                .map(|r| {
+                    if r.sends > 0 {
+                        r.select_work as f64 / r.sends as f64
+                    } else {
+                        0.0
+                    }
+                })
+                .collect::<Vec<f64>>(),
+        );
+        let groups = mean(&runs.iter().map(|r| r.group_count as f64).collect::<Vec<f64>>());
+        let fallbacks =
+            mean(&runs.iter().map(|r| r.scan_fallbacks as f64).collect::<Vec<f64>>());
+        let rate = regime().rate_rps() * cell.mult;
+        let n = (opts.n_requests as f64 * cell.mult) as usize;
+        table.row([
+            cell.condition.name().to_string(),
+            cell.ordering.name().to_string(),
+            format!("{:.0}x", cell.mult),
+            fmt_rate(cr),
+            fmt_pm(global),
+            format!("{:.1}±{:.1}", good.0, good.1),
+            format!("{wpr:.1}"),
+            format!("{groups:.0}"),
+            format!("{fallbacks:.0}"),
+        ]);
+        csv.row([
+            cell.condition.name().to_string(),
+            cell.ordering.name().to_string(),
+            format!("{:.0}", cell.mult),
+            format!("{rate:.1}"),
+            n.to_string(),
+            format!("{depth:.2}"),
+            format!("{:.4}", cr.0),
+            format!("{:.4}", cr.1),
+            format!("{:.1}", global.0),
+            format!("{:.1}", global.1),
+            format!("{:.3}", good.0),
+            format!("{:.3}", good.1),
+            format!("{:.1}", timeouts.0),
+            format!("{wpr:.2}"),
+            format!("{groups:.1}"),
+            format!("{fallbacks:.1}"),
+        ]);
+    }
+    println!("\nUncertainty — interval-prior condition × ordering (mean±std over seeds)");
+    println!("{}", table.render());
+    let path = format!("{}/uncertainty.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shape_is_stable() {
+        let cells = grid();
+        // 4 conditions × 3 orderings × 2 multipliers.
+        assert_eq!(cells.len(), 24);
+        assert!(cells.iter().all(|c| MULTS.contains(&c.mult)));
+    }
+
+    #[test]
+    fn cell_runner_is_deterministic() {
+        let cell = UncertaintyCell {
+            condition: Condition::NoisyRecal,
+            ordering: OrderingKind::RobustSjf,
+            mult: 4.0,
+        };
+        let a = run_cell_seed(&cell, 30, 1);
+        let b = run_cell_seed(&cell, 30, 1);
+        assert_eq!(a.metrics.n_completed, b.metrics.n_completed);
+        assert_eq!(a.depth_mean.to_bits(), b.depth_mean.to_bits());
+        assert_eq!(a.select_work, b.select_work);
+        assert_eq!(a.group_count, b.group_count);
+    }
+
+    #[test]
+    fn quantized_index_keeps_groups_bounded_under_noise() {
+        // Continuous noisy priors: exact-bit grouping would hold one group
+        // per live entry; the quantized index must keep the peak bounded
+        // and never fall back to a full scan.
+        let cell = UncertaintyCell {
+            condition: Condition::Noisy,
+            ordering: OrderingKind::FeasibleSet,
+            mult: 4.0,
+        };
+        let out = run_cell_seed(&cell, 60, 3);
+        assert!(out.sends > 0, "releases happened");
+        assert!(
+            out.group_count < 200,
+            "noisy priors must collapse into bounded bins, got {} groups",
+            out.group_count
+        );
+    }
+
+    #[test]
+    fn recal_changes_nothing_for_width_blind_orderings() {
+        // The recalibrator rescales interval *widths* only; sjf orders by
+        // p50, so the +recal condition must be bit-identical to its
+        // sibling — the delta is read against robust_sjf alone.
+        let mk = |condition: Condition| UncertaintyCell {
+            condition,
+            ordering: OrderingKind::Sjf,
+            mult: 1.0,
+        };
+        let a = run_cell_seed(&mk(Condition::Noisy), 40, 2);
+        let b = run_cell_seed(&mk(Condition::NoisyRecal), 40, 2);
+        assert_eq!(a.metrics.n_completed, b.metrics.n_completed);
+        assert_eq!(a.depth_mean.to_bits(), b.depth_mean.to_bits());
+        assert_eq!(a.select_work, b.select_work);
+    }
+}

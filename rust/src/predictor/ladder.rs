@@ -10,6 +10,8 @@ use crate::util::rng::Rng;
 /// balanced-mix geometric scale; the point is that it is *constant*, so
 /// allocation/ordering/budgets cannot distinguish cheap from expensive work.
 pub const NEUTRAL_P50: f64 = 180.0;
+/// The p90 companion to [`NEUTRAL_P50`] (same rationale; the 5× spread
+/// mirrors the balanced mix's tail ratio).
 pub const NEUTRAL_P90: f64 = 900.0;
 
 /// Ladder condition.
@@ -30,6 +32,7 @@ pub enum InfoLevel {
 }
 
 impl InfoLevel {
+    /// CLI / CSV name.
     pub fn name(self) -> &'static str {
         match self {
             InfoLevel::NoInfo => "no_info",
@@ -39,6 +42,7 @@ impl InfoLevel {
         }
     }
 
+    /// Inverse of [`InfoLevel::name`].
     pub fn parse(s: &str) -> Option<InfoLevel> {
         match s {
             "no_info" => Some(InfoLevel::NoInfo),
@@ -49,27 +53,48 @@ impl InfoLevel {
         }
     }
 
+    /// All four rungs, bottom to top.
     pub const ALL: [InfoLevel; 4] =
         [InfoLevel::NoInfo, InfoLevel::ClassOnly, InfoLevel::Coarse, InfoLevel::Oracle];
 }
+
+/// One-sigma interval half-width (tokens) when the client has *no* usable
+/// label: half the full output-token span, `(4096 − 8) / 2`. The widest
+/// calibrated interval the ladder can honestly claim.
+pub const NO_INFO_WIDTH: f64 = 2_044.0;
 
 /// Coarse-prior shape: log-normal multiplicative error on the true count
 /// plus a fixed p90/p50 spread. σ=0.25 ≈ ±28% one-sigma relative error —
 /// "coarse but correlated with actual cost" (§3.3).
 pub const COARSE_SIGMA: f64 = 0.25;
+/// Fixed p90/p50 spread the coarse rung claims (see [`COARSE_SIGMA`]).
 pub const COARSE_SPREAD: f64 = 1.8;
 
-/// Ladder-conditioned prior source.
+/// Ladder-conditioned prior source. Every rung emits a *calibrated*
+/// interval width alongside its point quantiles — derived from the rung's
+/// known error model, never from extra RNG draws, so the numeric p50/p90
+/// streams are bit-identical to the pre-interval ladder:
+///
+/// - `no_info`: [`NO_INFO_WIDTH`] (half the full token span — the source
+///   knows nothing).
+/// - `class_only`: half the believed bucket's token range (the label is
+///   exact; magnitude within the bucket is not).
+/// - `coarse`: `p50 · sinh(σ)` — the one-sigma half-width of the
+///   log-normal multiplicative error, in tokens around the estimate.
+/// - `oracle`: `0.0` (exact by construction).
 pub struct LadderSource {
     level: InfoLevel,
     rng: Rng,
 }
 
 impl LadderSource {
+    /// Build a source at `level`; `rng` must be the derived `"priors"`
+    /// stream so draws are independent of every other stream.
     pub fn new(level: InfoLevel, rng: Rng) -> Self {
         LadderSource { level, rng }
     }
 
+    /// The ladder rung this source was built at.
     pub fn level(&self) -> InfoLevel {
         self.level
     }
@@ -78,17 +103,22 @@ impl LadderSource {
 impl PriorSource for LadderSource {
     fn priors(&mut self, req: &Request) -> (Priors, Route) {
         match self.level {
-            InfoLevel::NoInfo => {
-                (Priors::new(NEUTRAL_P50, NEUTRAL_P90), Route::neutral())
-            }
-            InfoLevel::ClassOnly => (
-                Priors::new(NEUTRAL_P50, NEUTRAL_P90),
-                Route::from_bucket(req.true_bucket),
+            InfoLevel::NoInfo => (
+                Priors::with_width(NEUTRAL_P50, NEUTRAL_P90, NO_INFO_WIDTH),
+                Route::neutral(),
             ),
+            InfoLevel::ClassOnly => {
+                let (lo, hi) = req.true_bucket.bounds();
+                let width = (hi - lo) as f64 * 0.5;
+                (
+                    Priors::with_width(NEUTRAL_P50, NEUTRAL_P90, width),
+                    Route::from_bucket(req.true_bucket),
+                )
+            }
             InfoLevel::Coarse => {
                 let factor = self.rng.lognormal(0.0, COARSE_SIGMA);
                 let p50 = (req.true_output_tokens as f64 * factor).max(1.0);
-                let priors = Priors::new(p50, p50 * COARSE_SPREAD);
+                let priors = Priors::with_width(p50, p50 * COARSE_SPREAD, p50 * COARSE_SIGMA.sinh());
                 // Routing follows the *predicted* bucket — the client has no
                 // generator label under semi-clairvoyance.
                 (priors, Route::from_bucket(priors.bucket()))
@@ -170,6 +200,44 @@ mod tests {
             .count();
         assert!(mislabeled > 0, "expected some routing mislabels");
         assert!((mislabeled as f64) < 0.5 * reqs.len() as f64, "but mostly right");
+    }
+
+    #[test]
+    fn widths_are_calibrated_per_rung() {
+        let reqs = requests(100);
+        let mut no_info = LadderSource::new(InfoLevel::NoInfo, Rng::new(1));
+        let mut class_only = LadderSource::new(InfoLevel::ClassOnly, Rng::new(1));
+        let mut coarse = LadderSource::new(InfoLevel::Coarse, Rng::new(1));
+        let mut oracle = LadderSource::new(InfoLevel::Oracle, Rng::new(1));
+        for r in &reqs {
+            assert_eq!(no_info.priors(r).0.width, NO_INFO_WIDTH);
+            let (lo, hi) = r.true_bucket.bounds();
+            assert_eq!(class_only.priors(r).0.width, (hi - lo) as f64 * 0.5);
+            let (p, _) = coarse.priors(r);
+            assert_eq!(p.width, p.p50 * COARSE_SIGMA.sinh());
+            assert_eq!(oracle.priors(r).0.width, 0.0);
+        }
+        // Widths narrow as information improves (for any concrete request).
+        let r = &reqs[0];
+        let w_no = LadderSource::new(InfoLevel::NoInfo, Rng::new(2)).priors(r).0.width;
+        let w_cls = LadderSource::new(InfoLevel::ClassOnly, Rng::new(2)).priors(r).0.width;
+        assert!(w_no > w_cls && w_cls > 0.0);
+    }
+
+    #[test]
+    fn width_does_not_disturb_point_stream() {
+        // The interval extension must not change the numeric p50/p90
+        // sequence: same seed, draw-for-draw identical quantiles.
+        let reqs = requests(200);
+        let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(7));
+        let mut rng = Rng::new(7);
+        for r in &reqs {
+            let (p, _) = src.priors(r);
+            let factor = rng.lognormal(0.0, COARSE_SIGMA);
+            let expect = (r.true_output_tokens as f64 * factor).max(1.0);
+            assert_eq!(p.p50.to_bits(), expect.to_bits());
+            assert_eq!(p.p90.to_bits(), (expect * COARSE_SPREAD).to_bits());
+        }
     }
 
     #[test]

@@ -1,17 +1,24 @@
 //! Output-length priors: the semi-clairvoyant signal (paper §3.3, §4.4,
-//! §4.10).
+//! §4.10), extended to *interval* priors — every source emits a calibrated
+//! prediction width alongside its point quantiles.
 //!
 //! A `PriorSource` maps a request to the *policy-facing* `(Priors, Route)`
 //! pair — what the scheduler is allowed to know. The four information-ladder
 //! conditions (§4.4) plus the multiplicative-noise wrapper (§4.10) and the
-//! PJRT-served neural predictor (runtime::nn) all implement it.
+//! PJRT-served neural predictor (runtime::nn) all implement it. The
+//! [`recal`] module closes the loop: an online recalibrator that shrinks or
+//! widens per-route intervals from observed completions.
+
+#![warn(missing_docs)]
 
 pub mod features;
 pub mod ladder;
 pub mod noise;
+pub mod recal;
 
-pub use ladder::{InfoLevel, LadderSource, NEUTRAL_P50, NEUTRAL_P90};
+pub use ladder::{InfoLevel, LadderSource, NEUTRAL_P50, NEUTRAL_P90, NO_INFO_WIDTH};
 pub use noise::NoisySource;
+pub use recal::Recalibrator;
 
 use crate::core::{Class, Priors, Request, TokenBucket};
 
@@ -26,19 +33,32 @@ pub struct Route {
 }
 
 impl Route {
+    /// The blind route: interactive lane, no bucket belief.
     pub fn neutral() -> Route {
         Route { class: Class::Interactive, bucket_belief: None }
     }
 
+    /// Route derived from a (believed) token bucket.
     pub fn from_bucket(b: TokenBucket) -> Route {
         Route { class: b.class(), bucket_belief: Some(b) }
+    }
+
+    /// Dense lane index for per-route state tables: 0 = no belief,
+    /// 1–4 = the believed bucket. Stable across runs.
+    pub fn lane(&self) -> usize {
+        match self.bucket_belief {
+            None => 0,
+            Some(b) => 1 + b.index(),
+        }
     }
 }
 
 /// Source of policy-facing priors. `&mut` because stochastic sources carry
 /// RNG state (deterministic per seed).
 pub trait PriorSource {
+    /// The `(Priors, Route)` pair the scheduler may see for `req`.
     fn priors(&mut self, req: &Request) -> (Priors, Route);
+    /// Human/CSV-facing condition name (e.g. `coarse+noise0.4`).
     fn name(&self) -> String;
 }
 

@@ -8,6 +8,12 @@ use crate::predictor::{PriorSource, Route};
 use crate::util::rng::Rng;
 
 /// Wraps an inner source and multiplies its priors by U[1−L, 1+L].
+///
+/// The injected error also *widens* the interval: the wrapper knows its own
+/// noise level, so the calibrated one-sigma half-width grows by `L·p50`
+/// (the uniform perturbation's scale in tokens) before the multiplicative
+/// factor is applied. At `L = 0` the wrapper is a bit-exact identity —
+/// priors, widths, and the RNG stream all pass through untouched.
 pub struct NoisySource<S: PriorSource> {
     inner: S,
     level: f64,
@@ -31,7 +37,11 @@ impl<S: PriorSource> PriorSource for NoisySource<S> {
         let factor = self.rng.range(1.0 - self.level, 1.0 + self.level);
         // Routing is NOT recomputed from the noisy value: §4.10 holds
         // routing buckets fixed and perturbs only the numeric priors.
-        (p.scaled(factor), route)
+        // Widen first (the wrapper's own error budget, in inner-token
+        // units), then scale — `scaled` keeps width in the same units as
+        // the quantiles it rides with.
+        let widened = Priors::with_width(p.p50, p.p90, p.width + self.level * p.p50);
+        (widened.scaled(factor), route)
     }
 
     fn name(&self) -> String {
@@ -108,6 +118,26 @@ mod tests {
         for r in &reqs {
             let (p, _) = src.priors(r);
             assert!(p.p90 >= p.p50 && p.p50 > 0.0);
+        }
+    }
+
+    #[test]
+    fn noise_widens_intervals() {
+        let reqs = requests(200);
+        let level = 0.4;
+        let mut base = LadderSource::new(InfoLevel::Coarse, Rng::new(5));
+        let mut noisy = NoisySource::new(
+            LadderSource::new(InfoLevel::Coarse, Rng::new(5)),
+            level,
+            Rng::new(13),
+        );
+        let mut noise_rng = Rng::new(13);
+        for r in &reqs {
+            let (p0, _) = base.priors(r);
+            let (p, _) = noisy.priors(r);
+            let factor = noise_rng.range(1.0 - level, 1.0 + level);
+            assert_eq!(p.width.to_bits(), ((p0.width + level * p0.p50) * factor).to_bits());
+            assert!(p.width > p0.width * (1.0 - level) - 1e-12);
         }
     }
 

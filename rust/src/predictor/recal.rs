@@ -1,0 +1,197 @@
+//! Online interval recalibration from observed completions — the feedback
+//! loop "Queueing, Predictions, and LLMs" poses as open.
+//!
+//! Prior *sources* are pure functions of the request (the driver samples
+//! them once, in arrival order, before the event loop starts), so the
+//! feedback loop cannot live inside the source chain. Instead each client
+//! scheduler owns a [`Recalibrator`]: at arrival it rescales the source's
+//! claimed interval width by a per-route multiplier; at every *real*
+//! completion it updates that multiplier from the realized error. Abandoned
+//! and timed-out requests never reach the update path — their realized
+//! length is censored (the client never saw the response), and learning
+//! from them would bias the intervals toward whatever the overload policy
+//! happened to shed.
+//!
+//! The update is an EWMA of the normalized error `|observed − p50| / width`
+//! per route lane. A source whose claimed widths consistently overcover
+//! (ratio < 1) sees its multiplier decay toward the observed ratio —
+//! intervals shrink monotonically; a source that undercovers is widened the
+//! same way. Multipliers start at exactly `1.0` and widths scale by
+//! multiplication, so a recalibrator that never observes anything — or one
+//! that is disabled — is bit-for-bit equivalent to the static source.
+
+use crate::core::Priors;
+use crate::predictor::Route;
+
+/// EWMA step per observation. Small enough that one outlier cannot whip
+/// the interval, large enough to converge within a few hundred completions.
+pub const RECAL_ALPHA: f64 = 0.05;
+
+/// Multiplier clamp: intervals never shrink below ×0.25 or grow past ×4 of
+/// the source's claim — the source stays the anchor, recalibration trims.
+pub const RECAL_MIN_MULT: f64 = 0.25;
+/// See [`RECAL_MIN_MULT`].
+pub const RECAL_MAX_MULT: f64 = 4.0;
+
+/// Number of route lanes tracked (no-belief + four buckets); see
+/// [`Route::lane`].
+const LANES: usize = 5;
+
+/// Per-route online interval recalibrator (one per client scheduler).
+#[derive(Debug, Clone)]
+pub struct Recalibrator {
+    enabled: bool,
+    /// Per-lane width multiplier, applied at arrival.
+    mult: [f64; LANES],
+    /// Per-lane completion observations consumed.
+    observed: [u64; LANES],
+}
+
+impl Recalibrator {
+    /// A recalibrator that applies and learns; multipliers start at 1.0.
+    pub fn enabled() -> Recalibrator {
+        Recalibrator { enabled: true, mult: [1.0; LANES], observed: [0; LANES] }
+    }
+
+    /// A recalibrator that is a guaranteed bit-exact no-op.
+    pub fn disabled() -> Recalibrator {
+        Recalibrator { enabled: false, mult: [1.0; LANES], observed: [0; LANES] }
+    }
+
+    /// Whether this instance learns and applies.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Current width multiplier for `route`'s lane.
+    pub fn multiplier(&self, route: &Route) -> f64 {
+        self.mult[route.lane()]
+    }
+
+    /// Completions consumed for `route`'s lane.
+    pub fn observations(&self, route: &Route) -> u64 {
+        self.observed[route.lane()]
+    }
+
+    /// Rescale a source-claimed interval by the lane's learned multiplier.
+    /// Point priors (`width == 0`) and disabled recalibrators pass through
+    /// untouched; an enabled-but-unobserved lane multiplies by exactly
+    /// `1.0`, which is bit-identity for finite widths.
+    pub fn apply(&self, priors: Priors, route: &Route) -> Priors {
+        if !self.enabled || priors.width == 0.0 {
+            return priors;
+        }
+        Priors::with_width(priors.p50, priors.p90, priors.width * self.mult[route.lane()])
+    }
+
+    /// Consume one *observed* completion: the request's policy-facing prior
+    /// (as claimed by the source, pre-recalibration), its route, and the
+    /// realized output length. Callers must NOT invoke this for abandoned,
+    /// shed, or timed-out requests — those lengths are censored.
+    pub fn observe(&mut self, claimed: Priors, route: &Route, observed_tokens: f64) {
+        if !self.enabled || claimed.width <= 0.0 {
+            // Point priors carry no interval to recalibrate.
+            return;
+        }
+        let lane = route.lane();
+        // Normalized error: how many claimed half-widths the truth landed
+        // from the point estimate. Calibrated ⇒ ~1 on average.
+        let ratio = (observed_tokens - claimed.p50).abs() / claimed.width;
+        let target = ratio.clamp(RECAL_MIN_MULT, RECAL_MAX_MULT);
+        let m = self.mult[lane] * (1.0 - RECAL_ALPHA) + target * RECAL_ALPHA;
+        self.mult[lane] = m.clamp(RECAL_MIN_MULT, RECAL_MAX_MULT);
+        self.observed[lane] += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::TokenBucket;
+
+    fn route() -> Route {
+        Route::from_bucket(TokenBucket::Long)
+    }
+
+    #[test]
+    fn disabled_is_bit_exact_identity() {
+        let mut r = Recalibrator::disabled();
+        let p = Priors::with_width(100.0, 200.0, 40.0);
+        // Even after (ignored) observations, apply is untouched.
+        for _ in 0..100 {
+            r.observe(p, &route(), 500.0);
+        }
+        let out = r.apply(p, &route());
+        assert_eq!(out.width.to_bits(), p.width.to_bits());
+        assert_eq!(r.observations(&route()), 0);
+    }
+
+    #[test]
+    fn unobserved_enabled_lane_is_identity() {
+        let r = Recalibrator::enabled();
+        let p = Priors::with_width(123.456, 789.1, 55.5);
+        let out = r.apply(p, &route());
+        assert_eq!(out.width.to_bits(), p.width.to_bits());
+        assert_eq!(out.p50.to_bits(), p.p50.to_bits());
+    }
+
+    #[test]
+    fn consistent_overcoverage_shrinks_monotonically() {
+        let mut r = Recalibrator::enabled();
+        // Claimed half-width 100, realized error always 30 ⇒ ratio 0.3.
+        let p = Priors::with_width(200.0, 400.0, 100.0);
+        let mut last = r.multiplier(&route());
+        for _ in 0..500 {
+            r.observe(p, &route(), 230.0);
+            let m = r.multiplier(&route());
+            assert!(m <= last, "multiplier must shrink monotonically: {m} > {last}");
+            last = m;
+        }
+        assert!((last - 0.3).abs() < 0.01, "converges to the observed ratio, got {last}");
+        let out = r.apply(p, &route());
+        assert!(out.width < p.width * 0.35);
+    }
+
+    #[test]
+    fn consistent_undercoverage_widens() {
+        let mut r = Recalibrator::enabled();
+        // Claimed half-width 50, realized error 150 ⇒ ratio 3.
+        let p = Priors::with_width(200.0, 400.0, 50.0);
+        for _ in 0..500 {
+            r.observe(p, &route(), 350.0);
+        }
+        let m = r.multiplier(&route());
+        assert!((m - 3.0).abs() < 0.05, "got {m}");
+    }
+
+    #[test]
+    fn multiplier_clamped() {
+        let mut r = Recalibrator::enabled();
+        let p = Priors::with_width(200.0, 400.0, 1.0);
+        for _ in 0..2_000 {
+            r.observe(p, &route(), 4_000.0); // ratio 3800 — absurd outlier
+        }
+        assert_eq!(r.multiplier(&route()), RECAL_MAX_MULT);
+    }
+
+    #[test]
+    fn lanes_are_independent() {
+        let mut r = Recalibrator::enabled();
+        let p = Priors::with_width(200.0, 400.0, 100.0);
+        for _ in 0..50 {
+            r.observe(p, &Route::from_bucket(TokenBucket::Short), 210.0);
+        }
+        assert!(r.multiplier(&Route::from_bucket(TokenBucket::Short)) < 1.0);
+        assert_eq!(r.multiplier(&Route::from_bucket(TokenBucket::XLong)), 1.0);
+        assert_eq!(r.multiplier(&Route::neutral()), 1.0);
+    }
+
+    #[test]
+    fn point_priors_never_update() {
+        let mut r = Recalibrator::enabled();
+        let p = Priors::new(200.0, 400.0); // width 0
+        r.observe(p, &route(), 1_000.0);
+        assert_eq!(r.observations(&route()), 0);
+        assert_eq!(r.multiplier(&route()), 1.0);
+    }
+}

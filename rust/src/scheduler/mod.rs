@@ -21,14 +21,15 @@ pub mod queues;
 pub mod shard;
 pub mod state;
 
+pub use ordering::OrderingCfg;
 pub use shard::{ShardCfg, ShardPolicy};
 
 use crate::core::{Class, Priors, ReqId, Request};
-use crate::predictor::Route;
+use crate::predictor::{Recalibrator, Route};
 use allocation::{
     AdaptiveDrr, AllocCtx, Allocator, DrrCfg, FairQueuing, PacedFifo, QuotaTiered, ShortPriority,
 };
-use ordering::{Edf, FeasibleSet, Fifo, Ordering, OrderingCfg, Sjf};
+use ordering::{Edf, FeasibleSet, Fifo, Ordering, RobustSjf, Sjf};
 use overload::{OverloadCfg, OverloadController, OverloadDecision, SeveritySignals};
 use queues::{ClassQueues, SchedRequest};
 use shard::ShardSelector;
@@ -111,11 +112,18 @@ pub enum OrderingKind {
     Sjf,
     /// Earliest deadline first.
     Edf,
+    /// Uncertainty-aware SJF: orders by `p50 + θ·width`, demoting requests
+    /// whose priors carry wide prediction intervals. Identical to `Sjf`
+    /// when every prior is a point estimate (width 0).
+    RobustSjf,
 }
 
 impl OrderingKind {
     /// Every ordering, paper design first (the `scale` experiment and the
-    /// bench `--depth` leg sweep these).
+    /// bench `--depth` leg sweep these). `RobustSjf` is deliberately NOT
+    /// listed: it only differs from `Sjf` under interval priors, and adding
+    /// it here would grow the `scale` grid and the bench depth tables —
+    /// the `uncertainty` experiment sweeps it explicitly instead.
     pub const ALL: [OrderingKind; 4] =
         [OrderingKind::FeasibleSet, OrderingKind::Sjf, OrderingKind::Edf, OrderingKind::Fifo];
 
@@ -125,6 +133,7 @@ impl OrderingKind {
             OrderingKind::Fifo => Box::new(Fifo),
             OrderingKind::Sjf => Box::new(Sjf::new()),
             OrderingKind::Edf => Box::new(Edf::new()),
+            OrderingKind::RobustSjf => Box::new(RobustSjf::new()),
         }
     }
 
@@ -135,6 +144,7 @@ impl OrderingKind {
             OrderingKind::Fifo => "fifo",
             OrderingKind::Sjf => "sjf",
             OrderingKind::Edf => "edf",
+            OrderingKind::RobustSjf => "robust_sjf",
         }
     }
 
@@ -145,6 +155,7 @@ impl OrderingKind {
             "fifo" => Some(OrderingKind::Fifo),
             "sjf" => Some(OrderingKind::Sjf),
             "edf" => Some(OrderingKind::Edf),
+            "robust_sjf" => Some(OrderingKind::RobustSjf),
             _ => None,
         }
     }
@@ -180,6 +191,11 @@ pub struct SchedulerCfg {
     /// weights. Defaults to the classic single-provider setup; the sim
     /// driver reconciles `n`/weights with the actual `PoolCfg` it runs.
     pub shards: ShardCfg,
+    /// Online interval recalibration: when `true`, the scheduler rescales
+    /// each arriving prior's width by a per-route multiplier learned from
+    /// observed completions (see `predictor::recal`). Off by default —
+    /// disabled recalibration is a guaranteed bit-exact no-op.
+    pub recalibrate: bool,
 }
 
 impl SchedulerCfg {
@@ -204,6 +220,7 @@ impl SchedulerCfg {
             quota_heavy: 4,
             heavy_ordering: OrderingKind::FeasibleSet,
             shards: ShardCfg::single(),
+            recalibrate: false,
         }
     }
 }
@@ -244,6 +261,7 @@ pub struct ClientScheduler {
     state: ApiState,
     selector: ShardSelector,
     feasibility_violations_base: u64,
+    recal: Recalibrator,
 }
 
 impl ClientScheduler {
@@ -280,6 +298,11 @@ impl ClientScheduler {
             state: ApiState::new(),
             selector: ShardSelector::new(cfg.shards.clone()),
             feasibility_violations_base: 0,
+            recal: if cfg.recalibrate {
+                Recalibrator::enabled()
+            } else {
+                Recalibrator::disabled()
+            },
             cfg,
         }
     }
@@ -321,6 +344,32 @@ impl ClientScheduler {
         self.ordering[0].select_work() + self.ordering[1].select_work()
     }
 
+    /// Peak distinct ordering index groups held across both classes —
+    /// under quantized grouping this is the number of occupied prior bins,
+    /// the quantity that bounds per-release scan cost.
+    pub fn ordering_group_count(&self) -> u64 {
+        self.ordering[0].group_count() + self.ordering[1].group_count()
+    }
+
+    /// Releases where an ordering index degenerated to examining every
+    /// live entry on the selected side (full-scan fallback).
+    pub fn ordering_scan_fallbacks(&self) -> u64 {
+        self.ordering[0].scan_fallbacks() + self.ordering[1].scan_fallbacks()
+    }
+
+    /// The online interval recalibrator (per-route width multipliers).
+    pub fn recalibrator(&self) -> &Recalibrator {
+        &self.recal
+    }
+
+    /// Feed the recalibrator one *observed* completion: the source-claimed
+    /// priors (pre-recalibration), the route, and the realized output
+    /// length. The driver calls this only for real completions — abandoned
+    /// and timed-out requests are censored and must never reach here.
+    pub fn observe_completion(&mut self, claimed: Priors, route: &Route, observed_tokens: f64) {
+        self.recal.observe(claimed, route, observed_tokens);
+    }
+
     fn ordering_violations(&self) -> u64 {
         // Only FeasibleSet tracks violations; the trait default is 0.
         self.ordering[1].feasibility_violations()
@@ -332,7 +381,9 @@ impl ClientScheduler {
     // caller owns (and typically reuses) the buffer and clears it between
     // events.
 
-    /// New request arrives with its policy-facing priors + route.
+    /// New request arrives with its policy-facing priors + route. When
+    /// recalibration is on, the source-claimed interval width is rescaled
+    /// by the route lane's learned multiplier before any layer sees it.
     pub fn on_arrival(
         &mut self,
         req: &Request,
@@ -341,6 +392,7 @@ impl ClientScheduler {
         now: f64,
         out: &mut Vec<Action>,
     ) {
+        let priors = self.recal.apply(priors, &route);
         let sreq = SchedRequest {
             id: req.id,
             arrival_ms: req.arrival_ms,
@@ -667,6 +719,37 @@ mod tests {
         actions.clear();
         sched.cancel(sent, 200.0, &mut actions);
         assert_eq!(actions.iter().filter(|a| matches!(a, Action::Send { .. })).count(), 1);
+    }
+
+    #[test]
+    fn recalibrator_learns_only_from_observed_completions() {
+        let mut cfg = SchedulerCfg::for_strategy(StrategyKind::AdaptiveDrr);
+        cfg.recalibrate = true;
+        let mut sched = ClientScheduler::new(cfg);
+        let route = Route::from_bucket(TokenBucket::Long);
+        assert!(sched.recalibrator().is_enabled());
+        // Arrivals alone — and any censored endings (timeouts, sheds,
+        // cancels), which the driver never routes to observe_completion —
+        // leave the lane untouched.
+        let reqs = requests(10, Mix::Heavy);
+        let claimed = Priors::with_width(800.0, 2000.0, 400.0);
+        let mut actions = Vec::new();
+        for r in &reqs {
+            sched.on_arrival(r, claimed, route, r.arrival_ms, &mut actions);
+        }
+        assert_eq!(sched.recalibrator().observations(&route), 0);
+        assert_eq!(sched.recalibrator().multiplier(&route), 1.0);
+        // One observed completion well inside the claimed interval shrinks
+        // the lane's multiplier; the width the next arrival sees follows.
+        sched.observe_completion(claimed, &route, 820.0);
+        assert_eq!(sched.recalibrator().observations(&route), 1);
+        assert!(sched.recalibrator().multiplier(&route) < 1.0);
+    }
+
+    #[test]
+    fn recalibrate_off_is_the_default_and_disabled() {
+        let sched = ClientScheduler::new(SchedulerCfg::for_strategy(StrategyKind::AdaptiveDrr));
+        assert!(!sched.recalibrator().is_enabled());
     }
 
     #[test]

@@ -50,7 +50,14 @@
 use super::Ordering;
 use crate::core::ReqId;
 use crate::scheduler::queues::{QueueView, SchedRequest};
-use std::collections::{BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// Default mantissa bits kept by quantized grouping (`OrderingCfg::
+/// quant_bits`): bins are ~0.8% wide in relative terms — coarse enough
+/// that continuous noisy priors collapse into a bounded bin population,
+/// fine enough that the per-group affine score bounds stay tight and the
+/// bound-pruned walk touches only a short κ-prefix per group.
+pub const QUANT_BITS_DEFAULT: u32 = 7;
 
 /// Feasible-set score weights and the client-side service-time belief.
 #[derive(Debug, Clone)]
@@ -71,6 +78,16 @@ pub struct OrderingCfg {
     pub est_per_token_ms: f64,
     /// Safety multiplier on the estimate (provider congestion headroom).
     pub est_slack_factor: f64,
+    /// Quantized index grouping: `Some(m)` groups entries by the top `m`
+    /// mantissa bits of `(p50, p90)` instead of their exact bit patterns,
+    /// so *continuous* priors (noisy sources) collapse into a bounded set
+    /// of bins instead of one group per entry. Scoring stays exact on the
+    /// raw floats — only the grouping key coarsens, and within-bin
+    /// selection walks a κ-ordered list under a per-bin affine score bound,
+    /// so winners (and the keep-later tie rule) are bit-identical to the
+    /// reference scan. `None` (default) keeps exact-bit grouping and the
+    /// original selection path, work counts included.
+    pub quant_bits: Option<u32>,
 }
 
 impl Default for OrderingCfg {
@@ -83,7 +100,15 @@ impl Default for OrderingCfg {
             est_base_ms: 150.0,
             est_per_token_ms: 0.9,
             est_slack_factor: 1.5,
+            quant_bits: None,
         }
+    }
+}
+
+impl OrderingCfg {
+    /// The default config with quantized grouping at [`QUANT_BITS_DEFAULT`].
+    pub fn quantized() -> Self {
+        OrderingCfg { quant_bits: Some(QUANT_BITS_DEFAULT), ..OrderingCfg::default() }
     }
 }
 
@@ -107,6 +132,14 @@ struct Entry {
     p90: f64,
     /// Static ramp-phase order key (see module docs).
     kappa: f64,
+    /// Quantized-mode clamped-phase key: `w_wait·arr/bin_lo(p50) +
+    /// w_size·p50/ref`. Built against the entry's *bin* bounds so the
+    /// per-group bound `slope_ub·now − κ + shared` dominates the true
+    /// score pointwise (see `select_side_quant`). 0.0 in exact mode.
+    kq_clamped: f64,
+    /// Quantized-mode ramp key: `kq_clamped + w_urg·deadline/(2·win_hi)`
+    /// with `win_hi` from the p90 bin's upper bound. 0.0 in exact mode.
+    kq_ramp: f64,
     /// 0 = pre-urgent, 1 = ramp, 2 = saturated.
     phase: usize,
     feasible: bool,
@@ -131,7 +164,10 @@ struct Group {
 pub struct FeasibleSet {
     cfg: OrderingCfg,
     violations: u64,
-    groups: HashMap<(u64, u64), Group>,
+    /// Prior-keyed groups. A BTreeMap (not a HashMap) so iteration order —
+    /// which the quantized walk's global-best pruning makes observable
+    /// through `select_work` — is a pure function of the keys.
+    groups: BTreeMap<(u64, u64), Group>,
     entries: HashMap<ReqId, Entry>,
     /// (t_ramp bits, id) for phase-0 entries.
     ramp_due: BTreeSet<(u64, ReqId)>,
@@ -151,6 +187,11 @@ pub struct FeasibleSet {
     /// Cumulative entries examined + migrations processed by `select` —
     /// the deterministic per-release cost the bench `--depth` leg gates.
     work: u64,
+    /// Peak number of distinct prior groups held (diagnostics).
+    peak_groups: u64,
+    /// Selects that examined at least as many entries as were live on the
+    /// scanned side — the per-entry-scan regime (diagnostics).
+    scan_fallbacks: u64,
 }
 
 impl FeasibleSet {
@@ -162,10 +203,20 @@ impl FeasibleSet {
             cfg.w_wait >= 0.0 && cfg.w_urgency >= 0.0,
             "feasible-set wait/urgency weights must be non-negative"
         );
+        if let Some(m) = cfg.quant_bits {
+            // The quantized keys additionally require a non-negative size
+            // weight (κ must be bit-orderable) and a monotone service
+            // estimate (the per-bin window bounds lean on it).
+            assert!((1..=52).contains(&m), "quant_bits {m} outside 1..=52");
+            assert!(
+                cfg.w_size >= 0.0 && cfg.est_per_token_ms >= 0.0 && cfg.est_slack_factor >= 0.0,
+                "quantized grouping requires non-negative size weight and service slopes"
+            );
+        }
         FeasibleSet {
             cfg,
             violations: 0,
-            groups: HashMap::new(),
+            groups: BTreeMap::new(),
             entries: HashMap::new(),
             ramp_due: BTreeSet::new(),
             sat_due: BTreeSet::new(),
@@ -174,6 +225,8 @@ impl FeasibleSet {
             next_seq: 0,
             max_arrival: f64::NEG_INFINITY,
             work: 0,
+            peak_groups: 0,
+            scan_fallbacks: 0,
         }
     }
 
@@ -259,8 +312,58 @@ impl FeasibleSet {
         Self::first_instant(|t| !self.feasible_at(deadline_ms, p90, t))
     }
 
-    fn list_key(e: &Entry, id: ReqId) -> ListKey {
-        let primary = if e.phase == 1 { e.kappa.to_bits() } else { e.arrival_ms.to_bits() };
+    /// Width (in raw u64 bit-space) of one quantization bin: everything
+    /// below the top `m` mantissa bits is masked off, so bin boundaries are
+    /// exact powers-of-two steps in the float's bit pattern.
+    fn bin_step(m: u32) -> u64 {
+        1u64 << (52 - m)
+    }
+
+    /// `[lo, hi)` bin bounds of a non-negative float under `m`-bit
+    /// quantization. `hi` is the next bin's first representable value.
+    fn bin_bounds(v: f64, m: u32) -> (f64, f64) {
+        let step = Self::bin_step(m);
+        let lo = v.to_bits() & !(step - 1);
+        (f64::from_bits(lo), f64::from_bits(lo + step))
+    }
+
+    /// Group key for an entry's priors: exact `(p50, p90)` bits, or their
+    /// bin floors under quantized grouping.
+    fn group_key(&self, p50: f64, p90: f64) -> (u64, u64) {
+        match self.cfg.quant_bits {
+            None => (p50.to_bits(), p90.to_bits()),
+            Some(m) => {
+                let step = Self::bin_step(m);
+                (p50.to_bits() & !(step - 1), p90.to_bits() & !(step - 1))
+            }
+        }
+    }
+
+    /// Per-group affine score-bound slopes under quantized grouping, from
+    /// the group key's bin bounds alone: `(clamped, ramp)` upper bounds on
+    /// d(bound)/d(now). The clamped slope `w_wait / bin_lo(p50)` pairs with
+    /// `kq_clamped`; the ramp slope adds `w_urg / (2·win_hi)` and pairs
+    /// with `kq_ramp` (see `select_side_quant` for the dominance argument).
+    fn group_slopes(&self, gk: (u64, u64), m: u32) -> (f64, f64) {
+        let p50_lo = f64::from_bits(gk.0).max(1.0);
+        let p90_hi = f64::from_bits(gk.1 + Self::bin_step(m));
+        let win_hi = self.est_service_ms(p90_hi).max(1.0);
+        let clamped = self.cfg.w_wait / p50_lo;
+        (clamped, clamped + self.cfg.w_urgency / (2.0 * win_hi))
+    }
+
+    fn list_key(&self, e: &Entry, id: ReqId) -> ListKey {
+        let primary = if self.cfg.quant_bits.is_some() {
+            if e.phase == 1 {
+                e.kq_ramp.to_bits()
+            } else {
+                e.kq_clamped.to_bits()
+            }
+        } else if e.phase == 1 {
+            e.kappa.to_bits()
+        } else {
+            e.arrival_ms.to_bits()
+        };
         (primary, e.arrival_ms.to_bits(), e.seq, id)
     }
 
@@ -275,22 +378,23 @@ impl FeasibleSet {
     /// Insert `id` into its group list per its current (side, phase).
     fn list_insert(&mut self, id: ReqId) {
         let e = &self.entries[&id];
-        let gk = (e.p50.to_bits(), e.p90.to_bits());
+        let gk = self.group_key(e.p50, e.p90);
         let (sd, ph) = (Self::side_of(e), e.phase);
-        let key = Self::list_key(e, id);
+        let key = self.list_key(e, id);
         let g = self.groups.entry(gk).or_default();
         let inserted = g.lists[sd][ph].insert(key);
         debug_assert!(inserted, "duplicate index entry for {id}");
         g.len[sd] += 1;
         self.live[sd] += 1;
+        self.peak_groups = self.peak_groups.max(self.groups.len() as u64);
     }
 
     /// Remove `id` from its group list (entry metadata stays).
     fn list_remove(&mut self, id: ReqId) {
         let e = &self.entries[&id];
-        let gk = (e.p50.to_bits(), e.p90.to_bits());
+        let gk = self.group_key(e.p50, e.p90);
         let (sd, ph) = (Self::side_of(e), e.phase);
-        let key = Self::list_key(e, id);
+        let key = self.list_key(e, id);
         let empty = {
             let g = self.groups.get_mut(&gk).expect("entry group present");
             let removed = g.lists[sd][ph].remove(&key);
@@ -421,6 +525,78 @@ impl FeasibleSet {
         }
         (best.map(|(_, _, id)| id), examined)
     }
+
+    /// Exact argmax over one side under *quantized* grouping. Entries in a
+    /// bin no longer share score inputs, so the clamped tie-prefix trick is
+    /// unavailable; instead every phase list is κ-ordered against keys built
+    /// from the bin bounds, and the walk stops once the per-bin affine
+    /// bound falls below the best exact score found so far.
+    ///
+    /// Dominance (real arithmetic, for `now ≥` every live arrival):
+    /// * clamped phases: `w_wait·(now−arr)/cost ≤ w_wait·(now−arr)/bin_lo`
+    ///   since `cost ≥ bin_lo(p50)`, so
+    ///   `score ≤ (w_wait/bin_lo)·now − kq_clamped + shared`
+    ///   with `kq_clamped = w_wait·arr/bin_lo + w_size·p50/ref` and
+    ///   `shared ∈ {0, w_urg}`.
+    /// * ramp phase: additionally `w_urg·(now−dl)/(2·win) ≤
+    ///   w_urg·(now−dl)/(2·win_hi)` because `now < dl` for every live
+    ///   ramp entry (saturation migrates at `t_sat ≤ dl`) and
+    ///   `win ≤ win_hi = win(bin_hi(p90))`, so
+    ///   `score ≤ slope_ramp·now − kq_ramp + w_urg`.
+    ///
+    /// The bound is decreasing in κ along each list, so once it drops an
+    /// ε-margin below the best score no later entry can win *or tie* — the
+    /// margin (~1e-9 relative) sits many orders above the f64 evaluation
+    /// error of either side and guards the keep-later tie rule. Every
+    /// walked entry is scored by the exact `score_parts` arithmetic, so
+    /// winners match the reference scan bit-for-bit.
+    fn select_side_quant(&self, sd: usize, now: f64, m: u32) -> (Option<ReqId>, u64) {
+        // As in the exact ramp walk: the bounds only dominate where the
+        // wait term is unclamped, so pruning stays off until `now` has
+        // passed every pushed arrival (always true in the DES scheduler,
+        // which pushes at `now == arrival`).
+        let prune = now >= self.max_arrival;
+        let mut best: Option<(f64, (u64, u64), ReqId)> = None;
+        let mut examined = 0u64;
+        for (gk, g) in &self.groups {
+            if g.len[sd] == 0 {
+                continue;
+            }
+            let (slope_clamped, slope_ramp) = self.group_slopes(*gk, m);
+            for (phase, shared, slope_ub) in [
+                (0usize, 0.0, slope_clamped),
+                (2, self.cfg.w_urgency, slope_clamped),
+                (1, self.cfg.w_urgency, slope_ramp),
+            ] {
+                let drift = slope_ub * now;
+                for &(kbits, arr_bits, seq, id) in &g.lists[sd][phase] {
+                    if prune {
+                        if let Some((bs, _, _)) = best {
+                            let kappa = f64::from_bits(kbits);
+                            let bound = drift - kappa + shared;
+                            let margin = 1e-9 * (1.0 + kappa + drift + shared);
+                            if bs > bound + margin {
+                                break;
+                            }
+                        }
+                    }
+                    let e = &self.entries[&id];
+                    let s = self.score_parts(e.arrival_ms, e.p50, e.p90, e.deadline_ms, now);
+                    examined += 1;
+                    Self::consider(&mut best, s, (arr_bits, seq), id);
+                }
+            }
+        }
+        (best.map(|(_, _, id)| id), examined)
+    }
+
+    /// Dispatch to the grouping mode's side walk.
+    fn side_select(&self, sd: usize, now: f64) -> (Option<ReqId>, u64) {
+        match self.cfg.quant_bits {
+            None => self.select_side(sd, now),
+            Some(m) => self.select_side_quant(sd, now, m),
+        }
+    }
 }
 
 impl Ordering for FeasibleSet {
@@ -431,18 +607,20 @@ impl Ordering for FeasibleSet {
             "feasible-set index out of sync with the queue (missed lifecycle hook?)"
         );
         self.refresh(now);
-        let winner = if self.live[FEASIBLE] > 0 {
-            let (w, examined) = self.select_side(FEASIBLE, now);
-            self.work += examined;
-            w
+        let (winner, examined, side_live) = if self.live[FEASIBLE] > 0 {
+            let (w, examined) = self.side_select(FEASIBLE, now);
+            (w, examined, self.live[FEASIBLE])
         } else if self.live[INFEASIBLE] > 0 {
             self.violations += 1;
-            let (w, examined) = self.select_side(INFEASIBLE, now);
-            self.work += examined;
-            w
+            let (w, examined) = self.side_select(INFEASIBLE, now);
+            (w, examined, self.live[INFEASIBLE])
         } else {
-            None
+            (None, 0, 0)
         };
+        self.work += examined;
+        if side_live > 1 && examined >= side_live as u64 {
+            self.scan_fallbacks += 1;
+        }
         debug_assert_eq!(
             winner,
             self.reference_select(queue, now),
@@ -480,6 +658,23 @@ impl Ordering for FeasibleSet {
         let wait_key = self.cfg.w_wait * (arrival_ms / cost);
         let urgency_key = self.cfg.w_urgency * (deadline_ms / (2.0 * window));
         let kappa = wait_key + urgency_key;
+        // Quantized-mode keys, built against the *bin* bounds so the
+        // per-group affine bound dominates the true score pointwise (see
+        // `select_side_quant`). Non-negative by the `new()` asserts, so
+        // plain IEEE bit order sorts them.
+        let (kq_clamped, kq_ramp) = match self.cfg.quant_bits {
+            None => (0.0, 0.0),
+            Some(m) => {
+                let (p50_lo, _) = Self::bin_bounds(p50, m);
+                let (_, p90_hi) = Self::bin_bounds(p90, m);
+                let win_hi = self.est_service_ms(p90_hi).max(1.0);
+                let kc = self.cfg.w_wait * (arrival_ms / p50_lo.max(1.0))
+                    + self.cfg.w_size * (p50 / self.cfg.ref_tokens);
+                let kr = kc + self.cfg.w_urgency * (deadline_ms / (2.0 * win_hi));
+                debug_assert!(kc >= 0.0 && kr >= 0.0, "quant keys must be bit-orderable");
+                (kc, kr)
+            }
+        };
         let t_ramp = Self::first_instant(|t| self.urgency_at(p90, deadline_ms, t) > 0.0);
         let t_sat = Self::first_instant(|t| self.urgency_at(p90, deadline_ms, t) >= 1.0);
         let t_star = self.first_infeasible_ms(deadline_ms, p90);
@@ -498,6 +693,8 @@ impl Ordering for FeasibleSet {
             p50,
             p90,
             kappa,
+            kq_clamped,
+            kq_ramp,
             phase,
             feasible,
             t_ramp_bits: t_ramp.to_bits(),
@@ -546,6 +743,14 @@ impl Ordering for FeasibleSet {
     fn select_work(&self) -> u64 {
         self.work
     }
+
+    fn group_count(&self) -> u64 {
+        self.peak_groups
+    }
+
+    fn scan_fallbacks(&self) -> u64 {
+        self.scan_fallbacks
+    }
 }
 
 #[cfg(test)]
@@ -555,6 +760,16 @@ mod tests {
 
     fn fs() -> FeasibleSet {
         FeasibleSet::new(OrderingCfg::default())
+    }
+
+    fn fsq() -> FeasibleSet {
+        FeasibleSet::new(OrderingCfg::quantized())
+    }
+
+    /// 400 entries with *continuous* priors (every p50 distinct): the
+    /// regime where exact-bit grouping degenerates to one group per entry.
+    fn continuous_reqs() -> Vec<SchedRequest> {
+        (0..400).map(|i| sreq(i, i as f64, 700.0 + (i as f64) * 0.01, 1e9)).collect()
     }
 
     #[test]
@@ -690,6 +905,81 @@ mod tests {
         assert_eq!(f.select(q.view(HEAVY), 500.0), Some(0), "oldest wins pre-urgency");
         let examined = f.select_work() - before;
         assert!(examined <= 10, "deep shared-prior queue examined {examined} entries");
+    }
+
+    #[test]
+    fn exact_grouping_scans_continuous_priors_and_counts_it() {
+        let mut f = fs();
+        let q = queues_into(continuous_reqs(), &mut f);
+        let before = f.select_work();
+        assert_eq!(f.select(q.view(HEAVY), 500.0), Some(0), "oldest wins pre-urgency");
+        let examined = f.select_work() - before;
+        assert!(examined >= 400, "exact-bit groups must degenerate to a scan: {examined}");
+        assert_eq!(f.scan_fallbacks(), 1, "the scan regime must be observable");
+        assert_eq!(f.group_count(), 400, "one group per distinct prior");
+    }
+
+    #[test]
+    fn quantized_grouping_restores_sublinear_selection() {
+        let mut f = fsq();
+        let q = queues_into(continuous_reqs(), &mut f);
+        let before = f.select_work();
+        assert_eq!(f.select(q.view(HEAVY), 500.0), Some(0), "same winner as the exact scan");
+        let examined = f.select_work() - before;
+        assert!(examined <= 40, "quantized bins examined {examined} of 400 entries");
+        assert_eq!(f.scan_fallbacks(), 0);
+        assert!(f.group_count() <= 4, "continuous priors collapse into bins: {}", f.group_count());
+    }
+
+    #[test]
+    fn quantized_matches_reference_on_random_continuous_cases() {
+        use crate::testing::prop;
+        prop::forall(300, |g| {
+            let mut f = fsq();
+            let n = g.usize_in(1, 30);
+            let reqs: Vec<_> = (0..n)
+                .map(|i| {
+                    sreq(
+                        i,
+                        g.f64_in(0.0, 2000.0),
+                        g.f64_in(10.0, 4000.0),
+                        g.f64_in(0.0, 60_000.0),
+                    )
+                })
+                .collect();
+            let q = queues_into(reqs, &mut f);
+            // Spans both sides of max_arrival, so the pruned and unpruned
+            // walks are both exercised (select's debug_assert compares
+            // against the reference on every call).
+            let now = g.f64_in(0.0, 10_000.0);
+            let sel = f.select(q.view(HEAVY), now);
+            assert_eq!(sel, f.reference_select(q.view(HEAVY), now));
+        });
+    }
+
+    #[test]
+    fn quantized_expiry_and_phase_migrations_keep_equivalence() {
+        // Same shape as feasibility_expiry_migrates_entries, quantized:
+        // migrations re-key entries into κ lists and must stay exact.
+        let mut f = fsq();
+        let q = queues_into(vec![sreq(1, 0.0, 100.0, 2_000.0), sreq(2, 0.0, 100.0, 1e7)], &mut f);
+        assert!(f.select(q.view(HEAVY), 0.0).is_some());
+        assert_eq!(f.select(q.view(HEAVY), 1e6), Some(2));
+        assert_eq!(f.violations(), 0);
+    }
+
+    #[test]
+    fn bin_bounds_bracket_the_value() {
+        for m in [1u32, 7, 12, 52] {
+            for v in [1.0f64, 1.5, 180.0, 700.37, 4096.0, 6553.6] {
+                let (lo, hi) = FeasibleSet::bin_bounds(v, m);
+                assert!(lo <= v && v < hi, "m={m} v={v} lo={lo} hi={hi}");
+                // At 52 kept bits the bin is a single ulp: lo == v.
+                if m == 52 {
+                    assert_eq!(lo, v);
+                }
+            }
+        }
     }
 
     #[test]

@@ -37,7 +37,7 @@
 
 pub mod feasible_set;
 
-pub use feasible_set::{FeasibleSet, OrderingCfg};
+pub use feasible_set::{FeasibleSet, OrderingCfg, QUANT_BITS_DEFAULT};
 
 use crate::core::ReqId;
 use crate::scheduler::queues::{QueueView, SchedRequest};
@@ -86,6 +86,21 @@ pub trait Ordering: Send {
     /// `--depth` leg can gate per-release scaling on it exactly. The FIFO
     /// default reports 0 — its selection reads one pointer.
     fn select_work(&self) -> u64 {
+        0
+    }
+
+    /// Peak number of distinct prior groups the index has held (only
+    /// `FeasibleSet` groups; everything else reports 0). Under quantized
+    /// grouping this stays far below the entry count even for continuous
+    /// priors — the observable form of the grouping win.
+    fn group_count(&self) -> u64 {
+        0
+    }
+
+    /// Number of `select` calls that degenerated to examining at least as
+    /// many entries as were live (a per-entry scan — the regime quantized
+    /// grouping exists to prevent). 0 for O(log) indexes.
+    fn scan_fallbacks(&self) -> u64 {
         0
     }
 }
@@ -219,6 +234,85 @@ impl Ordering for Sjf {
     }
 }
 
+/// Width-demotion factor for [`RobustSjf`]: effective cost is
+/// `p50 + ROBUST_THETA · width`. At θ=1 a request whose interval is as wide
+/// as its estimate sorts like a job twice its size — uncertain work yields
+/// to confidently-small work, bounding the damage a wrong small prediction
+/// can do (the "Adaptively Robust LLM Inference Optimization" hedge).
+pub const ROBUST_THETA: f64 = 1.0;
+
+/// Robust shortest-job-first: SJF on the width-demoted cost
+/// `p50 + θ·width` (ties → older first). For point priors (`width == 0`)
+/// this is numerically identical to [`Sjf`].
+///
+/// Incremental: the same BTree machinery as [`Sjf`], keyed
+/// `(robust_cost, arrival, seq)`; selection is `first()`: O(log depth).
+#[derive(Default)]
+pub struct RobustSjf {
+    index: BTreeSet<(u64, u64, u64, ReqId)>,
+    seqs: SeqTable,
+    work: u64,
+}
+
+impl RobustSjf {
+    /// An empty robust-SJF index.
+    pub fn new() -> RobustSjf {
+        RobustSjf::default()
+    }
+
+    fn key(req: &SchedRequest, seq: u64) -> (u64, u64, u64, ReqId) {
+        (key_bits(req.priors.robust_cost(ROBUST_THETA)), key_bits(req.arrival_ms), seq, req.id)
+    }
+}
+
+impl Ordering for RobustSjf {
+    fn select(&mut self, queue: QueueView<'_>, now: f64) -> Option<ReqId> {
+        debug_assert_eq!(
+            self.index.len(),
+            queue.len(),
+            "robust_sjf index out of sync (missed hook?)"
+        );
+        let winner = self.index.first().map(|&(_, _, _, id)| id);
+        self.work += u64::from(winner.is_some());
+        debug_assert_eq!(winner, self.reference_select(queue, now), "robust_sjf vs reference");
+        winner
+    }
+
+    fn select_work(&self) -> u64 {
+        self.work
+    }
+
+    fn reference_select(&self, queue: QueueView<'_>, _now: f64) -> Option<ReqId> {
+        let mut best: Option<(&SchedRequest, f64)> = None;
+        for r in queue.iter() {
+            let cost = r.priors.robust_cost(ROBUST_THETA);
+            let better = match best {
+                None => true,
+                Some((b, bc)) => cost < bc || (cost == bc && r.arrival_ms < b.arrival_ms),
+            };
+            if better {
+                best = Some((r, cost));
+            }
+        }
+        best.map(|(r, _)| r.id)
+    }
+
+    fn on_push(&mut self, req: &SchedRequest, _now: f64) {
+        let seq = self.seqs.assign(req.id);
+        self.index.insert(Self::key(req, seq));
+    }
+
+    fn on_remove(&mut self, req: &SchedRequest) {
+        let seq = self.seqs.take(req.id);
+        let removed = self.index.remove(&Self::key(req, seq));
+        debug_assert!(removed, "robust_sjf index missing request {}", req.id);
+    }
+
+    fn name(&self) -> &'static str {
+        "robust_sjf"
+    }
+}
+
 /// Earliest deadline first (ties → FIFO position, i.e. first seen).
 ///
 /// Incremental: a BTree keyed `(deadline, arrival, seq)` — deadline buckets
@@ -302,6 +396,13 @@ pub(crate) mod test_util {
         }
     }
 
+    /// Like [`sreq`] but with an interval width on the prior.
+    pub fn sreq_w(id: usize, arrival: f64, p50: f64, width: f64, deadline: f64) -> SchedRequest {
+        let mut r = sreq(id, arrival, p50, deadline);
+        r.priors = Priors::with_width(p50, p50 * 1.5, width);
+        r
+    }
+
     /// Build slab queues holding `reqs` in order (all heavy-class),
     /// driving the ordering's lifecycle hooks at push time `now = 0` (so
     /// any later select time is valid under the monotone-now contract).
@@ -319,7 +420,7 @@ pub(crate) mod test_util {
 
 #[cfg(test)]
 mod tests {
-    use super::test_util::{queues_into, sreq, HEAVY};
+    use super::test_util::{queues_into, sreq, sreq_w, HEAVY};
     use super::*;
 
     #[test]
@@ -365,6 +466,67 @@ mod tests {
         let r = q.remove_id(3).unwrap();
         s.on_remove(&r);
         assert_eq!(s.select(q.view(HEAVY), 8.0), None);
+    }
+
+    #[test]
+    fn robust_sjf_demotes_wide_intervals() {
+        let mut s = RobustSjf::new();
+        // id 1: small point estimate but huge uncertainty (robust cost 100
+        // + 400 = 500); id 2: larger but confident (robust cost 300).
+        let q = queues_into(
+            vec![sreq_w(1, 0.0, 100.0, 400.0, 1e5), sreq_w(2, 1.0, 300.0, 0.0, 1e5)],
+            &mut s,
+        );
+        assert_eq!(s.select(q.view(HEAVY), 10.0), Some(2));
+        // Plain SJF would have picked the small-but-uncertain one.
+        let mut plain = Sjf::new();
+        let q2 = queues_into(
+            vec![sreq_w(1, 0.0, 100.0, 400.0, 1e5), sreq_w(2, 1.0, 300.0, 0.0, 1e5)],
+            &mut plain,
+        );
+        assert_eq!(plain.select(q2.view(HEAVY), 10.0), Some(1));
+    }
+
+    #[test]
+    fn robust_sjf_equals_sjf_on_point_priors() {
+        let reqs =
+            vec![sreq(1, 0.0, 500.0, 1e5), sreq(2, 1.0, 10.0, 1e5), sreq(3, 2.0, 10.0, 1e5)];
+        let mut robust = RobustSjf::new();
+        let qa = queues_into(reqs.clone(), &mut robust);
+        let mut plain = Sjf::new();
+        let qb = queues_into(reqs, &mut plain);
+        assert_eq!(robust.select(qa.view(HEAVY), 5.0), plain.select(qb.view(HEAVY), 5.0));
+    }
+
+    #[test]
+    fn robust_sjf_ties_break_by_age() {
+        let mut s = RobustSjf::new();
+        // Equal robust costs (100+50 == 140+10), older wins.
+        let q = queues_into(
+            vec![sreq_w(1, 5.0, 100.0, 50.0, 1e5), sreq_w(2, 1.0, 140.0, 10.0, 1e5)],
+            &mut s,
+        );
+        assert_eq!(s.select(q.view(HEAVY), 10.0), Some(2));
+    }
+
+    #[test]
+    fn robust_sjf_index_tracks_removals() {
+        let mut s = RobustSjf::new();
+        let mut q = queues_into(
+            vec![
+                sreq_w(1, 0.0, 50.0, 100.0, 1e5),
+                sreq_w(2, 1.0, 120.0, 0.0, 1e5),
+                sreq_w(3, 2.0, 90.0, 200.0, 1e5),
+            ],
+            &mut s,
+        );
+        assert_eq!(s.select(q.view(HEAVY), 5.0), Some(2));
+        let r = q.remove_id(2).unwrap();
+        s.on_remove(&r);
+        assert_eq!(s.select(q.view(HEAVY), 6.0), Some(1));
+        let r = q.remove_id(1).unwrap();
+        s.on_remove(&r);
+        assert_eq!(s.select(q.view(HEAVY), 7.0), Some(3));
     }
 
     #[test]

@@ -28,7 +28,7 @@
 
 use crate::core::{Priors, ReqId, Request, RequestStatus};
 use crate::metrics::{compute, RequestOutcome, RunMetrics};
-use crate::predictor::{InfoLevel, LadderSource, PriorSource, Route};
+use crate::predictor::{InfoLevel, LadderSource, NoisySource, PriorSource, Route};
 use crate::provider::pool::{PoolCfg, ProviderPool};
 use crate::provider::{ProviderCfg, Started};
 use crate::scheduler::{Action, ClientScheduler, SchedulerCfg};
@@ -89,6 +89,13 @@ pub struct RunDiagnostics {
     /// (counted, not timed) — the numerator of the bench `--depth` leg's
     /// per-release cost.
     pub ordering_select_work: u64,
+    /// Peak distinct ordering index groups across all schedulers. Under
+    /// quantized prior grouping this counts occupied prior bins — the
+    /// quantity that bounds per-release scan cost under continuous priors.
+    pub ordering_group_count: u64,
+    /// Releases where an ordering index degenerated to a full scan of the
+    /// selected side (every live entry examined), summed over schedulers.
+    pub ordering_scan_fallbacks: u64,
 }
 
 /// Outcome bundle of one simulated run.
@@ -156,6 +163,8 @@ pub(crate) struct CoreRun {
     pub(crate) mean_queue_depth: f64,
     pub(crate) peak_queue_depth: usize,
     pub(crate) ordering_select_work: u64,
+    pub(crate) ordering_group_count: u64,
+    pub(crate) ordering_scan_fallbacks: u64,
 }
 
 /// Time-weighted queue-depth integrator, shared verbatim by the serial loop
@@ -314,6 +323,17 @@ pub(crate) fn process_tick<F: ShardFabric>(
                 }
                 let budget = requests[id].deadline_ms - requests[id].arrival_ms;
                 scheduler.on_completion(id, lat, budget, now, actions);
+                // Interval recalibration learns only from *observed*
+                // completions — this arm. Abandoned/timed-out requests are
+                // censored and never reach the update path. The claimed
+                // (source-emitted, pre-recalibration) priors are the
+                // reference the realized length is scored against.
+                let (claimed, route) = priors[id];
+                scheduler.observe_completion(
+                    claimed,
+                    &route,
+                    requests[id].true_output_tokens as f64,
+                );
             }
             // TimedOut → client already abandoned; completion is unobserved.
         }
@@ -451,6 +471,8 @@ pub(crate) fn run_core(
     let (sends, peak_inflight, timers_canceled) = (st.sends, st.peak_inflight, st.timers_canceled);
     let (mean_queue_depth, peak_queue_depth) = fabric.fold.finish();
     let ordering_select_work = schedulers.iter().map(|s| s.ordering_work()).sum();
+    let ordering_group_count = schedulers.iter().map(|s| s.ordering_group_count()).sum();
+    let ordering_scan_fallbacks = schedulers.iter().map(|s| s.ordering_scan_fallbacks()).sum();
 
     CoreRun {
         status,
@@ -465,6 +487,8 @@ pub(crate) fn run_core(
         mean_queue_depth,
         peak_queue_depth,
         ordering_select_work,
+        ordering_group_count,
+        ordering_scan_fallbacks,
     }
 }
 
@@ -541,6 +565,8 @@ pub fn run_pool(
             mean_queue_depth: core.mean_queue_depth,
             peak_queue_depth: core.peak_queue_depth,
             ordering_select_work: core.ordering_select_work,
+            ordering_group_count: core.ordering_group_count,
+            ordering_scan_fallbacks: core.ordering_scan_fallbacks,
         },
     }
 }
@@ -557,6 +583,10 @@ pub struct TenantSpec {
     pub sched: SchedulerCfg,
     /// Information condition for the tenant's prior source.
     pub info: InfoLevel,
+    /// Multiplicative prior-noise level L (§4.10) wrapped around the
+    /// ladder source; `0.0` leaves the ladder unwrapped — bit-identical to
+    /// every pre-noise tenant run.
+    pub noise: f64,
 }
 
 /// One tenant's slice of a multi-tenant run.
@@ -635,6 +665,7 @@ pub fn split_requests(total: usize, tenants: usize) -> Vec<usize> {
 ///     workload: WorkloadSpec::new(Mix::Balanced, 30, 6.0),
 ///     sched: SchedulerCfg::for_strategy(strategy),
 ///     info: InfoLevel::Coarse,
+///     noise: 0.0,
 /// };
 /// let pool = PoolCfg::split(ProviderCfg::default(), 2);
 /// let out = run_tenants(
@@ -679,10 +710,18 @@ pub fn run_tenants_partitioned(
         let tseed = tenant_seed(seed, t);
         let offset = all_requests.len();
         let mut reqs = spec.workload.generate(tseed);
-        // Same prior-stream convention every experiment runner uses, on the
-        // tenant's own seed.
-        let prior_rng = Rng::new(tseed ^ 0x5EED_50_u64).derive("priors");
-        let mut src = LadderSource::new(spec.info, prior_rng);
+        // Same prior-stream conventions every experiment runner uses, on
+        // the tenant's own seed: the ladder on `derive("priors")`, the
+        // optional noise wrapper on `derive("noise")`. A noise level of 0
+        // leaves the ladder unwrapped, so the RNG streams consumed — and
+        // therefore every downstream byte — match the pre-noise driver.
+        let root = Rng::new(tseed ^ 0x5EED_50_u64);
+        let ladder = LadderSource::new(spec.info, root.derive("priors"));
+        let mut src: Box<dyn PriorSource> = if spec.noise > 0.0 {
+            Box::new(NoisySource::new(ladder, spec.noise, root.derive("noise")))
+        } else {
+            Box::new(ladder)
+        };
         for r in reqs.iter_mut() {
             r.id += offset;
         }
@@ -737,6 +776,8 @@ pub fn run_tenants_partitioned(
             mean_queue_depth: core.mean_queue_depth,
             peak_queue_depth: core.peak_queue_depth,
             ordering_select_work: core.ordering_select_work,
+            ordering_group_count: core.ordering_group_count,
+            ordering_scan_fallbacks: core.ordering_scan_fallbacks,
         },
         partition,
     }
@@ -747,7 +788,7 @@ mod tests {
     use super::*;
     use crate::core::RequestStatus;
     use crate::predictor::{InfoLevel, LadderSource};
-    use crate::scheduler::{ShardPolicy, StrategyKind};
+    use crate::scheduler::{OrderingKind, ShardPolicy, StrategyKind};
     use crate::workload::{Mix, WorkloadSpec};
 
     fn run_strategy(strategy: StrategyKind, mix: Mix, rate: f64, seed: u64) -> RunOutput {
@@ -950,11 +991,64 @@ mod tests {
         }
     }
 
+    #[test]
+    fn recalibration_on_point_priors_is_bit_exact_with_off() {
+        // The "disabled == static source" contract at driver level: oracle
+        // priors have width 0, so the recalibrator's multiplier scales a
+        // zero interval and never moves a key — even under the
+        // width-consuming robust_sjf ordering. Turning it on must be
+        // invisible bit-for-bit, which is what lets `recalibrate` default
+        // off without forking any existing CSV.
+        let spec = WorkloadSpec::new(Mix::Heavy, 60, 10.0);
+        let requests = spec.generate(8);
+        let mk_src = || LadderSource::new(InfoLevel::Oracle, Rng::new(8).derive("priors"));
+        let mut on = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+        on.heavy_ordering = OrderingKind::RobustSjf;
+        on.recalibrate = true;
+        let mut off = on.clone();
+        off.recalibrate = false;
+        let a = run(&requests, &mut mk_src(), on, ProviderCfg::default(), 8);
+        let b = run(&requests, &mut mk_src(), off, ProviderCfg::default(), 8);
+        assert_eq!(a.metrics.n_completed, b.metrics.n_completed);
+        assert_eq!(a.metrics.rejects_total, b.metrics.rejects_total);
+        assert_eq!(a.metrics.global_p95_ms.to_bits(), b.metrics.global_p95_ms.to_bits());
+        assert_eq!(a.diagnostics.events_processed, b.diagnostics.events_processed);
+        assert_eq!(a.diagnostics.ordering_select_work, b.diagnostics.ordering_select_work);
+        for (x, y) in a.outcomes.iter().zip(b.outcomes.iter()) {
+            assert_eq!(x.status, y.status);
+            assert_eq!(x.latency_ms.map(f64::to_bits), y.latency_ms.map(f64::to_bits));
+        }
+    }
+
+    #[test]
+    fn recalibration_under_interval_priors_is_deterministic() {
+        // With coarse (nonzero-width) priors and robust_sjf consuming the
+        // widths, the recalibrator's feedback loop runs through completions
+        // inside the event loop. Two identical runs must stay bitwise
+        // equal: the multiplier state is a pure function of the event
+        // sequence, never of wall clock or iteration order.
+        let spec = WorkloadSpec::new(Mix::Heavy, 60, 10.0);
+        let requests = spec.generate(9);
+        let mk_src = || LadderSource::new(InfoLevel::Coarse, Rng::new(9).derive("priors"));
+        let mut cfg = SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc);
+        cfg.heavy_ordering = OrderingKind::RobustSjf;
+        cfg.recalibrate = true;
+        let a = run(&requests, &mut mk_src(), cfg.clone(), ProviderCfg::default(), 9);
+        let b = run(&requests, &mut mk_src(), cfg, ProviderCfg::default(), 9);
+        assert_eq!(a.metrics.n_completed, b.metrics.n_completed);
+        assert_eq!(a.diagnostics.events_processed, b.diagnostics.events_processed);
+        for (x, y) in a.outcomes.iter().zip(b.outcomes.iter()) {
+            assert_eq!(x.status, y.status);
+            assert_eq!(x.latency_ms.map(f64::to_bits), y.latency_ms.map(f64::to_bits));
+        }
+    }
+
     fn tenant_spec(mix: Mix, n: usize, rate: f64, strategy: StrategyKind) -> TenantSpec {
         TenantSpec {
             workload: WorkloadSpec::new(mix, n, rate),
             sched: SchedulerCfg::for_strategy(strategy),
             info: InfoLevel::Coarse,
+            noise: 0.0,
         }
     }
 

@@ -672,6 +672,8 @@ fn run_partitioned(
         mean_queue_depth,
         peak_queue_depth,
         ordering_select_work: schedulers.iter().map(|s| s.ordering_work()).sum(),
+        ordering_group_count: schedulers.iter().map(|s| s.ordering_group_count()).sum(),
+        ordering_scan_fallbacks: schedulers.iter().map(|s| s.ordering_scan_fallbacks()).sum(),
     };
     let stats = PartitionStats {
         partitions: p,

@@ -14,18 +14,21 @@
 
 use blackbox_sched::core::{Class, Priors, TokenBucket};
 use blackbox_sched::predictor::Route;
-use blackbox_sched::scheduler::ordering::{Edf, FeasibleSet, Fifo, Ordering, OrderingCfg, Sjf};
+use blackbox_sched::scheduler::ordering::{
+    Edf, FeasibleSet, Fifo, Ordering, OrderingCfg, RobustSjf, Sjf,
+};
 use blackbox_sched::scheduler::queues::{ClassQueues, SchedRequest};
 use blackbox_sched::testing::prop;
 
-fn sreq(id: usize, arrival: f64, p50: f64, deadline: f64) -> SchedRequest {
+fn sreq(id: usize, arrival: f64, p50: f64, width: f64, deadline: f64) -> SchedRequest {
     SchedRequest {
         id,
         arrival_ms: arrival,
         deadline_ms: deadline,
         // Long bucket: everything routes to the heavy class, the one whose
-        // ordering is scored.
-        priors: Priors::new(p50, p50 * 1.5),
+        // ordering is scored. Width 0 = point prior (the pre-interval
+        // representation); > 0 exercises the uncertainty-aware keys.
+        priors: Priors::with_width(p50, p50 * 1.5, width),
         route: Route::from_bucket(TokenBucket::Long),
         defer_attempts: 0,
     }
@@ -53,12 +56,21 @@ fn exercise(mk: impl Fn() -> Box<dyn Ordering>, cases: usize) {
                     } else {
                         g.f64_in(10.0, 3000.0)
                     };
+                    // Interval widths: zero (point priors), a discrete
+                    // rung (robust-cost key ties reachable), or continuous
+                    // (every prior distinct — the quantized-grouping
+                    // regime).
+                    let width = match g.usize_in(0, 3) {
+                        0 => 0.0,
+                        1 => *g.choice(&[50.0, 400.0]),
+                        _ => g.f64_in(0.0, p50),
+                    };
                     let slack = if g.bool() {
                         *g.choice(&[800.0, 2_500.0, 20_000.0])
                     } else {
                         g.f64_in(200.0, 60_000.0)
                     };
-                    let r = sreq(next_id, clock, p50, clock + slack);
+                    let r = sreq(next_id, clock, p50, width, clock + slack);
                     next_id += 1;
                     live.push(r.id);
                     ord.on_push(&r, clock);
@@ -70,10 +82,12 @@ fn exercise(mk: impl Fn() -> Box<dyn Ordering>, cases: usize) {
                 4..=5 => {
                     clock += g.f64_in(0.0, 10.0);
                     let arrival = g.f64_in(0.0, clock);
+                    let p50 = g.f64_in(10.0, 3000.0);
                     let r = sreq(
                         next_id,
                         arrival,
-                        g.f64_in(10.0, 3000.0),
+                        p50,
+                        g.f64_in(0.0, p50),
                         arrival + g.f64_in(100.0, 30_000.0),
                     );
                     next_id += 1;
@@ -126,8 +140,22 @@ fn edf_index_matches_reference_scan() {
 }
 
 #[test]
+fn robust_sjf_index_matches_reference_scan() {
+    exercise(|| Box::new(RobustSjf::new()) as Box<dyn Ordering>, 80);
+}
+
+#[test]
 fn feasible_set_index_matches_reference_scan() {
     exercise(|| Box::new(FeasibleSet::new(OrderingCfg::default())) as Box<dyn Ordering>, 80);
+}
+
+#[test]
+fn feasible_set_quantized_index_matches_reference_scan() {
+    // Quantized grouping shares the reference scan with the exact path:
+    // winners and tie rules must be bit-identical even though the group
+    // keys coarsen (the generator's continuous p50 draws make every prior
+    // distinct, so the bins actually hold mixed-score populations here).
+    exercise(|| Box::new(FeasibleSet::new(OrderingCfg::quantized())) as Box<dyn Ordering>, 80);
 }
 
 #[test]

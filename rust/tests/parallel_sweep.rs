@@ -6,7 +6,7 @@
 
 use blackbox_sched::experiments::runner::{run_cell, CellSpec, Congestion, ParallelSweep, Regime};
 use blackbox_sched::metrics::RunMetrics;
-use blackbox_sched::scheduler::{SchedulerCfg, StrategyKind};
+use blackbox_sched::scheduler::{OrderingKind, SchedulerCfg, StrategyKind};
 use blackbox_sched::util::pool;
 use blackbox_sched::workload::Mix;
 
@@ -64,6 +64,35 @@ fn sweep_is_bit_identical_to_serial_for_2x2x3_grid() {
             assert_eq!(pc.len(), sc.len(), "cell {cell}");
             for (seed, (a, b)) in pc.iter().zip(sc).enumerate() {
                 assert_metrics_identical(a, b, &format!("jobs={jobs} cell={cell} seed={seed}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sweep_is_bit_identical_with_noisy_interval_priors() {
+    // The noise wrapper's RNG stream derives from the (cell, seed) pair
+    // inside the job, so injection — and the recalibrator feedback it
+    // drives — must not depend on which worker runs the cell.
+    let regime = Regime { mix: Mix::Balanced, congestion: Congestion::High };
+    let mut specs = Vec::new();
+    for strategy in [StrategyKind::AdaptiveDrr, StrategyKind::FinalAdrrOlc] {
+        let mut sched = SchedulerCfg::for_strategy(strategy);
+        sched.heavy_ordering = OrderingKind::RobustSjf;
+        sched.recalibrate = true;
+        specs.push(CellSpec::new(regime, sched, 40).with_noise(0.4));
+    }
+    let serial: Vec<Vec<RunMetrics>> = specs.iter().map(|s| run_cell(s, 3)).collect();
+    for jobs in [1usize, 4] {
+        let par = ParallelSweep::new(jobs).run_cells(&specs, 3);
+        assert_eq!(par.len(), serial.len());
+        for (cell, (pc, sc)) in par.iter().zip(&serial).enumerate() {
+            for (seed, (a, b)) in pc.iter().zip(sc).enumerate() {
+                assert_metrics_identical(
+                    a,
+                    b,
+                    &format!("noisy jobs={jobs} cell={cell} seed={seed}"),
+                );
             }
         }
     }

@@ -15,7 +15,7 @@
 use blackbox_sched::predictor::InfoLevel;
 use blackbox_sched::provider::pool::PoolCfg;
 use blackbox_sched::provider::ProviderCfg;
-use blackbox_sched::scheduler::{SchedulerCfg, ShardPolicy, StrategyKind};
+use blackbox_sched::scheduler::{OrderingCfg, OrderingKind, SchedulerCfg, ShardPolicy, StrategyKind};
 use blackbox_sched::sim::driver::{run_tenants_partitioned, MultiRunOutput, TenantSpec};
 use blackbox_sched::workload::{Mix, WorkloadSpec};
 
@@ -83,6 +83,8 @@ fn outputs_bitwise_equal(a: &MultiRunOutput, b: &MultiRunOutput, ctx: &str) {
     );
     assert_eq!(da.peak_queue_depth, db.peak_queue_depth, "{ctx}");
     assert_eq!(da.ordering_select_work, db.ordering_select_work, "{ctx}");
+    assert_eq!(da.ordering_group_count, db.ordering_group_count, "{ctx}");
+    assert_eq!(da.ordering_scan_fallbacks, db.ordering_scan_fallbacks, "{ctx}");
 }
 
 /// A heterogeneous 4-tenant mix: different workloads, rates, request
@@ -100,7 +102,12 @@ fn tenant_mix(strategy: StrategyKind) -> Vec<TenantSpec> {
         .map(|(t, &(mix, n, rate))| {
             let mut sched = SchedulerCfg::for_strategy(strategy);
             sched.shards.policy = ShardPolicy::ALL[t % ShardPolicy::ALL.len()];
-            TenantSpec { workload: WorkloadSpec::new(mix, n, rate), sched, info: InfoLevel::Coarse }
+            TenantSpec {
+                workload: WorkloadSpec::new(mix, n, rate),
+                sched,
+                info: InfoLevel::Coarse,
+                noise: 0.0,
+            }
         })
         .collect()
 }
@@ -130,6 +137,35 @@ fn partitioned_matches_serial_bit_for_bit() {
                     outputs_bitwise_equal(&par, &serial, &ctx);
                 }
             }
+        }
+    }
+}
+
+#[test]
+fn noisy_interval_tenants_partition_bit_for_bit() {
+    // Continuous noisy priors plus the full uncertainty stack — robust-SJF
+    // width demotion, quantized feasible-set grouping, and the online
+    // recalibrator — through the partitioned loop. Each tenant's noise
+    // stream derives from its own tenant seed, so injection must be
+    // byte-identical no matter how tenants are carved across partition
+    // threads.
+    let mut specs = tenant_mix(StrategyKind::AdaptiveDrr);
+    for (t, spec) in specs.iter_mut().enumerate() {
+        spec.noise = [0.4, 0.2, 0.4, 0.0][t];
+        spec.sched.recalibrate = t % 2 == 0;
+    }
+    specs[0].sched.heavy_ordering = OrderingKind::RobustSjf;
+    specs[1].sched.heavy_ordering = OrderingKind::FeasibleSet;
+    specs[1].sched.ordering = OrderingCfg::quantized();
+    specs[2].sched.heavy_ordering = OrderingKind::Sjf;
+    let pool = PoolCfg::split(ProviderCfg::default(), 3);
+    for seed in 0..3u64 {
+        let serial = run_tenants_partitioned(&specs, &pool, seed, 1);
+        for partitions in [2usize, 4] {
+            let ctx = format!("noisy tenants, seed {seed}, P={partitions}");
+            let par = run_tenants_partitioned(&specs, &pool, seed, partitions);
+            assert!(!par.partition.serial_fallback, "{ctx}");
+            outputs_bitwise_equal(&par, &serial, &ctx);
         }
     }
 }

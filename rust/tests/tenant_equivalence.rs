@@ -80,7 +80,12 @@ fn one_tenant_matches_run_pool_byte_for_byte() {
                     let mut sched = SchedulerCfg::for_strategy(strategy);
                     sched.shards.policy = policy;
                     let multi = run_tenants(
-                        &[TenantSpec { workload: spec.clone(), sched, info: InfoLevel::Coarse }],
+                        &[TenantSpec {
+                            workload: spec.clone(),
+                            sched,
+                            info: InfoLevel::Coarse,
+                            noise: 0.0,
+                        }],
                         pool,
                         seed,
                     );
@@ -121,16 +126,19 @@ fn multi_tenant_runs_are_bitwise_reproducible() {
             workload: WorkloadSpec::new(Mix::Balanced, 50, 8.0),
             sched: SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
             info: InfoLevel::Coarse,
+            noise: 0.0,
         },
         TenantSpec {
             workload: WorkloadSpec::new(Mix::Heavy, 40, 6.0),
             sched: SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
             info: InfoLevel::Oracle,
+            noise: 0.0,
         },
         TenantSpec {
             workload: WorkloadSpec::new(Mix::Balanced, 30, 4.0),
             sched: SchedulerCfg::for_strategy(StrategyKind::QuotaTiered),
             info: InfoLevel::Coarse,
+            noise: 0.0,
         },
     ];
     for pool in [
@@ -191,6 +199,7 @@ fn heavy_tenant_interferes_through_the_shared_pool() {
         workload: WorkloadSpec::new(mix, 60, 8.0),
         sched: SchedulerCfg::for_strategy(StrategyKind::FinalAdrrOlc),
         info: InfoLevel::Coarse,
+        noise: 0.0,
     };
     let pool = PoolCfg::single(ProviderCfg::default());
     let calm = run_tenants(&[mk(Mix::Balanced), mk(Mix::Balanced)], &pool, 2);
