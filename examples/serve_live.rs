@@ -32,5 +32,6 @@ fn main() -> anyhow::Result<()> {
         pool,
         ShardPolicy::Weighted,
         1,
+        blackbox_sched::workload::ArrivalSpec::Poisson,
     )
 }

@@ -67,7 +67,7 @@ use crate::sim::EventQueue;
 use crate::sim::TimerId;
 use crate::util::jsonio::Json;
 use crate::util::rng::Rng;
-use crate::workload::{Mix, WorkloadSpec};
+use crate::workload::{ArrivalSpec, Mix, WorkloadSpec};
 
 /// Rate multipliers for the `--depth` deep-queue leg. The low point already
 /// sits past the congestion knee; the high point is the 16×-rate regime.
@@ -104,6 +104,10 @@ pub struct ScaleBenchOpts {
     /// "high congestion" band so queues carry realistic depth.
     pub rate_rps: f64,
     pub mix: Mix,
+    /// Arrival process for the scale and tenant legs (`--arrivals`);
+    /// defaults to Poisson, the pre-storms baseline. The depth and
+    /// partition legs keep their fixed distilled regimes.
+    pub arrivals: ArrivalSpec,
     pub seed: u64,
     /// Where to write BENCH.json.
     pub out_path: String,
@@ -145,6 +149,7 @@ impl Default for ScaleBenchOpts {
             sizes: vec![10_000, 100_000],
             rate_rps: 20.0,
             mix: Mix::Balanced,
+            arrivals: ArrivalSpec::Poisson,
             seed: 0,
             out_path: "BENCH.json".to_string(),
             shards: 1,
@@ -265,7 +270,9 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             opts.rate_rps,
             opts.mix.name()
         );
-        let requests = WorkloadSpec::new(opts.mix, n, opts.rate_rps).generate(opts.seed);
+        let requests = WorkloadSpec::new(opts.mix, n, opts.rate_rps)
+            .with_arrivals(opts.arrivals)
+            .generate(opts.seed);
         for &(n_shards, n_tenants) in &legs {
             let pool = if n_shards == 1 {
                 PoolCfg::single(ProviderCfg::default())
@@ -312,7 +319,8 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                                     opts.mix,
                                     per_n,
                                     opts.rate_rps / n_tenants as f64,
-                                ),
+                                )
+                                .with_arrivals(opts.arrivals),
                                 sched: make_sched(),
                                 info: InfoLevel::Coarse,
                                 noise: 0.0,
@@ -849,6 +857,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
     let mut doc = Json::obj()
         .set("bench", "scale")
         .set("mix", opts.mix.name())
+        .set("arrivals", opts.arrivals.name())
         .set("rate_rps", opts.rate_rps)
         .set("seed", opts.seed)
         .set("shards", opts.shards)
@@ -929,6 +938,8 @@ fn digest_multi(o: &driver::MultiRunOutput) -> u64 {
     h.put(d.ordering_select_work);
     h.put(d.ordering_group_count);
     h.put(d.ordering_scan_fallbacks);
+    h.put(d.retries_scheduled);
+    h.put(d.faulted_shard_ms.to_bits());
     h.0
 }
 

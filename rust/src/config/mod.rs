@@ -13,7 +13,7 @@ use crate::provider::ProviderCfg;
 use crate::scheduler::overload::BucketPolicy;
 use crate::scheduler::{OrderingKind, SchedulerCfg, StrategyKind};
 use crate::util::jsonio::Json;
-use crate::workload::{Mix, WorkloadSpec};
+use crate::workload::{ArrivalSpec, Mix, WorkloadSpec};
 
 /// Fully-resolved configuration for one run.
 #[derive(Debug, Clone)]
@@ -54,6 +54,10 @@ impl RunConfig {
                 w.f64_or("n_requests", cfg.workload.n_requests as f64) as usize,
                 w.f64_or("rate_rps", cfg.workload.rate_rps),
             );
+            if let Some(name) = w.get("arrivals").and_then(Json::as_str) {
+                spec.arrivals = ArrivalSpec::parse(name)
+                    .with_context(|| format!("unknown workload.arrivals {name:?}"))?;
+            }
             if let Some(slo) = w.get("slo") {
                 let mut policy = SloPolicy::default();
                 if let Some(d) = slo.get("deadline_ms") {
@@ -148,6 +152,7 @@ pub fn example_config() -> Json {
                 .set("mix", "heavy")
                 .set("n_requests", 200usize)
                 .set("rate_rps", 14.0)
+                .set("arrivals", "bursty:4:2000")
                 .set(
                     "slo",
                     Json::obj()
@@ -210,6 +215,10 @@ mod tests {
         let cfg = RunConfig::from_json(&j).unwrap();
         assert_eq!(cfg.workload.mix, Mix::Heavy);
         assert_eq!(cfg.workload.rate_rps, 14.0);
+        assert_eq!(
+            cfg.workload.arrivals,
+            ArrivalSpec::Bursty { burst_factor: 4.0, mean_phase_ms: 2000.0 }
+        );
         assert_eq!(cfg.scheduler.overload.bucket_policy, BucketPolicy::CostLadder);
         assert_eq!(cfg.provider.slowdown_ref, 8.0);
         // Text round-trip too.
@@ -239,6 +248,7 @@ mod tests {
             r#"{"workload": {"mix": "nope"}}"#,
             r#"{"scheduler": {"overload": {"bucket_policy": "chaos"}}}"#,
             r#"{"scheduler": {"heavy_ordering": "vibes"}}"#,
+            r#"{"workload": {"arrivals": "chaos"}}"#,
         ] {
             assert!(RunConfig::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
         }

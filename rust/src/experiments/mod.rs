@@ -16,6 +16,7 @@ pub mod scale;
 pub mod sensitivity;
 pub mod sharded;
 pub mod sharegpt;
+pub mod storms;
 pub mod tenants;
 pub mod uncertainty;
 
@@ -59,7 +60,7 @@ impl ExpOpts {
 }
 
 /// All experiment names, in paper order (repo extensions at the end).
-pub const ALL_EXPERIMENTS: [&str; 15] = [
+pub const ALL_EXPERIMENTS: [&str; 16] = [
     "calibration",
     "ladder",
     "main",
@@ -75,6 +76,7 @@ pub const ALL_EXPERIMENTS: [&str; 15] = [
     "tenants",
     "scale",
     "uncertainty",
+    "storms",
 ];
 
 /// Dispatch one experiment by name ("all" runs the full battery).
@@ -95,6 +97,7 @@ pub fn run_experiment(name: &str, opts: &ExpOpts) -> Result<()> {
         "tenants" => tenants::run(opts),
         "scale" => scale::run(opts),
         "uncertainty" => uncertainty::run(opts),
+        "storms" => storms::run(opts),
         "all" => {
             for n in ALL_EXPERIMENTS {
                 println!("\n########## experiment: {n} ##########");

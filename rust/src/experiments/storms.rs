@@ -1,0 +1,404 @@
+//! Storms experiment: adversarial arrival processes × provider faults ×
+//! the client-side resilience stack (failover routing + retry backoff).
+//!
+//! Every other table assumes a well-behaved Poisson front door and a fleet
+//! that never falters. This grid turns both knobs at once and asks what the
+//! full stack buys when traffic and providers misbehave together:
+//!
+//! * **Scenario** — `flash_crowd` (8× spikes on a Poisson base),
+//!   `diurnal` (sinusoidal load with 80% swing), `session`
+//!   (session-affinity streams pinned by `hash_affinity`), `retry_storm`
+//!   (a mid-run half-speed brownout on shard 0 with client retries armed),
+//!   and `blackout` (shard 0 dark from t=0 for longer than any timeout
+//!   budget — the censored-tail failover's live-fire test).
+//! * **Condition** — `full` (tail-based failover on, retries with
+//!   exponential backoff and a budget of 4) vs `ablation` (failover off,
+//!   retries disabled: the pre-storms scheduler).
+//! * **Congestion** — the paper's medium and high bands.
+//!
+//! Cells run two tenants on a four-shard fleet through [`driver::
+//! run_tenants`], so the whole grid rides both CI determinism diffs:
+//! byte-identical across `--jobs` (the sweep fan-out) *and* across
+//! `--partitions` (fault plans here are extension-only, so the partitioned
+//! loop's lookahead floor stays valid and the parallel path really runs).
+//!
+//! The CSV adds the two storm diagnostics to the usual quality columns:
+//! `retries_scheduled` (client re-entries, zero whenever retries are off)
+//! and `faulted_shard_ms` (service-time extension injected by the fault
+//! plan, zero for fault-free scenarios).
+
+use anyhow::Result;
+
+use crate::experiments::runner::{Congestion, Regime};
+use crate::experiments::ExpOpts;
+use crate::metrics::report::{fmt_rate, TextTable};
+use crate::metrics::{Aggregate, RunMetrics};
+use crate::predictor::InfoLevel;
+use crate::provider::fault::FaultPlan;
+use crate::provider::pool::PoolCfg;
+use crate::provider::ProviderCfg;
+use crate::scheduler::{RetryCfg, SchedulerCfg, ShardPolicy, StrategyKind};
+use crate::sim::driver::{self, TenantSpec};
+use crate::util::csvio::CsvTable;
+use crate::util::stats::mean;
+use crate::workload::{ArrivalSpec, Mix, WorkloadSpec};
+
+/// Tenants sharing the fleet in every cell (the smallest shape that makes
+/// the grid a real multi-tenant partitioned run).
+const TENANTS: usize = 2;
+
+/// Shards in the fleet. Faulted scenarios darken shard 0 and leave three
+/// survivors, so the surviving capacity still covers the offered load.
+const SHARDS: usize = 4;
+
+/// Retry budget for the `full` condition: enough attempts to outlive a
+/// brownout window, few enough that storms terminate fast.
+const RETRY_BUDGET: u32 = 4;
+
+/// Storm scenario: which arrival process drives the front door and which
+/// fault plan (if any) hits the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Scenario {
+    /// Poisson base with 8× arrival-rate spikes.
+    FlashCrowd,
+    /// Sinusoidal mean rate, 80% swing around the base.
+    Diurnal,
+    /// Session streams (4 turns, 800 ms think time) pinned to shards by
+    /// `hash_affinity` — the cache-locality routing regime.
+    Session,
+    /// Half-speed brownout on shard 0 over a mid-run window; client
+    /// retries (when armed) re-enter through the backoff ladder.
+    RetryStorm,
+    /// Shard 0 dark from t=0, longer than every timeout budget: stranded
+    /// in-flight work can only be rescued by failover + retry.
+    Blackout,
+}
+
+impl Scenario {
+    const ALL: [Scenario; 5] = [
+        Scenario::FlashCrowd,
+        Scenario::Diurnal,
+        Scenario::Session,
+        Scenario::RetryStorm,
+        Scenario::Blackout,
+    ];
+
+    fn name(self) -> &'static str {
+        match self {
+            Scenario::FlashCrowd => "flash_crowd",
+            Scenario::Diurnal => "diurnal",
+            Scenario::Session => "session",
+            Scenario::RetryStorm => "retry_storm",
+            Scenario::Blackout => "blackout",
+        }
+    }
+
+    fn arrivals(self) -> ArrivalSpec {
+        match self {
+            Scenario::FlashCrowd => {
+                ArrivalSpec::FlashCrowd { spike_factor: 8.0, every_ms: 30_000.0, spike_ms: 2_000.0 }
+            }
+            Scenario::Diurnal => ArrivalSpec::Diurnal { period_ms: 60_000.0, depth: 0.8 },
+            Scenario::Session => ArrivalSpec::Session { turns: 4, think_ms: 800.0 },
+            Scenario::RetryStorm | Scenario::Blackout => ArrivalSpec::Poisson,
+        }
+    }
+
+    /// Deterministic fault schedule. Both plans are extension-only
+    /// (speeds ≤ 1), so the partitioned loop's lookahead floor holds and
+    /// these cells exercise the parallel path, not the serial fallback.
+    fn faults(self) -> FaultPlan {
+        match self {
+            Scenario::RetryStorm => FaultPlan::default()
+                .brownout(0, 2_000.0, 30_000.0, 0.35)
+                .expect("static plan is valid"),
+            Scenario::Blackout => FaultPlan::default()
+                .blackout(0, 0.0, 600_000.0)
+                .expect("static plan is valid"),
+            _ => FaultPlan::default(),
+        }
+    }
+
+    /// Session streams exercise affinity pinning; everything else routes
+    /// by instantaneous load.
+    fn policy(self) -> ShardPolicy {
+        match self {
+            Scenario::Session => ShardPolicy::HashAffinity,
+            _ => ShardPolicy::LeastInflight,
+        }
+    }
+}
+
+/// Resilience condition: the full stack vs the pre-storms scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Condition {
+    /// Tail-based failover routing + client retries with backoff.
+    Full,
+    /// Failover off, retries disabled — routing trusts every shard
+    /// forever and a timed-out request is simply lost.
+    Ablation,
+}
+
+impl Condition {
+    const ALL: [Condition; 2] = [Condition::Full, Condition::Ablation];
+
+    fn name(self) -> &'static str {
+        match self {
+            Condition::Full => "full",
+            Condition::Ablation => "ablation",
+        }
+    }
+}
+
+/// One grid cell.
+#[derive(Debug, Clone)]
+struct StormCell {
+    scenario: Scenario,
+    condition: Condition,
+    congestion: Congestion,
+}
+
+impl StormCell {
+    fn rate_rps(&self) -> f64 {
+        Regime { mix: Mix::Balanced, congestion: self.congestion }.rate_rps()
+    }
+
+    fn sched(&self) -> SchedulerCfg {
+        let mut sched = SchedulerCfg::for_strategy(StrategyKind::AdaptiveDrr);
+        sched.shards.policy = self.scenario.policy();
+        sched.shards.failover = self.condition == Condition::Full;
+        sched.retry = match self.condition {
+            Condition::Full => RetryCfg::new(RETRY_BUDGET, 250.0, 2_000.0),
+            Condition::Ablation => RetryCfg::disabled(),
+        };
+        sched
+    }
+
+    fn specs(&self, n_requests: usize) -> Vec<TenantSpec> {
+        let per_rate = self.rate_rps() / TENANTS as f64;
+        driver::split_requests(n_requests, TENANTS)
+            .into_iter()
+            .map(|per_n| TenantSpec {
+                workload: WorkloadSpec::new(Mix::Balanced, per_n, per_rate)
+                    .with_arrivals(self.scenario.arrivals()),
+                sched: self.sched(),
+                info: InfoLevel::Coarse,
+                noise: 0.0,
+            })
+            .collect()
+    }
+}
+
+/// Per-seed result: per-tenant quality metrics plus the fleet-wide storm
+/// diagnostics.
+struct SeedOut {
+    tenants: Vec<RunMetrics>,
+    retries_scheduled: u64,
+    faulted_shard_ms: f64,
+}
+
+fn run_cell_seed(cell: &StormCell, n_requests: usize, seed: u64) -> SeedOut {
+    let pool = PoolCfg::split(ProviderCfg::default(), SHARDS)
+        .with_faults(cell.scenario.faults());
+    let out = driver::run_tenants(&cell.specs(n_requests), &pool, seed);
+    SeedOut {
+        tenants: out.tenants.into_iter().map(|t| t.metrics).collect(),
+        retries_scheduled: out.diagnostics.retries_scheduled,
+        faulted_shard_ms: out.diagnostics.faulted_shard_ms,
+    }
+}
+
+/// The grid: scenario × condition × congestion.
+fn grid() -> Vec<StormCell> {
+    let mut cells = Vec::new();
+    for scenario in Scenario::ALL {
+        for condition in Condition::ALL {
+            for congestion in [Congestion::Medium, Congestion::High] {
+                cells.push(StormCell { scenario, condition, congestion });
+            }
+        }
+    }
+    cells
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let cells = grid();
+    let all: Vec<Vec<SeedOut>> = opts
+        .sweep()
+        .map_cells(cells.len(), opts.seeds, |c, s| run_cell_seed(&cells[c], opts.n_requests, s));
+
+    let mut table = TextTable::new([
+        "Scenario",
+        "Condition",
+        "Congestion",
+        "CR",
+        "Worst P95",
+        "Timeouts",
+        "Retries",
+        "Faulted (s)",
+    ]);
+    let mut csv = CsvTable::new([
+        "scenario",
+        "condition",
+        "congestion",
+        "arrivals",
+        "rate_rps",
+        "requests",
+        "cr_mean",
+        "cr_std",
+        "worst_p95_mean",
+        "goodput_mean",
+        "goodput_std",
+        "timeouts_mean",
+        "rejects_mean",
+        "retries_scheduled_mean",
+        "faulted_shard_ms_mean",
+    ]);
+    for (cell, runs) in cells.iter().zip(&all) {
+        // Fleet-level completion: sum over tenants, mean±std over seeds.
+        let fleet: Vec<RunMetrics> = runs
+            .iter()
+            .map(|r| {
+                let mut acc = r.tenants[0].clone();
+                for t in &r.tenants[1..] {
+                    acc.n_offered += t.n_offered;
+                    acc.n_completed += t.n_completed;
+                    acc.n_rejected += t.n_rejected;
+                    acc.n_timed_out += t.n_timed_out;
+                    acc.goodput_rps += t.goodput_rps;
+                }
+                acc.completion_rate = if acc.n_offered > 0 {
+                    acc.n_completed as f64 / acc.n_offered as f64
+                } else {
+                    0.0
+                };
+                acc
+            })
+            .collect();
+        let agg = Aggregate::new(&fleet);
+        let cr = agg.mean_std(|m| m.completion_rate);
+        let good = agg.mean_std(|m| m.goodput_rps);
+        let timeouts = agg.mean_std(|m| m.n_timed_out as f64);
+        let rejects = agg.mean_std(|m| m.n_rejected as f64);
+        // Worst-tenant tail per seed (NaN when no tenant observed one),
+        // then the per-seed mean — the isolation-under-storm readout.
+        let worst_p95 = mean(
+            &runs
+                .iter()
+                .map(|r| {
+                    r.tenants
+                        .iter()
+                        .map(|t| t.global_p95_ms)
+                        .filter(|p| p.is_finite())
+                        .fold(f64::NAN, f64::max)
+                })
+                .collect::<Vec<f64>>(),
+        );
+        let retries = mean(&runs.iter().map(|r| r.retries_scheduled as f64).collect::<Vec<f64>>());
+        let faulted = mean(&runs.iter().map(|r| r.faulted_shard_ms).collect::<Vec<f64>>());
+        table.row([
+            cell.scenario.name().to_string(),
+            cell.condition.name().to_string(),
+            cell.congestion.name().to_string(),
+            fmt_rate(cr),
+            format!("{worst_p95:.1}"),
+            format!("{:.1}", timeouts.0),
+            format!("{retries:.1}"),
+            format!("{:.1}", faulted / 1e3),
+        ]);
+        csv.row([
+            cell.scenario.name().to_string(),
+            cell.condition.name().to_string(),
+            cell.congestion.name().to_string(),
+            cell.scenario.arrivals().name().to_string(),
+            format!("{:.1}", cell.rate_rps()),
+            opts.n_requests.to_string(),
+            format!("{:.4}", cr.0),
+            format!("{:.4}", cr.1),
+            format!("{worst_p95:.1}"),
+            format!("{:.3}", good.0),
+            format!("{:.3}", good.1),
+            format!("{:.1}", timeouts.0),
+            format!("{:.1}", rejects.0),
+            format!("{retries:.1}"),
+            format!("{faulted:.1}"),
+        ]);
+    }
+    println!("\nStorms — arrival storms × provider faults × resilience stack (mean over seeds)");
+    println!("{}", table.render());
+    let path = format!("{}/storms.csv", opts.out_dir);
+    csv.write_file(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shape_is_stable() {
+        let cells = grid();
+        // 5 scenarios × 2 conditions × 2 congestion bands.
+        assert_eq!(cells.len(), 20);
+        assert!(cells
+            .iter()
+            .filter(|c| c.condition == Condition::Ablation)
+            .all(|c| !c.sched().retry.enabled() && !c.sched().shards.failover));
+    }
+
+    #[test]
+    fn cell_runner_is_deterministic() {
+        let cell = StormCell {
+            scenario: Scenario::RetryStorm,
+            condition: Condition::Full,
+            congestion: Congestion::High,
+        };
+        let a = run_cell_seed(&cell, 40, 1);
+        let b = run_cell_seed(&cell, 40, 1);
+        assert_eq!(a.retries_scheduled, b.retries_scheduled);
+        assert_eq!(a.faulted_shard_ms.to_bits(), b.faulted_shard_ms.to_bits());
+        for (x, y) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(x.n_completed, y.n_completed);
+            assert_eq!(x.global_p95_ms.to_bits(), y.global_p95_ms.to_bits());
+        }
+    }
+
+    #[test]
+    fn clean_scenarios_report_zero_storm_diagnostics() {
+        // Fault-free scenario + ablation condition = exactly the pre-storms
+        // scheduler: both storm counters must sit at hard zero.
+        let cell = StormCell {
+            scenario: Scenario::FlashCrowd,
+            condition: Condition::Ablation,
+            congestion: Congestion::Medium,
+        };
+        let out = run_cell_seed(&cell, 40, 2);
+        assert_eq!(out.retries_scheduled, 0);
+        assert_eq!(out.faulted_shard_ms, 0.0);
+    }
+
+    #[test]
+    fn blackout_full_stack_beats_the_ablation() {
+        // The acceptance contrast at the experiment level: with shard 0
+        // dark past every timeout budget, the full stack re-routes and
+        // retries its casualties while the ablation keeps losing work to
+        // the dead shard.
+        let mk = |condition| StormCell {
+            scenario: Scenario::Blackout,
+            condition,
+            congestion: Congestion::Medium,
+        };
+        let full = run_cell_seed(&mk(Condition::Full), 40, 3);
+        let ablated = run_cell_seed(&mk(Condition::Ablation), 40, 3);
+        let done = |r: &SeedOut| r.tenants.iter().map(|t| t.n_completed).sum::<usize>();
+        assert!(full.retries_scheduled > 0, "blackout casualties must re-enter via retry");
+        assert!(full.faulted_shard_ms > 0.0, "the blackout must actually bite");
+        assert!(
+            done(&full) > done(&ablated),
+            "full stack {} must complete more than the ablation {}",
+            done(&full),
+            done(&ablated)
+        );
+    }
+}

@@ -23,7 +23,19 @@ use blackbox_sched::scheduler::{SchedulerCfg, ShardPolicy, StrategyKind};
 use blackbox_sched::sim::driver;
 use blackbox_sched::util::cli::Cmd;
 use blackbox_sched::util::rng::Rng;
-use blackbox_sched::workload::{trace, Mix, WorkloadSpec};
+use blackbox_sched::workload::{trace, ArrivalSpec, Mix, WorkloadSpec};
+
+/// Parse an `--arrivals` CLI value (`poisson`, `bursty:4:2000`, …) with a
+/// helpful error listing the accepted forms.
+fn parse_arrivals(s: &str) -> Result<ArrivalSpec> {
+    ArrivalSpec::parse(s).with_context(|| {
+        format!(
+            "bad arrivals {s:?}; accepted: poisson, uniform, bursty[:FACTOR:PHASE_MS], \
+             diurnal[:PERIOD_MS:DEPTH], flash_crowd[:FACTOR:EVERY_MS:SPIKE_MS], \
+             session[:TURNS:THINK_MS]"
+        )
+    })
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -116,6 +128,12 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .opt("mix", "balanced", "balanced|heavy|sharegpt|fairness_heavy")
         .opt("rate", "10.0", "arrival rate (req/s)")
         .opt("requests", "120", "offered requests")
+        .opt(
+            "arrivals",
+            "poisson",
+            "arrival process: poisson|uniform|bursty[:F:PHASE]|diurnal[:PERIOD:DEPTH]|\
+             flash_crowd[:F:EVERY:DUR]|session[:TURNS:THINK]",
+        )
         .opt("seed", "0", "random seed")
         .opt("info", "coarse", "no_info|class_only|coarse|oracle")
         .opt("noise", "0.0", "multiplicative prior noise L")
@@ -143,7 +161,8 @@ fn cmd_run(args: &[String]) -> Result<()> {
         let mix =
             Mix::parse(a.str("mix")).with_context(|| format!("bad mix {:?}", a.str("mix")))?;
         (
-            WorkloadSpec::new(mix, a.usize("requests")?, a.f64("rate")?),
+            WorkloadSpec::new(mix, a.usize("requests")?, a.f64("rate")?)
+                .with_arrivals(parse_arrivals(a.str("arrivals"))?),
             SchedulerCfg::for_strategy(strategy),
             ProviderCfg::default(),
             a.u64("seed")?,
@@ -196,6 +215,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         .opt("sizes", "", "comma-separated request counts per run (default 10000,100000)")
         .opt("rate", "20.0", "arrival rate (req/s)")
         .opt("mix", "balanced", "balanced|heavy|sharegpt|fairness_heavy")
+        .opt("arrivals", "poisson", "arrival process for the scale/tenant legs (see `run --help`)")
         .opt("seed", "0", "random seed (one shared workload per size)")
         .opt("out", "BENCH.json", "output JSON path")
         .opt("shards", "1", "add a multi-shard leg with this fleet size (1 = single endpoint)")
@@ -261,6 +281,7 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         sizes,
         rate_rps: a.f64("rate")?,
         mix: Mix::parse(a.str("mix")).with_context(|| format!("bad mix {:?}", a.str("mix")))?,
+        arrivals: parse_arrivals(a.str("arrivals"))?,
         seed: a.u64("seed")?,
         out_path: a.str("out").to_string(),
         shards: a.usize("shards")?,
@@ -386,6 +407,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("shards", "1", "provider fleet size (N>1 = heterogeneous N-shard pool)")
         .opt("shard-policy", "least_inflight", "least_inflight|weighted|hash_affinity")
         .opt("tenants", "1", "independent client schedulers sharing the fleet (load split evenly)")
+        .opt("arrivals", "poisson", "arrival process (see `run --help`)")
         .opt("artifacts", &runtime::default_artifacts_dir(), "artifacts dir ('' = analytic priors)");
     let a = cmd.parse(args)?;
     if a.help {
@@ -411,5 +433,6 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         pool,
         policy,
         tenants,
+        parse_arrivals(a.str("arrivals"))?,
     )
 }

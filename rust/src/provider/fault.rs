@@ -1,0 +1,276 @@
+//! Deterministic provider fault plans: scheduled per-shard brownouts and
+//! blackouts injected mid-run.
+//!
+//! A [`FaultPlan`] is a typed, validated schedule attached to
+//! [`PoolCfg`](crate::provider::pool::PoolCfg). Each window names one shard
+//! and a half-open interval `[t0, t1)` during which that shard's effective
+//! processing speed changes: a **brownout** runs at `factor`× speed
+//! (capacity × factor), a **blackout** at speed 0 (in-flight work stalls
+//! until the window closes — long enough stalls blow client timeouts and
+//! surface as abandons, which is exactly the live failover test the
+//! censored-tail EWMA needs).
+//!
+//! The plan is *pure schedule*: it consumes no randomness and is evaluated
+//! with the same f64 walk wherever the pool runs, so fault-afflicted runs
+//! stay byte-identical across `--jobs` and `--partitions`. Windows with
+//! speed ≤ 1 can only *extend* service, which keeps the partition lookahead
+//! floor valid; a speed-up brownout (`factor > 1`) can shorten service below
+//! the floor, so [`FaultPlan::extension_only`] lets the partitioner fall
+//! back to the flagged serial loop in that case (see `sim::partition`).
+
+use anyhow::{bail, Result};
+
+/// What happens to a shard inside a fault window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Capacity scaled by `factor`: service proceeds at `factor`× speed.
+    Brownout {
+        /// Relative processing speed in the window (`0 < factor`, finite;
+        /// `factor < 1` degrades, `factor > 1` models burst capacity and
+        /// forces the partitioner's serial fallback).
+        factor: f64,
+    },
+    /// Full stall: no service progress until the window closes.
+    Blackout,
+}
+
+impl FaultKind {
+    /// Effective processing speed inside the window (1.0 = nominal).
+    pub fn speed(self) -> f64 {
+        match self {
+            FaultKind::Brownout { factor } => factor,
+            FaultKind::Blackout => 0.0,
+        }
+    }
+}
+
+/// One scheduled fault: `shard` runs at `kind.speed()` over `[t0_ms, t1_ms)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultWindow {
+    /// Pool shard index the fault applies to.
+    pub shard: usize,
+    /// Window start (absolute sim ms, inclusive).
+    pub t0_ms: f64,
+    /// Window end (absolute sim ms, exclusive).
+    pub t1_ms: f64,
+    /// Brownout factor or blackout.
+    pub kind: FaultKind,
+}
+
+/// A validated schedule of per-shard fault windows. Construct by chaining
+/// the builder methods off [`FaultPlan::default`]:
+///
+/// ```
+/// use blackbox_sched::provider::fault::FaultPlan;
+/// # fn main() -> anyhow::Result<()> {
+/// let plan = FaultPlan::default()
+///     .brownout(0, 5_000.0, 10_000.0, 0.25)?
+///     .blackout(1, 8_000.0, 20_000.0)?;
+/// assert_eq!(plan.windows().len(), 2);
+/// # Ok(())
+/// # }
+/// ```
+///
+/// Overlapping windows on the *same* shard, inverted intervals, and
+/// non-positive/non-finite parameters are construction-time `anyhow`
+/// errors, never panics. The empty plan is the universal default and is
+/// bit-identical to a fault-free pool (property-tested next to
+/// `tests/pool_equivalence.rs`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Windows kept sorted by `(shard, t0_ms)` — the insertion invariant
+    /// [`FaultPlan::adjusted_finish`] relies on.
+    windows: Vec<FaultWindow>,
+}
+
+impl FaultPlan {
+    /// Add a brownout: `shard` runs at `factor`× speed over `[t0, t1)`.
+    pub fn brownout(self, shard: usize, t0_ms: f64, t1_ms: f64, factor: f64) -> Result<Self> {
+        if !(factor > 0.0 && factor.is_finite()) {
+            bail!("brownout factor must be positive and finite, got {factor}");
+        }
+        self.push(FaultWindow { shard, t0_ms, t1_ms, kind: FaultKind::Brownout { factor } })
+    }
+
+    /// Add a blackout: `shard` makes no progress over `[t0, t1)`.
+    pub fn blackout(self, shard: usize, t0_ms: f64, t1_ms: f64) -> Result<Self> {
+        self.push(FaultWindow { shard, t0_ms, t1_ms, kind: FaultKind::Blackout })
+    }
+
+    fn push(mut self, w: FaultWindow) -> Result<Self> {
+        if !(w.t0_ms.is_finite() && w.t1_ms.is_finite()) {
+            bail!("fault window bounds must be finite, got [{}, {})", w.t0_ms, w.t1_ms);
+        }
+        if w.t0_ms < 0.0 || w.t0_ms >= w.t1_ms {
+            bail!("fault window must satisfy 0 <= t0 < t1, got [{}, {})", w.t0_ms, w.t1_ms);
+        }
+        for e in self.windows.iter().filter(|e| e.shard == w.shard) {
+            if w.t0_ms < e.t1_ms && e.t0_ms < w.t1_ms {
+                bail!(
+                    "fault windows overlap on shard {}: [{}, {}) vs [{}, {})",
+                    w.shard,
+                    e.t0_ms,
+                    e.t1_ms,
+                    w.t0_ms,
+                    w.t1_ms
+                );
+            }
+        }
+        let at = self
+            .windows
+            .partition_point(|e| (e.shard, e.t0_ms) < (w.shard, w.t0_ms));
+        self.windows.insert(at, w);
+        Ok(self)
+    }
+
+    /// No faults scheduled (the default, bit-identical-to-today plan).
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// All scheduled windows, sorted by `(shard, t0_ms)`.
+    pub fn windows(&self) -> &[FaultWindow] {
+        &self.windows
+    }
+
+    /// Whether any window touches `shard` — pools skip the adjustment walk
+    /// (and thus any float rounding) entirely for untouched shards.
+    pub fn touches(&self, shard: usize) -> bool {
+        self.windows.iter().any(|w| w.shard == shard)
+    }
+
+    /// Largest shard index named by any window (`None` when empty); pools
+    /// check it against their shard count at construction.
+    pub fn max_shard(&self) -> Option<usize> {
+        self.windows.iter().map(|w| w.shard).max()
+    }
+
+    /// True when every window runs at speed ≤ 1, i.e. faults can only
+    /// *extend* service. This is the condition under which the partition
+    /// lookahead floor (a service-time lower bound) remains valid; a
+    /// speed-up brownout breaks it and must force the serial fallback.
+    pub fn extension_only(&self) -> bool {
+        self.windows.iter().all(|w| w.kind.speed() <= 1.0)
+    }
+
+    /// Completion time for work starting on `shard` at `start_ms` with
+    /// nominal (fault-free) service `service_ms`: walk the shard's windows
+    /// in time order, crediting full-speed progress between windows and
+    /// `speed`× progress inside them, until the nominal work is done.
+    ///
+    /// Pure f64 arithmetic, no randomness; with speed ≤ 1 everywhere the
+    /// result is ≥ `start_ms + service_ms` minus nothing — extension-only.
+    pub fn adjusted_finish(&self, shard: usize, start_ms: f64, service_ms: f64) -> f64 {
+        let mut t = start_ms;
+        let mut remaining = service_ms;
+        for w in self.windows.iter().filter(|w| w.shard == shard) {
+            if w.t1_ms <= t {
+                continue; // window fully in the past
+            }
+            // Full-speed stretch from t to the window start.
+            let gap = (w.t0_ms - t).max(0.0);
+            if remaining <= gap {
+                return t + remaining;
+            }
+            remaining -= gap;
+            t = t.max(w.t0_ms);
+            // Degraded stretch inside the window.
+            let speed = w.kind.speed();
+            let capacity = (w.t1_ms - t) * speed;
+            if speed > 0.0 && remaining <= capacity {
+                return t + remaining / speed;
+            }
+            remaining -= capacity;
+            t = w.t1_ms;
+        }
+        t + remaining
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates_windows() {
+        assert!(FaultPlan::default().brownout(0, 0.0, 10.0, 0.5).is_ok());
+        assert!(FaultPlan::default().brownout(0, 5.0, 5.0, 0.5).is_err(), "empty interval");
+        assert!(FaultPlan::default().brownout(0, 10.0, 5.0, 0.5).is_err(), "inverted");
+        assert!(FaultPlan::default().brownout(0, -1.0, 5.0, 0.5).is_err(), "negative t0");
+        assert!(FaultPlan::default().brownout(0, 0.0, f64::NAN, 0.5).is_err(), "nan bound");
+        assert!(FaultPlan::default().brownout(0, 0.0, 10.0, 0.0).is_err(), "zero factor");
+        assert!(FaultPlan::default().brownout(0, 0.0, 10.0, -0.5).is_err(), "negative factor");
+        assert!(FaultPlan::default().brownout(0, 0.0, 10.0, f64::INFINITY).is_err());
+        assert!(FaultPlan::default().blackout(1, 100.0, 200.0).is_ok());
+    }
+
+    #[test]
+    fn same_shard_overlap_is_an_error_cross_shard_is_not() {
+        let p = FaultPlan::default().blackout(0, 0.0, 100.0).unwrap();
+        assert!(p.clone().blackout(0, 50.0, 150.0).is_err(), "same-shard overlap");
+        assert!(p.clone().blackout(0, 100.0, 150.0).is_ok(), "touching is fine (half-open)");
+        assert!(p.blackout(1, 50.0, 150.0).is_ok(), "different shard may overlap in time");
+    }
+
+    #[test]
+    fn windows_sort_by_shard_then_time() {
+        let p = FaultPlan::default()
+            .blackout(1, 0.0, 10.0)
+            .unwrap()
+            .brownout(0, 50.0, 60.0, 0.5)
+            .unwrap()
+            .brownout(0, 5.0, 15.0, 0.5)
+            .unwrap();
+        let order: Vec<(usize, f64)> = p.windows().iter().map(|w| (w.shard, w.t0_ms)).collect();
+        assert_eq!(order, vec![(0, 5.0), (0, 50.0), (1, 0.0)]);
+    }
+
+    #[test]
+    fn blackout_stalls_work_until_the_window_closes() {
+        let p = FaultPlan::default().blackout(0, 100.0, 500.0).unwrap();
+        // Starts before, would nominally finish inside: stalls to 500 then
+        // spends the leftover 50 ms.
+        assert_eq!(p.adjusted_finish(0, 0.0, 150.0), 550.0);
+        // Starts inside the blackout: all work waits for the window.
+        assert_eq!(p.adjusted_finish(0, 200.0, 80.0), 580.0);
+        // Finishes before the window opens: untouched.
+        assert_eq!(p.adjusted_finish(0, 0.0, 100.0), 100.0);
+        // Other shards untouched.
+        assert_eq!(p.adjusted_finish(1, 0.0, 150.0), 150.0);
+    }
+
+    #[test]
+    fn brownout_stretches_in_window_service_by_the_factor() {
+        let p = FaultPlan::default().brownout(0, 100.0, 1_000.0, 0.5).unwrap();
+        // 50 ms at full speed, then 100 ms of work at half speed = 200 ms.
+        assert_eq!(p.adjusted_finish(0, 50.0, 150.0), 350.0);
+        // A speed-up brownout shortens service (and must flag serial fallback).
+        let fast = FaultPlan::default().brownout(0, 0.0, 1_000.0, 2.0).unwrap();
+        assert_eq!(fast.adjusted_finish(0, 0.0, 100.0), 50.0);
+        assert!(!fast.extension_only());
+        assert!(p.extension_only());
+    }
+
+    #[test]
+    fn work_spans_multiple_windows() {
+        let p = FaultPlan::default()
+            .blackout(0, 10.0, 20.0)
+            .unwrap()
+            .brownout(0, 30.0, 40.0, 0.5)
+            .unwrap();
+        // 10 full + stall + 10 full + 10@half=5 + finish after 40:
+        // work done by t=40 is 25; remaining 15 at full speed → 55.
+        assert_eq!(p.adjusted_finish(0, 0.0, 40.0), 55.0);
+    }
+
+    #[test]
+    fn introspection_accessors() {
+        let p = FaultPlan::default().blackout(2, 0.0, 10.0).unwrap();
+        assert!(!p.is_empty());
+        assert!(p.touches(2) && !p.touches(0));
+        assert_eq!(p.max_shard(), Some(2));
+        assert!(FaultPlan::default().is_empty());
+        assert_eq!(FaultPlan::default().max_shard(), None);
+        assert!(FaultPlan::default().extension_only());
+    }
+}

@@ -15,6 +15,7 @@
 #![warn(missing_docs)]
 
 pub mod calibration;
+pub mod fault;
 pub mod pool;
 
 use std::collections::VecDeque;

@@ -19,22 +19,27 @@
 use std::collections::HashMap;
 
 use crate::core::ReqId;
+use crate::provider::fault::FaultPlan;
 use crate::provider::{MockProvider, ProviderCfg, Started};
 use crate::util::rng::Rng;
 use crate::workload::Mix;
 
-/// Pool shape: one `ProviderCfg` per shard. Policy lives client-side
-/// (`scheduler::shard::ShardCfg`) — the pool is pure provider physics.
+/// Pool shape: one `ProviderCfg` per shard, plus an optional deterministic
+/// fault schedule. Policy lives client-side (`scheduler::shard::ShardCfg`)
+/// — the pool is pure provider physics.
 #[derive(Debug, Clone)]
 pub struct PoolCfg {
     /// One physics config per endpoint.
     pub shards: Vec<ProviderCfg>,
+    /// Scheduled brownouts/blackouts (empty = bit-identical to a fault-free
+    /// pool; see [`FaultPlan`]).
+    pub faults: FaultPlan,
 }
 
 impl PoolCfg {
     /// The degenerate pool every pre-pool experiment runs on.
     pub fn single(cfg: ProviderCfg) -> PoolCfg {
-        PoolCfg { shards: vec![cfg] }
+        PoolCfg { shards: vec![cfg], faults: FaultPlan::default() }
     }
 
     /// `n` identical shards, each carrying `1/n` of the base capacity
@@ -47,7 +52,7 @@ impl PoolCfg {
             slowdown_ref: (cfg.slowdown_ref / n as f64).max(1.0),
             ..cfg
         };
-        PoolCfg { shards: vec![per; n] }
+        PoolCfg { shards: vec![per; n], faults: FaultPlan::default() }
     }
 
     /// Like [`PoolCfg::split`], but shard `i`'s service speed is scaled by
@@ -65,6 +70,13 @@ impl PoolCfg {
             }
         }
         pool
+    }
+
+    /// Attach a fault schedule (consuming builder). The plan's shard
+    /// indices are checked against the pool size when the pool is built.
+    pub fn with_faults(mut self, faults: FaultPlan) -> PoolCfg {
+        self.faults = faults;
+        self
     }
 
     /// Number of shards in the pool.
@@ -85,17 +97,42 @@ impl PoolCfg {
     }
 }
 
+/// One outstanding submission of a request: which shard is serving it and,
+/// once it has actually started, the exact finish time its `ProviderDone`
+/// event carries (`None` while it waits in the shard's hidden queue).
+///
+/// A request normally has one slot, but client *retries* legitimately
+/// resubmit an id whose abandoned first attempt is still stalled inside a
+/// blacked-out shard — the provider, like a real endpoint, keeps serving a
+/// connection the client walked away from. Finishes disambiguate by exact
+/// finish-time bits: the popped event time is the same `f64` the pool
+/// handed out at start, so the match is exact, not a tolerance.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    shard: u32,
+    finish_bits: Option<u64>,
+}
+
 /// N mock endpoints behind one routing surface. All state here is invisible
 /// to the scheduler; the driver only ever crosses the boundary with
 /// `(id, shard)` on submit and `(id, completion time)` on finish.
 pub struct ProviderPool {
     shards: Vec<MockProvider>,
-    /// id → shard routing for requests currently inside the provider
-    /// (running or hidden-queued). Unused for 1-shard pools.
-    assigned: HashMap<ReqId, u32>,
+    /// id → outstanding submissions (running or hidden-queued), in
+    /// submission order. Unused for 1-shard pools (shard physics are
+    /// count-based, so duplicate ids need no routing there).
+    assigned: HashMap<ReqId, Vec<Slot>>,
     /// Total hidden-queue depth across shards, tracked incrementally.
     waiting_total: usize,
     peak_waiting_total: usize,
+    /// Scheduled brownouts/blackouts applied to start events.
+    faults: FaultPlan,
+    /// Per-shard "has any fault window" flags: untouched shards skip the
+    /// adjustment walk entirely, so their starts stay bit-identical to a
+    /// fault-free pool.
+    fault_touched: Vec<bool>,
+    /// Net service-time extension injected by faults (ms, lifetime sum).
+    faulted_ms: f64,
 }
 
 impl ProviderPool {
@@ -114,7 +151,36 @@ impl ProviderPool {
                 .map(|(i, c)| MockProvider::new(c.clone(), rng.derive(&format!("shard{i}"))))
                 .collect()
         };
-        ProviderPool { shards, assigned: HashMap::new(), waiting_total: 0, peak_waiting_total: 0 }
+        if let Some(max) = cfg.faults.max_shard() {
+            assert!(
+                max < shards.len(),
+                "fault plan names shard {max} but the pool has {} shards",
+                shards.len()
+            );
+        }
+        let fault_touched = (0..shards.len()).map(|i| cfg.faults.touches(i)).collect();
+        ProviderPool {
+            shards,
+            assigned: HashMap::new(),
+            waiting_total: 0,
+            peak_waiting_total: 0,
+            faults: cfg.faults.clone(),
+            fault_touched,
+            faulted_ms: 0.0,
+        }
+    }
+
+    /// Apply the fault schedule to a start event on `shard`: re-derive the
+    /// nominal service from the sampled finish and walk the shard's fault
+    /// windows. Shards without windows return the event untouched (no
+    /// float ops — the empty-plan/untouched-shard bit-compat contract).
+    fn apply_faults(&mut self, shard: usize, now: f64, s: Started) -> Started {
+        if !self.fault_touched[shard] {
+            return s;
+        }
+        let adjusted = self.faults.adjusted_finish(shard, now, s.finish_ms - now);
+        self.faulted_ms += adjusted - s.finish_ms;
+        Started { id: s.id, finish_ms: adjusted }
     }
 
     /// Number of endpoints behind the pool.
@@ -137,14 +203,17 @@ impl ProviderPool {
         shard: usize,
         now: f64,
     ) -> Option<Started> {
-        if self.shards.len() > 1 {
-            let prev = self.assigned.insert(id, shard as u32);
-            debug_assert!(prev.is_none(), "double submit for {id}");
-        }
         let started = self.shards[shard].submit(id, output_tokens, now);
         if started.is_none() {
             self.waiting_total += 1;
             self.peak_waiting_total = self.peak_waiting_total.max(self.waiting_total);
+        }
+        let started = started.map(|s| self.apply_faults(shard, now, s));
+        if self.shards.len() > 1 {
+            self.assigned.entry(id).or_default().push(Slot {
+                shard: shard as u32,
+                finish_bits: started.map(|s| s.finish_ms.to_bits()),
+            });
         }
         started
     }
@@ -170,15 +239,54 @@ impl ProviderPool {
     /// shard's queued work. Panics on an unknown id — a spurious finish is
     /// the same hard invariant violation as `MockProvider::on_finish` with
     /// nothing running.
+    ///
+    /// With client retries a request can have several outstanding
+    /// submissions; the finish retires the slot whose recorded finish time
+    /// matches `now` bit-for-bit (each `ProviderDone` event carries the
+    /// exact `f64` the pool handed out when the work started). When no slot
+    /// matches — callers outside the event loop may finish at synthetic
+    /// times — the first *started* slot is retired, which is the unique
+    /// outstanding submission in every pre-retry usage.
     pub fn on_finish(&mut self, id: ReqId, now: f64) -> Vec<Started> {
         let shard = if self.shards.len() == 1 {
             0
         } else {
-            self.assigned.remove(&id).expect("finish for a request the pool never started") as usize
+            let slots =
+                self.assigned.get_mut(&id).expect("finish for a request the pool never started");
+            let bits = now.to_bits();
+            let idx = slots
+                .iter()
+                .position(|s| s.finish_bits == Some(bits))
+                .or_else(|| slots.iter().position(|s| s.finish_bits.is_some()))
+                .expect("finish for a request the pool never started");
+            let shard = slots.remove(idx).shard as usize;
+            if slots.is_empty() {
+                self.assigned.remove(&id);
+            }
+            shard
         };
         let started = self.shards[shard].on_finish(now);
         self.waiting_total -= started.len();
-        started
+        let out: Vec<Started> = if self.fault_touched[shard] {
+            started.into_iter().map(|s| self.apply_faults(shard, now, s)).collect()
+        } else {
+            started
+        };
+        // Hidden-queued slots learn their finish time at promotion; fill in
+        // FIFO order (first unstarted slot of that id on this shard).
+        if self.shards.len() > 1 {
+            for s in &out {
+                if let Some(slots) = self.assigned.get_mut(&s.id) {
+                    if let Some(slot) = slots
+                        .iter_mut()
+                        .find(|sl| sl.shard as usize == shard && sl.finish_bits.is_none())
+                    {
+                        slot.finish_bits = Some(s.finish_ms.to_bits());
+                    }
+                }
+            }
+        }
+        out
     }
 
     // ---- aggregate introspection (tests/experiments) ----
@@ -213,6 +321,13 @@ impl ProviderPool {
     /// experiment reports.
     pub fn started_by_shard(&self) -> Vec<u64> {
         self.shards.iter().map(MockProvider::total_started).collect()
+    }
+
+    /// Net service-time extension injected by the fault plan (ms, lifetime
+    /// sum across shards; exactly 0.0 for an empty plan). Surfaces in
+    /// `RunDiagnostics::faulted_shard_ms`.
+    pub fn faulted_shard_ms(&self) -> f64 {
+        self.faulted_ms
     }
 }
 
@@ -259,7 +374,7 @@ mod tests {
     fn routing_is_respected_even_when_unbalanced() {
         // Everything addressed to shard 0: shard 1 stays idle and shard 0
         // queues — the pool must not steal traffic across shards.
-        let pool_cfg = PoolCfg { shards: vec![cfg(1), cfg(1)] };
+        let pool_cfg = PoolCfg { shards: vec![cfg(1), cfg(1)], faults: FaultPlan::default() };
         let mut pool = ProviderPool::new(&pool_cfg, Rng::new(7));
         assert!(pool.submit(0, 10.0, 0, 0.0).is_some());
         assert!(pool.submit(1, 10.0, 0, 0.0).is_none());
@@ -277,7 +392,7 @@ mod tests {
 
     #[test]
     fn finishes_route_back_to_the_serving_shard() {
-        let pool_cfg = PoolCfg { shards: vec![cfg(2), cfg(2)] };
+        let pool_cfg = PoolCfg { shards: vec![cfg(2), cfg(2)], faults: FaultPlan::default() };
         let mut pool = ProviderPool::new(&pool_cfg, Rng::new(9));
         pool.submit(10, 10.0, 0, 0.0);
         pool.submit(11, 10.0, 1, 0.0);
@@ -298,7 +413,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "never started")]
     fn unknown_finish_panics() {
-        let pool_cfg = PoolCfg { shards: vec![cfg(2), cfg(2)] };
+        let pool_cfg = PoolCfg { shards: vec![cfg(2), cfg(2)], faults: FaultPlan::default() };
         let mut pool = ProviderPool::new(&pool_cfg, Rng::new(1));
         pool.on_finish(99, 1.0);
     }
@@ -306,7 +421,7 @@ mod tests {
     #[test]
     fn multi_shard_streams_are_independent_and_deterministic() {
         let jcfg = ProviderCfg { jitter_sigma: 0.1, ..ProviderCfg::default() };
-        let pool_cfg = PoolCfg { shards: vec![jcfg.clone(), jcfg] };
+        let pool_cfg = PoolCfg { shards: vec![jcfg.clone(), jcfg], faults: FaultPlan::default() };
         let mut a = ProviderPool::new(&pool_cfg, Rng::new(3));
         let mut b = ProviderPool::new(&pool_cfg, Rng::new(3));
         let mut finishes = Vec::new();
@@ -320,5 +435,69 @@ mod tests {
         // and the first on shard 1 see the same mean service (running=1 on
         // each) but different jitter draws.
         assert_ne!(finishes[0].to_bits(), finishes[1].to_bits());
+    }
+
+    #[test]
+    fn blackout_extends_only_the_faulted_shard() {
+        let faults = FaultPlan::default().blackout(0, 0.0, 1_000.0).unwrap();
+        let pool_cfg = PoolCfg { shards: vec![cfg(2), cfg(2)], faults };
+        let clean_cfg = PoolCfg { shards: vec![cfg(2), cfg(2)], faults: FaultPlan::default() };
+        let mut pool = ProviderPool::new(&pool_cfg, Rng::new(4));
+        let mut clean = ProviderPool::new(&clean_cfg, Rng::new(4));
+        // Shard 0 is blacked out: the whole service waits for t=1000.
+        let f0 = pool.submit(0, 100.0, 0, 0.0).unwrap();
+        let c0 = clean.submit(0, 100.0, 0, 0.0).unwrap();
+        assert_eq!(f0.finish_ms, 1_000.0 + c0.finish_ms);
+        assert_eq!(pool.faulted_shard_ms(), 1_000.0);
+        // Shard 1 has no windows: bit-identical to the clean pool.
+        let f1 = pool.submit(1, 100.0, 1, 0.0).unwrap();
+        let c1 = clean.submit(1, 100.0, 1, 0.0).unwrap();
+        assert_eq!(f1.finish_ms.to_bits(), c1.finish_ms.to_bits());
+        assert_eq!(pool.faulted_shard_ms(), 1_000.0);
+    }
+
+    #[test]
+    fn faults_apply_to_hidden_queue_promotions_too() {
+        let faults = FaultPlan::default().brownout(0, 0.0, 1_000_000.0, 0.5).unwrap();
+        let pool_cfg = PoolCfg { shards: vec![cfg(1), cfg(1)], faults };
+        let mut pool = ProviderPool::new(&pool_cfg, Rng::new(4));
+        let first = pool.submit(0, 100.0, 0, 0.0).unwrap();
+        // Half-speed brownout doubles the 200 ms nominal service.
+        assert_eq!(first.finish_ms, 400.0);
+        assert!(pool.submit(1, 100.0, 0, 0.0).is_none()); // hidden queue
+        let promoted = pool.on_finish(0, first.finish_ms);
+        assert_eq!(promoted.len(), 1);
+        // Promotion starts at t=400 inside the same brownout: again 2×.
+        assert_eq!(promoted[0].finish_ms, 400.0 + 2.0 * 200.0);
+    }
+
+    #[test]
+    fn client_retry_resubmits_same_id_while_first_attempt_is_stalled() {
+        // A timed-out request's abandoned submission keeps stalling inside a
+        // blacked-out shard while the client's retry resubmits the same id
+        // to a live shard. Finishes must retire the right slot (matched by
+        // exact finish-time bits), in either completion order.
+        let faults = FaultPlan::default().blackout(0, 0.0, 10_000.0).unwrap();
+        let pool_cfg = PoolCfg { shards: vec![cfg(2), cfg(2)], faults };
+        let mut pool = ProviderPool::new(&pool_cfg, Rng::new(4));
+        let stale = pool.submit(7, 100.0, 0, 0.0).unwrap(); // stalls past t=10s
+        assert!(stale.finish_ms >= 10_000.0);
+        let fresh = pool.submit(7, 100.0, 1, 500.0).unwrap(); // retry, live shard
+        assert!(fresh.finish_ms < stale.finish_ms);
+        // The fresh attempt finishes first and retires the shard-1 slot...
+        assert!(pool.on_finish(7, fresh.finish_ms).is_empty());
+        assert_eq!(pool.shard(1).running(), 0);
+        assert_eq!(pool.shard(0).running(), 1);
+        // ...and the stalled attempt drains at blackout end from shard 0.
+        assert!(pool.on_finish(7, stale.finish_ms).is_empty());
+        assert_eq!(pool.shard(0).running(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "fault plan names shard")]
+    fn fault_plan_shard_out_of_range_panics_at_pool_build() {
+        let faults = FaultPlan::default().blackout(5, 0.0, 10.0).unwrap();
+        let pool_cfg = PoolCfg { shards: vec![cfg(1), cfg(1)], faults };
+        ProviderPool::new(&pool_cfg, Rng::new(1));
     }
 }

@@ -161,6 +161,54 @@ impl OrderingKind {
     }
 }
 
+/// Client retry-amplification policy: a timed-out or rejected request
+/// re-enters the client as a fresh arrival after exponential backoff,
+/// up to a per-request attempt budget. This is the storm generator —
+/// under faults or overload, retries multiply offered load exactly when
+/// capacity is scarcest — and the disabled default is a guaranteed
+/// no-op (the sim driver consults it only on terminal outcomes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryCfg {
+    /// Re-entries allowed per request after its first attempt; 0 disables
+    /// retries entirely. Budget exhaustion is terminal (the request stays
+    /// timed-out/rejected), so every retry storm terminates.
+    pub max_attempts: u32,
+    /// Backoff before retry `k` (0-based) is `base_ms · 2^k`, capped below.
+    pub base_ms: f64,
+    /// Backoff ceiling, ms.
+    pub cap_ms: f64,
+}
+
+impl RetryCfg {
+    /// No client retries (the default everywhere).
+    pub fn disabled() -> Self {
+        RetryCfg { max_attempts: 0, base_ms: 250.0, cap_ms: 4_000.0 }
+    }
+
+    /// Retry up to `max_attempts` times with `base_ms·2^k` backoff capped
+    /// at `cap_ms`.
+    pub fn new(max_attempts: u32, base_ms: f64, cap_ms: f64) -> Self {
+        assert!(base_ms > 0.0 && cap_ms >= base_ms);
+        RetryCfg { max_attempts, base_ms, cap_ms }
+    }
+
+    /// Whether any retry can ever fire.
+    pub fn enabled(&self) -> bool {
+        self.max_attempts > 0
+    }
+
+    /// Backoff delay before 0-based retry `attempt`.
+    pub fn backoff_ms(&self, attempt: u32) -> f64 {
+        (self.base_ms * f64::powi(2.0, attempt.min(30) as i32)).min(self.cap_ms)
+    }
+}
+
+impl Default for RetryCfg {
+    fn default() -> Self {
+        RetryCfg::disabled()
+    }
+}
+
 /// Full scheduler configuration.
 #[derive(Debug, Clone)]
 pub struct SchedulerCfg {
@@ -196,6 +244,9 @@ pub struct SchedulerCfg {
     /// observed completions (see `predictor::recal`). Off by default —
     /// disabled recalibration is a guaranteed bit-exact no-op.
     pub recalibrate: bool,
+    /// Client retry amplification on terminal timeouts/rejects (the sim
+    /// driver enforces it). Disabled by default — bit-exact no-op.
+    pub retry: RetryCfg,
 }
 
 impl SchedulerCfg {
@@ -221,6 +272,7 @@ impl SchedulerCfg {
             heavy_ordering: OrderingKind::FeasibleSet,
             shards: ShardCfg::single(),
             recalibrate: false,
+            retry: RetryCfg::disabled(),
         }
     }
 }

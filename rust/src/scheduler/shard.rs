@@ -32,6 +32,23 @@ use crate::util::stats::Ewma;
 /// same kind of quantity at the same timescale.
 const TAIL_ALPHA: f64 = 0.15;
 
+/// Tail ratio at or above which a shard reads as *unhealthy* to failover
+/// routing. Strictly below [`ABANDON_TAIL_RATIO`] so a single saturating
+/// timeout is enough to mark a shard down, and above the overload
+/// controller's 1.5 tail cap so ordinary congestion never triggers
+/// failover on its own.
+pub const FAILOVER_TAIL_THRESHOLD: f64 = 1.8;
+
+/// Per-fleet-completion geometric decay applied to an idle unhealthy
+/// shard's tail, pulling it toward [`RECOVERY_DECAY_TARGET`]. From the
+/// saturated 2.0 it takes 5 fleet completions to cross back under
+/// [`FAILOVER_TAIL_THRESHOLD`] — fail down instantly, recover deliberately.
+const RECOVERY_DECAY_FACTOR: f64 = 0.95;
+
+/// Decay target: the "completion exactly at budget" tail ratio, i.e.
+/// neutral-but-wary rather than provably calm.
+const RECOVERY_DECAY_TARGET: f64 = 1.0;
+
 /// Shard-selection policy (client-side).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardPolicy {
@@ -78,12 +95,16 @@ pub struct ShardCfg {
     /// Advertised relative capacity per shard (used by `Weighted`); empty
     /// means uniform. Length must be `n` when non-empty.
     pub weights: Vec<f64>,
+    /// Route around unhealthy shards (tail ≥ [`FAILOVER_TAIL_THRESHOLD`])
+    /// and decay their stale tail evidence so recovered shards regain
+    /// traffic. Off by default: legacy routing is bit-identical.
+    pub failover: bool,
 }
 
 impl ShardCfg {
     /// The classic single-endpoint setup (no routing decision to make).
     pub fn single() -> ShardCfg {
-        ShardCfg { n: 1, policy: ShardPolicy::LeastInflight, weights: Vec::new() }
+        ShardCfg { n: 1, policy: ShardPolicy::LeastInflight, weights: Vec::new(), failover: false }
     }
 
     /// A fleet of `n` shards routed by `policy`; `weights` may be empty
@@ -91,7 +112,13 @@ impl ShardCfg {
     pub fn new(n: usize, policy: ShardPolicy, weights: Vec<f64>) -> ShardCfg {
         assert!(n >= 1, "need at least one shard");
         assert!(weights.is_empty() || weights.len() == n, "weights must match shard count");
-        ShardCfg { n, policy, weights }
+        ShardCfg { n, policy, weights, failover: false }
+    }
+
+    /// Enable or disable failover routing (consuming builder).
+    pub fn with_failover(mut self, failover: bool) -> ShardCfg {
+        self.failover = failover;
+        self
     }
 }
 
@@ -186,29 +213,59 @@ impl ShardSelector {
         if self.cfg.n == 1 {
             return 0;
         }
+        if self.cfg.failover {
+            if let Some(shard) = self.preview_filtered(id, true) {
+                return shard;
+            }
+            // Every shard unhealthy: fall through to the unfiltered policy —
+            // degraded-everywhere routing beats routing nowhere.
+        }
+        self.preview_filtered(id, false).expect("unfiltered preview always picks a shard")
+    }
+
+    /// Whether `shard` is eligible under the (optional) health filter.
+    fn usable(&self, shard: usize, healthy_only: bool) -> bool {
+        !healthy_only || self.tail[shard].get_or(0.0) < FAILOVER_TAIL_THRESHOLD
+    }
+
+    /// The policy argmin restricted to usable shards. With
+    /// `healthy_only = false` this is exactly the legacy policy (same
+    /// lowest-index tie-breaks); with `true`, `HashAffinity` probes
+    /// `(home + k) % n` for the first healthy shard so pinned sessions
+    /// land on the nearest live neighbor deterministically.
+    fn preview_filtered(&self, id: ReqId, healthy_only: bool) -> Option<usize> {
         match self.cfg.policy {
             ShardPolicy::LeastInflight => {
-                let mut best = 0usize;
-                for (i, &f) in self.inflight.iter().enumerate().skip(1) {
-                    if f < self.inflight[best] {
-                        best = i;
+                let mut best: Option<usize> = None;
+                for i in 0..self.cfg.n {
+                    if !self.usable(i, healthy_only) {
+                        continue;
+                    }
+                    if best.map_or(true, |b| self.inflight[i] < self.inflight[b]) {
+                        best = Some(i);
                     }
                 }
                 best
             }
             ShardPolicy::Weighted => {
-                let mut best = 0usize;
-                let mut best_score = (self.inflight[0] as f64 + 1.0) / self.weight(0);
-                for i in 1..self.cfg.n {
+                let mut best: Option<(usize, f64)> = None;
+                for i in 0..self.cfg.n {
+                    if !self.usable(i, healthy_only) {
+                        continue;
+                    }
                     let score = (self.inflight[i] as f64 + 1.0) / self.weight(i);
-                    if score < best_score {
-                        best = i;
-                        best_score = score;
+                    if best.map_or(true, |(_, bs)| score < bs) {
+                        best = Some((i, score));
                     }
                 }
-                best
+                best.map(|(i, _)| i)
             }
-            ShardPolicy::HashAffinity => (hash_id(id) % self.cfg.n as u64) as usize,
+            ShardPolicy::HashAffinity => {
+                let home = (hash_id(id) % self.cfg.n as u64) as usize;
+                (0..self.cfg.n)
+                    .map(|k| (home + k) % self.cfg.n)
+                    .find(|&s| self.usable(s, healthy_only))
+            }
         }
     }
 
@@ -236,6 +293,26 @@ impl ShardSelector {
             if deadline_budget_ms > 0.0 {
                 self.tail[s as usize].push(latency_ms / deadline_budget_ms);
             }
+            if self.cfg.failover {
+                self.decay_unhealthy_idle(s as usize);
+            }
+        }
+    }
+
+    /// Unlearning path for censored tails (failover mode only): each fleet
+    /// completion geometrically decays the tail of every *other* shard that
+    /// is idle and unhealthy. A blacked-out shard never completes anything,
+    /// so its saturated 2.0 tail would otherwise persist forever past
+    /// recovery; decay lets it re-earn traffic after ~5 healthy-shard
+    /// completions, and a failed probe re-saturates it instantly.
+    fn decay_unhealthy_idle(&mut self, except: usize) {
+        for j in 0..self.cfg.n {
+            if j != except
+                && self.inflight[j] == 0
+                && self.tail[j].get_or(0.0) >= FAILOVER_TAIL_THRESHOLD
+            {
+                self.tail[j].decay_toward(RECOVERY_DECAY_TARGET, RECOVERY_DECAY_FACTOR);
+            }
         }
     }
 
@@ -255,7 +332,15 @@ impl ShardSelector {
         }
         if let Some(s) = self.assigned.remove(&id) {
             self.inflight[s as usize] -= 1;
-            self.tail[s as usize].push(ABANDON_TAIL_RATIO);
+            if self.cfg.failover {
+                // Saturate instead of blending: one timeout marks the shard
+                // down (2.0 ≥ FAILOVER_TAIL_THRESHOLD) no matter how calm
+                // its smoothed history was. Recovery goes through
+                // `decay_unhealthy_idle`, never through averaging.
+                self.tail[s as usize].set(ABANDON_TAIL_RATIO);
+            } else {
+                self.tail[s as usize].push(ABANDON_TAIL_RATIO);
+            }
         }
     }
 }
@@ -398,6 +483,99 @@ mod tests {
         // Unknown/duplicate abandons stay inert.
         s.on_abandon(1);
         assert_eq!(s.inflight(0), 0);
+    }
+
+    fn failover_selector(n: usize, policy: ShardPolicy) -> ShardSelector {
+        ShardSelector::new(ShardCfg::new(n, policy, vec![]).with_failover(true))
+    }
+
+    #[test]
+    fn failover_routes_around_a_dead_shard() {
+        let mut s = failover_selector(2, ShardPolicy::LeastInflight);
+        s.pick(0); // shard 0
+        s.on_abandon(0); // timeout: shard 0 saturates to 2.0 and is idle
+        assert!(s.tail_ratio(0) >= FAILOVER_TAIL_THRESHOLD);
+        // Shard 0 is idle (inflight 0 < shard 1's anything) but unhealthy:
+        // every new pick must land on shard 1.
+        for id in 1..6 {
+            assert_eq!(s.pick(id), 1, "id {id} must avoid the dead shard");
+        }
+        assert_eq!(s.inflight(0), 0);
+        assert_eq!(s.inflight(1), 5);
+    }
+
+    #[test]
+    fn recovered_shard_regains_traffic() {
+        // Regression for the unlearning gap: without decay, the censored
+        // 2.0 tail from a blackout persists forever and a *recovered* shard
+        // never sees traffic again.
+        let mut s = failover_selector(2, ShardPolicy::LeastInflight);
+        s.pick(0);
+        s.on_abandon(0); // shard 0 marked down
+        // Healthy-shard completions decay the stale evidence...
+        let mut regained = None;
+        for round in 0..20u64 {
+            let id = 100 + round as usize;
+            assert_eq!(s.pick(id), 1);
+            s.on_completion(id, 100.0, 1_000.0);
+            if s.tail_ratio(0) < FAILOVER_TAIL_THRESHOLD {
+                regained = Some(round);
+                break;
+            }
+        }
+        let rounds = regained.expect("decay must eventually clear the censored tail");
+        assert!((3..=10).contains(&rounds), "recovered after {rounds} completions");
+        // ...and the recovered (idle) shard wins the next pick again.
+        assert_eq!(s.pick(999), 0, "recovered shard regains traffic");
+    }
+
+    #[test]
+    fn hash_affinity_probes_to_the_nearest_live_shard() {
+        let mut s = failover_selector(4, ShardPolicy::HashAffinity);
+        // Find an id homed on shard 2, then kill shard 2.
+        let id = (0..1000).find(|&i| s.preview(i) == 2).unwrap();
+        s.commit(id, 2);
+        s.on_abandon(id);
+        // The pinned id deterministically probes the next shard in ring
+        // order instead of resubmitting into the dead one.
+        assert_eq!(s.preview(id), 3);
+        // Ids homed elsewhere keep their affinity.
+        let other = (0..1000).find(|&i| s.preview(i) == 1).unwrap();
+        assert_eq!(s.preview(other), 1);
+    }
+
+    #[test]
+    fn failover_off_keeps_legacy_routing_bit_identical() {
+        // Without the flag, an abandoned (idle) shard still wins
+        // least-inflight — the pre-failover behavior existing tables bake in.
+        let mut s = selector(2, ShardPolicy::LeastInflight, vec![]);
+        s.pick(0);
+        s.on_abandon(0);
+        s.pick(1); // shard 0 idle again → legacy argmin picks it
+        assert_eq!(s.inflight(0), 1, "legacy routing ignores the tail");
+        // And abandons blend (EWMA push), not saturate: feed a calm history
+        // first, then abandon — the blended value stays below saturation.
+        let mut calm = selector(2, ShardPolicy::LeastInflight, vec![]);
+        for id in 0..20 {
+            calm.commit(id, 0);
+            calm.on_completion(id, 100.0, 1_000.0);
+        }
+        calm.commit(99, 0);
+        calm.on_abandon(99);
+        assert!(calm.tail_ratio(0) < 1.0, "legacy abandon blends: {}", calm.tail_ratio(0));
+    }
+
+    #[test]
+    fn all_shards_unhealthy_falls_back_to_unfiltered_policy() {
+        let mut s = failover_selector(2, ShardPolicy::LeastInflight);
+        for id in 0..2 {
+            s.pick(id);
+            s.on_abandon(id);
+        }
+        assert!(s.tail_ratio(0) >= FAILOVER_TAIL_THRESHOLD);
+        assert!(s.tail_ratio(1) >= FAILOVER_TAIL_THRESHOLD);
+        // Nothing healthy: route anyway, lowest-index tie-break.
+        assert_eq!(s.pick(50), 0, "degraded-everywhere still routes");
     }
 
     #[test]

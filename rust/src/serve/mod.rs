@@ -37,7 +37,7 @@ use crate::scheduler::{
 };
 use crate::sim::driver::{split_requests, tenant_seed};
 use crate::util::rng::Rng;
-use crate::workload::{Mix, WorkloadSpec};
+use crate::workload::{ArrivalSpec, Mix, WorkloadSpec};
 
 /// One submission inside a batch message to the provider thread.
 struct SubmitItem {
@@ -408,6 +408,7 @@ pub fn serve_demo(
     pool_cfg: PoolCfg,
     shard_policy: ShardPolicy,
     tenants: usize,
+    arrivals: ArrivalSpec,
 ) -> Result<()> {
     anyhow::ensure!(tenants >= 1, "serve needs at least one tenant");
     let seed = 0u64;
@@ -474,7 +475,8 @@ pub fn serve_demo(
     let rx0 = rx_iter.next().expect("tenant 0 receiver");
     let mut handles = Vec::new();
     for (t, rx) in rx_iter.enumerate().map(|(i, rx)| (i + 1, rx)) {
-        let spec = WorkloadSpec::new(Mix::Balanced, per_counts[t], per_rate);
+        let spec =
+            WorkloadSpec::new(Mix::Balanced, per_counts[t], per_rate).with_arrivals(arrivals);
         let tseed = tenant_seed(seed, t);
         let mut cfg = SchedulerCfg::for_strategy(strategy);
         cfg.shards = shard_cfg.clone();
@@ -494,7 +496,7 @@ pub fn serve_demo(
         }));
     }
 
-    let spec0 = WorkloadSpec::new(Mix::Balanced, per_counts[0], per_rate);
+    let spec0 = WorkloadSpec::new(Mix::Balanced, per_counts[0], per_rate).with_arrivals(arrivals);
     let requests0 = spec0.generate(tenant_seed(seed, 0));
     let mut cfg0 = SchedulerCfg::for_strategy(strategy);
     cfg0.shards = shard_cfg.clone();

@@ -96,6 +96,14 @@ pub struct RunDiagnostics {
     /// Releases where an ordering index degenerated to a full scan of the
     /// selected side (every live entry examined), summed over schedulers.
     pub ordering_scan_fallbacks: u64,
+    /// Client retry re-entries scheduled (timed-out or rejected requests
+    /// that re-arrived under a [`crate::scheduler::RetryCfg`] budget).
+    /// Zero whenever retries are disabled — the bit-compat default.
+    pub retries_scheduled: u64,
+    /// Total service-time extension (ms) the provider fault plan added
+    /// across all submissions: Σ (adjusted finish − clean finish). Zero for
+    /// an empty [`crate::provider::fault::FaultPlan`].
+    pub faulted_shard_ms: f64,
 }
 
 /// Outcome bundle of one simulated run.
@@ -165,6 +173,7 @@ pub(crate) struct CoreRun {
     pub(crate) ordering_select_work: u64,
     pub(crate) ordering_group_count: u64,
     pub(crate) ordering_scan_fallbacks: u64,
+    pub(crate) retries_scheduled: u64,
 }
 
 /// Time-weighted queue-depth integrator, shared verbatim by the serial loop
@@ -275,10 +284,39 @@ pub(crate) struct LoopState<'a> {
     pub(crate) defer_counts: &'a mut [u32],
     pub(crate) timeout_timer: &'a mut [Option<TimerId>],
     pub(crate) retry_timer: &'a mut [Option<TimerId>],
+    /// Client retry attempts consumed per request (0 until the first
+    /// timeout/reject re-entry is scheduled).
+    pub(crate) retry_attempts: &'a mut [u32],
     pub(crate) sends_by_tenant: &'a mut [u64],
     pub(crate) sends: u64,
     pub(crate) peak_inflight: usize,
     pub(crate) timers_canceled: u64,
+    pub(crate) retries_scheduled: u64,
+}
+
+impl LoopState<'_> {
+    /// Schedule a client retry re-entry for a terminally failed request, if
+    /// the owning tenant's [`crate::scheduler::RetryCfg`] still has budget.
+    /// The re-entry is a plain future `Ev::Arrival` — tenant-local, so the
+    /// partitioned loop handles it exactly like a first arrival — and the
+    /// attempt counter is charged here, at scheduling time, so a storm of
+    /// failures terminates once `max_attempts` re-entries have been spent.
+    fn maybe_schedule_client_retry(
+        &mut self,
+        id: ReqId,
+        retry: &crate::scheduler::RetryCfg,
+        now: f64,
+        q: &mut EventQueue<Ev>,
+    ) {
+        let li = id - self.base;
+        if self.retry_attempts[li] >= retry.max_attempts {
+            return;
+        }
+        let delay = retry.backoff_ms(self.retry_attempts[li]);
+        self.retry_attempts[li] += 1;
+        self.retries_scheduled += 1;
+        q.push(now + delay, Ev::Arrival(id));
+    }
 }
 
 /// Apply one popped event — the scheduler callback plus the resulting
@@ -307,7 +345,29 @@ pub(crate) fn process_tick<F: ShardFabric>(
     match ev {
         Ev::Arrival(id) => {
             let (p, route) = priors[id];
-            scheduler.on_arrival(&requests[id], p, route, now, actions);
+            let li = id - st.base;
+            if matches!(st.status[li], RequestStatus::TimedOut | RequestStatus::Rejected) {
+                // Client retry re-entry: the request failed terminally and
+                // its owner scheduled a backed-off resubmission. The client
+                // re-submits with a fresh SLO clock (deadline/timeout shift
+                // to re-entry time), reusing the stored prior — retries
+                // consume no new RNG, so they stay bit-identical across
+                // partition counts. Completion latency is still measured
+                // from the *original* arrival (the Ev::ProviderDone arm),
+                // so retried completions pay their full end-to-end delay.
+                st.status[li] = RequestStatus::Queued;
+                let r = &requests[id];
+                let timeout_budget = r.timeout_ms - r.arrival_ms;
+                st.timeout_timer[li] =
+                    Some(q.push_cancelable(now + timeout_budget, Ev::Timeout(id)));
+                let mut rr = r.clone();
+                rr.arrival_ms = now;
+                rr.deadline_ms = now + (r.deadline_ms - r.arrival_ms);
+                rr.timeout_ms = now + timeout_budget;
+                scheduler.on_arrival(&rr, p, route, now, actions);
+            } else {
+                scheduler.on_arrival(&requests[id], p, route, now, actions);
+            }
         }
         Ev::ProviderDone(id) => {
             fabric.finish(id, now, q);
@@ -360,6 +420,8 @@ pub(crate) fn process_tick<F: ShardFabric>(
                         st.timers_canceled += 1;
                     }
                 }
+                let retry = &scheduler.cfg().retry;
+                st.maybe_schedule_client_retry(id, retry, now, q);
             }
         }
     }
@@ -393,6 +455,12 @@ pub(crate) fn process_tick<F: ShardFabric>(
                         st.timers_canceled += 1;
                     }
                 }
+                // Rejected work may also re-enter under the client retry
+                // budget — overload sheds it now, the client comes back
+                // after backoff. Budget exhaustion leaves the terminal
+                // Rejected state to stand (counted in `RunDiagnostics`).
+                let retry = &schedulers[tenant].cfg().retry;
+                st.maybe_schedule_client_retry(id, retry, now, q);
             }
         }
     }
@@ -432,6 +500,7 @@ pub(crate) fn run_core(
         timeout_timer.push(Some(q.push_cancelable(r.timeout_ms, Ev::Timeout(r.id))));
     }
     let mut retry_timer: Vec<Option<TimerId>> = vec![None; n];
+    let mut retry_attempts = vec![0u32; n];
 
     // One action buffer for the whole run: the scheduler appends, the
     // apply loop drains, and `clear` keeps the capacity. The serial fabric
@@ -447,10 +516,12 @@ pub(crate) fn run_core(
         defer_counts: &mut defer_counts,
         timeout_timer: &mut timeout_timer,
         retry_timer: &mut retry_timer,
+        retry_attempts: &mut retry_attempts,
         sends_by_tenant: &mut sends_by_tenant,
         sends: 0,
         peak_inflight: 0,
         timers_canceled: 0,
+        retries_scheduled: 0,
     };
 
     while let Some((now, ev)) = q.pop() {
@@ -469,6 +540,7 @@ pub(crate) fn run_core(
     }
 
     let (sends, peak_inflight, timers_canceled) = (st.sends, st.peak_inflight, st.timers_canceled);
+    let retries_scheduled = st.retries_scheduled;
     let (mean_queue_depth, peak_queue_depth) = fabric.fold.finish();
     let ordering_select_work = schedulers.iter().map(|s| s.ordering_work()).sum();
     let ordering_group_count = schedulers.iter().map(|s| s.ordering_group_count()).sum();
@@ -489,6 +561,7 @@ pub(crate) fn run_core(
         ordering_select_work,
         ordering_group_count,
         ordering_scan_fallbacks,
+        retries_scheduled,
     }
 }
 
@@ -567,6 +640,8 @@ pub fn run_pool(
             ordering_select_work: core.ordering_select_work,
             ordering_group_count: core.ordering_group_count,
             ordering_scan_fallbacks: core.ordering_scan_fallbacks,
+            retries_scheduled: core.retries_scheduled,
+            faulted_shard_ms: provider.faulted_shard_ms(),
         },
     }
 }
@@ -778,6 +853,8 @@ pub fn run_tenants_partitioned(
             ordering_select_work: core.ordering_select_work,
             ordering_group_count: core.ordering_group_count,
             ordering_scan_fallbacks: core.ordering_scan_fallbacks,
+            retries_scheduled: core.retries_scheduled,
+            faulted_shard_ms: provider.faulted_shard_ms(),
         },
         partition,
     }
@@ -1153,6 +1230,88 @@ mod tests {
         let a = spec.generate(tenant_seed(9, 1));
         let b = spec.generate(tenant_seed(9, 2));
         assert!(a.iter().zip(b.iter()).any(|(x, y)| x.true_output_tokens != y.true_output_tokens));
+    }
+
+    #[test]
+    fn retry_and_fault_counters_are_zero_on_clean_runs() {
+        // Retries default off and the pool has no fault plan: both new
+        // diagnostics must be exactly zero (the bit-compat baseline every
+        // pre-storms CSV rides on).
+        let out = run_strategy(StrategyKind::FinalAdrrOlc, Mix::Heavy, 10.0, 7);
+        assert_eq!(out.diagnostics.retries_scheduled, 0);
+        assert_eq!(out.diagnostics.faulted_shard_ms, 0.0);
+    }
+
+    fn blackout_run(failover: bool, max_attempts: u32, seed: u64) -> RunOutput {
+        use crate::provider::fault::FaultPlan;
+        use crate::scheduler::RetryCfg;
+        // Load chosen so the surviving shard alone absorbs everything
+        // within the SLO timeouts; the blackout outlives every timeout
+        // budget, so work stranded on shard 0 is guaranteed to time out.
+        let spec = WorkloadSpec::new(Mix::Balanced, 40, 1.5);
+        let requests = spec.generate(seed);
+        let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(seed).derive("priors"));
+        let mut cfg = SchedulerCfg::for_strategy(StrategyKind::AdaptiveDrr);
+        cfg.shards.policy = ShardPolicy::LeastInflight;
+        cfg.shards.failover = failover;
+        cfg.retry = RetryCfg::new(max_attempts, 250.0, 2_000.0);
+        let pool = PoolCfg::split(ProviderCfg::default(), 2)
+            .with_faults(FaultPlan::default().blackout(0, 0.0, 600_000.0).unwrap());
+        run_pool(&requests, &mut src, cfg, &pool, seed)
+    }
+
+    #[test]
+    fn blackout_failover_with_retries_completes_what_the_ablation_loses() {
+        // The storms acceptance scenario. Full stack: the first casualties
+        // saturate shard 0's censored tail, previews re-route to the
+        // surviving shard, and the casualties' own retries come back on it
+        // — every surviving-shard-feasible request completes. Ablation
+        // (failover off): abandoned attempts leave the dead shard looking
+        // idle, least-inflight keeps resubmitting into it, and budgets
+        // exhaust into terminal timeouts.
+        let full = blackout_run(true, 6, 21);
+        let ablated = blackout_run(false, 6, 21);
+        assert_eq!(
+            full.metrics.n_completed, full.metrics.n_offered,
+            "full stack must complete everything the surviving shard can serve"
+        );
+        assert!(full.diagnostics.retries_scheduled > 0, "casualties must have retried");
+        assert!(full.diagnostics.faulted_shard_ms > 0.0);
+        assert!(
+            ablated.metrics.n_completed < full.metrics.n_completed,
+            "ablation {} vs full {}",
+            ablated.metrics.n_completed,
+            full.metrics.n_completed
+        );
+    }
+
+    #[test]
+    fn retry_storms_terminate_within_budget() {
+        // Exhausted budgets must surface as terminal states, never as live
+        // events: the run drains with every request settled and the retry
+        // count bounded by n_requests × max_attempts, and the whole storm
+        // is deterministic.
+        let a = blackout_run(false, 3, 5);
+        let b = blackout_run(false, 3, 5);
+        for o in &a.outcomes {
+            assert!(
+                matches!(
+                    o.status,
+                    RequestStatus::Completed | RequestStatus::Rejected | RequestStatus::TimedOut
+                ),
+                "request {} stuck in {:?}",
+                o.id,
+                o.status
+            );
+        }
+        assert!(a.diagnostics.retries_scheduled > 0);
+        assert!(a.diagnostics.retries_scheduled <= 40 * 3);
+        assert_eq!(a.diagnostics.retries_scheduled, b.diagnostics.retries_scheduled);
+        assert_eq!(a.diagnostics.events_processed, b.diagnostics.events_processed);
+        for (x, y) in a.outcomes.iter().zip(b.outcomes.iter()) {
+            assert_eq!(x.status, y.status);
+            assert_eq!(x.latency_ms.map(f64::to_bits), y.latency_ms.map(f64::to_bits));
+        }
     }
 
     #[test]

@@ -107,7 +107,17 @@ const MIN_LOOKAHEAD_MS: f64 = 1e-9;
 /// part in 10⁹ when `σ > 0` to absorb the floating-point rounding of the
 /// jitter product; for `σ == 0` the floor is exactly `base_ms` (and the
 /// window-boundary guarantee follows from monotonicity of f64 rounding).
+///
+/// A fault plan participates through its speeds: brownouts with `factor <=
+/// 1` and blackouts (`speed 0`) only ever *extend* service, so the floor
+/// survives them unchanged. A plan with any speed-up window (`factor > 1`)
+/// could finish work earlier than the clean physics allow, invalidating
+/// the bound — such fleets return `None` and take the flagged serial
+/// fallback (`PartitionStats::serial_fallback`).
 pub fn lookahead_floor_ms(cfg: &PoolCfg) -> Option<f64> {
+    if !cfg.faults.extension_only() {
+        return None;
+    }
     let mut floor = f64::INFINITY;
     for shard in &cfg.shards {
         let valid = shard.base_ms > 0.0
@@ -227,6 +237,7 @@ struct WorkerOut {
     sends: u64,
     peak_inflight: usize,
     timers_canceled: u64,
+    retries_scheduled: u64,
     processed: u64,
     skipped: u64,
     boundary_deferrals: u64,
@@ -415,6 +426,7 @@ fn run_partitioned(
                 timeout_timer.push(Some(q.push_cancelable(r.timeout_ms, Ev::Timeout(r.id))));
             }
             let mut retry_timer: Vec<Option<TimerId>> = vec![None; pn];
+            let mut retry_attempts = vec![0u32; pn];
             let mut actions: Vec<Action> = Vec::new();
             let mut fabric = PartitionFabric { ops: Vec::new(), samples: Vec::new() };
             let schedulers = pm.schedulers;
@@ -426,10 +438,12 @@ fn run_partitioned(
                 defer_counts: pm.defer_counts,
                 timeout_timer: &mut timeout_timer,
                 retry_timer: &mut retry_timer,
+                retry_attempts: &mut retry_attempts,
                 sends_by_tenant: pm.sends_by_tenant,
                 sends: 0,
                 peak_inflight: 0,
                 timers_canceled: 0,
+                retries_scheduled: 0,
             };
             let mut boundary_deferrals = 0u64;
             let mut pending_panic: Option<Box<dyn std::any::Any + Send>> = None;
@@ -508,6 +522,7 @@ fn run_partitioned(
                 sends: st.sends,
                 peak_inflight: st.peak_inflight,
                 timers_canceled: st.timers_canceled,
+                retries_scheduled: st.retries_scheduled,
                 processed: q.processed(),
                 skipped: q.skipped(),
                 boundary_deferrals,
@@ -674,6 +689,7 @@ fn run_partitioned(
         ordering_select_work: schedulers.iter().map(|s| s.ordering_work()).sum(),
         ordering_group_count: schedulers.iter().map(|s| s.ordering_group_count()).sum(),
         ordering_scan_fallbacks: schedulers.iter().map(|s| s.ordering_scan_fallbacks()).sum(),
+        retries_scheduled: worker_outs.iter().map(|w| w.retries_scheduled).sum(),
     };
     let stats = PartitionStats {
         partitions: p,
@@ -691,6 +707,7 @@ fn run_partitioned(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::provider::fault::FaultPlan;
     use crate::provider::ProviderCfg;
 
     fn cfg(base_ms: f64, jitter_sigma: f64) -> ProviderCfg {
@@ -705,11 +722,34 @@ mod tests {
 
     #[test]
     fn floor_takes_min_across_shards_and_discounts_jitter() {
-        let pool = PoolCfg { shards: vec![cfg(100.0, 0.0), cfg(80.0, 0.1)] };
+        let pool = PoolCfg {
+            shards: vec![cfg(100.0, 0.0), cfg(80.0, 0.1)],
+            faults: FaultPlan::default(),
+        };
         let f = lookahead_floor_ms(&pool).unwrap();
         let expected = 80.0 * (-0.1f64 * Z_BOUND).exp() * (1.0 - 1e-9);
         assert_eq!(f.to_bits(), expected.to_bits());
         assert!(f < 80.0 && f > 0.0);
+    }
+
+    #[test]
+    fn floor_rejects_speedup_fault_plans() {
+        // A brownout factor above 1.0 means a shard can run *faster* than its
+        // nominal service model inside the window, so the lookahead floor is
+        // unsound and the partitioned loop must fall back to serial.
+        let speedup = FaultPlan::default().brownout(0, 0.0, 1_000.0, 2.0).unwrap();
+        let pool = PoolCfg::single(cfg(40.0, 0.0)).with_faults(speedup);
+        assert_eq!(lookahead_floor_ms(&pool), None);
+
+        // Extension-only plans (blackouts and slow-down brownouts) only ever
+        // push finishes later, so the fault-free floor stays valid.
+        let ext = FaultPlan::default()
+            .blackout(0, 0.0, 500.0)
+            .unwrap()
+            .brownout(0, 1_000.0, 2_000.0, 0.5)
+            .unwrap();
+        let pool = PoolCfg::single(cfg(40.0, 0.0)).with_faults(ext);
+        assert_eq!(lookahead_floor_ms(&pool), Some(40.0));
     }
 
     #[test]

@@ -171,6 +171,26 @@ impl Ewma {
     pub fn get_or(&self, default: f64) -> f64 {
         self.value.unwrap_or(default)
     }
+
+    /// Overwrite the smoothed value outright (seeding if unseeded).
+    /// For saturating censored evidence where averaging would understate —
+    /// a timeout says the signal is *at least* this bad, not that it should
+    /// be blended toward it.
+    pub fn set(&mut self, x: f64) {
+        self.value = Some(x);
+    }
+
+    /// Geometric decay toward `target`: `v ← target + (v − target)·factor`.
+    /// No-op while unseeded. This is the *unlearning* path for censored
+    /// signals — a shard that stopped completing (blackout) keeps its
+    /// penalty samples forever under `push` alone, so recovery code decays
+    /// the stale evidence instead of waiting for samples that never come.
+    pub fn decay_toward(&mut self, target: f64, factor: f64) {
+        debug_assert!((0.0..=1.0).contains(&factor));
+        if let Some(v) = self.value {
+            self.value = Some(target + (v - target) * factor);
+        }
+    }
 }
 
 /// Fixed-capacity ring buffer of recent samples; O(1) push, percentile on
@@ -313,6 +333,19 @@ mod tests {
             e.push(2.0);
         }
         assert!((e.get().unwrap() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ewma_decay_toward_unlearns() {
+        let mut e = Ewma::new(0.15);
+        e.decay_toward(1.0, 0.9); // unseeded: no-op
+        assert_eq!(e.get(), None);
+        e.push(2.0);
+        for _ in 0..10 {
+            e.decay_toward(1.0, 0.9);
+        }
+        let v = e.get().unwrap();
+        assert!(v < 1.4 && v > 1.0, "v={v}");
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Arrival processes: Poisson (default), deterministic (calibration), and
-//! burst-modulated Poisson (extension experiments).
+//! Arrival processes: Poisson (default), deterministic (calibration),
+//! burst-modulated Poisson, and the storm-scenario generators (diurnal
+//! tides with flash crowds, multi-turn session streams).
 
 use crate::util::rng::Rng;
 
@@ -22,6 +23,20 @@ enum Kind {
         in_burst: bool,
         phase_ends_ms: f64,
     },
+    /// Sinusoidal rate modulation around the mean (diurnal tide): the
+    /// instantaneous rate is `mean·(1 + depth·sin(2π·t/period))`, sampled
+    /// at each arrival instant (piecewise-homogeneous approximation).
+    Diurnal { mean_rps: f64, period_ms: f64, depth: f64 },
+    /// Deterministic flash-crowd schedule: every `every_ms` the rate spikes
+    /// to `base·factor` for `spike_ms`, then returns to `base`. The spike
+    /// timetable consumes no randomness, so fault/experiment alignment is
+    /// exact across seeds.
+    FlashCrowd { base_rps: f64, spike_factor: f64, every_ms: f64, spike_ms: f64 },
+    /// Session-affinity stream: each session carries `turns` requests
+    /// separated by exponential think-time gaps (mean `think_ms`); a new
+    /// session opens an exponential `session_gap_ms` after the previous
+    /// one ends — clustered arrivals modelling multi-turn chats.
+    Session { session_gap_ms: f64, turns: u32, think_ms: f64, left_in_session: u32 },
 }
 
 impl ArrivalProcess {
@@ -49,6 +64,44 @@ impl ArrivalProcess {
         }
     }
 
+    /// Diurnal tide: mean rate `mean_rps`, one full cycle per `period_ms`,
+    /// modulation depth in `[0, 1)` (depth 0 degenerates to Poisson).
+    pub fn diurnal(mean_rps: f64, period_ms: f64, depth: f64, rng: Rng) -> Self {
+        assert!(mean_rps > 0.0 && period_ms > 0.0);
+        assert!((0.0..1.0).contains(&depth), "diurnal depth must be in [0,1)");
+        ArrivalProcess { kind: Kind::Diurnal { mean_rps, period_ms, depth }, rng }
+    }
+
+    /// Flash crowds on a deterministic timetable: baseline `base_rps`,
+    /// spiking to `base_rps·spike_factor` for `spike_ms` at the start of
+    /// every `every_ms` interval.
+    pub fn flash_crowd(
+        base_rps: f64,
+        spike_factor: f64,
+        every_ms: f64,
+        spike_ms: f64,
+        rng: Rng,
+    ) -> Self {
+        assert!(base_rps > 0.0 && spike_factor > 0.0);
+        assert!(every_ms > 0.0 && spike_ms > 0.0 && spike_ms <= every_ms);
+        ArrivalProcess { kind: Kind::FlashCrowd { base_rps, spike_factor, every_ms, spike_ms }, rng }
+    }
+
+    /// Session stream targeting `rate_rps` requests/s overall: each session
+    /// contributes `turns` requests separated by mean-`think_ms` think
+    /// gaps; the inter-session gap absorbs the remaining cycle time
+    /// (`turns/rate − (turns−1)·think`, floored at `think_ms` when the
+    /// think time alone already exceeds the target rate).
+    pub fn session(rate_rps: f64, turns: u32, think_ms: f64, rng: Rng) -> Self {
+        assert!(rate_rps > 0.0 && turns >= 1 && think_ms > 0.0);
+        let cycle_ms = turns as f64 * 1000.0 / rate_rps;
+        let session_gap_ms = (cycle_ms - (turns - 1) as f64 * think_ms).max(think_ms);
+        ArrivalProcess {
+            kind: Kind::Session { session_gap_ms, turns, think_ms, left_in_session: 0 },
+            rng,
+        }
+    }
+
     /// Next arrival instant strictly after `now` (ms).
     pub fn next_after(&mut self, now: f64) -> f64 {
         match &mut self.kind {
@@ -61,6 +114,25 @@ impl ArrivalProcess {
                 }
                 let rate = if *in_burst { *burst_rps } else { *calm_rps };
                 now + self.rng.exp(rate / 1000.0)
+            }
+            Kind::Diurnal { mean_rps, period_ms, depth } => {
+                let phase = 2.0 * std::f64::consts::PI * (now / *period_ms);
+                let rate = *mean_rps * (1.0 + *depth * phase.sin());
+                now + self.rng.exp(rate / 1000.0)
+            }
+            Kind::FlashCrowd { base_rps, spike_factor, every_ms, spike_ms } => {
+                let in_spike = now.rem_euclid(*every_ms) < *spike_ms;
+                let rate = if in_spike { *base_rps * *spike_factor } else { *base_rps };
+                now + self.rng.exp(rate / 1000.0)
+            }
+            Kind::Session { session_gap_ms, turns, think_ms, left_in_session } => {
+                if *left_in_session == 0 {
+                    *left_in_session = *turns - 1;
+                    now + self.rng.exp(1.0 / *session_gap_ms)
+                } else {
+                    *left_in_session -= 1;
+                    now + self.rng.exp(1.0 / *think_ms)
+                }
             }
         }
     }
@@ -119,5 +191,69 @@ mod tests {
             s / m
         };
         assert!(cv(&bg) > cv(&pg) * 1.2, "burst cv={} poisson cv={}", cv(&bg), cv(&pg));
+    }
+
+    #[test]
+    fn diurnal_modulates_rate_with_phase() {
+        // Count arrivals landing in the rising half vs the falling half of
+        // each cycle: with depth 0.9 the crest must see far more traffic.
+        let mut p = ArrivalProcess::diurnal(10.0, 10_000.0, 0.9, Rng::new(7));
+        let mut t = 0.0;
+        let (mut crest, mut trough) = (0usize, 0usize);
+        for _ in 0..40_000 {
+            t = p.next_after(t);
+            let phase = (t / 10_000.0).fract();
+            if phase < 0.5 {
+                crest += 1; // sin > 0 half-cycle
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            crest as f64 > trough as f64 * 2.0,
+            "crest={crest} trough={trough}: diurnal tide must concentrate arrivals"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_arrivals_in_spikes() {
+        // 8x spikes for 2s out of every 30s: the 1/15 spike share of the
+        // timeline must carry several times its proportional share.
+        let mut p = ArrivalProcess::flash_crowd(10.0, 8.0, 30_000.0, 2_000.0, Rng::new(9));
+        let mut t = 0.0;
+        let (mut inside, mut total) = (0usize, 0usize);
+        for _ in 0..40_000 {
+            t = p.next_after(t);
+            total += 1;
+            if t.rem_euclid(30_000.0) < 2_000.0 {
+                inside += 1;
+            }
+        }
+        let share = inside as f64 / total as f64;
+        assert!(share > 0.25, "spike share={share}: flash crowds must dominate their windows");
+    }
+
+    #[test]
+    fn session_stream_clusters_and_rate_is_sane() {
+        // 8-turn sessions with 20 ms think time at 10 req/s: 7 of every 8
+        // gaps are tight think gaps, the opener gap absorbs the slack, and
+        // the long-run rate still lands near the target.
+        let mut p = ArrivalProcess::session(10.0, 8, 20.0, Rng::new(11));
+        let mut t = 0.0;
+        let mut short_gaps = 0usize;
+        let n = 40_000;
+        for _ in 0..n {
+            let nt = p.next_after(t);
+            assert!(nt > t);
+            if nt - t < 100.0 {
+                short_gaps += 1;
+            }
+            t = nt;
+        }
+        // A plain Poisson process at 10 req/s puts only ~63% of gaps under
+        // 100 ms; the session stream's think clustering pushes well past it.
+        assert!(short_gaps as f64 > n as f64 * 0.8, "short_gaps={short_gaps}");
+        let rate = n as f64 / (t / 1000.0);
+        assert!((8.0..12.0).contains(&rate), "rate={rate}");
     }
 }

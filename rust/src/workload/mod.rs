@@ -12,15 +12,140 @@ pub use synth::{Mix, SynthGen, GEN_CONSTANTS};
 use crate::core::{Request, SloPolicy};
 use crate::util::rng::Rng;
 
-/// Arrival-process shape for a workload.
+/// Declarative arrival-process specification: one composable value naming
+/// the process shape *and* its parameters, with stable [`name`]s for CLI
+/// flags and CSV columns ([`parse`] accepts `name` or `name:p1:p2[:p3]`
+/// to override the defaults).
+///
+/// The offered rate stays on [`WorkloadSpec::rate_rps`]; every variant is
+/// parameterized relative to it, so swapping the arrival shape never
+/// changes the long-run offered load (the controlled-evaluation
+/// requirement across arrival scenarios).
+///
+/// [`name`]: ArrivalSpec::name
+/// [`parse`]: ArrivalSpec::parse
 #[derive(Debug, Clone, Copy, PartialEq)]
-pub enum ArrivalKind {
+pub enum ArrivalSpec {
     /// Memoryless arrivals at `rate_rps` (the paper's default).
     Poisson,
+    /// Fixed inter-arrival gap `1000/rate_rps` ms (calibration runs).
+    Uniform,
     /// Markov-modulated bursts: calm/burst phases alternate with the given
-    /// mean phase length; `rate_rps` is reinterpreted as the calm rate and
-    /// `burst_factor × rate_rps` as the burst rate (extension experiments).
-    Bursty { burst_factor: f64, mean_phase_ms: f64 },
+    /// mean phase length; `rate_rps` is the calm rate and
+    /// `burst_factor × rate_rps` the burst rate.
+    Bursty {
+        /// Burst-phase rate multiplier over the calm rate.
+        burst_factor: f64,
+        /// Mean calm/burst phase length (ms, exponential).
+        mean_phase_ms: f64,
+    },
+    /// Diurnal tide: sinusoidal rate modulation around `rate_rps` with one
+    /// full cycle per `period_ms` and modulation depth in `[0, 1)`.
+    Diurnal {
+        /// One full load cycle (ms).
+        period_ms: f64,
+        /// Modulation depth: instantaneous rate spans `rate·(1 ± depth)`.
+        depth: f64,
+    },
+    /// Flash crowds on a deterministic timetable: every `every_ms` the
+    /// rate spikes to `rate_rps × spike_factor` for `spike_ms`.
+    FlashCrowd {
+        /// Spike rate multiplier over the baseline.
+        spike_factor: f64,
+        /// Spike period (ms): one spike starts every `every_ms`.
+        every_ms: f64,
+        /// Spike duration (ms), at the start of each period.
+        spike_ms: f64,
+    },
+    /// Session-affinity stream: `turns`-request sessions whose requests
+    /// are separated by mean-`think_ms` think gaps (clustered multi-turn
+    /// traffic — the shape that stresses `hash_affinity` pinning).
+    Session {
+        /// Requests per session.
+        turns: u32,
+        /// Mean think-time gap between a session's requests (ms).
+        think_ms: f64,
+    },
+}
+
+impl ArrivalSpec {
+    /// Every arrival shape at its default parameters, in CLI listing order.
+    pub const ALL: [ArrivalSpec; 6] = [
+        ArrivalSpec::Poisson,
+        ArrivalSpec::Uniform,
+        ArrivalSpec::Bursty { burst_factor: 4.0, mean_phase_ms: 2_000.0 },
+        ArrivalSpec::Diurnal { period_ms: 60_000.0, depth: 0.8 },
+        ArrivalSpec::FlashCrowd { spike_factor: 8.0, every_ms: 30_000.0, spike_ms: 2_000.0 },
+        ArrivalSpec::Session { turns: 4, think_ms: 800.0 },
+    ];
+
+    /// Stable CLI/CSV name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalSpec::Poisson => "poisson",
+            ArrivalSpec::Uniform => "uniform",
+            ArrivalSpec::Bursty { .. } => "bursty",
+            ArrivalSpec::Diurnal { .. } => "diurnal",
+            ArrivalSpec::FlashCrowd { .. } => "flash_crowd",
+            ArrivalSpec::Session { .. } => "session",
+        }
+    }
+
+    /// Parse a CLI spec: a bare name takes the [`ArrivalSpec::ALL`]
+    /// defaults; `name:p1:p2[:p3]` overrides the variant's parameters in
+    /// declaration order (`bursty:4:2000`, `diurnal:60000:0.8`,
+    /// `flash_crowd:8:30000:2000`, `session:4:800`).
+    pub fn parse(s: &str) -> Option<ArrivalSpec> {
+        let mut parts = s.split(':');
+        let name = parts.next()?;
+        let params: Vec<&str> = parts.collect();
+        let f = |i: usize| -> Option<f64> { params.get(i)?.parse::<f64>().ok() };
+        match (name, params.len()) {
+            ("poisson", 0) => Some(ArrivalSpec::Poisson),
+            ("uniform", 0) => Some(ArrivalSpec::Uniform),
+            ("bursty", 0) => Some(ArrivalSpec::ALL[2]),
+            ("bursty", 2) => {
+                Some(ArrivalSpec::Bursty { burst_factor: f(0)?, mean_phase_ms: f(1)? })
+            }
+            ("diurnal", 0) => Some(ArrivalSpec::ALL[3]),
+            ("diurnal", 2) => Some(ArrivalSpec::Diurnal { period_ms: f(0)?, depth: f(1)? }),
+            ("flash_crowd", 0) => Some(ArrivalSpec::ALL[4]),
+            ("flash_crowd", 3) => Some(ArrivalSpec::FlashCrowd {
+                spike_factor: f(0)?,
+                every_ms: f(1)?,
+                spike_ms: f(2)?,
+            }),
+            ("session", 0) => Some(ArrivalSpec::ALL[5]),
+            ("session", 2) => {
+                let turns = params[0].parse::<u32>().ok()?;
+                Some(ArrivalSpec::Session { turns, think_ms: f(1)? })
+            }
+            _ => None,
+        }
+    }
+
+    /// Instantiate the generator for this spec at the given offered rate.
+    /// The constructor mapping is 1:1 with the old `ArrivalKind` match, so
+    /// poisson/bursty specs consume the `"arrivals"` RNG stream exactly as
+    /// before (the byte-identity contract for the shim constructors).
+    pub fn process(self, rate_rps: f64, rng: Rng) -> ArrivalProcess {
+        match self {
+            ArrivalSpec::Poisson => ArrivalProcess::poisson(rate_rps, rng),
+            ArrivalSpec::Uniform => ArrivalProcess::uniform(1000.0 / rate_rps, rng),
+            ArrivalSpec::Bursty { burst_factor, mean_phase_ms } => {
+                ArrivalProcess::bursty(rate_rps, rate_rps * burst_factor, mean_phase_ms, rng)
+            }
+            ArrivalSpec::Diurnal { period_ms, depth } => {
+                ArrivalProcess::diurnal(rate_rps, period_ms, depth, rng)
+            }
+            ArrivalSpec::FlashCrowd { spike_factor, every_ms, spike_ms } => {
+                ArrivalProcess::flash_crowd(rate_rps, spike_factor, every_ms, spike_ms, rng)
+            }
+            ArrivalSpec::Session { turns, think_ms } => {
+                ArrivalProcess::session(rate_rps, turns, think_ms, rng)
+            }
+        }
+    }
 }
 
 /// Everything needed to materialize one run's offered load.
@@ -33,8 +158,8 @@ pub struct WorkloadSpec {
     pub rate_rps: f64,
     /// SLO policy assigning deadlines/timeouts by true bucket.
     pub slo: SloPolicy,
-    /// Arrival-process shape.
-    pub arrivals: ArrivalKind,
+    /// Arrival-process shape (see [`ArrivalSpec`]).
+    pub arrivals: ArrivalSpec,
 }
 
 impl WorkloadSpec {
@@ -44,12 +169,21 @@ impl WorkloadSpec {
             n_requests,
             rate_rps,
             slo: SloPolicy::default(),
-            arrivals: ArrivalKind::Poisson,
+            arrivals: ArrivalSpec::Poisson,
         }
     }
 
-    pub fn bursty(mut self, burst_factor: f64, mean_phase_ms: f64) -> Self {
-        self.arrivals = ArrivalKind::Bursty { burst_factor, mean_phase_ms };
+    /// Thin shim over [`WorkloadSpec::with_arrivals`] kept for the historic
+    /// builder call sites; produces byte-identical workloads to the
+    /// equivalent `ArrivalSpec::Bursty` spec (tested in
+    /// `tests/parallel_sweep.rs`).
+    pub fn bursty(self, burst_factor: f64, mean_phase_ms: f64) -> Self {
+        self.with_arrivals(ArrivalSpec::Bursty { burst_factor, mean_phase_ms })
+    }
+
+    /// Set the arrival-process shape (consuming builder).
+    pub fn with_arrivals(mut self, arrivals: ArrivalSpec) -> Self {
+        self.arrivals = arrivals;
         self
     }
 
@@ -57,15 +191,7 @@ impl WorkloadSpec {
     /// (spec, seed) → identical Vec<Request>.
     pub fn generate(&self, seed: u64) -> Vec<Request> {
         let root = Rng::new(seed);
-        let mut arrivals = match self.arrivals {
-            ArrivalKind::Poisson => ArrivalProcess::poisson(self.rate_rps, root.derive("arrivals")),
-            ArrivalKind::Bursty { burst_factor, mean_phase_ms } => ArrivalProcess::bursty(
-                self.rate_rps,
-                self.rate_rps * burst_factor,
-                mean_phase_ms,
-                root.derive("arrivals"),
-            ),
-        };
+        let mut arrivals = self.arrivals.process(self.rate_rps, root.derive("arrivals"));
         let mut synth = SynthGen::new(self.mix, root.derive("synth"));
         let mut out = Vec::with_capacity(self.n_requests);
         let mut now = 0.0;
@@ -146,5 +272,60 @@ mod tests {
                 / rs.len() as f64
         };
         assert!(frac_heavy(&heavy) > frac_heavy(&bal) + 0.2);
+    }
+
+    #[test]
+    fn arrival_spec_parse_roundtrip_and_params() {
+        for spec in ArrivalSpec::ALL {
+            assert_eq!(ArrivalSpec::parse(spec.name()), Some(spec), "{}", spec.name());
+        }
+        assert_eq!(
+            ArrivalSpec::parse("bursty:6:500"),
+            Some(ArrivalSpec::Bursty { burst_factor: 6.0, mean_phase_ms: 500.0 })
+        );
+        assert_eq!(
+            ArrivalSpec::parse("diurnal:10000:0.5"),
+            Some(ArrivalSpec::Diurnal { period_ms: 10_000.0, depth: 0.5 })
+        );
+        assert_eq!(
+            ArrivalSpec::parse("flash_crowd:4:10000:1000"),
+            Some(ArrivalSpec::FlashCrowd {
+                spike_factor: 4.0,
+                every_ms: 10_000.0,
+                spike_ms: 1_000.0
+            })
+        );
+        assert_eq!(
+            ArrivalSpec::parse("session:8:200"),
+            Some(ArrivalSpec::Session { turns: 8, think_ms: 200.0 })
+        );
+        for bad in ["", "vibes", "poisson:1", "bursty:4", "session:x:200"] {
+            assert_eq!(ArrivalSpec::parse(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn every_spec_generates_monotone_arrivals() {
+        for spec in ArrivalSpec::ALL {
+            let w = WorkloadSpec::new(Mix::Balanced, 200, 10.0).with_arrivals(spec);
+            let reqs = w.generate(3);
+            let mut prev = 0.0;
+            for r in &reqs {
+                assert!(r.arrival_ms > prev, "{}: non-monotone", spec.name());
+                prev = r.arrival_ms;
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_shim_matches_spec_bitwise() {
+        let shim = WorkloadSpec::new(Mix::Heavy, 120, 9.0).bursty(4.0, 1_500.0).generate(11);
+        let spec = WorkloadSpec::new(Mix::Heavy, 120, 9.0)
+            .with_arrivals(ArrivalSpec::Bursty { burst_factor: 4.0, mean_phase_ms: 1_500.0 })
+            .generate(11);
+        for (a, b) in shim.iter().zip(spec.iter()) {
+            assert_eq!(a.arrival_ms.to_bits(), b.arrival_ms.to_bits());
+            assert_eq!(a.true_output_tokens, b.true_output_tokens);
+        }
     }
 }

@@ -156,6 +156,7 @@ fn realtime_serve_driver_matches_policy_semantics() {
         PoolCfg::single(ProviderCfg::default()),
         ShardPolicy::LeastInflight,
         1,
+        blackbox_sched::workload::ArrivalSpec::Poisson,
     )
     .expect("serve demo failed");
 }
@@ -175,6 +176,7 @@ fn realtime_serve_driver_runs_a_sharded_fleet() {
         PoolCfg::heterogeneous(ProviderCfg::default(), 2, 0.5),
         ShardPolicy::Weighted,
         1,
+        blackbox_sched::workload::ArrivalSpec::Poisson,
     )
     .expect("sharded serve demo failed");
 }
@@ -195,6 +197,7 @@ fn realtime_serve_driver_multiplexes_tenants() {
         PoolCfg::split(ProviderCfg::default(), 2),
         ShardPolicy::LeastInflight,
         2,
+        blackbox_sched::workload::ArrivalSpec::Session { turns: 3, think_ms: 400.0 },
     )
     .expect("multi-tenant serve demo failed");
 }

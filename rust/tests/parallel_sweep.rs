@@ -119,6 +119,84 @@ fn sweep_preserves_paired_comparison_across_policies() {
 }
 
 #[test]
+fn arrival_shims_match_specs_bitwise() {
+    // The `ArrivalSpec` redesign keeps the historic builder shims as thin
+    // wrappers: `WorkloadSpec::bursty(..)` must hand the generator exactly
+    // the state the declarative spec does, so the workloads — and every
+    // CSV derived from them — stay byte-identical across the API change.
+    use blackbox_sched::workload::{ArrivalSpec, WorkloadSpec};
+    for seed in [0u64, 7, 1234] {
+        let shim = WorkloadSpec::new(Mix::Heavy, 80, 14.0).bursty(4.0, 2_000.0).generate(seed);
+        let spec = WorkloadSpec::new(Mix::Heavy, 80, 14.0)
+            .with_arrivals(ArrivalSpec::Bursty { burst_factor: 4.0, mean_phase_ms: 2_000.0 })
+            .generate(seed);
+        assert_eq!(shim.len(), spec.len());
+        for (a, b) in shim.iter().zip(&spec) {
+            assert_eq!(a.id, b.id, "seed {seed}");
+            assert_eq!(a.arrival_ms.to_bits(), b.arrival_ms.to_bits(), "seed {seed}");
+            assert_eq!(a.prompt_tokens, b.prompt_tokens, "seed {seed}");
+            assert_eq!(a.max_tokens, b.max_tokens, "seed {seed}");
+            assert_eq!(a.deadline_ms.to_bits(), b.deadline_ms.to_bits(), "seed {seed}");
+            assert_eq!(a.timeout_ms.to_bits(), b.timeout_ms.to_bits(), "seed {seed}");
+            assert_eq!(a.true_output_tokens, b.true_output_tokens, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn storm_cells_are_bit_identical_across_partitions() {
+    // The storms grid rides the `--partitions` CI diff: an extension-only
+    // fault plan plus armed client retries must not perturb a single bit
+    // between the serial loop and the partitioned executor.
+    use blackbox_sched::predictor::InfoLevel;
+    use blackbox_sched::provider::fault::FaultPlan;
+    use blackbox_sched::provider::pool::PoolCfg;
+    use blackbox_sched::provider::ProviderCfg;
+    use blackbox_sched::scheduler::{RetryCfg, ShardPolicy};
+    use blackbox_sched::sim::driver::{self, TenantSpec};
+    use blackbox_sched::workload::{ArrivalSpec, WorkloadSpec};
+
+    let mut sched = SchedulerCfg::for_strategy(StrategyKind::AdaptiveDrr);
+    sched.shards.policy = ShardPolicy::LeastInflight;
+    sched.shards.failover = true;
+    sched.retry = RetryCfg::new(3, 250.0, 2_000.0);
+    let tenants: Vec<TenantSpec> = (0..4)
+        .map(|_| TenantSpec {
+            workload: WorkloadSpec::new(Mix::Balanced, 30, 5.0).with_arrivals(
+                ArrivalSpec::FlashCrowd { spike_factor: 8.0, every_ms: 30_000.0, spike_ms: 2_000.0 },
+            ),
+            sched: sched.clone(),
+            info: InfoLevel::Coarse,
+            noise: 0.0,
+        })
+        .collect();
+    let pool = PoolCfg::split(ProviderCfg::default(), 2).with_faults(
+        FaultPlan::default().brownout(0, 1_000.0, 20_000.0, 0.4).expect("valid plan"),
+    );
+    let serial = driver::run_tenants_partitioned(&tenants, &pool, 5, 1);
+    let par = driver::run_tenants_partitioned(&tenants, &pool, 5, 4);
+    assert_eq!(serial.diagnostics.retries_scheduled, par.diagnostics.retries_scheduled);
+    assert_eq!(
+        serial.diagnostics.faulted_shard_ms.to_bits(),
+        par.diagnostics.faulted_shard_ms.to_bits()
+    );
+    assert!(serial.diagnostics.faulted_shard_ms > 0.0, "the brownout must bite");
+    for (t, (a, b)) in serial.tenants.iter().zip(&par.tenants).enumerate() {
+        assert_eq!(a.sends, b.sends, "tenant {t}");
+        assert_metrics_identical(&a.metrics, &b.metrics, &format!("storm tenant {t}"));
+        for (x, y) in a.outcomes.iter().zip(&b.outcomes) {
+            assert_eq!(x.status, y.status, "tenant {t} req {}", x.id);
+            assert_eq!(
+                x.latency_ms.map(f64::to_bits),
+                y.latency_ms.map(f64::to_bits),
+                "tenant {t} req {}",
+                x.id
+            );
+        }
+    }
+}
+
+#[test]
 fn pool_default_jobs_reflects_cores() {
     // Smoke check that the default worker count is sane on this host.
     let jobs = pool::default_jobs();

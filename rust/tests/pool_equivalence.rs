@@ -5,6 +5,7 @@
 //! `Started` events (jitter bits included), same promotions, same
 //! introspection counters. Every pre-pool experiment CSV rests on this.
 
+use blackbox_sched::provider::fault::FaultPlan;
 use blackbox_sched::provider::pool::{PoolCfg, ProviderPool};
 use blackbox_sched::provider::{MockProvider, ProviderCfg};
 use blackbox_sched::testing::prop;
@@ -72,7 +73,7 @@ fn multi_shard_pool_conserves_every_request() {
             jitter_sigma: 0.05,
             ..ProviderCfg::default()
         };
-        let pool_cfg = PoolCfg { shards: vec![cfg; n_shards] };
+        let pool_cfg = PoolCfg { shards: vec![cfg; n_shards], faults: FaultPlan::default() };
         let mut pool = ProviderPool::new(&pool_cfg, Rng::new(g.u64()));
 
         let n = g.usize_in(1, 60);
@@ -98,5 +99,142 @@ fn multi_shard_pool_conserves_every_request() {
         assert_eq!(pool.total_running(), 0);
         assert_eq!(pool.hidden_queue_len(), 0);
         assert_eq!(pool.started_by_shard().iter().sum::<u64>(), n as u64);
+    });
+}
+
+/// Draw a random *extension-only* fault plan: per shard, a handful of
+/// non-overlapping windows, each a blackout or a slow-down brownout
+/// (factor ≤ 1). These are the plans the partitioned loop accepts.
+fn random_extension_only_plan(g: &mut prop::Gen, n_shards: usize) -> FaultPlan {
+    let mut plan = FaultPlan::default();
+    for shard in 0..n_shards {
+        let mut t = g.f64_in(0.0, 500.0);
+        for _ in 0..g.usize_in(0, 3) {
+            let t0 = t + g.f64_in(1.0, 300.0);
+            let t1 = t0 + g.f64_in(1.0, 800.0);
+            plan = if g.bool() {
+                plan.blackout(shard, t0, t1).unwrap()
+            } else {
+                plan.brownout(shard, t0, t1, g.f64_in(0.05, 1.0)).unwrap()
+            };
+            t = t1;
+        }
+    }
+    plan
+}
+
+#[test]
+fn untouched_shards_are_bit_identical_under_a_fault_plan() {
+    // A plan whose windows all live on the last shard must leave every
+    // other shard's events byte-identical to the fault-free pool — the
+    // same no-float-ops contract an empty plan gives the whole fleet.
+    prop::forall(40, |g| {
+        let n_shards = g.usize_in(2, 5);
+        let cfg = ProviderCfg {
+            max_concurrency: g.usize_in(1, 4),
+            jitter_sigma: 0.1,
+            ..ProviderCfg::default()
+        };
+        let seed = g.u64();
+        let faulted_shard = n_shards - 1;
+        let plan = FaultPlan::default()
+            .blackout(faulted_shard, 0.0, g.f64_in(100.0, 5_000.0))
+            .unwrap();
+        let clean_cfg =
+            PoolCfg { shards: vec![cfg.clone(); n_shards], faults: FaultPlan::default() };
+        let fault_cfg = PoolCfg { shards: vec![cfg; n_shards], faults: plan };
+        let mut clean = ProviderPool::new(&clean_cfg, Rng::new(seed));
+        let mut faulted = ProviderPool::new(&fault_cfg, Rng::new(seed));
+
+        // Traffic only ever touches shards 0..faulted_shard.
+        let mut now = 0.0f64;
+        let mut started: Vec<(usize, f64)> = Vec::new();
+        let mut next_id = 0usize;
+        for _ in 0..g.usize_in(1, 80) {
+            now += g.f64_in(0.0, 40.0);
+            if started.is_empty() || g.bool() {
+                let shard = g.usize_in(0, faulted_shard);
+                let tokens = g.f64_in(1.0, 2000.0);
+                let a = clean.submit(next_id, tokens, shard, now);
+                let b = faulted.submit(next_id, tokens, shard, now);
+                assert_eq!(a, b, "untouched shard diverged at id {next_id}");
+                if let Some(s) = a {
+                    started.push((s.id, s.finish_ms));
+                }
+                next_id += 1;
+            } else {
+                let (id, t) = started.swap_remove(g.usize_in(0, started.len()));
+                let a = clean.on_finish(id, t);
+                let b = faulted.on_finish(id, t);
+                assert_eq!(a, b, "promotions diverged finishing {id}");
+                for s in &a {
+                    started.push((s.id, s.finish_ms));
+                }
+            }
+        }
+        assert_eq!(faulted.faulted_shard_ms(), 0.0, "no traffic on the faulted shard");
+    });
+}
+
+#[test]
+fn extension_only_faults_never_finish_earlier() {
+    // Blackouts and slow-down brownouts may only *extend* service: every
+    // start event on the faulted pool finishes at or after its fault-free
+    // twin, and the injected extension equals the summed per-event delta.
+    prop::forall(40, |g| {
+        let n_shards = g.usize_in(1, 4);
+        let cfg = ProviderCfg {
+            max_concurrency: g.usize_in(1, 3),
+            jitter_sigma: if g.bool() { 0.1 } else { 0.0 },
+            ..ProviderCfg::default()
+        };
+        let seed = g.u64();
+        let plan = random_extension_only_plan(g, n_shards);
+        let clean_cfg =
+            PoolCfg { shards: vec![cfg.clone(); n_shards], faults: FaultPlan::default() };
+        let fault_cfg = PoolCfg { shards: vec![cfg; n_shards], faults: plan };
+        let mut clean = ProviderPool::new(&clean_cfg, Rng::new(seed));
+        let mut faulted = ProviderPool::new(&fault_cfg, Rng::new(seed));
+
+        let mut now = 0.0f64;
+        let mut inflight: Vec<usize> = Vec::new();
+        let mut extension = 0.0f64;
+        let mut next_id = 0usize;
+        for _ in 0..g.usize_in(1, 80) {
+            now += g.f64_in(0.0, 60.0);
+            if inflight.is_empty() || g.bool() {
+                let shard = g.usize_in(0, n_shards);
+                let tokens = g.f64_in(1.0, 2000.0);
+                let a = clean.submit(next_id, tokens, shard, now);
+                let b = faulted.submit(next_id, tokens, shard, now);
+                match (a, b) {
+                    (None, None) => {}
+                    (Some(ca), Some(fa)) => {
+                        assert_eq!(ca.id, fa.id);
+                        assert!(fa.finish_ms >= ca.finish_ms, "fault sped a request up");
+                        extension += fa.finish_ms - ca.finish_ms;
+                        inflight.push(ca.id);
+                    }
+                    _ => panic!("admission diverged at id {next_id}"),
+                }
+                next_id += 1;
+            } else {
+                let id = inflight.swap_remove(g.usize_in(0, inflight.len()));
+                let a = clean.on_finish(id, now);
+                let b = faulted.on_finish(id, now);
+                assert_eq!(a.len(), b.len(), "promotion counts diverged finishing {id}");
+                for (ca, fa) in a.iter().zip(&b) {
+                    assert_eq!(ca.id, fa.id);
+                    assert!(fa.finish_ms >= ca.finish_ms, "fault sped a promotion up");
+                    extension += fa.finish_ms - ca.finish_ms;
+                    inflight.push(ca.id);
+                }
+            }
+        }
+        let got = faulted.faulted_shard_ms();
+        assert!(
+            (got - extension).abs() <= 1e-6 * extension.max(1.0),
+            "faulted_shard_ms {got} != summed per-event extension {extension}"
+        );
     });
 }
