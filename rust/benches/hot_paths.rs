@@ -141,6 +141,30 @@ fn main() {
         pi += 8;
     });
 
+    // ---- dynamic window bound: earliest committed finish over the pool ----
+    // The partitioned executor's coordinator asks this once per shard per
+    // window; fill a 16-shard fleet to capacity (64 running per shard) so
+    // the query walks deep pending sets.
+    let mut epool = ProviderPool::new(&PoolCfg::split(ProviderCfg::default(), 16), Rng::new(7));
+    epool.set_finish_tracking(true);
+    let mut ebatch: Vec<(usize, f64, usize)> = Vec::new();
+    let mut estarted = Vec::new();
+    for b in 0..128usize {
+        ebatch.clear();
+        for k in 0..8usize {
+            let id = b * 8 + k;
+            ebatch.push((id, 400.0 + 40.0 * k as f64, id % 16));
+        }
+        estarted.clear();
+        epool.submit_batch(&ebatch, b as f64, &mut estarted);
+    }
+    suite.bench("pool: earliest_pending_finish (16 shards, 1k in flight)", || {
+        std::hint::black_box(epool.earliest_pending_finish());
+    });
+    suite.bench("pool: shard_earliest_pending_finish (64 in flight)", || {
+        std::hint::black_box(epool.shard_earliest_pending_finish(3));
+    });
+
     // ---- prior sources ----
     let reqs = WorkloadSpec::new(Mix::Balanced, 4096, 50.0).generate(5);
     let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(9));

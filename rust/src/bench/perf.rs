@@ -749,6 +749,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             "wall (ms)",
             "speedup",
             "windows",
+            "win/1k ev",
             "barriers",
             "ops replayed",
             "deliveries",
@@ -789,11 +790,17 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
             };
             wall_by_count.push((pcount, wall_ms));
             let ps = &o.partition;
+            let windows_per_1k = if o.diagnostics.events_processed > 0 {
+                ps.windows as f64 * 1_000.0 / o.diagnostics.events_processed as f64
+            } else {
+                0.0
+            };
             t.row([
                 format!("{pcount} ({} ran)", ps.partitions),
                 format!("{wall_ms:.1}"),
                 format!("{speedup:.2}x"),
                 ps.windows.to_string(),
+                format!("{windows_per_1k:.2}"),
                 ps.barrier_crossings.to_string(),
                 ps.ops_routed.to_string(),
                 ps.deliveries.to_string(),
@@ -802,7 +809,10 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                 Json::obj()
                     .set("partitions", pcount)
                     .set("partitions_effective", ps.partitions)
-                    .set("serial_fallback", ps.serial_fallback)
+                    .set(
+                        "serial_fallback",
+                        ps.serial_fallback.map(|r| r.as_str()).unwrap_or("none"),
+                    )
                     .set("requests", n)
                     .set("wall_ms", wall_ms)
                     .set("speedup", speedup)
@@ -817,6 +827,7 @@ pub fn run_scale_bench(opts: &ScaleBenchOpts) -> Result<()> {
                     )
                     .set("lookahead_ms", ps.lookahead_ms)
                     .set("windows", ps.windows)
+                    .set("windows_per_1k_events", windows_per_1k)
                     .set("barrier_crossings", ps.barrier_crossings)
                     .set("ops_routed", ps.ops_routed)
                     .set("deliveries", ps.deliveries)
@@ -1286,13 +1297,20 @@ mod tests {
         for r in runs {
             assert!(r.get("wall_ms").and_then(Json::as_f64).unwrap() >= 0.0);
             assert!(r.get("lookahead_ms").and_then(Json::as_f64).unwrap() > 0.0);
-            assert_eq!(r.get("serial_fallback"), Some(&Json::Bool(false)));
             let req = r.get("partitions").and_then(Json::as_usize).unwrap();
             let ran = r.get("partitions_effective").and_then(Json::as_usize).unwrap();
-            assert_eq!(ran, req, "no fallback: the parallel path must really run");
+            let fallback = r.get("serial_fallback").and_then(Json::as_str).unwrap();
             if req > 1 {
-                assert!(r.get("windows").and_then(Json::as_u64).unwrap() > 0);
+                assert_eq!(fallback, "none", "the parallel path must really run");
+                assert_eq!(ran, req, "no fallback: the parallel path must really run");
+                let windows = r.get("windows").and_then(Json::as_u64).unwrap();
+                assert!(windows > 0);
+                let per_1k = r.get("windows_per_1k_events").and_then(Json::as_f64).unwrap();
+                assert!(per_1k > 0.0 && per_1k.is_finite(), "windows_per_1k_events {per_1k}");
                 assert!(r.get("ops_routed").and_then(Json::as_u64).unwrap() > 0);
+            } else {
+                assert_eq!(fallback, "not_requested", "count 1 is serial by request");
+                assert_eq!(ran, 1);
             }
         }
         let scaling =

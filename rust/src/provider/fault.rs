@@ -14,9 +14,14 @@
 //! with the same f64 walk wherever the pool runs, so fault-afflicted runs
 //! stay byte-identical across `--jobs` and `--partitions`. Windows with
 //! speed ≤ 1 can only *extend* service, which keeps the partition lookahead
-//! floor valid; a speed-up brownout (`factor > 1`) can shorten service below
-//! the floor, so [`FaultPlan::extension_only`] lets the partitioner fall
-//! back to the flagged serial loop in that case (see `sim::partition`).
+//! floor valid — and because [`FaultPlan::adjusted_finish`] is monotone in
+//! both its start and service arguments, the partitioned loop's dynamic
+//! window bound can push each shard's floor *through* the fault walk, so an
+//! extension-only brownout or blackout now widens the window across the
+//! stalled span instead of merely permitting the static floor. A speed-up
+//! brownout (`factor > 1`) can shorten service below the floor, so
+//! [`FaultPlan::extension_only`] lets the partitioner fall back to the
+//! flagged serial loop in that case (see `sim::partition`).
 
 use anyhow::{bail, Result};
 
@@ -261,6 +266,37 @@ mod tests {
         // 10 full + stall + 10 full + 10@half=5 + finish after 40:
         // work done by t=40 is 25; remaining 15 at full speed → 55.
         assert_eq!(p.adjusted_finish(0, 0.0, 40.0), 55.0);
+    }
+
+    #[test]
+    fn adjusted_finish_is_monotone_in_start_and_service() {
+        // The dynamic partition bound evaluates `adjusted_finish(s, start,
+        // floor)` at a start no later than any real in-window start, with a
+        // service no larger than any real sampled service, and relies on the
+        // result lower-bounding every real adjusted finish. That is exactly
+        // monotonicity in both arguments, checked here over a dense grid
+        // spanning gaps, a brownout, and a blackout (including boundaries).
+        let p = FaultPlan::default()
+            .brownout(0, 10.0, 30.0, 0.25)
+            .unwrap()
+            .blackout(0, 50.0, 90.0)
+            .unwrap();
+        let grid: Vec<f64> = (0..=240).map(|i| i as f64 * 0.5).collect();
+        for win in grid.windows(2) {
+            let (a, b) = (win[0], win[1]);
+            for &svc in &[0.0, 1.0, 7.5, 25.0, 60.0, 200.0] {
+                // Later start never finishes earlier (same service)...
+                assert!(
+                    p.adjusted_finish(0, a, svc) <= p.adjusted_finish(0, b, svc),
+                    "start monotonicity at start {a}->{b}, svc {svc}"
+                );
+                // ...and more service never finishes earlier (same start).
+                assert!(
+                    p.adjusted_finish(0, a, svc) <= p.adjusted_finish(0, a, svc + 0.5),
+                    "service monotonicity at start {a}, svc {svc}"
+                );
+            }
+        }
     }
 
     #[test]

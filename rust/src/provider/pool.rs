@@ -16,7 +16,7 @@
 //! `Started` events — so every pre-pool experiment CSV stays valid. This is
 //! property-tested in `tests/pool_equivalence.rs`.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::core::ReqId;
 use crate::provider::fault::FaultPlan;
@@ -133,6 +133,16 @@ pub struct ProviderPool {
     fault_touched: Vec<bool>,
     /// Net service-time extension injected by faults (ms, lifetime sum).
     faulted_ms: f64,
+    /// Per-shard multiset of committed in-flight finish times (post-fault
+    /// bits → count), maintained only when `track_pending` is on. Keys are
+    /// non-negative `f64` bits, so `BTreeMap` order *is* numeric order and
+    /// the smallest key is the shard's earliest pending finish. A count is
+    /// needed because distinct requests can legitimately collide on the
+    /// exact same finish bits (identical token counts, σ = 0).
+    pending: Vec<BTreeMap<u64, u32>>,
+    /// Off by default so the serial hot path pays nothing; the partitioned
+    /// coordinator switches it on before the run starts.
+    track_pending: bool,
 }
 
 impl ProviderPool {
@@ -159,6 +169,7 @@ impl ProviderPool {
             );
         }
         let fault_touched = (0..shards.len()).map(|i| cfg.faults.touches(i)).collect();
+        let n = shards.len();
         ProviderPool {
             shards,
             assigned: HashMap::new(),
@@ -167,6 +178,52 @@ impl ProviderPool {
             faults: cfg.faults.clone(),
             fault_touched,
             faulted_ms: 0.0,
+            pending: vec![BTreeMap::new(); n],
+            track_pending: false,
+        }
+    }
+
+    /// Enable committed-finish tracking for the dynamic partition window
+    /// bound ([`ProviderPool::earliest_pending_finish`]). Must be called on
+    /// an idle pool: entries are recorded at start time, so anything already
+    /// running would be invisible to the bound and could make it unsafe.
+    pub fn set_finish_tracking(&mut self, on: bool) {
+        if on {
+            assert!(
+                self.total_running() == 0 && self.waiting_total == 0,
+                "finish tracking must be enabled before any work is submitted"
+            );
+        }
+        self.track_pending = on;
+        if !on {
+            for m in &mut self.pending {
+                m.clear();
+            }
+        }
+    }
+
+    /// Record a committed (post-fault) finish time for `shard`.
+    fn pending_insert(&mut self, shard: usize, finish_ms: f64) {
+        *self.pending[shard].entry(finish_ms.to_bits()).or_insert(0) += 1;
+    }
+
+    /// Retire one committed finish on `shard`. The event loop finishes at
+    /// the exact `f64` the pool handed out, so the bits match; callers that
+    /// finish at synthetic times (tests driving the pool by hand) fall back
+    /// to retiring the earliest entry, which keeps the multiset conservative.
+    fn pending_remove(&mut self, shard: usize, now: f64) {
+        let m = &mut self.pending[shard];
+        let key = if m.contains_key(&now.to_bits()) {
+            now.to_bits()
+        } else if let Some((&k, _)) = m.iter().next() {
+            k
+        } else {
+            return;
+        };
+        let c = m.get_mut(&key).expect("key just observed");
+        *c -= 1;
+        if *c == 0 {
+            m.remove(&key);
         }
     }
 
@@ -209,6 +266,11 @@ impl ProviderPool {
             self.peak_waiting_total = self.peak_waiting_total.max(self.waiting_total);
         }
         let started = started.map(|s| self.apply_faults(shard, now, s));
+        if self.track_pending {
+            if let Some(s) = started {
+                self.pending_insert(shard, s.finish_ms);
+            }
+        }
         if self.shards.len() > 1 {
             self.assigned.entry(id).or_default().push(Slot {
                 shard: shard as u32,
@@ -272,6 +334,12 @@ impl ProviderPool {
         } else {
             started
         };
+        if self.track_pending {
+            self.pending_remove(shard, now);
+            for s in &out {
+                self.pending_insert(shard, s.finish_ms);
+            }
+        }
         // Hidden-queued slots learn their finish time at promotion; fill in
         // FIFO order (first unstarted slot of that id on this shard).
         if self.shards.len() > 1 {
@@ -328,6 +396,39 @@ impl ProviderPool {
     /// `RunDiagnostics::faulted_shard_ms`.
     pub fn faulted_shard_ms(&self) -> f64 {
         self.faulted_ms
+    }
+
+    /// Earliest committed in-flight finish across the whole pool, or `None`
+    /// when nothing is running. Finish times here are *post-fault*: they are
+    /// the exact `ProviderDone` event times already handed out, so a
+    /// partition window bounded by them never admits an uncommitted start.
+    /// Requires [`ProviderPool::set_finish_tracking`]; panics otherwise, so
+    /// a misconfigured coordinator fails loudly instead of computing an
+    /// unsafe bound from an empty multiset.
+    pub fn earliest_pending_finish(&self) -> Option<f64> {
+        assert!(self.track_pending, "earliest_pending_finish needs finish tracking enabled");
+        self.pending
+            .iter()
+            .filter_map(|m| m.keys().next().copied())
+            .min()
+            .map(f64::from_bits)
+    }
+
+    /// Earliest committed in-flight finish on one shard (see
+    /// [`ProviderPool::earliest_pending_finish`]).
+    pub fn shard_earliest_pending_finish(&self, shard: usize) -> Option<f64> {
+        assert!(self.track_pending, "earliest_pending_finish needs finish tracking enabled");
+        self.pending[shard].keys().next().copied().map(f64::from_bits)
+    }
+
+    /// Free generation slots on `shard` right now. A shard with free slots
+    /// can start *new* work at any submission instant, so the dynamic
+    /// window bound must fall back to the static floor from the window
+    /// start for it; a saturated shard cannot start anything before its
+    /// earliest committed finish.
+    pub fn shard_free_slots(&self, shard: usize) -> usize {
+        let s = &self.shards[shard];
+        s.cfg().max_concurrency.saturating_sub(s.running())
     }
 }
 
@@ -499,5 +600,75 @@ mod tests {
         let faults = FaultPlan::default().blackout(5, 0.0, 10.0).unwrap();
         let pool_cfg = PoolCfg { shards: vec![cfg(1), cfg(1)], faults };
         ProviderPool::new(&pool_cfg, Rng::new(1));
+    }
+
+    #[test]
+    fn pending_finish_tracking_follows_starts_and_promotions() {
+        let pool_cfg = PoolCfg { shards: vec![cfg(1), cfg(2)], faults: FaultPlan::default() };
+        let mut pool = ProviderPool::new(&pool_cfg, Rng::new(11));
+        pool.set_finish_tracking(true);
+        assert_eq!(pool.earliest_pending_finish(), None);
+        let a = pool.submit(0, 50.0, 0, 0.0).unwrap();
+        let b = pool.submit(1, 200.0, 1, 0.0).unwrap();
+        assert!(pool.submit(2, 50.0, 0, 0.0).is_none()); // hidden-queued: not pending
+        let earliest = a.finish_ms.min(b.finish_ms);
+        assert_eq!(pool.earliest_pending_finish().unwrap().to_bits(), earliest.to_bits());
+        assert_eq!(
+            pool.shard_earliest_pending_finish(0).unwrap().to_bits(),
+            a.finish_ms.to_bits()
+        );
+        assert_eq!(pool.shard_free_slots(0), 0);
+        assert_eq!(pool.shard_free_slots(1), 1);
+        // Finishing id 0 retires its entry and records the promotion of id 2.
+        let promoted = pool.on_finish(0, a.finish_ms);
+        assert_eq!(promoted.len(), 1);
+        assert_eq!(
+            pool.shard_earliest_pending_finish(0).unwrap().to_bits(),
+            promoted[0].finish_ms.to_bits()
+        );
+        pool.on_finish(1, b.finish_ms);
+        pool.on_finish(2, promoted[0].finish_ms);
+        assert_eq!(pool.earliest_pending_finish(), None);
+        assert_eq!(pool.shard_free_slots(0), 1);
+    }
+
+    #[test]
+    fn pending_finish_entries_are_post_fault_times() {
+        // The tracked entry must be the *adjusted* finish the event loop
+        // will pop, not the nominal sample — otherwise the dynamic bound
+        // would run ahead of a blacked-out shard's real completions.
+        let faults = FaultPlan::default().blackout(0, 0.0, 1_000.0).unwrap();
+        let pool_cfg = PoolCfg { shards: vec![cfg(2), cfg(2)], faults };
+        let mut pool = ProviderPool::new(&pool_cfg, Rng::new(4));
+        pool.set_finish_tracking(true);
+        let s = pool.submit(0, 100.0, 0, 0.0).unwrap();
+        assert!(s.finish_ms >= 1_000.0);
+        assert_eq!(pool.earliest_pending_finish().unwrap().to_bits(), s.finish_ms.to_bits());
+    }
+
+    #[test]
+    fn pending_finish_counts_exact_bit_collisions() {
+        // σ = 0 and identical token counts: two requests share the same
+        // finish bits. The multiset must survive retiring one of them.
+        let nojit = ProviderCfg { slowdown_gamma: 0.0, ..cfg(2) };
+        let pool_cfg = PoolCfg { shards: vec![nojit], faults: FaultPlan::default() };
+        let mut pool = ProviderPool::new(&pool_cfg, Rng::new(5));
+        pool.set_finish_tracking(true);
+        let a = pool.submit(0, 100.0, 0, 0.0).unwrap();
+        let b = pool.submit(1, 100.0, 0, 0.0).unwrap();
+        assert_eq!(a.finish_ms.to_bits(), b.finish_ms.to_bits());
+        pool.on_finish(0, a.finish_ms);
+        assert_eq!(pool.earliest_pending_finish().unwrap().to_bits(), b.finish_ms.to_bits());
+        pool.on_finish(1, b.finish_ms);
+        assert_eq!(pool.earliest_pending_finish(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "before any work is submitted")]
+    fn finish_tracking_cannot_be_enabled_mid_run() {
+        let pool_cfg = PoolCfg { shards: vec![cfg(2)], faults: FaultPlan::default() };
+        let mut pool = ProviderPool::new(&pool_cfg, Rng::new(6));
+        pool.submit(0, 100.0, 0, 0.0);
+        pool.set_finish_tracking(true);
     }
 }

@@ -275,6 +275,26 @@ impl SchedulerCfg {
             retry: RetryCfg::disabled(),
         }
     }
+
+    /// Whether a scheduler built from this config makes every per-request
+    /// decision independently of every other request — i.e. two fresh
+    /// clones fed disjoint request subsets decide bit-identically to one
+    /// instance fed the union.
+    ///
+    /// This is what lets the partitioned event loop carve a single-tenant
+    /// run into contiguous request-id ranges (`sim/partition.rs`): each
+    /// worker drives its own clone. It holds only for `DirectNaive`
+    /// (dispatch immediately, no queues, no pacing budget consulted, no
+    /// ordering or overload state) on a single-shard fleet (the one
+    /// selector that draws no state) with recalibration off (the
+    /// recalibrator learns cross-request multipliers). Client retries stay
+    /// request-local either way: backoff is a deterministic per-attempt
+    /// function and attempt counts live per request in the driver.
+    pub fn request_local(&self) -> bool {
+        matches!(self.strategy, StrategyKind::DirectNaive)
+            && !self.recalibrate
+            && self.shards.n == 1
+    }
 }
 
 /// Scheduler output the driver must act on.

@@ -349,11 +349,14 @@ impl ShardSelector {
 /// (the first `n_items % n_parts` ranges get one extra item).
 ///
 /// This is the deterministic partition map for the partitioned event loop
-/// (`sim::partition`): tenants are carved with it, and because selector
-/// state — in-flight counts, tail EWMAs, hash affinity — is entirely
-/// tenant-local (nothing here aggregates across tenants), carving tenants
-/// into partitions needs no selector-state merge at all: each partition
-/// carries its tenants' selectors untouched, bit-identical to serial.
+/// (`sim::partition`), applied at two granularities. Multi-tenant runs
+/// carve *tenants*: selector state — in-flight counts, tail EWMAs, hash
+/// affinity — is entirely tenant-local (nothing here aggregates across
+/// tenants), so each partition carries its tenants' selectors untouched,
+/// bit-identical to serial. Single-tenant request-local runs
+/// (`SchedulerCfg::request_local`) carve *request ids* with the same map:
+/// per-request decisions draw no cross-request state, so contiguous
+/// arrival-order ranges split just as cleanly.
 pub fn carve(n_items: usize, n_parts: usize) -> Vec<(usize, usize)> {
     assert!(n_parts >= 1, "need at least one part");
     let base = n_items / n_parts;

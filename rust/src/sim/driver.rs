@@ -114,6 +114,10 @@ pub struct RunOutput {
     pub outcomes: Vec<RequestOutcome>,
     /// Engine-level diagnostics beyond the metrics.
     pub diagnostics: RunDiagnostics,
+    /// Partitioned-execution accounting (window/barrier/mailbox counters).
+    /// `partitions == 1` for serial runs; never affects `diagnostics` or
+    /// `outcomes` — the single-tenant carve is bit-identical to serial.
+    pub partition: crate::sim::partition::PartitionStats,
 }
 
 /// Simulate one run to completion against a single provider endpoint.
@@ -231,8 +235,12 @@ pub(crate) trait ShardFabric {
     /// A `ProviderDone` popped: retire the submission, promote hidden work.
     fn finish(&mut self, id: ReqId, now: f64, q: &mut EventQueue<Ev>);
     /// The tick is fully applied; `depth` is this loop's scheduler queue
-    /// depth after it.
-    fn end_tick(&mut self, now: f64, depth: usize);
+    /// depth after it, `inflight` the tick-owning tenant's in-flight count,
+    /// and `sent` whether the tick released at least one Send. The serial
+    /// fabric folds only `depth`; the partition fabric buffers all three so
+    /// the coordinator can re-derive serial-exact diagnostics from the
+    /// merged sample stream.
+    fn end_tick(&mut self, now: f64, depth: usize, inflight: usize, sent: bool);
 }
 
 /// Direct pool access plus the inline depth fold: the serial reference
@@ -265,7 +273,7 @@ impl ShardFabric for SerialFabric<'_> {
             q.push(started.finish_ms, Ev::ProviderDone(started.id));
         }
     }
-    fn end_tick(&mut self, now: f64, depth: usize) {
+    fn end_tick(&mut self, now: f64, depth: usize, _inflight: usize, _sent: bool) {
         self.fold.observe(now, depth);
     }
 }
@@ -429,6 +437,7 @@ pub(crate) fn process_tick<F: ShardFabric>(
     // the provider may queue it internally). Contiguous Sends are
     // dispatched as one batch; the batch flushes before any action that
     // pushes an event, preserving per-action event order exactly.
+    let mut sent = false;
     for a in actions.iter() {
         match *a {
             Action::Send { id, shard } => {
@@ -438,6 +447,7 @@ pub(crate) fn process_tick<F: ShardFabric>(
                 st.sends += 1;
                 st.sends_by_tenant[tenant] += 1;
                 st.peak_inflight = st.peak_inflight.max(schedulers[tenant].state().inflight());
+                sent = true;
                 fabric.send(id, requests[id].true_output_tokens as f64, shard, now, q);
             }
             Action::Retry { id, at_ms } => {
@@ -466,7 +476,7 @@ pub(crate) fn process_tick<F: ShardFabric>(
     }
     fabric.flush(now, q);
     let depth = schedulers.iter().map(|s| s.queued()).sum();
-    fabric.end_tick(now, depth);
+    fabric.end_tick(now, depth, schedulers[tenant].state().inflight(), sent);
 }
 
 /// The shared DES loop: pop events, feed the owning tenant's scheduler,
@@ -604,17 +614,55 @@ fn reconcile_shards(sched_cfg: &mut SchedulerCfg, pool_cfg: &PoolCfg) {
 pub fn run_pool(
     requests: &[Request],
     prior_source: &mut dyn PriorSource,
+    sched_cfg: SchedulerCfg,
+    pool_cfg: &PoolCfg,
+    seed: u64,
+) -> RunOutput {
+    run_pool_partitioned(
+        requests,
+        prior_source,
+        sched_cfg,
+        pool_cfg,
+        seed,
+        crate::sim::partition::default_partitions(),
+    )
+}
+
+/// [`run_pool`] with an explicit partition count for the event loop.
+///
+/// Single-tenant runs partition by carving **contiguous request-id
+/// ranges** across workers — available exactly when the scheduler stack is
+/// request-local ([`SchedulerCfg::request_local`]); stateful stacks take
+/// the flagged serial fallback
+/// (`FallbackReason::StatefulCarve`). Outputs are bit-identical to the
+/// serial loop either way; `RunOutput::partition` records what actually
+/// ran. `partitions == 0` means one partition per core.
+pub fn run_pool_partitioned(
+    requests: &[Request],
+    prior_source: &mut dyn PriorSource,
     mut sched_cfg: SchedulerCfg,
     pool_cfg: &PoolCfg,
     seed: u64,
+    partitions: usize,
 ) -> RunOutput {
     reconcile_shards(&mut sched_cfg, pool_cfg);
     let mut schedulers = vec![ClientScheduler::new(sched_cfg)];
     let mut provider = ProviderPool::new(pool_cfg, Rng::new(seed).derive("provider"));
     let priors: Vec<(Priors, Route)> = requests.iter().map(|r| prior_source.priors(r)).collect();
     let owner = vec![0u32; requests.len()];
+    let ranges = [(0usize, requests.len())];
 
-    let core = run_core(requests, &priors, &owner, &mut schedulers, &mut provider);
+    let (core, partition) = crate::sim::partition::run_core_partitioned(
+        requests,
+        &priors,
+        &owner,
+        &ranges,
+        &mut schedulers,
+        &mut provider,
+        pool_cfg,
+        partitions,
+        crate::sim::partition::WindowBound::Dynamic,
+    );
 
     let outcomes = build_outcomes(requests, &core);
     let scheduler = &schedulers[0];
@@ -643,6 +691,7 @@ pub fn run_pool(
             retries_scheduled: core.retries_scheduled,
             faulted_shard_ms: provider.faulted_shard_ms(),
         },
+        partition,
     }
 }
 
@@ -765,15 +814,39 @@ pub fn run_tenants(tenants: &[TenantSpec], pool_cfg: &PoolCfg, seed: u64) -> Mul
 /// parallel under conservative time-window synchronization — see
 /// [`crate::sim::partition`] for the protocol and the bit-compat contract
 /// (outputs are bit-identical to serial). `partitions == 0` means one
-/// partition per core. The effective count is capped by the tenant count,
-/// and configurations without a positive service-time floor (zero
-/// lookahead) fall back to serial — `MultiRunOutput::partition` records
-/// what actually ran.
+/// partition per core. The effective count is capped by the tenant count
+/// (except single-tenant request-local runs, which carve request-id
+/// ranges), and impossible configurations fall back to serial —
+/// `MultiRunOutput::partition` records what ran and why
+/// (`FallbackReason`).
 pub fn run_tenants_partitioned(
     tenants: &[TenantSpec],
     pool_cfg: &PoolCfg,
     seed: u64,
     partitions: usize,
+) -> MultiRunOutput {
+    run_tenants_partitioned_with_bound(
+        tenants,
+        pool_cfg,
+        seed,
+        partitions,
+        crate::sim::partition::WindowBound::Dynamic,
+    )
+}
+
+/// [`run_tenants_partitioned`] with an explicit window-bound policy.
+///
+/// `WindowBound::Dynamic` (what every other entry point uses) negotiates
+/// each window's end from the live pool state; `WindowBound::StaticFloor`
+/// is the original fixed-floor baseline, kept so tests can assert the
+/// dynamic bound executes strictly fewer windows on the same workload
+/// while both stay bit-identical to serial.
+pub fn run_tenants_partitioned_with_bound(
+    tenants: &[TenantSpec],
+    pool_cfg: &PoolCfg,
+    seed: u64,
+    partitions: usize,
+    bound: crate::sim::partition::WindowBound,
 ) -> MultiRunOutput {
     assert!(!tenants.is_empty(), "need at least one tenant");
     let mut all_requests: Vec<Request> = Vec::new();
@@ -821,6 +894,7 @@ pub fn run_tenants_partitioned(
         &mut provider,
         pool_cfg,
         partitions,
+        bound,
     );
 
     let tenants_out: Vec<TenantOutput> = ranges

@@ -8,12 +8,19 @@
 //! **conservative time-window synchronization** (the classic
 //! Chandy–Misra–Bryant lookahead discipline):
 //!
-//! * **Partition map.** Tenants are carved into `P` balanced contiguous
-//!   groups ([`crate::scheduler::shard::carve`]). Because request ids are
-//!   assigned tenant-major at setup, each partition owns a contiguous id
-//!   range, and the global per-request arrays split into disjoint `&mut`
-//!   windows — no locks on the hot path. All scheduler state is
-//!   tenant-local (selector EWMAs included), so it partitions cleanly.
+//! * **Partition map.** Multi-tenant runs carve tenants into `P` balanced
+//!   contiguous groups ([`crate::scheduler::shard::carve`]). Because
+//!   request ids are assigned tenant-major at setup, each partition owns a
+//!   contiguous id range, and the global per-request arrays split into
+//!   disjoint `&mut` windows — no locks on the hot path. All scheduler
+//!   state is tenant-local (selector EWMAs included), so it partitions
+//!   cleanly. Single-tenant runs carve **contiguous request-id ranges**
+//!   instead when the configured stack is request-local
+//!   ([`crate::scheduler::SchedulerCfg::request_local`]): each worker runs
+//!   a fresh scheduler clone whose per-request decisions are independent
+//!   of every other request, so the carve changes nothing observable.
+//!   Stateful single-tenant stacks take the flagged serial fallback
+//!   ([`FallbackReason::StatefulCarve`]).
 //!
 //! * **Lookahead.** The only cross-partition coupling is the shared
 //!   provider pool, and the pool cannot *reorder* the past: a submission
@@ -22,6 +29,23 @@
 //!   Within a window `[W, W + L)` every partition can therefore advance
 //!   independently: no provider completion generated inside the window
 //!   can land inside it.
+//!
+//! * **Dynamic window bound.** The static floor is the worst case *ever*;
+//!   the coordinator knows the current pool state at every window start
+//!   and negotiates a per-window bound from it ([`WindowBound::Dynamic`],
+//!   the default). For each shard it takes the earliest instant any *new*
+//!   (not-yet-committed) completion could be created — the window start
+//!   `W` if the shard has free slots, else its earliest committed
+//!   in-flight finish `E_s` (slots free only at committed finish times,
+//!   and a saturated shard's hidden-queue promotions start exactly there)
+//!   — and pushes that shard's own floor through the fault plan's
+//!   `adjusted_finish` walk. The window end is the minimum over shards,
+//!   which always dominates `W + L` and, under saturation, long services,
+//!   or an extension-only brownout, is *much* larger: calm stretches
+//!   advance in a handful of windows instead of thousands of floor-sized
+//!   ones. Safety: in-flight finishes are already committed `f64` event
+//!   times, so the bound never admits an uncommitted start (the full
+//!   argument lives in `docs/ARCHITECTURE.md`).
 //!
 //! * **Mailbox protocol.** Partition workers never touch the pool.
 //!   Each tick records its shard ops (submit / finish) with their
@@ -51,11 +75,14 @@
 //! over the merged `(time, depth)` sample stream (`driver::DepthFold`), so
 //! `RunDiagnostics` is identical regardless of partition count.
 //!
-//! Degenerate configurations fall back to the serial reference loop:
-//! an effective partition count below 2, or a fleet with no positive
-//! service-time floor (`base_ms == 0` — zero lookahead would deadlock the
-//! window protocol). [`PartitionStats::serial_fallback`] records the
-//! latter, so callers can tell "asked serial" from "couldn't partition".
+//! Degenerate configurations fall back to the serial reference loop, and
+//! [`PartitionStats::serial_fallback`] records *why* as a
+//! [`FallbackReason`]: serial was asked for (`NotRequested`), the fault
+//! plan contains a speed-up window (`SpeedupFault`), the fleet has no
+//! positive service-time floor (`NoFloor` — zero lookahead would deadlock
+//! the window protocol), or a single-tenant run's scheduler state cannot
+//! be carved by request range (`StatefulCarve`). A silently-serialized
+//! "parallel" run is therefore diagnosable instead of just slow.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -63,10 +90,11 @@ use std::sync::{Mutex, MutexGuard};
 
 use crate::core::{Priors, ReqId, Request, RequestStatus};
 use crate::predictor::Route;
+use crate::provider::fault::FaultPlan;
 use crate::provider::pool::{PoolCfg, ProviderPool};
-use crate::provider::Started;
+use crate::provider::{ProviderCfg, Started};
 use crate::scheduler::shard::carve;
-use crate::scheduler::{Action, ClientScheduler};
+use crate::scheduler::{Action, ClientScheduler, SchedulerCfg};
 use crate::sim::driver::{self, process_tick, CoreRun, DepthFold, Ev, LoopState, ShardFabric};
 use crate::sim::{EventQueue, TimerId};
 use crate::util::pool::{default_jobs, scoped_workers, SpinBarrier};
@@ -120,25 +148,91 @@ pub fn lookahead_floor_ms(cfg: &PoolCfg) -> Option<f64> {
     }
     let mut floor = f64::INFINITY;
     for shard in &cfg.shards {
-        let valid = shard.base_ms > 0.0
-            && shard.per_token_ms >= 0.0
-            && shard.jitter_sigma >= 0.0
-            && shard.slowdown_gamma >= 0.0;
-        if !valid {
-            return None; // NaNs fail the comparisons too
-        }
-        let mut f = shard.base_ms;
-        if shard.jitter_sigma > 0.0 {
-            f *= (-shard.jitter_sigma * Z_BOUND).exp();
-            f *= 1.0 - 1e-9;
-        }
-        floor = floor.min(f);
+        floor = floor.min(shard_floor_ms(shard)?);
     }
-    if floor.is_finite() && floor > MIN_LOOKAHEAD_MS {
+    if floor.is_finite() {
         Some(floor)
     } else {
         None
     }
+}
+
+/// One shard's service-time floor: a lower bound on any service time that
+/// shard can sample (same analysis as [`lookahead_floor_ms`], which is the
+/// fleet minimum of these), or `None` for degenerate physics. Fault
+/// windows do not enter here — the dynamic bound pushes this floor through
+/// [`FaultPlan::adjusted_finish`] per shard instead.
+fn shard_floor_ms(shard: &ProviderCfg) -> Option<f64> {
+    let valid = shard.base_ms > 0.0
+        && shard.per_token_ms >= 0.0
+        && shard.jitter_sigma >= 0.0
+        && shard.slowdown_gamma >= 0.0;
+    if !valid {
+        return None; // NaNs fail the comparisons too
+    }
+    let mut f = shard.base_ms;
+    if shard.jitter_sigma > 0.0 {
+        f *= (-shard.jitter_sigma * Z_BOUND).exp();
+        f *= 1.0 - 1e-9;
+    }
+    if f.is_finite() && f > MIN_LOOKAHEAD_MS {
+        Some(f)
+    } else {
+        None
+    }
+}
+
+/// Why the partition executor ran the serial reference loop instead of the
+/// parallel path. Recorded in [`PartitionStats::serial_fallback`]
+/// (`None` = the parallel path ran) and surfaced in BENCH.json, so a
+/// silently-serialized run is diagnosable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FallbackReason {
+    /// Fewer than 2 effective partitions were requested (or the run is too
+    /// small to split) — serial is what was asked for.
+    NotRequested,
+    /// The fault plan has a speed-up window (`factor > 1`), which can
+    /// finish work below every service-time floor; no conservative bound
+    /// exists.
+    SpeedupFault,
+    /// The fleet admits (near-)zero service times (`base_ms == 0`, NaN
+    /// physics, …): no positive lookahead floor, and a zero-length window
+    /// would deadlock the protocol.
+    NoFloor,
+    /// A single-tenant run whose scheduler stack keeps cross-request state
+    /// (see [`SchedulerCfg::request_local`]) — carving its requests would
+    /// change scheduling decisions, so bit-identity forces serial.
+    StatefulCarve,
+}
+
+impl FallbackReason {
+    /// Stable lowercase token for BENCH.json and log lines.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FallbackReason::NotRequested => "not_requested",
+            FallbackReason::SpeedupFault => "speedup_fault",
+            FallbackReason::NoFloor => "no_floor",
+            FallbackReason::StatefulCarve => "stateful_carve",
+        }
+    }
+}
+
+/// How the coordinator bounds each window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowBound {
+    /// Negotiate each window's end from the current pool state: per shard,
+    /// the earliest instant a new completion could be committed (window
+    /// start with free slots, earliest committed in-flight finish when
+    /// saturated), plus that shard's own floor, pushed through the fault
+    /// plan. Always at least as wide as [`WindowBound::StaticFloor`]; the
+    /// default everywhere.
+    Dynamic,
+    /// Every window is exactly the static fleet floor
+    /// ([`lookahead_floor_ms`]) long — the original conservative baseline,
+    /// kept as the reference for window-count comparisons
+    /// (`tests/partition_equivalence.rs` asserts Dynamic strictly wins in
+    /// the regimes that matter).
+    StaticFloor,
 }
 
 /// What the partition executor actually did for one run — recorded on
@@ -161,19 +255,34 @@ pub struct PartitionStats {
     /// Times a partition stopped at an event *exactly* on its window
     /// boundary (processed next window — the lookahead bound is strict).
     pub boundary_deferrals: u64,
-    /// `true` when >= 2 partitions were requested but the fleet has no
-    /// positive service-time floor, forcing the serial loop.
-    pub serial_fallback: bool,
-    /// The conservative window length used (0 when no floor exists).
+    /// Why the serial reference loop ran instead of the parallel path
+    /// (`None` = the parallel path ran).
+    pub serial_fallback: Option<FallbackReason>,
+    /// The static fleet floor (ms) — every dynamic window is at least this
+    /// long (0 when no floor exists).
     pub lookahead_ms: f64,
 }
 
 /// A partition worker's provider seam: record stamped shard ops for the
 /// coordinator's replay instead of touching the pool, and buffer the
-/// per-tick depth samples for the merged diagnostics fold.
+/// per-tick samples for the merged diagnostics folds.
 struct PartitionFabric {
     ops: Vec<StampedOp>,
-    samples: Vec<(f64, usize)>,
+    samples: Vec<TickSample>,
+}
+
+/// One end-of-tick observation a partition publishes for the coordinator's
+/// merged diagnostics folds: the loop's queue depth (the serial
+/// `DepthFold` stream) plus, for the single-tenant request-range carve,
+/// the local in-flight count and whether this tick sent — the serial
+/// `peak_inflight` is re-derived exactly from the merged stream (see the
+/// coordinator).
+#[derive(Debug, Clone, Copy)]
+struct TickSample {
+    time: f64,
+    depth: usize,
+    inflight: usize,
+    sent: bool,
 }
 
 /// One shard op with the virtual time it happened at. In-stream order is
@@ -205,8 +314,8 @@ impl ShardFabric for PartitionFabric {
     fn finish(&mut self, id: ReqId, now: f64, _q: &mut EventQueue<Ev>) {
         self.ops.push(StampedOp { time: now, op: ShardOp::Finish { id } });
     }
-    fn end_tick(&mut self, now: f64, depth: usize) {
-        self.samples.push((now, depth));
+    fn end_tick(&mut self, now: f64, depth: usize, inflight: usize, sent: bool) {
+        self.samples.push(TickSample { time: now, depth, inflight, sent });
     }
 }
 
@@ -217,19 +326,22 @@ impl ShardFabric for PartitionFabric {
 #[derive(Default)]
 struct Slot {
     ops: Vec<StampedOp>,
-    samples: Vec<(f64, usize)>,
+    samples: Vec<TickSample>,
     deliveries: Vec<(f64, ReqId)>,
     peek: Option<f64>,
 }
 
 /// The per-partition `&mut` windows into the run's global arrays, claimed
-/// once by the owning worker.
+/// once by the owning worker. In the single-tenant request-range carve the
+/// scheduler windows are `None`: each worker runs its own fresh scheduler
+/// clone (the stack is request-local, so a clone decides identically) and
+/// its sends are summed back into the global array at join.
 struct PartMut<'a> {
-    schedulers: &'a mut [ClientScheduler],
+    schedulers: Option<&'a mut [ClientScheduler]>,
     status: &'a mut [RequestStatus],
     latency: &'a mut [Option<f64>],
     defer_counts: &'a mut [u32],
-    sends_by_tenant: &'a mut [u64],
+    sends_by_tenant: Option<&'a mut [u64]>,
 }
 
 /// Scalars each worker accumulates privately and returns at join.
@@ -250,6 +362,9 @@ struct CoordOut {
     barrier_crossings: u64,
     ops_routed: u64,
     deliveries: u64,
+    /// Serial-exact `peak_inflight` for the single-tenant request-range
+    /// carve, folded from the merged sample stream (unused otherwise).
+    peak_inflight: usize,
     panic: Option<Box<dyn std::any::Any + Send>>,
 }
 
@@ -305,9 +420,10 @@ fn route(
 }
 
 /// Run the DES across `partitions` event loops (see the module docs), or
-/// fall back to the serial [`driver::run_core`] when the effective count
-/// is < 2 or the fleet has no lookahead. Returns the same [`CoreRun`] the
-/// serial loop would — bit-identical — plus what the executor did.
+/// fall back to the serial [`driver::run_core`] when partitioning was not
+/// requested or is impossible ([`PartitionStats::serial_fallback`] says
+/// which). Returns the same [`CoreRun`] the serial loop would —
+/// bit-identical — plus what the executor did.
 #[allow(clippy::too_many_arguments)] // the run's full working set, threaded explicitly
 pub(crate) fn run_core_partitioned(
     requests: &[Request],
@@ -318,16 +434,35 @@ pub(crate) fn run_core_partitioned(
     provider: &mut ProviderPool,
     pool_cfg: &PoolCfg,
     partitions: usize,
+    bound: WindowBound,
 ) -> (CoreRun, PartitionStats) {
     let n_tenants = schedulers.len();
     let requested = if partitions == 0 { default_jobs() } else { partitions };
-    let p = requested.min(n_tenants);
+    // Multi-tenant runs never split below one tenant per partition; a
+    // single-tenant run carves contiguous request-id ranges instead,
+    // provided its scheduler stack is request-local.
+    let split_single = n_tenants == 1 && requested >= 2;
+    let p = if split_single { requested.min(requests.len()) } else { requested.min(n_tenants) };
     let floor = lookahead_floor_ms(pool_cfg);
-    if p < 2 || floor.is_none() {
+    // Checked most-specific first, so `SpeedupFault` is distinguishable
+    // from a genuinely floorless fleet (`lookahead_floor_ms` conflates the
+    // two in its return value).
+    let fallback = if p < 2 {
+        Some(FallbackReason::NotRequested)
+    } else if !pool_cfg.faults.extension_only() {
+        Some(FallbackReason::SpeedupFault)
+    } else if floor.is_none() {
+        Some(FallbackReason::NoFloor)
+    } else if split_single && !schedulers[0].cfg().request_local() {
+        Some(FallbackReason::StatefulCarve)
+    } else {
+        None
+    };
+    if let Some(reason) = fallback {
         let core = driver::run_core(requests, priors, owner, schedulers, provider);
         let stats = PartitionStats {
             partitions: 1,
-            serial_fallback: p >= 2 && floor.is_none(),
+            serial_fallback: Some(reason),
             lookahead_ms: floor.unwrap_or(0.0),
             ..PartitionStats::default()
         };
@@ -340,8 +475,11 @@ pub(crate) fn run_core_partitioned(
         tenant_ranges,
         schedulers,
         provider,
+        pool_cfg,
         p,
         floor.expect("checked above"),
+        bound,
+        split_single,
     )
 }
 
@@ -353,21 +491,51 @@ fn run_partitioned(
     tenant_ranges: &[(usize, usize)],
     schedulers: &mut [ClientScheduler],
     provider: &mut ProviderPool,
+    pool_cfg: &PoolCfg,
     p: usize,
     lookahead_ms: f64,
+    bound: WindowBound,
+    split_single: bool,
 ) -> (CoreRun, PartitionStats) {
     let n = requests.len();
     let n_tenants = schedulers.len();
-    debug_assert!(p >= 2 && p <= n_tenants);
+    debug_assert!(p >= 2 && (split_single || p <= n_tenants));
 
-    // The partition map: balanced contiguous tenant groups; request-id
-    // ranges follow because ids are tenant-major.
-    let tenant_parts = carve(n_tenants, p);
-    let req_parts: Vec<(usize, usize)> = tenant_parts
-        .iter()
-        .map(|&(tlo, thi)| (tenant_ranges[tlo].0, tenant_ranges[thi - 1].1))
-        .collect();
+    // The partition map: balanced contiguous tenant groups (request-id
+    // ranges follow because ids are tenant-major), or — for the
+    // single-tenant request-local carve — balanced contiguous request-id
+    // ranges directly.
+    let tenant_parts = if split_single { Vec::new() } else { carve(n_tenants, p) };
+    let req_parts: Vec<(usize, usize)> = if split_single {
+        carve(n, p)
+    } else {
+        tenant_parts
+            .iter()
+            .map(|&(tlo, thi)| (tenant_ranges[tlo].0, tenant_ranges[thi - 1].1))
+            .collect()
+    };
     debug_assert_eq!(req_parts.last().map(|r| r.1), Some(n));
+
+    // Shard-level inputs to the dynamic window bound. Every shard has a
+    // floor here (the fleet floor exists) and the fault plan is
+    // extension-only (both checked by the caller).
+    let shard_floors: Vec<f64> = pool_cfg
+        .shards
+        .iter()
+        .map(|s| shard_floor_ms(s).expect("caller checked the fleet floor"))
+        .collect();
+    let faults: &FaultPlan = &pool_cfg.faults;
+    let fault_touched: Vec<bool> = (0..pool_cfg.shards.len()).map(|s| faults.touches(s)).collect();
+    if bound == WindowBound::Dynamic {
+        // The pool keeps a per-shard multiset of committed in-flight finish
+        // times for `shard_earliest_pending_finish`; enabled only for the
+        // duration of this run.
+        provider.set_finish_tracking(true);
+    }
+    // The config each split worker builds its private scheduler clone from
+    // (request-local: a clone decides identically, see `run_core_partitioned`).
+    let split_cfg: Option<SchedulerCfg> =
+        if split_single { Some(schedulers[0].cfg().clone()) } else { None };
 
     let mut status = vec![RequestStatus::Queued; n];
     let mut latency: Vec<Option<f64>> = vec![None; n];
@@ -375,10 +543,12 @@ fn run_partitioned(
     let mut sends_by_tenant = vec![0u64; n_tenants];
 
     let slots: Vec<Mutex<Slot>> = (0..p).map(|_| Mutex::new(Slot::default())).collect();
-    // Coordinator → workers: the next window start (f64 bits) and the two
+    // Coordinator → workers: the next window's start and end (f64 bits;
+    // the end is negotiated per window, see the coordinator) and the two
     // stop signals. `abort` is set by a panicking worker *before* its
     // barrier arrival so siblings are released instead of deadlocking.
     let w_bits = AtomicU64::new(0);
+    let end_bits = AtomicU64::new(0);
     let done = AtomicBool::new(false);
     let abort = AtomicBool::new(false);
     // Two barriers per window: `release` starts a round (workers may read
@@ -389,27 +559,47 @@ fn run_partitioned(
 
     let (worker_outs, coord) = {
         let parts: Vec<Mutex<Option<PartMut<'_>>>> = {
-            let sched_chunks = split_chunks(&mut *schedulers, &tenant_parts);
             let status_chunks = split_chunks(&mut status[..], &req_parts);
             let latency_chunks = split_chunks(&mut latency[..], &req_parts);
             let defer_chunks = split_chunks(&mut defer_counts[..], &req_parts);
-            let sbt_chunks = split_chunks(&mut sends_by_tenant[..], &tenant_parts);
-            sched_chunks
-                .into_iter()
-                .zip(status_chunks)
-                .zip(latency_chunks)
-                .zip(defer_chunks)
-                .zip(sbt_chunks)
-                .map(|((((sch, st), lat), def), sbt)| {
-                    Mutex::new(Some(PartMut {
-                        schedulers: sch,
-                        status: st,
-                        latency: lat,
-                        defer_counts: def,
-                        sends_by_tenant: sbt,
-                    }))
-                })
-                .collect()
+            if split_single {
+                // Request-range carve: the one real scheduler and the
+                // global send counter stay untouched — each worker runs a
+                // private clone and its sends are summed back at join.
+                status_chunks
+                    .into_iter()
+                    .zip(latency_chunks)
+                    .zip(defer_chunks)
+                    .map(|((st, lat), def)| {
+                        Mutex::new(Some(PartMut {
+                            schedulers: None,
+                            status: st,
+                            latency: lat,
+                            defer_counts: def,
+                            sends_by_tenant: None,
+                        }))
+                    })
+                    .collect()
+            } else {
+                let sched_chunks = split_chunks(&mut *schedulers, &tenant_parts);
+                let sbt_chunks = split_chunks(&mut sends_by_tenant[..], &tenant_parts);
+                sched_chunks
+                    .into_iter()
+                    .zip(status_chunks)
+                    .zip(latency_chunks)
+                    .zip(defer_chunks)
+                    .zip(sbt_chunks)
+                    .map(|((((sch, st), lat), def), sbt)| {
+                        Mutex::new(Some(PartMut {
+                            schedulers: Some(sch),
+                            status: st,
+                            latency: lat,
+                            defer_counts: def,
+                            sends_by_tenant: Some(sbt),
+                        }))
+                    })
+                    .collect()
+            }
         };
 
         let worker = |i: usize| -> WorkerOut {
@@ -429,17 +619,30 @@ fn run_partitioned(
             let mut retry_attempts = vec![0u32; pn];
             let mut actions: Vec<Action> = Vec::new();
             let mut fabric = PartitionFabric { ops: Vec::new(), samples: Vec::new() };
-            let schedulers = pm.schedulers;
+            // Split mode: a fresh request-local scheduler clone and a
+            // private send counter, folded back into the globals at join.
+            let mut own_sched: Vec<ClientScheduler> = Vec::new();
+            let mut own_sbt: Vec<u64> = Vec::new();
+            let (schedulers, sends_by_tenant): (&mut [ClientScheduler], &mut [u64]) =
+                match (pm.schedulers, pm.sends_by_tenant) {
+                    (Some(sch), Some(sbt)) => (sch, sbt),
+                    _ => {
+                        let cfg = split_cfg.clone().expect("split mode carries a config");
+                        own_sched.push(ClientScheduler::new(cfg));
+                        own_sbt.push(0);
+                        (&mut own_sched[..], &mut own_sbt[..])
+                    }
+                };
             let mut st = LoopState {
                 base: req_lo,
-                tenant_base: tenant_parts[i].0,
+                tenant_base: if split_single { 0 } else { tenant_parts[i].0 },
                 status: pm.status,
                 latency: pm.latency,
                 defer_counts: pm.defer_counts,
                 timeout_timer: &mut timeout_timer,
                 retry_timer: &mut retry_timer,
                 retry_attempts: &mut retry_attempts,
-                sends_by_tenant: pm.sends_by_tenant,
+                sends_by_tenant,
                 sends: 0,
                 peak_inflight: 0,
                 timers_canceled: 0,
@@ -455,7 +658,9 @@ fn run_partitioned(
                     break;
                 }
                 let w = f64::from_bits(w_bits.load(Ordering::Acquire));
-                let end = w + lookahead_ms;
+                // The negotiated bound for this window (>= w + the static
+                // fleet floor; see the coordinator).
+                let end = f64::from_bits(end_bits.load(Ordering::Acquire));
                 let round = catch_unwind(AssertUnwindSafe(|| {
                     // Mailbox drain: completions the coordinator routed
                     // here, pushed in replay order (the serial push order).
@@ -536,13 +741,20 @@ fn run_partitioned(
                 barrier_crossings: 0,
                 ops_routed: 0,
                 deliveries: 0,
+                peak_inflight: 0,
                 panic: None,
             };
             // Per-partition latest depth: the global depth after any
             // sample is the integer sum of each partition's latest local
-            // depth — exactly the serial fold's observations.
+            // depth — exactly the serial fold's observations. The same
+            // construction re-derives the serial in-flight peak for the
+            // single-tenant carve (in-flight only changes at a partition's
+            // own events, so the sum at any merged sample is the one
+            // serial scheduler's count at that instant).
             let mut cur_depth = vec![0usize; p];
             let mut depth_total = 0usize;
+            let mut cur_inflight = vec![0usize; p];
+            let mut inflight_total = 0usize;
             collect.wait();
             out.barrier_crossings += 1;
             loop {
@@ -565,7 +777,47 @@ fn run_partitioned(
                     out.barrier_crossings += 1;
                     break;
                 }
+                // Negotiate this window's end before releasing the round.
+                // Static: always the fleet floor. Dynamic: per shard, the
+                // earliest instant a *new* completion could be committed —
+                // `w` while slots are free, else the shard's earliest
+                // committed in-flight finish (slots free only at committed
+                // finish times, and replay order guarantees any submission
+                // a freed slot admits carries a timestamp at or after that
+                // finish) — plus the shard's own service floor, pushed
+                // through the fault plan's walk (`adjusted_finish` is
+                // monotone in start and service, so the walked floor lower-
+                // bounds every walked real service). The min over shards
+                // therefore still bounds every completion committable this
+                // window, and it dominates `w + lookahead_ms` because each
+                // start >= w and each shard floor >= the fleet floor.
+                let window_end = match bound {
+                    WindowBound::StaticFloor => w + lookahead_ms,
+                    WindowBound::Dynamic => {
+                        let mut end = f64::INFINITY;
+                        for (s, &floor_s) in shard_floors.iter().enumerate() {
+                            let start = if provider.shard_free_slots(s) > 0 {
+                                w
+                            } else if let Some(e) = provider.shard_earliest_pending_finish(s) {
+                                e
+                            } else {
+                                // Saturated with nothing in flight: a
+                                // zero-capacity shard that can never
+                                // commit anything — it bounds nothing.
+                                continue;
+                            };
+                            let b = if fault_touched[s] {
+                                faults.adjusted_finish(s, start, floor_s)
+                            } else {
+                                start + floor_s
+                            };
+                            end = end.min(b);
+                        }
+                        end
+                    }
+                };
                 w_bits.store(w.to_bits(), Ordering::Release);
+                end_bits.store(window_end.to_bits(), Ordering::Release);
                 release.wait();
                 collect.wait();
                 out.barrier_crossings += 2;
@@ -578,7 +830,6 @@ fn run_partitioned(
                     out.barrier_crossings += 1;
                     break;
                 }
-                let window_end = w + lookahead_ms;
                 let merged = catch_unwind(AssertUnwindSafe(|| {
                     let mut guards: Vec<MutexGuard<'_, Slot>> =
                         slots.iter().map(|s| lock(s)).collect();
@@ -627,28 +878,40 @@ fn run_partitioned(
                             }
                         }
                     }
-                    // Fold depth samples in the same merged order, keeping
-                    // the integer global depth exact.
+                    // Fold tick samples in the same merged order, keeping
+                    // the integer global depth (and, for the single-tenant
+                    // carve, the global in-flight count) exact.
                     let mut cursors = vec![0usize; p];
                     loop {
                         let mut best: Option<(f64, usize)> = None;
                         for (pi, g) in guards.iter().enumerate() {
-                            if let Some(&(t, _)) = g.samples.get(cursors[pi]) {
+                            if let Some(sm) = g.samples.get(cursors[pi]) {
                                 let better = match best {
                                     None => true,
-                                    Some((bt, _)) => t < bt,
+                                    Some((bt, _)) => sm.time < bt,
                                 };
                                 if better {
-                                    best = Some((t, pi));
+                                    best = Some((sm.time, pi));
                                 }
                             }
                         }
                         let Some((_, pi)) = best else { break };
-                        let (t, d) = guards[pi].samples[cursors[pi]];
+                        let sm = guards[pi].samples[cursors[pi]];
                         cursors[pi] += 1;
-                        depth_total = depth_total - cur_depth[pi] + d;
-                        cur_depth[pi] = d;
-                        out.fold.observe(t, depth_total);
+                        depth_total = depth_total - cur_depth[pi] + sm.depth;
+                        cur_depth[pi] = sm.depth;
+                        out.fold.observe(sm.time, depth_total);
+                        if split_single {
+                            inflight_total = inflight_total - cur_inflight[pi] + sm.inflight;
+                            cur_inflight[pi] = sm.inflight;
+                            // The serial loop takes its peak in the Send
+                            // arm; a naive send tick's end-of-tick count
+                            // equals that mid-tick count (one send per
+                            // tick, nothing after it changes in-flight).
+                            if sm.sent {
+                                out.peak_inflight = out.peak_inflight.max(inflight_total);
+                            }
+                        }
                     }
                     for g in guards.iter_mut() {
                         g.ops.clear();
@@ -669,8 +932,18 @@ fn run_partitioned(
         scoped_workers(p, worker, coordinator)
     };
 
+    if bound == WindowBound::Dynamic {
+        provider.set_finish_tracking(false);
+    }
+
     if let Some(payload) = coord.panic {
         resume_unwind(payload);
+    }
+
+    if split_single {
+        // The workers ran private scheduler clones; fold their private
+        // send counters back into the one tenant's global slot.
+        sends_by_tenant[0] = worker_outs.iter().map(|w| w.sends).sum();
     }
 
     let (mean_queue_depth, peak_queue_depth) = coord.fold.finish();
@@ -680,12 +953,20 @@ fn run_partitioned(
         defer_counts,
         sends: worker_outs.iter().map(|w| w.sends).sum(),
         sends_by_tenant,
-        peak_inflight: worker_outs.iter().map(|w| w.peak_inflight).max().unwrap_or(0),
+        // Split mode folds the serial-exact peak from the merged sample
+        // stream (per-worker peaks see only their own range's in-flight).
+        peak_inflight: if split_single {
+            coord.peak_inflight
+        } else {
+            worker_outs.iter().map(|w| w.peak_inflight).max().unwrap_or(0)
+        },
         timers_canceled: worker_outs.iter().map(|w| w.timers_canceled).sum(),
         events_processed: worker_outs.iter().map(|w| w.processed).sum(),
         events_skipped: worker_outs.iter().map(|w| w.skipped).sum(),
         mean_queue_depth,
         peak_queue_depth,
+        // Split mode reads the untouched originals: a request-local stack
+        // structurally never increments these, matching serial's zeros.
         ordering_select_work: schedulers.iter().map(|s| s.ordering_work()).sum(),
         ordering_group_count: schedulers.iter().map(|s| s.ordering_group_count()).sum(),
         ordering_scan_fallbacks: schedulers.iter().map(|s| s.ordering_scan_fallbacks()).sum(),
@@ -698,7 +979,7 @@ fn run_partitioned(
         ops_routed: coord.ops_routed,
         deliveries: coord.deliveries,
         boundary_deferrals: worker_outs.iter().map(|w| w.boundary_deferrals).sum(),
-        serial_fallback: false,
+        serial_fallback: None,
         lookahead_ms,
     };
     (core, stats)

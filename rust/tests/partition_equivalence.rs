@@ -12,11 +12,17 @@
 //! shadow checks are `debug_assert!`s, so the release run proves the
 //! protocol itself (not the asserts) carries the equality.
 
-use blackbox_sched::predictor::InfoLevel;
+use blackbox_sched::predictor::{InfoLevel, LadderSource};
+use blackbox_sched::provider::fault::FaultPlan;
 use blackbox_sched::provider::pool::PoolCfg;
 use blackbox_sched::provider::ProviderCfg;
 use blackbox_sched::scheduler::{OrderingCfg, OrderingKind, SchedulerCfg, ShardPolicy, StrategyKind};
-use blackbox_sched::sim::driver::{run_tenants_partitioned, MultiRunOutput, TenantSpec};
+use blackbox_sched::sim::driver::{
+    run_pool_partitioned, run_tenants_partitioned, run_tenants_partitioned_with_bound,
+    MultiRunOutput, RunOutput, TenantSpec,
+};
+use blackbox_sched::sim::partition::{FallbackReason, WindowBound};
+use blackbox_sched::util::rng::Rng;
 use blackbox_sched::workload::{Mix, WorkloadSpec};
 
 /// Assert two multi-tenant outputs are bitwise identical: tenant metrics
@@ -131,7 +137,7 @@ fn partitioned_matches_serial_bit_for_bit() {
                         par.partition.partitions, partitions,
                         "{ctx}: the parallel path must actually run"
                     );
-                    assert!(!par.partition.serial_fallback, "{ctx}");
+                    assert!(par.partition.serial_fallback.is_none(), "{ctx}");
                     assert!(par.partition.windows > 0, "{ctx}: windows advanced");
                     assert!(par.partition.lookahead_ms > 0.0, "{ctx}");
                     outputs_bitwise_equal(&par, &serial, &ctx);
@@ -164,7 +170,7 @@ fn noisy_interval_tenants_partition_bit_for_bit() {
         for partitions in [2usize, 4] {
             let ctx = format!("noisy tenants, seed {seed}, P={partitions}");
             let par = run_tenants_partitioned(&specs, &pool, seed, partitions);
-            assert!(!par.partition.serial_fallback, "{ctx}");
+            assert!(par.partition.serial_fallback.is_none(), "{ctx}");
             outputs_bitwise_equal(&par, &serial, &ctx);
         }
     }
@@ -220,9 +226,17 @@ fn zero_lookahead_falls_back_to_serial() {
     let pool = PoolCfg::split(shard, 2);
     let specs = tenant_mix(StrategyKind::AdaptiveDrr);
     let serial = run_tenants_partitioned(&specs, &pool, 7, 1);
-    assert!(!serial.partition.serial_fallback, "serial was asked for, not forced");
+    assert_eq!(
+        serial.partition.serial_fallback,
+        Some(FallbackReason::NotRequested),
+        "serial was asked for, not forced"
+    );
     let par = run_tenants_partitioned(&specs, &pool, 7, 4);
-    assert!(par.partition.serial_fallback, "zero lookahead must be rejected");
+    assert_eq!(
+        par.partition.serial_fallback,
+        Some(FallbackReason::NoFloor),
+        "zero lookahead must be rejected"
+    );
     assert_eq!(par.partition.partitions, 1);
     assert_eq!(par.partition.lookahead_ms, 0.0);
     outputs_bitwise_equal(&par, &serial, "zero-lookahead fallback");
@@ -241,6 +255,208 @@ fn empty_tenant_partitions_cleanly() {
     let par = run_tenants_partitioned(&specs, &pool, 3, 4);
     assert_eq!(par.partition.partitions, 4);
     outputs_bitwise_equal(&par, &serial, "empty-tenant partition");
+}
+
+/// Assert two single-tenant outputs are bitwise identical: metrics (f64s
+/// by bits), every outcome, and the engine diagnostics.
+fn run_outputs_bitwise_equal(a: &RunOutput, b: &RunOutput, ctx: &str) {
+    assert_eq!(a.metrics.n_offered, b.metrics.n_offered, "{ctx}");
+    assert_eq!(a.metrics.n_completed, b.metrics.n_completed, "{ctx}");
+    assert_eq!(a.metrics.n_rejected, b.metrics.n_rejected, "{ctx}");
+    assert_eq!(a.metrics.n_timed_out, b.metrics.n_timed_out, "{ctx}");
+    for (m, n) in [
+        (a.metrics.short_p95_ms, b.metrics.short_p95_ms),
+        (a.metrics.global_p95_ms, b.metrics.global_p95_ms),
+        (a.metrics.global_std_ms, b.metrics.global_std_ms),
+        (a.metrics.goodput_rps, b.metrics.goodput_rps),
+        (a.metrics.makespan_ms, b.metrics.makespan_ms),
+    ] {
+        assert_eq!(m.to_bits(), n.to_bits(), "{ctx}: metric drift {m} vs {n}");
+    }
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{ctx}");
+    for (o, p) in a.outcomes.iter().zip(b.outcomes.iter()) {
+        assert_eq!(o.status, p.status, "{ctx}: request {}", o.id);
+        assert_eq!(
+            o.latency_ms.map(f64::to_bits),
+            p.latency_ms.map(f64::to_bits),
+            "{ctx}: request {} latency bits",
+            o.id
+        );
+        assert_eq!(o.defer_count, p.defer_count, "{ctx}: request {}", o.id);
+    }
+    let (da, db) = (&a.diagnostics, &b.diagnostics);
+    assert_eq!(da.events_processed, db.events_processed, "{ctx}");
+    assert_eq!(da.events_skipped, db.events_skipped, "{ctx}");
+    assert_eq!(da.timers_canceled, db.timers_canceled, "{ctx}");
+    assert_eq!(da.sends, db.sends, "{ctx}");
+    assert_eq!(da.peak_provider_queue, db.peak_provider_queue, "{ctx}");
+    assert_eq!(da.peak_inflight, db.peak_inflight, "{ctx}");
+    assert_eq!(da.started_by_shard, db.started_by_shard, "{ctx}");
+    assert_eq!(da.mean_queue_depth.to_bits(), db.mean_queue_depth.to_bits(), "{ctx}");
+    assert_eq!(da.peak_queue_depth, db.peak_queue_depth, "{ctx}");
+    assert_eq!(da.retries_scheduled, db.retries_scheduled, "{ctx}");
+    assert_eq!(da.faulted_shard_ms.to_bits(), db.faulted_shard_ms.to_bits(), "{ctx}");
+}
+
+/// Run the same regime under the dynamic and static window bounds, assert
+/// both are bit-identical to serial, and return `(dynamic, static)` window
+/// counts for the regime-specific sizing assertion.
+fn dynamic_vs_static_windows(
+    specs: &[TenantSpec],
+    pool: &PoolCfg,
+    seed: u64,
+    ctx: &str,
+) -> (u64, u64) {
+    let serial = run_tenants_partitioned(specs, pool, seed, 1);
+    let dynamic = run_tenants_partitioned(specs, pool, seed, 4);
+    assert!(dynamic.partition.serial_fallback.is_none(), "{ctx}");
+    assert!(dynamic.partition.windows > 0, "{ctx}");
+    outputs_bitwise_equal(&dynamic, &serial, &format!("{ctx}, dynamic bound"));
+    let fixed = run_tenants_partitioned_with_bound(specs, pool, seed, 4, WindowBound::StaticFloor);
+    assert!(fixed.partition.serial_fallback.is_none(), "{ctx}");
+    outputs_bitwise_equal(&fixed, &serial, &format!("{ctx}, static bound"));
+    (dynamic.partition.windows, fixed.partition.windows)
+}
+
+#[test]
+fn congestion_slowdown_regime_needs_fewer_windows_than_static_floor() {
+    // `slowdown_gamma > 0` is exactly where the static floor goes useless:
+    // the floor stays `base_ms` forever while every actual service
+    // stretches by the congestion curve. Naive tenants flood 2-slot shards,
+    // so the pool saturates and the dynamic bound rides committed finish
+    // times (~`base · slowdown`) instead of floor-sized steps.
+    let shard = ProviderCfg {
+        base_ms: 20.0,
+        per_token_ms: 0.0,
+        max_concurrency: 2,
+        slowdown_gamma: 3.0,
+        slowdown_exp: 1.5,
+        slowdown_ref: 1.0,
+        jitter_sigma: 0.0,
+    };
+    let pool = PoolCfg::split(shard, 2);
+    let mut specs = tenant_mix(StrategyKind::DirectNaive);
+    for (spec, rate) in specs.iter_mut().zip([120.0, 100.0, 80.0, 60.0]) {
+        spec.workload.rate_rps = rate;
+    }
+    for seed in 0..2u64 {
+        let ctx = format!("gamma regime, seed {seed}");
+        let (dynamic, fixed) = dynamic_vs_static_windows(&specs, &pool, seed, &ctx);
+        assert!(dynamic < fixed, "{ctx}: dynamic {dynamic} vs static {fixed} windows");
+    }
+}
+
+#[test]
+fn high_per_token_regime_needs_fewer_windows_than_static_floor() {
+    // High `per_token_ms` opens a huge gap between the floor (`base_ms`,
+    // tokens >= 0) and real services (hundreds of token-milliseconds), so
+    // static windows advance by a sliver of any actual service time.
+    let shard = ProviderCfg {
+        base_ms: 5.0,
+        per_token_ms: 2.0,
+        max_concurrency: 2,
+        slowdown_gamma: 0.0,
+        slowdown_exp: 1.0,
+        slowdown_ref: 8.0,
+        jitter_sigma: 0.0,
+    };
+    let pool = PoolCfg::split(shard, 2);
+    let mut specs = tenant_mix(StrategyKind::DirectNaive);
+    for (spec, rate) in specs.iter_mut().zip([120.0, 100.0, 80.0, 60.0]) {
+        spec.workload.rate_rps = rate;
+    }
+    for seed in 0..2u64 {
+        let ctx = format!("per-token regime, seed {seed}");
+        let (dynamic, fixed) = dynamic_vs_static_windows(&specs, &pool, seed, &ctx);
+        assert!(dynamic < fixed, "{ctx}: dynamic {dynamic} vs static {fixed} windows");
+    }
+}
+
+#[test]
+fn extension_only_brownout_widens_windows_instead_of_forbidding_them() {
+    // An extension-only brownout (factor < 1) keeps the fleet floor valid,
+    // and the dynamic bound pushes each shard's floor through the fault
+    // walk: inside the stall a floor's worth of work takes 1/factor as
+    // long, so windows stretch across the brownout instead of tiling it in
+    // floor-sized steps.
+    let shard = ProviderCfg {
+        base_ms: 25.0,
+        per_token_ms: 0.0,
+        max_concurrency: 4,
+        slowdown_gamma: 0.0,
+        slowdown_exp: 1.0,
+        slowdown_ref: 8.0,
+        jitter_sigma: 0.0,
+    };
+    let faults = FaultPlan::default()
+        .brownout(0, 200.0, 1_400.0, 0.25)
+        .unwrap()
+        .brownout(1, 200.0, 1_400.0, 0.25)
+        .unwrap();
+    let pool = PoolCfg::split(shard, 2).with_faults(faults);
+    let mut specs = tenant_mix(StrategyKind::FinalAdrrOlc);
+    for (spec, rate) in specs.iter_mut().zip([60.0, 50.0, 40.0, 30.0]) {
+        spec.workload.rate_rps = rate;
+    }
+    for seed in 0..2u64 {
+        let ctx = format!("brownout regime, seed {seed}");
+        let serial = run_tenants_partitioned(&specs, &pool, seed, 1);
+        assert!(
+            serial.diagnostics.faulted_shard_ms > 0.0,
+            "{ctx}: the brownout must actually touch work"
+        );
+        let (dynamic, fixed) = dynamic_vs_static_windows(&specs, &pool, seed, &ctx);
+        assert!(dynamic < fixed, "{ctx}: dynamic {dynamic} vs static {fixed} windows");
+    }
+}
+
+fn run_single_tenant(strategy: StrategyKind, partitions: usize, seed: u64) -> RunOutput {
+    let spec = WorkloadSpec::new(Mix::Balanced, 400, 120.0);
+    let requests = spec.generate(seed);
+    let mut src = LadderSource::new(InfoLevel::Coarse, Rng::new(seed).derive("priors"));
+    let pool = PoolCfg::single(ProviderCfg { max_concurrency: 16, ..ProviderCfg::default() });
+    run_pool_partitioned(
+        &requests,
+        &mut src,
+        SchedulerCfg::for_strategy(strategy),
+        &pool,
+        seed,
+        partitions,
+    )
+}
+
+#[test]
+fn single_tenant_request_range_carve_matches_serial_bit_for_bit() {
+    // The second tentpole leg: a `run_pool` run has one tenant, so the
+    // per-tenant carve degenerates — but a request-local stack (naive on
+    // one shard) splits by contiguous request-id ranges instead, each
+    // worker driving a private scheduler clone.
+    for seed in 0..3u64 {
+        let ctx = format!("single-tenant carve, seed {seed}");
+        let serial = run_single_tenant(StrategyKind::DirectNaive, 1, seed);
+        assert_eq!(
+            serial.partition.serial_fallback,
+            Some(FallbackReason::NotRequested),
+            "{ctx}"
+        );
+        let par = run_single_tenant(StrategyKind::DirectNaive, 4, seed);
+        assert_eq!(par.partition.partitions, 4, "{ctx}: the request carve must run");
+        assert!(par.partition.serial_fallback.is_none(), "{ctx}");
+        assert!(par.partition.windows > 0, "{ctx}");
+        run_outputs_bitwise_equal(&par, &serial, &ctx);
+    }
+}
+
+#[test]
+fn stateful_single_tenant_stack_takes_the_flagged_fallback() {
+    // A queueing stack keeps cross-request state (DRR deficits, ordering
+    // indexes, pacing budgets), so carving its requests would change
+    // decisions: the executor must refuse, flag why, and still be correct.
+    let serial = run_single_tenant(StrategyKind::FinalAdrrOlc, 1, 5);
+    let par = run_single_tenant(StrategyKind::FinalAdrrOlc, 4, 5);
+    assert_eq!(par.partition.serial_fallback, Some(FallbackReason::StatefulCarve));
+    assert_eq!(par.partition.partitions, 1);
+    run_outputs_bitwise_equal(&par, &serial, "stateful single-tenant fallback");
 }
 
 #[test]
